@@ -1,0 +1,87 @@
+//! **End-to-end driver** (DESIGN.md §End-to-end validation): runs the full
+//! three-layer system — rust cycle-accurate simulator + ReSiPI control
+//! plane + the AOT-compiled JAX/Pallas power model executed via PJRT — on
+//! the paper's adaptivity workload (blackscholes → facesim → dedup,
+//! §4.5/Fig. 12) and reports the paper's headline metric per application
+//! segment.
+//!
+//! The power model backend is the HLO artifact when `make artifacts` has
+//! run (verifying all layers compose), with the rust mirror as fallback.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example adaptive_epochs
+//! ```
+
+use resipi::prelude::*;
+use resipi::runtime::best_power_model;
+use resipi::traffic::parsec::{app_by_name, SequenceTraffic};
+
+fn main() -> Result<()> {
+    let epochs_per_app = 12u64;
+    let epoch_cycles = 40_000u64;
+    let seg = epochs_per_app * epoch_cycles;
+
+    let mut cfg = Config::table1(Architecture::Resipi);
+    cfg.sim.cycles = 3 * seg;
+    cfg.controller.epoch_cycles = epoch_cycles;
+
+    let geo = Geometry::from_config(&cfg);
+    let apps = ["blackscholes", "facesim", "dedup"];
+    let segments = apps
+        .iter()
+        .map(|a| (app_by_name(a).unwrap(), seg))
+        .collect();
+    let traffic = Box::new(SequenceTraffic::new(geo, segments, cfg.sim.seed));
+
+    let model = best_power_model();
+    println!("power-model backend: {}", model.backend());
+    let mut net = Network::with_power_model(cfg, traffic, model)?;
+    net.run()?;
+
+    println!("\nepoch  app           gateways  lambdas  latency   power(mW)  switches");
+    for e in &net.metrics().epochs {
+        let app = apps[((e.index) / epochs_per_app).min(2) as usize];
+        let marker = if e.index > 0 && e.index % epochs_per_app == 0 {
+            "  <- switch"
+        } else {
+            ""
+        };
+        println!(
+            "{:<6} {:<13} {:<9} {:<8} {:<9.2} {:<10.1} {}{}",
+            e.index,
+            app,
+            e.active_gateways,
+            e.total_lambdas,
+            e.avg_latency,
+            e.power.total_mw,
+            e.pcmc_switches,
+            marker
+        );
+    }
+
+    // Per-segment summary — the Fig. 12 story in three lines.
+    let m = net.metrics();
+    for (i, app) in apps.iter().enumerate() {
+        let lo = i as u64 * epochs_per_app;
+        let hi = lo + epochs_per_app;
+        let segment: Vec<_> = m
+            .epochs
+            .iter()
+            .filter(|e| e.index >= lo && e.index < hi)
+            .collect();
+        let gw = segment.iter().map(|e| e.active_gateways as f64).sum::<f64>()
+            / segment.len() as f64;
+        let lat = segment.iter().map(|e| e.avg_latency).sum::<f64>() / segment.len() as f64;
+        let pw = segment.iter().map(|e| e.power.total_mw).sum::<f64>() / segment.len() as f64;
+        println!(
+            "\n[{app}] avg gateways {gw:.1}, avg latency {lat:.2} cy, avg power {pw:.0} mW"
+        );
+    }
+
+    let s = net.summary();
+    println!(
+        "\nTOTAL: {} packets, {:.2} cy avg latency, {:.0} mW avg power, {:.1} uJ energy ({} backend)",
+        s.delivered, s.avg_latency_cycles, s.avg_power_mw, s.total_energy_uj, s.power_backend
+    );
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Design-space exploration using the *batched* AOT power model: evaluate
+//! every (gateway count, wavelength count) configuration on the L1 Pallas
+//! kernel (via the 128-wide HLO artifact) and overlay measured latency
+//! from short simulations — a miniature of the paper's Fig. 10 methodology
+//! driven through the public API.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example design_space
+//! ```
+
+use resipi::prelude::*;
+use resipi::runtime::{BatchPowerModel, ARTIFACT_GATEWAYS};
+use resipi::util::pool::par_map_auto;
+
+fn main() -> Result<()> {
+    let cfg = Config::table1(Architecture::Resipi);
+
+    // 1) Power for every static configuration, evaluated in one batched
+    //    HLO call (falls back to the rust mirror without artifacts).
+    let mut masks = Vec::new();
+    let mut lambdas = Vec::new();
+    let mut labels = Vec::new();
+    for g in 1..=4usize {
+        for lam in [2usize, 4, 8] {
+            let mut mask = vec![false; ARTIFACT_GATEWAYS];
+            for c in 0..4 {
+                for k in 0..g {
+                    mask[c * 4 + k] = true;
+                }
+            }
+            mask[16] = true; // memory controllers always on
+            mask[17] = true;
+            masks.push(mask);
+            lambdas.push(vec![lam; ARTIFACT_GATEWAYS]);
+            labels.push((g, lam));
+        }
+    }
+    let spec = resipi::power::ArchPowerSpec::resipi(5);
+    let power_rows: Vec<f64> = match BatchPowerModel::load_default() {
+        Ok(model) => {
+            println!("power backend: hlo-pjrt (batched artifact)");
+            model
+                .evaluate(&masks, &lambdas, &cfg.power, &spec)?
+                .iter()
+                .map(|r| r[4])
+                .collect()
+        }
+        Err(_) => {
+            println!("power backend: rust-mirror (run `make artifacts` for the HLO path)");
+            masks
+                .iter()
+                .zip(&lambdas)
+                .map(|(m, l)| {
+                    let mut input = resipi::power::OpticsInput::new(m, l);
+                    input.listen_sources = 5;
+                    resipi::power::epoch_power(&input, &cfg.power).total_mw
+                })
+                .collect()
+        }
+    };
+
+    // 2) Latency for each gateway count from short dedup simulations
+    //    (wavelengths fixed at Table 1's 4 — the paper's design B).
+    let app = resipi::traffic::parsec::app_by_name("dedup").unwrap();
+    let lat: Vec<(usize, f64, f64)> = par_map_auto((1..=4usize).collect(), |&g| {
+        let mut c = Config::table1(Architecture::StaticGateways(g));
+        c.sim.cycles = 200_000;
+        c.controller.epoch_cycles = 20_000;
+        let geo = Geometry::from_config(&c);
+        let traffic = Box::new(ParsecTraffic::new(geo, app, 0xD5));
+        let mut net = Network::new(c, traffic).expect("config valid");
+        net.run().expect("run");
+        let s = net.summary();
+        (g, s.avg_gateway_load, s.avg_latency_cycles)
+    });
+
+    println!("\nstatic power map (mW):");
+    println!("g/chiplet  lambda=2   lambda=4   lambda=8");
+    for g in 1..=4usize {
+        let row: Vec<String> = [2usize, 4, 8]
+            .iter()
+            .map(|&lam| {
+                let idx = labels.iter().position(|&(gg, ll)| gg == g && ll == lam).unwrap();
+                format!("{:<10.0}", power_rows[idx])
+            })
+            .collect();
+        println!("{:<10} {}", g, row.join(" "));
+    }
+
+    println!("\nmeasured latency vs gateway load (dedup, 4 lambdas):");
+    println!("g  load(L_c)  latency(cy)");
+    for (g, load, latency) in &lat {
+        println!("{g}  {load:<10.4} {latency:.2}");
+    }
+    println!(
+        "\nTrade-off: more gateways cut latency but raise power — ReSiPI's L_m\n\
+         threshold ({}) picks the knee at runtime (paper Fig. 10).",
+        cfg.controller.l_m
+    );
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: simulate the Table 1 ReSiPI system on one PARSEC-like
+//! workload and print the headline metrics.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use resipi::prelude::*;
+
+fn main() -> Result<()> {
+    // The paper's Table 1 setup: 4 chiplets × 4×4 mesh, 4 gateways per
+    // chiplet + 2 memory-controller gateways, 4 wavelengths, 12 Gb/s/λ.
+    let mut cfg = Config::table1(Architecture::Resipi);
+    cfg.sim.cycles = 500_000;
+    cfg.controller.epoch_cycles = 50_000;
+
+    let geo = Geometry::from_config(&cfg);
+    let app = resipi::traffic::parsec::app_by_name("dedup").expect("known app");
+    println!("workload: {} (calibrated rate {} pkts/cycle/core)", app.name, app.rate);
+
+    let traffic = Box::new(ParsecTraffic::new(geo, app, cfg.sim.seed));
+    let mut net = Network::new(cfg, traffic)?;
+    net.run()?;
+
+    let s = net.summary();
+    println!("\n== {} on {} ==", s.traffic, s.arch);
+    println!("delivered:        {} / {} packets", s.delivered, s.created);
+    println!("avg latency:      {:.2} cycles (p99 {:.1})", s.avg_latency_cycles, s.p99_latency_cycles);
+    println!(
+        "avg power:        {:.1} mW (laser {:.1} | tuning {:.1} | TIA {:.1} | driver {:.1})",
+        s.avg_power_mw, s.power.laser_mw, s.power.tuning_mw, s.power.tia_mw, s.power.driver_mw
+    );
+    println!("energy metric:    {:.1} pJ (power × latency)", s.energy_metric_pj);
+    println!("active gateways:  {:.2} of 18 on average", s.avg_active_gateways);
+    println!("PCMC switching:   {:.1} nJ total", s.pcmc_switch_energy_nj);
+
+    // The adaptation trace: per-epoch gateway counts (Fig. 12c-style).
+    println!("\nepoch  gateways  latency   power(mW)");
+    for e in net.metrics().epochs.iter().take(10) {
+        println!(
+            "{:<6} {:<9} {:<9.2} {:<9.1}",
+            e.index, e.active_gateways, e.avg_latency, e.power.total_mw
+        );
+    }
+    Ok(())
+}

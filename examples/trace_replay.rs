@@ -1,0 +1,68 @@
+//! Trace capture + replay: generate a bursty workload, capture it in the
+//! gem5-style text trace format, then replay the identical trace through
+//! two architectures for an apples-to-apples comparison — the workflow a
+//! user with real gem5 PARSEC traces would follow (DESIGN.md §3).
+//!
+//! ```text
+//! cargo run --release --example trace_replay
+//! ```
+
+use std::io::Cursor;
+
+use resipi::prelude::*;
+use resipi::traffic::parsec::app_by_name;
+use resipi::traffic::{TraceWriter, TraceReader};
+
+fn main() -> Result<()> {
+    let horizon = 200_000u64;
+
+    // 1) Capture a canneal-like workload to the text format.
+    let cfg = Config::table1(Architecture::Resipi);
+    let geo = Geometry::from_config(&cfg);
+    let app = app_by_name("canneal").unwrap();
+    let mut gen = ParsecTraffic::new(geo, app, 0x7ACE);
+    let mut writer = TraceWriter::new(Vec::new())?;
+    let mut buf = Vec::new();
+    for now in 0..horizon {
+        buf.clear();
+        gen.generate(now, &mut buf);
+        for p in &buf {
+            writer.record(now, p)?;
+        }
+    }
+    println!("captured {} packets over {horizon} cycles", writer.written());
+    let bytes = writer.finish();
+
+    // 2) Replay through ReSiPI and PROWAVES.
+    let mut results = Vec::new();
+    for arch in [Architecture::Resipi, Architecture::Prowaves] {
+        let mut cfg = Config::table1(arch);
+        cfg.sim.cycles = horizon + 20_000; // drain tail
+        cfg.controller.epoch_cycles = 20_000;
+        let trace = TraceReader::parse(Cursor::new(bytes.clone()), "canneal-trace")?;
+        let mut net = Network::new(cfg, Box::new(trace))?;
+        net.run()?;
+        results.push(net.summary());
+    }
+
+    println!("\narch           latency(cy)  power(mW)  energy(pJ)  gateways  lambdas");
+    for s in &results {
+        println!(
+            "{:<14} {:<12.2} {:<10.1} {:<11.1} {:<9.2} {:<7.2}",
+            s.arch,
+            s.avg_latency_cycles,
+            s.avg_power_mw,
+            s.energy_metric_pj,
+            s.avg_active_gateways,
+            s.avg_total_lambdas
+        );
+    }
+    let (rs, pw) = (&results[0], &results[1]);
+    println!(
+        "\nReSiPI vs PROWAVES on the identical trace: latency {:+.0}%, power {:+.0}%, energy {:+.0}%",
+        (rs.avg_latency_cycles / pw.avg_latency_cycles - 1.0) * 100.0,
+        (rs.avg_power_mw / pw.avg_power_mw - 1.0) * 100.0,
+        (rs.energy_metric_pj / pw.energy_metric_pj - 1.0) * 100.0,
+    );
+    Ok(())
+}

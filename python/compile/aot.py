@@ -1,0 +1,67 @@
+"""AOT export: lower the L2 power model to HLO text for the rust runtime.
+
+HLO *text* (not ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the image's xla_extension 0.5.1 (behind the rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits:
+  power_model.hlo.txt       f32[18], f32[18], f32[11] -> (f32[5],)
+  power_model_b128.hlo.txt  f32[128,18], f32[128,18], f32[11] -> (f32[128,5],)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_single():
+    spec_n = jax.ShapeDtypeStruct((model.N_GATEWAYS,), jnp.float32)
+    spec_p = jax.ShapeDtypeStruct((11,), jnp.float32)
+    return jax.jit(model.power_model).lower(spec_n, spec_n, spec_p)
+
+
+def lower_batched():
+    spec_bn = jax.ShapeDtypeStruct((model.SWEEP_BATCH, model.N_GATEWAYS), jnp.float32)
+    spec_p = jax.ShapeDtypeStruct((11,), jnp.float32)
+    return jax.jit(model.power_model_batched).lower(spec_bn, spec_bn, spec_p)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, lowered in [
+        ("power_model.hlo.txt", lower_single()),
+        ("power_model_b128.hlo.txt", lower_batched()),
+    ]:
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

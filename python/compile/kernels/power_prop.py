@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: batched photonic link-budget / laser-power solve.
+
+This is the compute hot-spot of the ReSiPI power model: for a batch of
+interposer configurations (active mask + per-writer wavelength counts over
+the N-gateway PCMC chain), back-solve the minimum SOA laser feed per writer
+that closes the worst-case reader link:
+
+    maxdist_i = max_j  active_j * |i - j|          (farthest active reader)
+    loss_i    = pcmc_loss + maxdist_i * per_hop_loss + extra_loss    [dB]
+    laser_i   = active_i * lambda_i * laser_mw * 10^(loss_i / 10)    [mW]
+
+The controller sweep evaluates thousands of candidate configurations, so
+the kernel is batched over B and the whole (B, N, N) max-reduction runs as
+one dense block.
+
+TPU mapping (DESIGN.md §4 Hardware-Adaptation): the batch dimension tiles
+to VMEM via BlockSpec (BLOCK_B rows per program instance); the |i-j|
+distance matrix is a small (N, N) constant living in VMEM; the inner
+max-reduction is a dense batched contraction that the MXU/VPU executes in
+fp32. On this image the kernel MUST run with interpret=True (the CPU PJRT
+plugin cannot execute Mosaic custom-calls); numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch rows per program instance. 16 rows × 18 gateways × (18 distances)
+# in fp32 ≈ 21 KiB live per block — far below a TPU core's ~16 MiB VMEM;
+# chosen small so many instances pipeline HBM↔VMEM transfers.
+BLOCK_B = 16
+
+
+def _laser_kernel(active_ref, lambdas_ref, params_ref, out_ref, *, n: int):
+    """One (BLOCK_B, N) tile of the laser solve."""
+    active = active_ref[...]  # (Bb, N) 0/1
+    lambdas = lambdas_ref[...]  # (Bb, N)
+    laser_mw = params_ref[0]
+    pcmc_loss = params_ref[1]
+    per_hop = params_ref[2]
+    extra = params_ref[3]
+
+    # |i - j| distance matrix (constant, materialized in VMEM).
+    idx = jax.lax.iota(jnp.float32, n)
+    dist = jnp.abs(idx[:, None] - idx[None, :])  # (N, N)
+
+    # maxdist[b, i] = max_j active[b, j] * dist[i, j].
+    # (Bb, 1, N) * (N, N) broadcast -> (Bb, N, N), reduce over j.
+    weighted = active[:, None, :] * dist[None, :, :]
+    maxdist = jnp.max(weighted, axis=-1)  # (Bb, N)
+
+    loss_db = pcmc_loss + maxdist * per_hop + extra
+    scale = jnp.power(10.0, loss_db / 10.0)
+    out_ref[...] = active * lambdas * laser_mw * scale
+
+
+@functools.partial(jax.jit, static_argnames=())
+def required_laser_mw(active, lambdas, kparams):
+    """Per-writer required laser feed, batched.
+
+    Args:
+      active:  (B, N) float32 0/1 activity mask.
+      lambdas: (B, N) float32 wavelength counts.
+      kparams: (4,)  float32 [laser_mw, pcmc_loss_db, per_hop_loss_db,
+               extra_loss_db].
+
+    Returns:
+      (B, N) float32 laser feed per writer, mW.
+    """
+    b, n = active.shape
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    grid = (b // BLOCK_B,)
+    return pl.pallas_call(
+        functools.partial(_laser_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, n), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, n), lambda i: (i, 0)),
+            # Broadcast the parameter vector to every instance.
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(active, lambdas, kparams)

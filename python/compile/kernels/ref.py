@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for the L1 kernel and the L2 power model.
+
+No Pallas here — straightforward jnp implementing the same math as
+``power_prop.required_laser_mw`` and the full epoch power breakdown
+(mirroring ``rust/src/power/optics.rs``). The pytest suite asserts the
+kernel against this; the rust integration test cross-validates the rust
+mirror against the HLO artifact (whose numerics come from the kernel).
+
+Parameter vector layout (shared with ``rust/src/runtime/mod.rs``)::
+
+    params = [laser_mw_per_wavelength, tuning_mw_per_mr, tia_mw, driver_mw,
+              pcmc_loss_db, per_hop_loss_db, extra_loss_db, pcm_gating,
+              listen_sources, static_tune_lambda, links_per_writer]
+"""
+
+import jax.numpy as jnp
+
+PARAMS_LEN = 11
+
+
+def required_laser_mw_ref(active, lambdas, kparams):
+    """Reference for the kernel (per-link λ; no link multiplier).
+
+    kparams = [laser_mw, pcmc_loss_db, per_hop_loss_db, extra_loss_db].
+    """
+    laser_mw, pcmc_loss, per_hop, extra = (
+        kparams[0],
+        kparams[1],
+        kparams[2],
+        kparams[3],
+    )
+    n = active.shape[-1]
+    idx = jnp.arange(n, dtype=active.dtype)
+    dist = jnp.abs(idx[:, None] - idx[None, :])  # (N, N)
+    # maxdist[b, i] = max_j active[b, j] * dist[i, j]
+    maxdist = jnp.max(active[..., None, :] * dist, axis=-1)
+    loss_db = pcmc_loss + maxdist * per_hop + extra
+    return active * lambdas * laser_mw * jnp.power(10.0, loss_db / 10.0)
+
+
+def epoch_power_ref(active, lambdas, params):
+    """Full power breakdown, mirroring rust/src/power/optics.rs.
+
+    Args:
+      active:  (B, N) 0/1 mask.
+      lambdas: (B, N) per-link wavelength counts.
+      params:  (11,) see module docstring.
+
+    Returns:
+      (B, 5) [laser, tuning, tia, driver, total] in mW.
+    """
+    kparams = jnp.stack([params[0], params[4], params[5], params[6]])
+    gating = params[7]
+    listen = params[8]
+    static_lam = params[9]
+    links = params[10]
+
+    laser = links * jnp.sum(required_laser_mw_ref(active, lambdas, kparams), axis=-1)
+    n_active = jnp.sum(active, axis=-1)
+    sum_lambda = jnp.sum(active * lambdas, axis=-1)
+
+    mod_mrs = links * sum_lambda
+    filt_pcm = jnp.minimum(jnp.maximum(n_active - 1.0, 0.0), listen) * sum_lambda
+    filt_static = n_active * jnp.maximum(n_active - 1.0, 0.0) * static_lam
+    filt = jnp.where(gating > 0.5, filt_pcm, filt_static)
+    tia_pds = jnp.where(
+        gating > 0.5, filt_pcm, jnp.maximum(n_active - 1.0, 0.0) * sum_lambda
+    )
+
+    tuning = params[1] * (mod_mrs + filt)
+    tia = params[2] * tia_pds
+    driver = params[3] * mod_mrs
+    total = laser + tuning + tia + driver
+    return jnp.stack([laser, tuning, tia, driver, total], axis=-1)

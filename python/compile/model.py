@@ -1,0 +1,80 @@
+"""L2 JAX model: the per-epoch photonic power breakdown.
+
+Calls the L1 Pallas kernel (``kernels.power_prop``) for the laser
+link-budget solve and adds the electrical terms (thermal tuning, TIA,
+modulator drivers) with plain jnp, exactly mirroring
+``rust/src/power/optics.rs``. Two entry points are AOT-lowered by
+``aot.py``:
+
+* :func:`power_model` — single configuration, the InC's per-epoch call
+  (artifact contract in ``rust/src/runtime/mod.rs``);
+* :func:`power_model_batched` — 128 configurations per call, the
+  design-space sweep.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import power_prop
+
+# Gateways the Table 1 system exposes (4 chiplets × 4 + 2 memory).
+N_GATEWAYS = 18
+# Batch of the sweep artifact; must be a multiple of the kernel block.
+SWEEP_BATCH = 128
+
+
+def _breakdown(active_b, lambdas_b, params):
+    """(B, N) inputs -> (B, 5) [laser, tuning, tia, driver, total] mW.
+
+    See ``kernels/ref.py`` for the 11-entry parameter-vector layout; the
+    laser link-budget solve runs on the L1 Pallas kernel, the electrical
+    terms are plain jnp.
+    """
+    kparams = jnp.stack([params[0], params[4], params[5], params[6]])
+    gating = params[7]
+    listen = params[8]
+    static_lam = params[9]
+    links = params[10]
+
+    laser = links * jnp.sum(
+        power_prop.required_laser_mw(active_b, lambdas_b, kparams), axis=-1
+    )
+    n_active = jnp.sum(active_b, axis=-1)
+    sum_lambda = jnp.sum(active_b * lambdas_b, axis=-1)
+
+    mod_mrs = links * sum_lambda
+    filt_pcm = jnp.minimum(jnp.maximum(n_active - 1.0, 0.0), listen) * sum_lambda
+    filt_static = n_active * jnp.maximum(n_active - 1.0, 0.0) * static_lam
+    filt = jnp.where(gating > 0.5, filt_pcm, filt_static)
+    tia_pds = jnp.where(
+        gating > 0.5, filt_pcm, jnp.maximum(n_active - 1.0, 0.0) * sum_lambda
+    )
+
+    tuning = params[1] * (mod_mrs + filt)
+    tia = params[2] * tia_pds
+    driver = params[3] * mod_mrs
+    total = laser + tuning + tia + driver
+    return jnp.stack([laser, tuning, tia, driver, total], axis=-1)
+
+
+def power_model(active, lambdas, params):
+    """Single-configuration epoch power.
+
+    Args:
+      active:  (N,) float32 0/1 gateway activity (chain order).
+      lambdas: (N,) float32 wavelengths per writer.
+      params:  (11,) float32 — see ``kernels/ref.py`` for the layout.
+
+    Returns:
+      (5,) float32 [laser, tuning, tia, driver, total] in mW.
+    """
+    # The kernel is batched with BLOCK_B-row tiles; pad a singleton batch.
+    b = power_prop.BLOCK_B
+    active_b = jnp.broadcast_to(active, (b, active.shape[0]))
+    lambdas_b = jnp.broadcast_to(lambdas, (b, lambdas.shape[0]))
+    out = _breakdown(active_b, lambdas_b, params)
+    return (out[0],)
+
+
+def power_model_batched(active, lambdas, params):
+    """Batched sweep: (B, N) inputs -> ((B, 5),) output."""
+    return (_breakdown(active, lambdas, params),)

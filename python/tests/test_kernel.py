@@ -1,0 +1,141 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the L1 layer.
+
+The Pallas kernel (interpret=True) must match the pure-jnp oracle bit-for-
+bit in structure and to fp32 tolerance in value, across hypothesis-driven
+sweeps of activity patterns, wavelength counts, and loss parameters.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import power_prop
+from compile.kernels.ref import epoch_power_ref, required_laser_mw_ref
+
+N = 18
+B = power_prop.BLOCK_B
+
+
+def make_inputs(mask_bits, lambdas, params4):
+    active = np.zeros((B, N), dtype=np.float32)
+    lam = np.zeros((B, N), dtype=np.float32)
+    for b in range(B):
+        for i in range(N):
+            active[b, i] = 1.0 if (mask_bits >> ((b * 7 + i) % 18)) & 1 else 0.0
+        lam[b] = lambdas
+    return jnp.asarray(active), jnp.asarray(lam), jnp.asarray(params4, dtype=jnp.float32)
+
+
+@given(
+    mask=st.integers(min_value=0, max_value=(1 << 18) - 1),
+    lam=st.integers(min_value=1, max_value=16),
+    pcmc=st.floats(min_value=0.0, max_value=1.0),
+    hop=st.floats(min_value=0.0, max_value=0.5),
+    extra=st.floats(min_value=0.0, max_value=3.0),
+)
+@settings(max_examples=60, deadline=None)
+def test_kernel_matches_ref_hypothesis(mask, lam, pcmc, hop, extra):
+    active, lambdas, params = make_inputs(
+        mask, np.full(N, lam, dtype=np.float32), [30.0, pcmc, hop, extra]
+    )
+    got = power_prop.required_laser_mw(active, lambdas, params)
+    want = required_laser_mw_ref(active, lambdas, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_idle_writers_draw_zero():
+    active = jnp.zeros((B, N), dtype=jnp.float32)
+    lambdas = jnp.full((B, N), 4.0, dtype=jnp.float32)
+    params = jnp.asarray([30.0, 0.05, 0.12, 0.0], dtype=jnp.float32)
+    out = power_prop.required_laser_mw(active, lambdas, params)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+def test_kernel_all_active_nominal_floor():
+    """Every active writer needs at least lambda * laser_mw."""
+    active = jnp.ones((B, N), dtype=jnp.float32)
+    lambdas = jnp.full((B, N), 4.0, dtype=jnp.float32)
+    params = jnp.asarray([30.0, 0.05, 0.12, 0.0], dtype=jnp.float32)
+    out = np.asarray(power_prop.required_laser_mw(active, lambdas, params))
+    assert (out >= 4.0 * 30.0 - 1e-3).all()
+    # Edge writers see the longest chain -> highest requirement.
+    assert out[0, 0] == out[:, 0].max()
+    assert out[0, 0] >= out[0, N // 2]
+
+
+def test_kernel_batch_rows_independent():
+    """Different rows of a batch are solved independently."""
+    active = np.zeros((B, N), dtype=np.float32)
+    active[0, :] = 1.0
+    active[1, ::2] = 1.0
+    lambdas = np.full((B, N), 2.0, dtype=np.float32)
+    params = jnp.asarray([30.0, 0.05, 0.12, 0.0], dtype=jnp.float32)
+    out = np.asarray(
+        power_prop.required_laser_mw(jnp.asarray(active), jnp.asarray(lambdas), params)
+    )
+    # Row 2+ are all-idle -> zero.
+    assert out[2:].max() == 0.0
+    assert out[0].sum() > out[1].sum() > 0.0
+
+
+@given(
+    mask=st.integers(min_value=1, max_value=(1 << 18) - 1),
+    lam=st.integers(min_value=1, max_value=16),
+    listen=st.integers(min_value=0, max_value=17),
+)
+@settings(max_examples=40, deadline=None)
+def test_epoch_power_ref_invariants(mask, lam, listen):
+    """Oracle-level invariants mirrored from the rust property tests
+    (PCM-gated design)."""
+    active = np.array([(mask >> i) & 1 for i in range(N)], dtype=np.float32)[None, :]
+    lambdas = np.full((1, N), lam, dtype=np.float32)
+    params = jnp.asarray(
+        [30.0, 3.0, 2.0, 3.0, 0.05, 0.12, 0.0, 1.0, float(listen), 0.0, 1.0],
+        dtype=jnp.float32,
+    )
+    out = np.asarray(epoch_power_ref(jnp.asarray(active), jnp.asarray(lambdas), params))[0]
+    laser, tuning, tia, driver, total = out
+    n_active = active.sum()
+    sum_lambda = float((active * lambdas).sum())
+    rows = min(max(n_active - 1, 0), listen)
+    assert laser >= 30.0 * sum_lambda - 1e-2  # at least nominal
+    np.testing.assert_allclose(
+        tuning, 3.0 * (sum_lambda + rows * sum_lambda), rtol=1e-5
+    )
+    np.testing.assert_allclose(tia, 2.0 * rows * sum_lambda, rtol=1e-5)
+    np.testing.assert_allclose(driver, 3.0 * sum_lambda, rtol=1e-5)
+    np.testing.assert_allclose(total, laser + tuning + tia + driver, rtol=1e-5)
+
+
+def test_epoch_power_ref_static_locking_and_links():
+    """Non-PCM semantics: PROWAVES-style static ring locking and AWGR-style
+    parallel links."""
+    active = np.zeros((1, N), dtype=np.float32)
+    active[0, :6] = 1.0
+    lambdas = np.full((1, N), 2.0, dtype=np.float32)
+    # PROWAVES: gating=0, static λ = 16.
+    params = jnp.asarray(
+        [30.0, 3.0, 2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0, 16.0, 1.0],
+        dtype=jnp.float32,
+    )
+    out = np.asarray(epoch_power_ref(jnp.asarray(active), jnp.asarray(lambdas), params))[0]
+    # locked filters: 6×5×16 = 480; mods 12 → tuning 3×492; tia (6−1)×12×2.
+    np.testing.assert_allclose(out[1], 3.0 * 492.0, rtol=1e-6)
+    np.testing.assert_allclose(out[2], 120.0, rtol=1e-6)
+
+    # AWGR: gating=0, static λ = 0, links = 17, λ = 1.
+    active18 = np.ones((1, N), dtype=np.float32)
+    lam1 = np.ones((1, N), dtype=np.float32)
+    params_awgr = jnp.asarray(
+        [30.0, 3.0, 2.0, 3.0, 0.0, 0.0, 1.8, 0.0, 0.0, 0.0, 17.0],
+        dtype=jnp.float32,
+    )
+    out = np.asarray(
+        epoch_power_ref(jnp.asarray(active18), jnp.asarray(lam1), params_awgr)
+    )[0]
+    np.testing.assert_allclose(out[3], 3.0 * 306.0, rtol=1e-6)  # drivers
+    np.testing.assert_allclose(out[1], 3.0 * 306.0, rtol=1e-6)  # tuning (no filters)
+    np.testing.assert_allclose(out[2], 2.0 * 306.0, rtol=1e-6)  # PDs
+    assert out[0] >= 30.0 * 17.0 * 18.0 * 10 ** 0.18 - 1e-2

@@ -1,0 +1,100 @@
+"""L2 model shape/value tests and AOT export smoke tests."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels.ref import epoch_power_ref
+
+N = model.N_GATEWAYS
+
+
+def table1_params(use_pcmc=True, extra=0.0, listen=5.0, static_lam=0.0, links=1.0):
+    return jnp.asarray(
+        [
+            30.0,
+            3.0,
+            2.0,
+            3.0,
+            0.05 if use_pcmc else 0.0,
+            0.12,
+            extra,
+            1.0 if use_pcmc else 0.0,
+            listen,
+            static_lam,
+            links,
+        ],
+        dtype=jnp.float32,
+    )
+
+
+def test_power_model_single_shape_and_value():
+    active = jnp.ones((N,), dtype=jnp.float32)
+    lambdas = jnp.full((N,), 4.0, dtype=jnp.float32)
+    (out,) = model.power_model(active, lambdas, table1_params())
+    assert out.shape == (5,)
+    want = epoch_power_ref(active[None, :], lambdas[None, :], table1_params())[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+    # Table-1 sanity: 18 writers x 4λ x 30 mW = 2160 mW nominal laser floor.
+    assert float(out[0]) >= 2160.0
+
+
+def test_power_model_batched_matches_ref():
+    rng = np.random.default_rng(7)
+    active = (rng.random((model.SWEEP_BATCH, N)) < 0.5).astype(np.float32)
+    lambdas = rng.integers(1, 17, size=(model.SWEEP_BATCH, N)).astype(np.float32)
+    params = table1_params()
+    (got,) = model.power_model_batched(jnp.asarray(active), jnp.asarray(lambdas), params)
+    assert got.shape == (model.SWEEP_BATCH, 5)
+    want = epoch_power_ref(jnp.asarray(active), jnp.asarray(lambdas), params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+def test_gating_reduces_power_monotonically():
+    lambdas = jnp.full((N,), 4.0, dtype=jnp.float32)
+    params = table1_params()
+    totals = []
+    for k in [18, 10, 4, 1]:
+        active = np.zeros(N, dtype=np.float32)
+        active[:k] = 1.0
+        (out,) = model.power_model(jnp.asarray(active), lambdas, params)
+        totals.append(float(out[4]))
+    assert totals == sorted(totals, reverse=True), totals
+
+
+def test_awgr_loss_penalty_in_model():
+    active = jnp.ones((N,), dtype=jnp.float32)
+    lambdas = jnp.ones((N,), dtype=jnp.float32)
+    (base,) = model.power_model(active, lambdas, table1_params(use_pcmc=False))
+    (awgr,) = model.power_model(active, lambdas, table1_params(use_pcmc=False, extra=1.8))
+    ratio = float(awgr[0]) / float(base[0])
+    np.testing.assert_allclose(ratio, 10 ** 0.18, rtol=1e-4)
+
+
+def test_hlo_export_contains_entry_and_shapes():
+    text = aot.to_hlo_text(aot.lower_single())
+    assert "ENTRY" in text
+    assert "f32[18]" in text
+    assert "f32[5]" in text or "f32[1,5]" in text
+
+    text_b = aot.to_hlo_text(aot.lower_batched())
+    assert "ENTRY" in text_b
+    assert "f32[128,18]" in text_b
+    assert "f32[128,5]" in text_b
+
+
+def test_hlo_export_writes_files(tmp_path):
+    import subprocess
+    import sys
+
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path)],
+        capture_output=True,
+        text=True,
+        cwd=str(__import__("pathlib").Path(__file__).parent.parent),
+    )
+    assert res.returncode == 0, res.stderr
+    assert (tmp_path / "power_model.hlo.txt").exists()
+    assert (tmp_path / "power_model_b128.hlo.txt").exists()
+    head = (tmp_path / "power_model.hlo.txt").read_text()[:200]
+    assert "HloModule" in head

@@ -1,0 +1,40 @@
+"""Structural checks on the L1 roofline estimator (the DESIGN.md §4
+hardware-adaptation contract: the kernel must fit VMEM comfortably)."""
+
+from compile.kernels import power_prop
+from compile.kernels.roofline import estimate, VMEM_BYTES
+
+
+def test_default_block_fits_vmem_easily():
+    e = estimate(power_prop.BLOCK_B, 18)
+    assert e.vmem_bytes < VMEM_BYTES * 0.01, "default block must be tiny vs VMEM"
+    assert e.vmem_frac == e.vmem_bytes / VMEM_BYTES
+
+
+def test_vmem_scales_linearly_in_block():
+    a = estimate(64, 18)
+    b = estimate(256, 18)
+    # Dominated by the (B, N, N) broadcast → ~4× for 4× block.
+    assert 3.0 < b.vmem_bytes / a.vmem_bytes < 4.5
+
+
+def test_even_huge_blocks_fit():
+    e = estimate(4096, 18)
+    assert e.vmem_frac < 0.5, f"4096-row block uses {e.vmem_frac:.0%} of VMEM"
+
+
+def test_kernel_is_bandwidth_bound_at_n18():
+    # AI ≈ 2·N FLOP per 2 input bytes... small; the kernel should be
+    # bandwidth-bound across all block sizes at N = 18.
+    for b in [16, 128, 1024]:
+        assert estimate(b, 18).bound == "bandwidth"
+
+
+def test_batching_preserves_roofline_throughput():
+    # Once bandwidth-bound, per-config throughput is block-size invariant
+    # (the broadcast intermediate lives in VMEM, not HBM) — batching buys
+    # fewer kernel launches, not more roofline.
+    a = estimate(16, 18)
+    b = estimate(128, 18)
+    assert abs(b.configs_per_second - a.configs_per_second) / a.configs_per_second < 0.05
+    assert b.instances_per_second < a.instances_per_second

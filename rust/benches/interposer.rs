@@ -1,0 +1,109 @@
+//! Microbenchmarks of the hot paths: the per-cycle simulator step for each
+//! architecture (L3's critical loop), the PCMC κ schedule, and the
+//! per-epoch power-model call (rust mirror vs the AOT HLO artifact).
+//!
+//! `cargo bench --bench interposer` (see EXPERIMENTS.md §Perf for recorded
+//! numbers).
+
+use resipi::config::{Architecture, Config};
+use resipi::interposer::pcmc::{kappa_schedule, power_split};
+use resipi::power::{epoch_power, EpochPowerModel, OpticsInput};
+use resipi::sim::{Geometry, Network};
+use resipi::traffic::parsec::{app_by_name, ParsecTraffic};
+use resipi::traffic::UniformTraffic;
+use resipi::util::bench::Bench;
+
+const STEP_CYCLES: u64 = 50_000;
+
+fn bench_network_step(b: &mut Bench) {
+    for arch in [
+        Architecture::Resipi,
+        Architecture::ResipiAllOn,
+        Architecture::Prowaves,
+        Architecture::Awgr,
+    ] {
+        let name = format!("network_step/{}/dedup", arch.name());
+        b.run(&name, Some(STEP_CYCLES as f64), || {
+            let mut cfg = Config::table1(arch);
+            cfg.sim.cycles = STEP_CYCLES;
+            cfg.controller.epoch_cycles = 10_000;
+            let geo = Geometry::from_config(&cfg);
+            let app = app_by_name("dedup").unwrap();
+            let traffic = Box::new(ParsecTraffic::new(geo, app, 42));
+            let mut net = Network::new(cfg, traffic).unwrap();
+            net.run().unwrap();
+            net.metrics().delivered
+        });
+    }
+    // Load sweep on ReSiPI: idle, moderate, heavy.
+    for rate in [0.0005, 0.003, 0.008] {
+        let name = format!("network_step/resipi/uniform-{rate}");
+        b.run(&name, Some(STEP_CYCLES as f64), || {
+            let mut cfg = Config::table1(Architecture::Resipi);
+            cfg.sim.cycles = STEP_CYCLES;
+            cfg.controller.epoch_cycles = 10_000;
+            let geo = Geometry::from_config(&cfg);
+            let traffic = Box::new(UniformTraffic::new(geo, rate, 7));
+            let mut net = Network::new(cfg, traffic).unwrap();
+            net.run().unwrap();
+            net.metrics().delivered
+        });
+    }
+}
+
+fn bench_kappa(b: &mut Bench) {
+    let active = [true; 18];
+    b.run("pcmc/kappa_schedule_18", Some(1.0), || {
+        let ks = kappa_schedule(&active);
+        power_split(&ks, true, 1.0)
+    });
+}
+
+fn bench_power_models(b: &mut Bench) {
+    let cfg = Config::table1(Architecture::Resipi);
+    let active = vec![true; 18];
+    let lambdas = vec![4usize; 18];
+
+    b.run("power/rust_mirror_epoch", Some(1.0), || {
+        let mut input = OpticsInput::new(&active, &lambdas);
+        input.lgc_count = 4;
+        input.inc = true;
+        epoch_power(&input, &cfg.power)
+    });
+
+    if resipi::runtime::HloPowerModel::artifacts_available() {
+        let mut hlo = resipi::runtime::HloPowerModel::load_default().unwrap();
+        b.run("power/hlo_pjrt_epoch", Some(1.0), || {
+            let mut input = OpticsInput::new(&active, &lambdas);
+            input.lgc_count = 4;
+            input.inc = true;
+            hlo.epoch_power(&input, &cfg.power)
+        });
+        let batch = resipi::runtime::BatchPowerModel::load_default().unwrap();
+        let masks: Vec<Vec<bool>> = (0..128)
+            .map(|i| (0..18).map(|j| (i + j) % 3 != 0).collect())
+            .collect();
+        let lams: Vec<Vec<usize>> = (0..128).map(|_| vec![4usize; 18]).collect();
+        let spec = resipi::power::ArchPowerSpec::resipi(5);
+        b.run("power/hlo_pjrt_batch128", Some(128.0), || {
+            batch.evaluate(&masks, &lams, &cfg.power, &spec).unwrap()
+        });
+    } else {
+        println!("(skipping HLO benches: run `make artifacts`)");
+    }
+}
+
+fn main() {
+    println!("== interposer microbenchmarks ==");
+    let mut b = Bench::new(1, 4);
+    bench_network_step(&mut b);
+    bench_kappa(&mut b);
+    bench_power_models(&mut b);
+    // Headline for EXPERIMENTS.md §Perf: simulated cycles per second.
+    if let Some(m) = b.get("network_step/resipi/dedup") {
+        println!(
+            "\nheadline: {:.2} M simulated cycles/s (ReSiPI, dedup)",
+            STEP_CYCLES as f64 / m.mean_s / 1e6
+        );
+    }
+}

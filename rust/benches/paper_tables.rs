@@ -1,0 +1,85 @@
+//! End-to-end regeneration benches: one per paper table/figure
+//! (DESIGN.md §6). Each bench runs the corresponding experiment harness at
+//! CI scale, times it, and prints the headline values so a `cargo bench`
+//! log doubles as a regression record of the reproduction itself.
+//!
+//! Scale via `RESIPI_BENCH_CYCLES` (default 150 000 cycles per simulation
+//! point; the paper uses 100 M — pass a larger value for paper-scale runs).
+
+use resipi::experiments::{ablations, fig10, fig11, fig12, fig13, table2};
+use resipi::power::controller_area::ControllerParams;
+use resipi::util::bench::Bench;
+
+fn point_cycles() -> u64 {
+    std::env::var("RESIPI_BENCH_CYCLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(150_000)
+}
+
+fn main() {
+    let cycles = point_cycles();
+    println!("== paper artifact regeneration (cycles/point = {cycles}) ==");
+    let mut b = Bench::new(0, 1);
+
+    b.run("table2/controller_overhead", None, || {
+        let t = table2::run(&ControllerParams::default());
+        assert!(t.total.area_um2 / 53.83e6 < 1e-3);
+        t.total.area_um2
+    });
+
+    let mut l_m = 0.0;
+    b.run("fig10/design_space_32pts", Some(32.0 * cycles as f64), || {
+        let fig = fig10::run(cycles, 0xF16).unwrap();
+        l_m = fig.l_m;
+        fig.points.len()
+    });
+    println!("  fig10 headline: L_m = {l_m:.4} (paper 0.0152)");
+
+    let mut headline = (0.0, 0.0, 0.0);
+    b.run("fig11/grid_8apps_x_4archs", Some(32.0 * cycles as f64), || {
+        let fig = fig11::run(cycles, 0xF11).unwrap();
+        headline = fig.headline;
+        fig.cells.len()
+    });
+    println!(
+        "  fig11 headline: latency -{:.0}%, power -{:.0}%, energy -{:.0}% (paper -37/-25/-53)",
+        headline.0 * 100.0,
+        headline.1 * 100.0,
+        headline.2 * 100.0
+    );
+
+    let mut settle = (0, 0);
+    b.run("fig12/adaptivity_3apps", Some(6.0 * 10.0 * (cycles / 6) as f64), || {
+        let fig = fig12::run(10, cycles / 6, 0xF12).unwrap();
+        settle = fig.settling;
+        fig.resipi.epochs.len()
+    });
+    println!(
+        "  fig12 headline: settling ReSiPI {} vs PROWAVES {} epochs (paper ~3 vs ~5)",
+        settle.0, settle.1
+    );
+
+    let mut peaks = (0.0, 0.0);
+    b.run("fig13/residency_maps", Some(2.0 * cycles as f64), || {
+        let fig = fig13::run(cycles, 0xF13).unwrap();
+        peaks = (fig.prowaves.peak_to_mean(), fig.resipi.peak_to_mean());
+        fig.resipi.residency.len()
+    });
+    println!(
+        "  fig13 headline: peak/mean PROWAVES {:.2} vs ReSiPI {:.2} (paper: concentrated vs spread)",
+        peaks.0, peaks.1
+    );
+
+    b.run("ablation/thresholds", Some(2.0 * cycles as f64), || {
+        ablations::thresholds(cycles, 0xAB).unwrap().len()
+    });
+    b.run("ablation/gwsel", Some(2.0 * cycles as f64), || {
+        ablations::gateway_selection(cycles, 0xAB2).unwrap().len()
+    });
+    b.run("ablation/epoch_length", Some(4.0 * cycles as f64), || {
+        ablations::epoch_length(cycles, 0xAB3).unwrap().len()
+    });
+
+    println!("\nAll paper artifacts regenerated.");
+}

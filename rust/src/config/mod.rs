@@ -1,0 +1,559 @@
+//! Typed configuration for the ReSiPI simulator.
+//!
+//! [`Config`] captures everything in the paper's Table 1 plus the device
+//! constants from §4.1/§4.3. Presets construct the exact evaluation setup
+//! for each compared architecture; a TOML-subset file (see
+//! [`parser::ConfigMap`]) can override any field for sweeps.
+
+pub mod parser;
+
+use crate::error::{Error, Result};
+use parser::ConfigMap;
+
+/// Which interposer network architecture to simulate (paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Architecture {
+    /// The paper's contribution: dynamic gateways + PCMC power gating.
+    Resipi,
+    /// ReSiPI variant with every gateway always active (Fig. 11 baseline).
+    ResipiAllOn,
+    /// PROWAVES [16]: one gateway per chiplet, dynamic wavelength count.
+    Prowaves,
+    /// AWGR [8]: static all-on, one dedicated wavelength per gateway.
+    Awgr,
+    /// Fixed gateway count per chiplet, no adaptation (Fig. 10 sweep).
+    StaticGateways(usize),
+}
+
+impl Architecture {
+    pub fn name(&self) -> String {
+        match self {
+            Architecture::Resipi => "resipi".into(),
+            Architecture::ResipiAllOn => "resipi-allon".into(),
+            Architecture::Prowaves => "prowaves".into(),
+            Architecture::Awgr => "awgr".into(),
+            Architecture::StaticGateways(g) => format!("static-g{g}"),
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "resipi" => Ok(Architecture::Resipi),
+            "resipi-allon" | "resipi_allon" | "allon" => Ok(Architecture::ResipiAllOn),
+            "prowaves" => Ok(Architecture::Prowaves),
+            "awgr" => Ok(Architecture::Awgr),
+            other => {
+                if let Some(g) = other.strip_prefix("static-g") {
+                    let g: usize = g
+                        .parse()
+                        .map_err(|_| Error::config(format!("bad static gateway count in {other:?}")))?;
+                    return Ok(Architecture::StaticGateways(g));
+                }
+                Err(Error::config(format!(
+                    "unknown architecture {other:?} (expected resipi, resipi-allon, prowaves, awgr, static-gN)"
+                )))
+            }
+        }
+    }
+}
+
+/// Intra-chiplet topology (Table 1: four chiplets, each a 4×4 mesh).
+#[derive(Debug, Clone)]
+pub struct TopologyConfig {
+    pub chiplets: usize,
+    pub mesh_x: usize,
+    pub mesh_y: usize,
+}
+
+impl TopologyConfig {
+    pub fn cores_per_chiplet(&self) -> usize {
+        self.mesh_x * self.mesh_y
+    }
+    pub fn total_cores(&self) -> usize {
+        self.chiplets * self.cores_per_chiplet()
+    }
+}
+
+/// Gateway placement and sizing.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Maximum gateways per chiplet (4 for ReSiPI/AWGR, 1 for PROWAVES).
+    pub per_chiplet: usize,
+    /// Standalone memory-controller gateways on the interposer (always on).
+    pub memory_gateways: usize,
+    /// Gateway buffer depth in flits (8 for ReSiPI/AWGR, 32 for PROWAVES).
+    pub buffer_flits: usize,
+    /// Mesh coordinates `(x, y)` of the routers hosting each gateway,
+    /// in activation order G1..G4 (paper Fig. 8d placement, from [29]).
+    pub positions: Vec<(usize, usize)>,
+}
+
+/// Photonic link parameters.
+#[derive(Debug, Clone)]
+pub struct PhotonicsConfig {
+    /// Active wavelengths per waveguide for ReSiPI/AWGR-style designs.
+    pub wavelengths: usize,
+    /// Maximum wavelengths (PROWAVES scales 1..=max at runtime).
+    pub max_wavelengths: usize,
+    /// Optical data rate per wavelength (Table 1: 12 Gb/s).
+    pub gbps_per_wavelength: f64,
+    /// Electronic NoC clock (Table 1: 1 GHz).
+    pub clock_ghz: f64,
+}
+
+impl PhotonicsConfig {
+    /// Bits serialized per cycle per wavelength (12 Gb/s @ 1 GHz = 12).
+    pub fn bits_per_cycle_per_wavelength(&self) -> f64 {
+        self.gbps_per_wavelength / self.clock_ghz
+    }
+}
+
+/// Electronic router parameters.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Input buffer depth per port, in flits (Table 1: 4).
+    pub buffer_flits: usize,
+}
+
+/// Packet format (Table 1: 8 flits × 32 bits).
+#[derive(Debug, Clone)]
+pub struct PacketConfig {
+    pub flits_per_packet: usize,
+    pub bits_per_flit: usize,
+}
+
+impl PacketConfig {
+    pub fn bits_per_packet(&self) -> usize {
+        self.flits_per_packet * self.bits_per_flit
+    }
+}
+
+/// Reconfiguration / adaptation parameters (§3.3, §4.3).
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Reconfiguration interval (epoch) length in cycles (Table 1: 1 M).
+    pub epoch_cycles: u64,
+    /// Maximum allowable per-gateway load L_m (Fig. 10 exploration: 0.0152
+    /// packets/cycle).
+    pub l_m: f64,
+    /// PCMC state-change latency in cycles (100 ns @ 1 GHz = 100, [10]).
+    pub pcmc_reconfig_cycles: u64,
+    /// PCMC switching energy per reconfiguration event, nJ ([28]: ~2 nJ).
+    pub pcmc_energy_nj: f64,
+    /// SOA laser power retune latency in cycles (20–50 ps [24] → 1 cycle).
+    pub laser_tune_cycles: u64,
+    /// PROWAVES wavelength-count adaptation: load threshold per wavelength
+    /// at which it adds wavelengths (derived from the same L_m philosophy).
+    pub prowaves_lambda_load: f64,
+    /// Ablation switch: replace the Fig. 8 vicinity maps with a naive
+    /// round-robin router→gateway assignment (ignores hop distance).
+    pub gwsel_naive: bool,
+    /// Ablation switch: disable the Eq. 7 hysteresis — use `T_N = L_m`
+    /// (deactivate as soon as load drops below the activation threshold),
+    /// demonstrating the oscillation Eq. 7 prevents.
+    pub no_hysteresis: bool,
+}
+
+/// Photonic power model constants (§4.1, from PROWAVES [16] / [19]).
+#[derive(Debug, Clone)]
+pub struct PowerConfig {
+    /// Laser power per wavelength per waveguide, mW (30 mW).
+    pub laser_mw_per_wavelength: f64,
+    /// Trans-impedance amplifier power per active PD, mW (2 mW).
+    pub tia_mw: f64,
+    /// Thermal tuning power per MR, mW (3 mW).
+    pub tuning_mw_per_mr: f64,
+    /// Modulator driver power per active modulator, mW (3 mW).
+    pub driver_mw: f64,
+    /// AWGR insertion loss, dB (1.8 dB [8]) — inflates AWGR laser power.
+    pub awgr_loss_db: f64,
+    /// Per-MRG-pass through loss, dB (ring through + crossing).
+    pub mrg_through_loss_db: f64,
+    /// PCMC insertion loss, dB.
+    pub pcmc_loss_db: f64,
+    /// Waveguide propagation loss between adjacent MRGs, dB.
+    pub hop_loss_db: f64,
+    /// Receiver sensitivity floor relative to full laser output: the link
+    /// budget solve requires received power ≥ this fraction per wavelength.
+    pub detector_sensitivity_frac: f64,
+    /// ReSiPI controller power (Table 2): LGC per chiplet, µW.
+    pub lgc_uw: f64,
+    /// ReSiPI controller power (Table 2): global InC, µW.
+    pub inc_uw: f64,
+}
+
+/// Simulation horizon.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Total simulated cycles (paper: 100 M; CI-scale defaults are shorter).
+    pub cycles: u64,
+    /// Warm-up cycles excluded from statistics (Table 1: 10 K).
+    pub warmup_cycles: u64,
+    /// Root RNG seed; every derived stream is deterministic in this.
+    pub seed: u64,
+}
+
+/// Complete simulator configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub arch: Architecture,
+    pub topology: TopologyConfig,
+    pub gateways: GatewayConfig,
+    pub photonics: PhotonicsConfig,
+    pub router: RouterConfig,
+    pub packet: PacketConfig,
+    pub controller: ControllerConfig,
+    pub power: PowerConfig,
+    pub sim: SimConfig,
+}
+
+impl Config {
+    /// The paper's Table 1 setup for a given architecture.
+    ///
+    /// `sim.cycles` defaults to 2 M here (the paper runs 100 M; every
+    /// experiment harness scales this up/down explicitly).
+    pub fn table1(arch: Architecture) -> Self {
+        let (per_chiplet, buffer_flits, wavelengths, max_wavelengths) = match arch {
+            Architecture::Resipi | Architecture::ResipiAllOn => (4, 8, 4, 4),
+            Architecture::Prowaves => (1, 32, 16, 16),
+            Architecture::Awgr => (4, 8, 1, 1),
+            Architecture::StaticGateways(_) => (4, 8, 4, 4),
+        };
+        Config {
+            arch,
+            topology: TopologyConfig {
+                chiplets: 4,
+                mesh_x: 4,
+                mesh_y: 4,
+            },
+            gateways: GatewayConfig {
+                per_chiplet,
+                memory_gateways: 2,
+                buffer_flits,
+                // Fig. 8d-style placement on a 4×4 mesh: spread across the
+                // two interposer-facing rows so vicinity sets tile cleanly.
+                positions: vec![(1, 0), (2, 3), (2, 0), (1, 3)],
+            },
+            photonics: PhotonicsConfig {
+                wavelengths,
+                max_wavelengths,
+                gbps_per_wavelength: 12.0,
+                clock_ghz: 1.0,
+            },
+            router: RouterConfig { buffer_flits: 4 },
+            packet: PacketConfig {
+                flits_per_packet: 8,
+                bits_per_flit: 32,
+            },
+            controller: ControllerConfig {
+                epoch_cycles: 1_000_000,
+                // Derived from our Fig. 10 sweep with the paper's 10%
+                // latency-overhead band (`resipi fig10`): 0.027
+                // packets/cycle. The paper derived 0.0152 with the same
+                // methodology on its own testbed (EXPERIMENTS.md).
+                l_m: 0.027,
+                pcmc_reconfig_cycles: 100,
+                pcmc_energy_nj: 2.0,
+                laser_tune_cycles: 1,
+                // Calibrated so PROWAVES' λ occupancy reproduces the
+                // paper's Fig. 12d (10–16 active wavelengths across the
+                // three adaptivity apps): PROWAVES provisions bandwidth
+                // against a latency target, i.e. conservatively.
+                prowaves_lambda_load: 0.003,
+                gwsel_naive: false,
+                no_hysteresis: false,
+            },
+            power: PowerConfig {
+                laser_mw_per_wavelength: 30.0,
+                tia_mw: 2.0,
+                tuning_mw_per_mr: 3.0,
+                driver_mw: 3.0,
+                awgr_loss_db: 1.8,
+                mrg_through_loss_db: 0.02,
+                pcmc_loss_db: 0.05,
+                hop_loss_db: 0.1,
+                detector_sensitivity_frac: 0.05,
+                lgc_uw: 172.0,
+                inc_uw: 787.0,
+            },
+            sim: SimConfig {
+                cycles: 2_000_000,
+                warmup_cycles: 10_000,
+                seed: 0xC0FFEE,
+            },
+        }
+    }
+
+    /// Total gateways in the system (chiplet gateways + memory gateways) —
+    /// 4×4+2 = 18 in the paper's setup.
+    pub fn total_gateways(&self) -> usize {
+        self.topology.chiplets * self.gateways.per_chiplet + self.gateways.memory_gateways
+    }
+
+    /// Apply overrides from a parsed config file. Unknown keys are rejected
+    /// so typos fail loudly.
+    pub fn apply_overrides(&mut self, map: &ConfigMap) -> Result<()> {
+        for key in map.keys() {
+            match key {
+                "arch" => {
+                    let name = map
+                        .get_str(key)
+                        .ok_or_else(|| Error::config("arch must be a string"))?;
+                    self.arch = Architecture::from_name(name)?;
+                }
+                "topology.chiplets" => self.topology.chiplets = req_usize(map, key)?,
+                "topology.mesh_x" => self.topology.mesh_x = req_usize(map, key)?,
+                "topology.mesh_y" => self.topology.mesh_y = req_usize(map, key)?,
+                "gateways.per_chiplet" => self.gateways.per_chiplet = req_usize(map, key)?,
+                "gateways.memory_gateways" => self.gateways.memory_gateways = req_usize(map, key)?,
+                "gateways.buffer_flits" => self.gateways.buffer_flits = req_usize(map, key)?,
+                "photonics.wavelengths" => self.photonics.wavelengths = req_usize(map, key)?,
+                "photonics.max_wavelengths" => {
+                    self.photonics.max_wavelengths = req_usize(map, key)?
+                }
+                "photonics.gbps_per_wavelength" => {
+                    self.photonics.gbps_per_wavelength = req_f64(map, key)?
+                }
+                "photonics.clock_ghz" => self.photonics.clock_ghz = req_f64(map, key)?,
+                "router.buffer_flits" => self.router.buffer_flits = req_usize(map, key)?,
+                "packet.flits_per_packet" => self.packet.flits_per_packet = req_usize(map, key)?,
+                "packet.bits_per_flit" => self.packet.bits_per_flit = req_usize(map, key)?,
+                "controller.epoch_cycles" => self.controller.epoch_cycles = req_u64(map, key)?,
+                "controller.l_m" => self.controller.l_m = req_f64(map, key)?,
+                "controller.pcmc_reconfig_cycles" => {
+                    self.controller.pcmc_reconfig_cycles = req_u64(map, key)?
+                }
+                "controller.pcmc_energy_nj" => self.controller.pcmc_energy_nj = req_f64(map, key)?,
+                "controller.laser_tune_cycles" => {
+                    self.controller.laser_tune_cycles = req_u64(map, key)?
+                }
+                "controller.prowaves_lambda_load" => {
+                    self.controller.prowaves_lambda_load = req_f64(map, key)?
+                }
+                "controller.gwsel_naive" => {
+                    self.controller.gwsel_naive = map
+                        .get_bool(key)
+                        .ok_or_else(|| Error::config(format!("{key} must be a bool")))?
+                }
+                "controller.no_hysteresis" => {
+                    self.controller.no_hysteresis = map
+                        .get_bool(key)
+                        .ok_or_else(|| Error::config(format!("{key} must be a bool")))?
+                }
+                "power.laser_mw_per_wavelength" => {
+                    self.power.laser_mw_per_wavelength = req_f64(map, key)?
+                }
+                "power.tia_mw" => self.power.tia_mw = req_f64(map, key)?,
+                "power.tuning_mw_per_mr" => self.power.tuning_mw_per_mr = req_f64(map, key)?,
+                "power.driver_mw" => self.power.driver_mw = req_f64(map, key)?,
+                "power.awgr_loss_db" => self.power.awgr_loss_db = req_f64(map, key)?,
+                "power.mrg_through_loss_db" => self.power.mrg_through_loss_db = req_f64(map, key)?,
+                "power.pcmc_loss_db" => self.power.pcmc_loss_db = req_f64(map, key)?,
+                "power.hop_loss_db" => self.power.hop_loss_db = req_f64(map, key)?,
+                "power.detector_sensitivity_frac" => {
+                    self.power.detector_sensitivity_frac = req_f64(map, key)?
+                }
+                "sim.cycles" => self.sim.cycles = req_u64(map, key)?,
+                "sim.warmup_cycles" => self.sim.warmup_cycles = req_u64(map, key)?,
+                "sim.seed" => self.sim.seed = req_u64(map, key)?,
+                other => return Err(Error::config(format!("unknown config key {other:?}"))),
+            }
+        }
+        Ok(())
+    }
+
+    /// Load Table 1 defaults and apply a config file on top.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let map = ConfigMap::parse(&text)?;
+        let arch = match map.get_str("arch") {
+            Some(name) => Architecture::from_name(name)?,
+            None => Architecture::Resipi,
+        };
+        let mut cfg = Config::table1(arch);
+        cfg.apply_overrides(&map)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate cross-field invariants; called by every entry point.
+    pub fn validate(&self) -> Result<()> {
+        let t = &self.topology;
+        if t.chiplets == 0 || t.mesh_x == 0 || t.mesh_y == 0 {
+            return Err(Error::config("topology dimensions must be nonzero"));
+        }
+        if self.gateways.per_chiplet == 0 {
+            return Err(Error::config("need at least one gateway per chiplet"));
+        }
+        if self.gateways.positions.len() < self.gateways.per_chiplet {
+            return Err(Error::config(format!(
+                "need {} gateway positions, got {}",
+                self.gateways.per_chiplet,
+                self.gateways.positions.len()
+            )));
+        }
+        for &(x, y) in &self.gateways.positions[..self.gateways.per_chiplet] {
+            if x >= t.mesh_x || y >= t.mesh_y {
+                return Err(Error::config(format!(
+                    "gateway position ({x},{y}) outside {}x{} mesh",
+                    t.mesh_x, t.mesh_y
+                )));
+            }
+        }
+        let mut uniq = self.gateways.positions[..self.gateways.per_chiplet].to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        if uniq.len() != self.gateways.per_chiplet {
+            return Err(Error::config("gateway positions must be distinct"));
+        }
+        if self.photonics.wavelengths == 0
+            || self.photonics.wavelengths > self.photonics.max_wavelengths
+        {
+            return Err(Error::config(format!(
+                "wavelengths {} must be in 1..=max_wavelengths {}",
+                self.photonics.wavelengths, self.photonics.max_wavelengths
+            )));
+        }
+        if self.photonics.bits_per_cycle_per_wavelength() <= 0.0 {
+            return Err(Error::config("optical data rate must be positive"));
+        }
+        if self.router.buffer_flits == 0 || self.gateways.buffer_flits == 0 {
+            return Err(Error::config("buffers must hold at least one flit"));
+        }
+        if self.packet.flits_per_packet == 0 || self.packet.bits_per_flit == 0 {
+            return Err(Error::config("packet format must be nonzero"));
+        }
+        if self.controller.epoch_cycles == 0 {
+            return Err(Error::config("epoch length must be nonzero"));
+        }
+        if !(self.controller.l_m > 0.0) {
+            return Err(Error::config("L_m must be positive"));
+        }
+        if self.sim.warmup_cycles >= self.sim.cycles {
+            return Err(Error::config(format!(
+                "warmup {} must be < total cycles {}",
+                self.sim.warmup_cycles, self.sim.cycles
+            )));
+        }
+        if let Architecture::StaticGateways(g) = self.arch {
+            if g == 0 || g > self.gateways.per_chiplet {
+                return Err(Error::config(format!(
+                    "static gateway count {g} must be in 1..={}",
+                    self.gateways.per_chiplet
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn req_usize(map: &ConfigMap, key: &str) -> Result<usize> {
+    map.get_usize(key)
+        .ok_or_else(|| Error::config(format!("{key} must be a non-negative integer")))
+}
+
+fn req_u64(map: &ConfigMap, key: &str) -> Result<u64> {
+    map.get_u64(key)
+        .ok_or_else(|| Error::config(format!("{key} must be a non-negative integer")))
+}
+
+fn req_f64(map: &ConfigMap, key: &str) -> Result<f64> {
+    map.get_f64(key)
+        .ok_or_else(|| Error::config(format!("{key} must be a number")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_presets_match_paper() {
+        let r = Config::table1(Architecture::Resipi);
+        assert_eq!(r.gateways.per_chiplet, 4);
+        assert_eq!(r.gateways.buffer_flits, 8);
+        assert_eq!(r.photonics.wavelengths, 4);
+        assert_eq!(r.total_gateways(), 18);
+        assert_eq!(r.packet.bits_per_packet(), 256);
+        assert_eq!(r.photonics.bits_per_cycle_per_wavelength(), 12.0);
+
+        let p = Config::table1(Architecture::Prowaves);
+        assert_eq!(p.gateways.per_chiplet, 1);
+        assert_eq!(p.gateways.buffer_flits, 32);
+        assert_eq!(p.photonics.max_wavelengths, 16);
+        // Same peak bisection bandwidth: λ × gateways equal (16×1 = 4×4).
+        assert_eq!(
+            p.photonics.max_wavelengths * p.gateways.per_chiplet,
+            r.photonics.wavelengths * r.gateways.per_chiplet
+        );
+
+        let a = Config::table1(Architecture::Awgr);
+        assert_eq!(a.photonics.wavelengths, 1);
+        assert_eq!(a.total_gateways(), 18);
+    }
+
+    #[test]
+    fn validation_accepts_presets() {
+        for arch in [
+            Architecture::Resipi,
+            Architecture::ResipiAllOn,
+            Architecture::Prowaves,
+            Architecture::Awgr,
+            Architecture::StaticGateways(2),
+        ] {
+            Config::table1(arch).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = Config::table1(Architecture::Resipi);
+        c.photonics.wavelengths = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = Config::table1(Architecture::Resipi);
+        c.sim.warmup_cycles = c.sim.cycles;
+        assert!(c.validate().is_err());
+
+        let mut c = Config::table1(Architecture::Resipi);
+        c.gateways.positions = vec![(0, 0), (0, 0), (1, 1), (2, 2)];
+        assert!(c.validate().is_err());
+
+        let mut c = Config::table1(Architecture::Resipi);
+        c.gateways.positions = vec![(9, 0), (1, 1), (2, 2), (3, 3)];
+        assert!(c.validate().is_err());
+
+        let c = Config::table1(Architecture::StaticGateways(9));
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn overrides_apply_and_reject_unknown() {
+        let mut c = Config::table1(Architecture::Resipi);
+        let map = ConfigMap::parse(
+            "[sim]\ncycles = 500000\nseed = 7\n[controller]\nl_m = 0.02\n",
+        )
+        .unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert_eq!(c.sim.cycles, 500_000);
+        assert_eq!(c.sim.seed, 7);
+        assert_eq!(c.controller.l_m, 0.02);
+
+        let bad = ConfigMap::parse("[sim]\ncylces = 5\n").unwrap();
+        let err = c.apply_overrides(&bad).unwrap_err();
+        assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn arch_names_roundtrip() {
+        for arch in [
+            Architecture::Resipi,
+            Architecture::ResipiAllOn,
+            Architecture::Prowaves,
+            Architecture::Awgr,
+            Architecture::StaticGateways(3),
+        ] {
+            assert_eq!(Architecture::from_name(&arch.name()).unwrap(), arch);
+        }
+        assert!(Architecture::from_name("bogus").is_err());
+    }
+}

@@ -1,0 +1,280 @@
+//! A TOML-subset parser for experiment configuration files.
+//!
+//! The offline image has no `serde`/`toml` crates, so we parse the subset we
+//! actually use: `[section.subsection]` headers, `key = value` pairs with
+//! string / integer / float / bool / homogeneous-array values, `#` comments,
+//! and blank lines. Keys are flattened to dotted paths
+//! (`section.subsection.key`) in a [`ConfigMap`].
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flattened dotted-path → value map.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigMap {
+    map: BTreeMap<String, Value>,
+}
+
+impl ConfigMap {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::config(format!("line {}: unterminated section", lineno + 1)))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(Error::config(format!("line {}: empty section name", lineno + 1)));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| Error::config(format!("line {}: expected `key = value`", lineno + 1)))?;
+            let key = line[..eq].trim();
+            let valtext = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(Error::config(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = parse_value(valtext)
+                .map_err(|e| Error::config(format!("line {}: {}", lineno + 1, e)))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            map.insert(path, value);
+        }
+        Ok(Self { map })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.map.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(|v| v.as_str())
+    }
+
+    pub fn get_i64(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(|v| v.as_i64())
+    }
+
+    pub fn get_u64(&self, path: &str) -> Option<u64> {
+        self.get_i64(path).and_then(|x| u64::try_from(x).ok())
+    }
+
+    pub fn get_usize(&self, path: &str) -> Option<usize> {
+        self.get_i64(path).and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(|v| v.as_bool())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> std::result::Result<Value, String> {
+    let text = text.trim();
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Integer (allow underscores like TOML).
+    let cleaned: String = text.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {text:?}"))
+}
+
+/// Split on commas that are not inside quotes (arrays of strings).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = r#"
+# top comment
+title = "resipi"
+[sim]
+cycles = 1_000_000   # inline comment
+warmup = 10000
+seed = 42
+[photonics]
+wavelengths = 4
+gbps = 12.5
+enabled = true
+losses = [0.1, 0.2, 0.3]
+names = ["a", "b"]
+"#;
+        let m = ConfigMap::parse(text).unwrap();
+        assert_eq!(m.get_str("title"), Some("resipi"));
+        assert_eq!(m.get_u64("sim.cycles"), Some(1_000_000));
+        assert_eq!(m.get_u64("sim.warmup"), Some(10_000));
+        assert_eq!(m.get_f64("photonics.gbps"), Some(12.5));
+        assert_eq!(m.get_bool("photonics.enabled"), Some(true));
+        assert_eq!(m.get_f64("photonics.wavelengths"), Some(4.0));
+        match m.get("photonics.losses") {
+            Some(Value::Array(xs)) => assert_eq!(xs.len(), 3),
+            other => panic!("expected array, got {other:?}"),
+        }
+        match m.get("photonics.names") {
+            Some(Value::Array(xs)) => {
+                assert_eq!(xs[0].as_str(), Some("a"));
+                assert_eq!(xs[1].as_str(), Some("b"));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let m = ConfigMap::parse("k = \"a#b\"").unwrap();
+        assert_eq!(m.get_str("k"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        let err = ConfigMap::parse("[sim\ncycles = 5").unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+        let err = ConfigMap::parse("just a line").unwrap_err();
+        assert!(err.to_string().contains("key = value"));
+        let err = ConfigMap::parse("k = @@@").unwrap_err();
+        assert!(err.to_string().contains("cannot parse"));
+    }
+
+    #[test]
+    fn empty_and_comment_only() {
+        let m = ConfigMap::parse("\n# nothing here\n\n").unwrap();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let m = ConfigMap::parse("a = -3\nb = -2.5\nc = 1e3").unwrap();
+        assert_eq!(m.get_i64("a"), Some(-3));
+        assert_eq!(m.get_f64("b"), Some(-2.5));
+        assert_eq!(m.get_f64("c"), Some(1000.0));
+    }
+}

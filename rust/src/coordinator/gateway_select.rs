@@ -1,0 +1,324 @@
+//! Adaptive gateway selection (paper §3.3 Fig. 8 and §3.4).
+//!
+//! Given the set of *active* gateways on a chiplet, build the router →
+//! gateway **vicinity map**: every router is assigned to exactly one active
+//! gateway such that (a) gateways receive balanced shares of `R_g = R / g_c`
+//! routers and (b) each router picks a gateway in its vicinity (minimum hop
+//! count subject to the balance constraint). The same map answers both
+//! routing steps of §3.4:
+//!
+//! * **source step** — a router sends inter-chiplet packets to
+//!   `map[router]` on its own chiplet;
+//! * **destination step** — the source gateway picks the destination
+//!   gateway as `map[dst_router]` of the *destination* chiplet (the paper's
+//!   "design-time analysis stored at gateway routers": minimizing the
+//!   gateway→destination-router hop count is exactly the vicinity map of
+//!   the destination router, refreshed every reconfiguration interval).
+
+use crate::sim::ids::{ChipletId, Coord, GatewayId, Geometry};
+
+/// Router→gateway assignment for one chiplet (indexed by local router id
+/// `y * mesh_x + x`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VicinityMap {
+    pub chiplet: ChipletId,
+    /// Local gateway slot for every router.
+    assignment: Vec<usize>,
+    /// Second-choice slot per router (the next-nearest *other* active
+    /// gateway; equals `assignment` when only one is active). §3.4 weighs
+    /// both hop count *and* gateway load for the destination-side
+    /// selection — the source gateway alternates between the two nearest
+    /// candidates so a hot destination router cannot pin all of its
+    /// traffic onto a single reader.
+    alt: Vec<usize>,
+}
+
+impl VicinityMap {
+    /// Build the balanced-vicinity assignment for a chiplet with the given
+    /// active gateway slots.
+    ///
+    /// Greedy minimum-distance matching under quota: all (router, gateway)
+    /// pairs are sorted by hop distance (ties: gateway slot, then router
+    /// index — fully deterministic); each router takes its closest gateway
+    /// that still has quota. Quotas are `ceil(R / g)` with the remainder
+    /// spread over the earliest slots, so shares differ by at most one.
+    pub fn build(geo: &Geometry, chiplet: ChipletId, active_slots: &[bool]) -> Self {
+        assert_eq!(active_slots.len(), geo.gw_per_chiplet);
+        let actives: Vec<usize> = (0..geo.gw_per_chiplet)
+            .filter(|&k| active_slots[k])
+            .collect();
+        assert!(
+            !actives.is_empty(),
+            "vicinity map needs at least one active gateway"
+        );
+        let r = geo.routers_per_chiplet();
+        let g = actives.len();
+        let base = r / g;
+        let rem = r % g;
+        // quota[i] for actives[i]
+        let mut quota: Vec<usize> = (0..g).map(|i| base + usize::from(i < rem)).collect();
+
+        // All pairs sorted by (distance, slot, router).
+        let mut pairs: Vec<(usize, usize, usize)> = Vec::with_capacity(r * g);
+        for router in 0..r {
+            let rc = Coord::new(router % geo.mesh_x, router / geo.mesh_x);
+            for (i, &slot) in actives.iter().enumerate() {
+                let d = rc.dist(geo.gw_positions[slot]);
+                pairs.push((d, i, router));
+            }
+        }
+        pairs.sort_unstable();
+
+        let mut assignment = vec![usize::MAX; r];
+        let mut assigned = 0;
+        for &(_, i, router) in &pairs {
+            if assigned == r {
+                break;
+            }
+            if assignment[router] != usize::MAX || quota[i] == 0 {
+                continue;
+            }
+            assignment[router] = actives[i];
+            quota[i] -= 1;
+            assigned += 1;
+        }
+        debug_assert!(assignment.iter().all(|&a| a != usize::MAX));
+        let alt = Self::build_alt(geo, &actives, &assignment);
+        Self {
+            chiplet,
+            assignment,
+            alt,
+        }
+    }
+
+    /// Second-nearest *different* active gateway per router (no quota).
+    fn build_alt(geo: &Geometry, actives: &[usize], assignment: &[usize]) -> Vec<usize> {
+        assignment
+            .iter()
+            .enumerate()
+            .map(|(router, &primary)| {
+                let rc = Coord::new(router % geo.mesh_x, router / geo.mesh_x);
+                actives
+                    .iter()
+                    .copied()
+                    .filter(|&slot| slot != primary)
+                    .min_by_key(|&slot| (rc.dist(geo.gw_positions[slot]), slot))
+                    .unwrap_or(primary)
+            })
+            .collect()
+    }
+
+    /// Ablation baseline: round-robin assignment ignoring hop distance
+    /// (used by `resipi ablate gwsel` to quantify what the Fig. 8 vicinity
+    /// construction buys).
+    pub fn build_naive(geo: &Geometry, chiplet: ChipletId, active_slots: &[bool]) -> Self {
+        assert_eq!(active_slots.len(), geo.gw_per_chiplet);
+        let actives: Vec<usize> = (0..geo.gw_per_chiplet)
+            .filter(|&k| active_slots[k])
+            .collect();
+        assert!(!actives.is_empty());
+        let r = geo.routers_per_chiplet();
+        let assignment: Vec<usize> = (0..r).map(|i| actives[i % actives.len()]).collect();
+        let alt = Self::build_alt(geo, &actives, &assignment);
+        Self {
+            chiplet,
+            assignment,
+            alt,
+        }
+    }
+
+    /// The gateway slot assigned to a local router coordinate.
+    pub fn slot_for(&self, geo: &Geometry, coord: Coord) -> usize {
+        self.assignment[coord.y * geo.mesh_x + coord.x]
+    }
+
+    /// The global gateway id assigned to a local router coordinate.
+    pub fn gateway_for(&self, geo: &Geometry, coord: Coord) -> GatewayId {
+        geo.chiplet_gateway(self.chiplet, self.slot_for(geo, coord))
+    }
+
+    /// The second-choice slot for a router (destination-side balancing).
+    pub fn alt_slot_for(&self, geo: &Geometry, coord: Coord) -> usize {
+        self.alt[coord.y * geo.mesh_x + coord.x]
+    }
+
+    /// The second-choice gateway id for a router.
+    pub fn alt_gateway_for(&self, geo: &Geometry, coord: Coord) -> GatewayId {
+        geo.chiplet_gateway(self.chiplet, self.alt_slot_for(geo, coord))
+    }
+
+    /// Routers assigned to each slot (diagnostics / balance checks).
+    pub fn share_counts(&self, geo: &Geometry) -> Vec<usize> {
+        let mut counts = vec![0usize; geo.gw_per_chiplet];
+        for &slot in &self.assignment {
+            counts[slot] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Architecture, Config};
+    use crate::util::proptest::{check, PropConfig};
+
+    fn geo() -> Geometry {
+        Geometry::from_config(&Config::table1(Architecture::Resipi))
+    }
+
+    #[test]
+    fn one_gateway_takes_all_routers_fig8a() {
+        let g = geo();
+        let m = VicinityMap::build(&g, 0, &[true, false, false, false]);
+        let counts = m.share_counts(&g);
+        assert_eq!(counts, vec![16, 0, 0, 0]);
+    }
+
+    #[test]
+    fn two_gateways_split_evenly_fig8b() {
+        let g = geo();
+        let m = VicinityMap::build(&g, 0, &[true, true, false, false]);
+        let counts = m.share_counts(&g);
+        assert_eq!(counts[0], 8);
+        assert_eq!(counts[1], 8);
+        // Vicinity: G1 at (1,0) should own its own host router; G2 at (2,3) its own.
+        assert_eq!(m.slot_for(&g, Coord::new(1, 0)), 0);
+        assert_eq!(m.slot_for(&g, Coord::new(2, 3)), 1);
+    }
+
+    #[test]
+    fn four_gateways_split_evenly_fig8d() {
+        let g = geo();
+        let m = VicinityMap::build(&g, 0, &[true; 4]);
+        let counts = m.share_counts(&g);
+        assert_eq!(counts, vec![4, 4, 4, 4]);
+        // Every gateway's host router belongs to that gateway.
+        for k in 0..4 {
+            assert_eq!(m.slot_for(&g, g.gw_positions[k]), k, "host router affinity");
+        }
+    }
+
+    #[test]
+    fn three_gateways_shares_differ_by_at_most_one() {
+        let g = geo();
+        let m = VicinityMap::build(&g, 0, &[true, true, true, false]);
+        let counts = m.share_counts(&g);
+        let active: Vec<usize> = counts.iter().copied().filter(|&c| c > 0).collect();
+        assert_eq!(active.iter().sum::<usize>(), 16);
+        assert_eq!(active.len(), 3);
+        let (min, max) = (
+            *active.iter().min().unwrap(),
+            *active.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "{counts:?}");
+        assert_eq!(counts[3], 0, "inactive slot must get nothing");
+    }
+
+    #[test]
+    fn alt_map_differs_when_multiple_active() {
+        let g = geo();
+        let m = VicinityMap::build(&g, 0, &[true, true, true, true]);
+        for y in 0..4 {
+            for x in 0..4 {
+                let c = Coord::new(x, y);
+                assert_ne!(
+                    m.slot_for(&g, c),
+                    m.alt_slot_for(&g, c),
+                    "alt must be a different gateway at {c:?}"
+                );
+            }
+        }
+        // Single active gateway: alt falls back to primary.
+        let m1 = VicinityMap::build(&g, 0, &[true, false, false, false]);
+        let c = Coord::new(2, 2);
+        assert_eq!(m1.slot_for(&g, c), m1.alt_slot_for(&g, c));
+    }
+
+    #[test]
+    fn deterministic_rebuild() {
+        let g = geo();
+        let a = VicinityMap::build(&g, 2, &[true, true, false, true]);
+        let b = VicinityMap::build(&g, 2, &[true, true, false, true]);
+        assert_eq!(a, b);
+    }
+
+    /// Property: for any nonempty active pattern, the map is total, only
+    /// targets active slots, balances within 1, and never assigns a router
+    /// to a gateway farther than (mesh diameter) — sanity on vicinity.
+    #[test]
+    fn prop_balanced_total_assignment() {
+        let g = geo();
+        check(
+            &PropConfig::default(),
+            |rng| {
+                loop {
+                    let pat: Vec<bool> = (0..4).map(|_| rng.gen_bool(0.5)).collect();
+                    if pat.iter().any(|&a| a) {
+                        return pat;
+                    }
+                }
+            },
+            |pat| {
+                let m = VicinityMap::build(&g, 1, pat);
+                let counts = m.share_counts(&g);
+                for (k, &c) in counts.iter().enumerate() {
+                    if !pat[k] && c > 0 {
+                        return Err(format!("inactive slot {k} got {c} routers"));
+                    }
+                }
+                let shares: Vec<usize> = counts
+                    .iter()
+                    .zip(pat)
+                    .filter(|(_, &a)| a)
+                    .map(|(&c, _)| c)
+                    .collect();
+                let total: usize = shares.iter().sum();
+                if total != 16 {
+                    return Err(format!("assignment not total: {total}"));
+                }
+                let min = shares.iter().min().unwrap();
+                let max = shares.iter().max().unwrap();
+                if max - min > 1 {
+                    return Err(format!("unbalanced shares {shares:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: the average router→gateway hop count of the vicinity map
+    /// never exceeds that of a naive fixed assignment (everything to the
+    /// first active gateway) — the mechanism exists to cut hop counts
+    /// (paper's design-B motivation, Fig. 3).
+    #[test]
+    fn prop_vicinity_not_worse_than_single_gateway() {
+        let g = geo();
+        check(
+            &PropConfig::default(),
+            |rng| loop {
+                let pat: Vec<bool> = (0..4).map(|_| rng.gen_bool(0.6)).collect();
+                if pat.iter().any(|&a| a) {
+                    return pat;
+                }
+            },
+            |pat| {
+                let m = VicinityMap::build(&g, 0, pat);
+                let first_active = pat.iter().position(|&a| a).unwrap();
+                let mut ours = 0usize;
+                let mut naive = 0usize;
+                for y in 0..4 {
+                    for x in 0..4 {
+                        let c = Coord::new(x, y);
+                        ours += c.dist(g.gw_positions[m.slot_for(&g, c)]);
+                        naive += c.dist(g.gw_positions[first_active]);
+                    }
+                }
+                if ours > naive {
+                    return Err(format!("vicinity map ({ours}) worse than naive ({naive})"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,280 @@
+//! Interposer Controller (InC) — the global manager of §3.5 (Fig. 9).
+//!
+//! At each reconfiguration boundary the InC receives every chiplet's active
+//! gateway count, forms the global active mask (memory-controller gateways
+//! are always on), and:
+//!
+//! 1. computes the PCMC κ schedule (Eq. 4 via `interposer::kappa_schedule`),
+//! 2. retunes the PCMCs that changed — each state change costs the paper's
+//!    2 nJ and stalls the affected writers for the 100-cycle reconfiguration
+//!    window (§4.3),
+//! 3. retunes the SOA laser to the minimum level that closes every active
+//!    link (via an [`EpochPowerModel`] — the AOT-compiled HLO artifact when
+//!    available, the rust mirror otherwise),
+//!
+//! following Fig. 7's ordering: laser up *before* activating gateways;
+//! drain/deactivate *before* laser down.
+
+use crate::config::Config;
+use crate::interposer::pcmc::{kappa_schedule, Pcmc};
+use crate::power::{ArchPowerSpec, EpochPowerModel, OpticsInput, PowerBreakdown};
+use crate::sim::packet::Cycle;
+
+/// Result of an InC reconfiguration.
+#[derive(Debug, Clone)]
+pub struct Reconfig {
+    /// PCMC state changes performed.
+    pub pcmc_switches: usize,
+    /// Energy spent switching PCMCs, nJ.
+    pub switch_energy_nj: f64,
+    /// Writers must not start new transmissions before this cycle (the
+    /// 100-cycle PCMC window); `None` when nothing changed.
+    pub stall_until: Option<Cycle>,
+    /// Power breakdown the system draws until the next reconfiguration.
+    pub power: PowerBreakdown,
+    /// Total active gateways (GT) after this reconfiguration.
+    pub total_active: usize,
+}
+
+/// The global interposer controller.
+pub struct Inc {
+    pcmcs: Vec<Pcmc>,
+    /// Current power level (between reconfigurations).
+    current_power: PowerBreakdown,
+    /// Cumulative PCMC switching energy, nJ.
+    total_switch_energy_nj: f64,
+    total_switches: u64,
+}
+
+impl Inc {
+    /// `n_gateways` is the total gateway count (chain length; N−1 PCMCs).
+    pub fn new(n_gateways: usize) -> Self {
+        assert!(n_gateways >= 2);
+        Self {
+            pcmcs: (0..n_gateways - 1).map(|_| Pcmc::new(0.0)).collect(),
+            current_power: PowerBreakdown::zero(),
+            total_switch_energy_nj: 0.0,
+            total_switches: 0,
+        }
+    }
+
+    /// Reconfigure for the new global active mask and per-gateway
+    /// wavelength counts. `spec` carries the architecture's power
+    /// semantics (see `power::ArchPowerSpec`).
+    pub fn reconfigure(
+        &mut self,
+        active: &[bool],
+        lambdas: &[usize],
+        now: Cycle,
+        cfg: &Config,
+        model: &mut dyn EpochPowerModel,
+        spec: &ArchPowerSpec,
+    ) -> Reconfig {
+        assert_eq!(active.len(), self.pcmcs.len() + 1);
+        assert_eq!(lambdas.len(), active.len());
+
+        let mut switches = 0usize;
+        let mut stall_until = None;
+        if spec.use_pcmc {
+            let ks = kappa_schedule(active);
+            for (p, &k) in self.pcmcs.iter_mut().zip(&ks) {
+                if p.retune(k, now, cfg.controller.pcmc_reconfig_cycles) {
+                    switches += 1;
+                }
+            }
+            if switches > 0 {
+                stall_until = Some(now + cfg.controller.pcmc_reconfig_cycles);
+            }
+        }
+        let switch_energy_nj = switches as f64 * cfg.controller.pcmc_energy_nj;
+        self.total_switch_energy_nj += switch_energy_nj;
+        self.total_switches += switches as u64;
+
+        let input = OpticsInput {
+            active,
+            lambdas,
+            use_pcmc: spec.use_pcmc,
+            extra_loss_db: spec.extra_loss_db,
+            listen_sources: spec.listen_sources,
+            static_tune_lambda: spec.static_tune_lambda,
+            links_per_writer: spec.links_per_writer,
+            lgc_count: if spec.charge_controller {
+                cfg.topology.chiplets
+            } else {
+                0
+            },
+            inc: spec.charge_controller,
+        };
+        let power = model.epoch_power(&input, &cfg.power);
+        self.current_power = power;
+
+        Reconfig {
+            pcmc_switches: switches,
+            switch_energy_nj,
+            stall_until,
+            power,
+            total_active: active.iter().filter(|&&a| a).count(),
+        }
+    }
+
+    /// Power level currently in force.
+    pub fn current_power(&self) -> PowerBreakdown {
+        self.current_power
+    }
+
+    /// κ currently in effect at `now` for each chain PCMC.
+    pub fn kappas_at(&self, now: Cycle) -> Vec<f64> {
+        self.pcmcs.iter().map(|p| p.kappa_at(now)).collect()
+    }
+
+    pub fn total_switch_energy_nj(&self) -> f64 {
+        self.total_switch_energy_nj
+    }
+
+    pub fn total_switches(&self) -> u64 {
+        self.total_switches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Architecture;
+    use crate::interposer::pcmc::power_split;
+    use crate::power::RustPowerModel;
+
+    fn cfg() -> Config {
+        Config::table1(Architecture::Resipi)
+    }
+
+    fn spec_resipi() -> ArchPowerSpec {
+        ArchPowerSpec::resipi(5)
+    }
+
+    fn spec_plain() -> ArchPowerSpec {
+        ArchPowerSpec {
+            use_pcmc: false,
+            extra_loss_db: 0.0,
+            listen_sources: 0,
+            static_tune_lambda: 16,
+            links_per_writer: 1,
+            charge_controller: false,
+        }
+    }
+
+    #[test]
+    fn reconfigure_sets_eq4_schedule_and_charges_energy() {
+        let cfg = cfg();
+        let mut inc = Inc::new(18);
+        let mut model = RustPowerModel;
+        let mut active = vec![true; 18];
+        active[4] = false;
+        active[9] = false;
+        let lambdas = vec![4usize; 18];
+        let r = inc.reconfigure(
+            &active, &lambdas, 1000, &cfg, &mut model, &spec_resipi(),
+        );
+        assert_eq!(r.total_active, 16);
+        assert!(r.pcmc_switches > 0);
+        assert_eq!(
+            r.switch_energy_nj,
+            r.pcmc_switches as f64 * cfg.controller.pcmc_energy_nj
+        );
+        assert_eq!(r.stall_until, Some(1000 + cfg.controller.pcmc_reconfig_cycles));
+        // After the window, the effective κ realize the equal split.
+        let ks = inc.kappas_at(1000 + cfg.controller.pcmc_reconfig_cycles);
+        let split = power_split(&ks, active[17], 1.0);
+        for (i, (&a, s)) in active.iter().zip(&split).enumerate() {
+            let want = if a { 1.0 / 16.0 } else { 0.0 };
+            assert!((s - want).abs() < 1e-9, "writer {i}: {s} vs {want}");
+        }
+        assert!(r.power.total_mw > 0.0);
+    }
+
+    #[test]
+    fn identical_mask_is_free_nonvolatile() {
+        let cfg = cfg();
+        let mut inc = Inc::new(18);
+        let mut model = RustPowerModel;
+        let active = vec![true; 18];
+        let lambdas = vec![4usize; 18];
+        let r1 = inc.reconfigure(&active, &lambdas, 0, &cfg, &mut model, &spec_resipi());
+        assert!(r1.pcmc_switches > 0, "first configuration programs the chain");
+        let r2 = inc.reconfigure(
+            &active,
+            &lambdas,
+            cfg.controller.epoch_cycles,
+            &cfg,
+            &mut model,
+            &spec_resipi(),
+        );
+        assert_eq!(r2.pcmc_switches, 0, "non-volatile: same state costs nothing");
+        assert_eq!(r2.switch_energy_nj, 0.0);
+        assert_eq!(r2.stall_until, None);
+    }
+
+    #[test]
+    fn laser_tracks_active_count() {
+        let cfg = cfg();
+        let mut inc = Inc::new(18);
+        let mut model = RustPowerModel;
+        let lambdas = vec![4usize; 18];
+        let all = vec![true; 18];
+        let r_all = inc.reconfigure(&all, &lambdas, 0, &cfg, &mut model, &spec_resipi());
+        let mut few = vec![false; 18];
+        for i in [0, 5, 16, 17] {
+            few[i] = true;
+        }
+        let r_few = inc.reconfigure(
+            &few,
+            &lambdas,
+            cfg.controller.epoch_cycles,
+            &cfg,
+            &mut model,
+            &spec_resipi(),
+        );
+        assert!(
+            r_few.power.laser_mw < r_all.power.laser_mw * 0.35,
+            "laser power must drop with gateway count: {} vs {}",
+            r_few.power.laser_mw,
+            r_all.power.laser_mw
+        );
+    }
+
+    #[test]
+    fn no_pcmc_mode_never_stalls() {
+        let cfg = cfg();
+        let mut inc = Inc::new(6);
+        let mut model = RustPowerModel;
+        let active = vec![true; 6];
+        let lambdas = vec![16usize; 6];
+        let r = inc.reconfigure(&active, &lambdas, 0, &cfg, &mut model, &spec_plain());
+        assert_eq!(r.pcmc_switches, 0);
+        assert_eq!(r.stall_until, None);
+        assert_eq!(r.power.controller_mw, 0.0);
+    }
+
+    #[test]
+    fn cumulative_energy_accounting() {
+        let cfg = cfg();
+        let mut inc = Inc::new(4);
+        let mut model = RustPowerModel;
+        let lambdas = vec![4usize; 4];
+        inc.reconfigure(&[true, true, true, true], &lambdas, 0, &cfg, &mut model, &spec_resipi());
+        inc.reconfigure(
+            &[true, true, false, false],
+            &lambdas,
+            1_000_000,
+            &cfg,
+            &mut model,
+            &spec_resipi(),
+        );
+        assert!(inc.total_switches() >= 4);
+        assert!(
+            (inc.total_switch_energy_nj()
+                - inc.total_switches() as f64 * cfg.controller.pcmc_energy_nj)
+                .abs()
+                < 1e-9
+        );
+    }
+}

@@ -1,0 +1,256 @@
+//! Local Gateway Controller (LGC) — paper §3.5, Fig. 9.
+//!
+//! One LGC per chiplet. At every reconfiguration-interval boundary it reads
+//! the per-gateway packet counters (Eq. 5), applies the Fig. 6 threshold
+//! automaton (`thresholds::decide`), and updates its *target* active set:
+//! activations take effect immediately after the laser is raised; a
+//! deactivation first drains the victim gateway (Fig. 7) — the network
+//! layer reports the flush back via [`Lgc::confirm_inactive`].
+//!
+//! Policy details the paper leaves implicit, made explicit here:
+//! * gateways activate in fixed slot order G1→G4 and deactivate in reverse
+//!   (deterministic, matches the "pre-analysed scenarios" of §3.4 where the
+//!   active set is always a prefix);
+//! * at most one step per epoch per chiplet (Fig. 6 shows ±1 transitions).
+
+use crate::coordinator::thresholds::{average_load, decide, Decision};
+use crate::sim::ids::ChipletId;
+
+/// The LGC's decision for one epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LgcAction {
+    /// Activate this slot (after the laser level is raised — Fig. 7 order).
+    Activate(usize),
+    /// Begin draining this slot; deactivate when flushed.
+    Drain(usize),
+    /// No change.
+    Hold,
+}
+
+/// Per-chiplet gateway controller.
+#[derive(Debug, Clone)]
+pub struct Lgc {
+    pub chiplet: ChipletId,
+    g_max: usize,
+    l_m: f64,
+    /// Slots this controller considers active (its target; a draining slot
+    /// stays "active" here until the network confirms the flush).
+    active: Vec<bool>,
+    /// Slot currently draining, if any.
+    draining: Option<usize>,
+    /// Load measured at the last epoch boundary (diagnostics / Fig. 10).
+    last_load: f64,
+    /// Epoch-boundary decisions taken (metrics).
+    activations: u64,
+    deactivations: u64,
+    /// Ablation: disable Eq. 7's hysteresis (`T_N = L_m`).
+    no_hysteresis: bool,
+}
+
+impl Lgc {
+    /// New controller with `initial_g` gateways active (paper: starts at
+    /// the maximum, §3.3).
+    pub fn new(chiplet: ChipletId, g_max: usize, l_m: f64, initial_g: usize) -> Self {
+        assert!(initial_g >= 1 && initial_g <= g_max);
+        Self {
+            chiplet,
+            g_max,
+            l_m,
+            active: (0..g_max).map(|k| k < initial_g).collect(),
+            draining: None,
+            last_load: 0.0,
+            activations: 0,
+            deactivations: 0,
+            no_hysteresis: false,
+        }
+    }
+
+    /// Ablation constructor: `T_N = L_m` instead of Eq. 7 (no hysteresis).
+    pub fn with_no_hysteresis(mut self) -> Self {
+        self.no_hysteresis = true;
+        self
+    }
+
+    pub fn active_slots(&self) -> &[bool] {
+        &self.active
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    pub fn last_load(&self) -> f64 {
+        self.last_load
+    }
+
+    pub fn activations(&self) -> u64 {
+        self.activations
+    }
+
+    pub fn deactivations(&self) -> u64 {
+        self.deactivations
+    }
+
+    /// Epoch-boundary update. `epoch_packets[k]` is slot `k`'s transmitted
+    /// packet count over the epoch (Eq. 5's `P_i`; zero for inactive slots).
+    pub fn epoch_update(&mut self, epoch_packets: &[usize], epoch_cycles: u64) -> LgcAction {
+        assert_eq!(epoch_packets.len(), self.g_max);
+        // While a drain is still in progress, hold: the previous decision
+        // has not fully landed (keeps one-step-per-epoch semantics sane).
+        if self.draining.is_some() {
+            return LgcAction::Hold;
+        }
+        let counts: Vec<u64> = (0..self.g_max)
+            .filter(|&k| self.active[k])
+            .map(|k| epoch_packets[k] as u64)
+            .collect();
+        let load = average_load(&counts, epoch_cycles);
+        self.last_load = load;
+        let g = counts.len();
+        let decision = if self.no_hysteresis {
+            // Ablation: no Eq. 7 band — any sub-L_m load sheds a gateway.
+            if load > self.l_m && g < self.g_max {
+                Decision::Increase
+            } else if g > 1 && load < self.l_m {
+                Decision::Decrease
+            } else {
+                Decision::Hold
+            }
+        } else {
+            decide(load, g, self.g_max, self.l_m)
+        };
+        match decision {
+            Decision::Increase => {
+                let slot = (0..self.g_max)
+                    .find(|&k| !self.active[k])
+                    .expect("Increase decided with all slots active");
+                self.active[slot] = true;
+                self.activations += 1;
+                LgcAction::Activate(slot)
+            }
+            Decision::Decrease => {
+                let slot = (0..self.g_max)
+                    .rev()
+                    .find(|&k| self.active[k])
+                    .expect("Decrease decided with no active slot");
+                self.draining = Some(slot);
+                self.deactivations += 1;
+                LgcAction::Drain(slot)
+            }
+            Decision::Hold => LgcAction::Hold,
+        }
+    }
+
+    /// The network confirms the draining slot finished flushing and is now
+    /// power-gated.
+    pub fn confirm_inactive(&mut self, slot: usize) {
+        debug_assert_eq!(self.draining, Some(slot));
+        self.active[slot] = false;
+        self.draining = None;
+    }
+
+    /// Slot currently draining (the network checks this each cycle).
+    pub fn draining_slot(&self) -> Option<usize> {
+        self.draining
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L_M: f64 = 0.0152;
+    const EPOCH: u64 = 100_000;
+
+    fn lgc(initial: usize) -> Lgc {
+        Lgc::new(0, 4, L_M, initial)
+    }
+
+    /// Packet counts per slot that produce a given average load over the
+    /// currently active slots.
+    fn packets_for_load(l: &Lgc, load: f64, epoch: u64) -> Vec<usize> {
+        let per = (load * epoch as f64) as usize;
+        l.active_slots()
+            .iter()
+            .map(|&a| if a { per } else { 0 })
+            .collect()
+    }
+
+    #[test]
+    fn overload_activates_next_slot_in_order() {
+        let mut l = lgc(1);
+        let pk = packets_for_load(&l, L_M * 1.5, EPOCH);
+        assert_eq!(l.epoch_update(&pk, EPOCH), LgcAction::Activate(1));
+        assert_eq!(l.active_count(), 2);
+        assert_eq!(l.activations(), 1);
+        // Still overloaded → next slot.
+        let pk = packets_for_load(&l, L_M * 1.5, EPOCH);
+        assert_eq!(l.epoch_update(&pk, EPOCH), LgcAction::Activate(2));
+    }
+
+    #[test]
+    fn saturation_holds_at_g_max() {
+        let mut l = lgc(4);
+        let pk = packets_for_load(&l, L_M * 3.0, EPOCH);
+        assert_eq!(l.epoch_update(&pk, EPOCH), LgcAction::Hold);
+        assert_eq!(l.active_count(), 4);
+    }
+
+    #[test]
+    fn low_load_drains_highest_slot_and_waits_for_confirm() {
+        let mut l = lgc(4);
+        let pk = packets_for_load(&l, L_M * 0.1, EPOCH);
+        assert_eq!(l.epoch_update(&pk, EPOCH), LgcAction::Drain(3));
+        // Target still counts the draining slot until confirmation.
+        assert_eq!(l.active_count(), 4);
+        assert_eq!(l.draining_slot(), Some(3));
+        // Next epoch with drain pending → hold.
+        let pk = packets_for_load(&l, L_M * 0.1, EPOCH);
+        assert_eq!(l.epoch_update(&pk, EPOCH), LgcAction::Hold);
+        l.confirm_inactive(3);
+        assert_eq!(l.active_count(), 3);
+        // Now a further decrease can proceed.
+        let pk = packets_for_load(&l, L_M * 0.1, EPOCH);
+        assert_eq!(l.epoch_update(&pk, EPOCH), LgcAction::Drain(2));
+    }
+
+    #[test]
+    fn last_gateway_never_drains() {
+        let mut l = lgc(1);
+        let pk = packets_for_load(&l, 0.0, EPOCH);
+        assert_eq!(l.epoch_update(&pk, EPOCH), LgcAction::Hold);
+        assert_eq!(l.active_count(), 1);
+    }
+
+    #[test]
+    fn hysteresis_band_is_stable() {
+        let mut l = lgc(2);
+        // Between T_N(2) = L_m/2 and L_m: hold forever.
+        for _ in 0..10 {
+            let pk = packets_for_load(&l, L_M * 0.7, EPOCH);
+            assert_eq!(l.epoch_update(&pk, EPOCH), LgcAction::Hold);
+        }
+        assert_eq!(l.active_count(), 2);
+    }
+
+    #[test]
+    fn load_measurement_matches_eq5() {
+        let mut l = lgc(2);
+        // Slots 0,1 active with 100 and 50 packets over 100 k cycles:
+        // L_c = (100 + 50) / (2 × 100 000) = 7.5e-4.
+        l.epoch_update(&[100, 50, 999, 999], EPOCH);
+        assert!((l.last_load() - 7.5e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adapts_from_min_to_max_in_g_epochs() {
+        // The Fig. 12 adaptivity claim: ReSiPI reaches the needed count in
+        // ~3 intervals. From g=1 under sustained overload: 3 epochs to g=4.
+        let mut l = lgc(1);
+        for _ in 0..3 {
+            let pk = packets_for_load(&l, L_M * 2.0, EPOCH);
+            let _ = l.epoch_update(&pk, EPOCH);
+        }
+        assert_eq!(l.active_count(), 4);
+    }
+}

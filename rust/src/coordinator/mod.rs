@@ -1,0 +1,22 @@
+//! The paper's system contribution: ReSiPI's reconfiguration control plane.
+//!
+//! * [`thresholds`] — the Eq. 5–7 load thresholds and the Fig. 6 automaton;
+//! * [`lgc`] — the per-chiplet Local Gateway Controller;
+//! * [`inc`] — the global Interposer Controller (κ schedule, PCMC retunes,
+//!   SOA laser management);
+//! * [`gateway_select`] — the Fig. 8 / §3.4 adaptive router→gateway
+//!   vicinity maps used for both source- and destination-side selection;
+//! * [`prowaves`] — the PROWAVES [16] wavelength-adaptation baseline
+//!   controller used throughout the evaluation.
+
+pub mod gateway_select;
+pub mod inc;
+pub mod lgc;
+pub mod prowaves;
+pub mod thresholds;
+
+pub use gateway_select::VicinityMap;
+pub use inc::{Inc, Reconfig};
+pub use lgc::{Lgc, LgcAction};
+pub use prowaves::ProwavesCtrl;
+pub use thresholds::{average_load, decide, t_n, t_p, Decision};

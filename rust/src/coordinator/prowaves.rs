@@ -1,0 +1,178 @@
+//! PROWAVES baseline controller [16] (paper §2.2, §4.1).
+//!
+//! PROWAVES keeps **one gateway per chiplet** and adapts the number of
+//! *active wavelengths* per gateway at every epoch instead of the gateway
+//! count. Our implementation mirrors its proactive selection: each gateway
+//! estimates the wavelength count needed to carry the measured load at a
+//! target per-wavelength utilization `ρ` and steps toward it with a bounded
+//! slew rate. The bounded slew is what produces the multi-epoch settling
+//! the paper observes in Fig. 12 ("PROWAVES is unstable for five
+//! reconfiguration intervals" after an application switch, vs three for
+//! ReSiPI).
+
+/// Per-epoch wavelength adaptation for the PROWAVES baseline.
+#[derive(Debug, Clone)]
+pub struct ProwavesCtrl {
+    /// Active wavelengths per gateway.
+    lambdas: Vec<usize>,
+    max_lambda: usize,
+    /// Target per-wavelength load (packets/cycle/λ) — the knob equivalent
+    /// to ReSiPI's `L_m`.
+    rho: f64,
+    /// Max wavelengths added/removed per gateway per epoch.
+    slew: usize,
+    adaptations: u64,
+}
+
+impl ProwavesCtrl {
+    pub fn new(gateways: usize, max_lambda: usize, rho: f64) -> Self {
+        assert!(max_lambda >= 1);
+        assert!(rho > 0.0);
+        Self {
+            // PROWAVES also starts at maximum bandwidth (like ReSiPI's
+            // all-active start) and adapts down.
+            lambdas: vec![max_lambda; gateways],
+            max_lambda,
+            rho,
+            slew: 4,
+            adaptations: 0,
+        }
+    }
+
+    pub fn lambdas(&self) -> &[usize] {
+        &self.lambdas
+    }
+
+    pub fn lambda_of(&self, gateway: usize) -> usize {
+        self.lambdas[gateway]
+    }
+
+    /// Total active wavelengths across gateways (Fig. 12d's y-axis is the
+    /// per-gateway count; this sum drives laser power).
+    pub fn total_lambdas(&self) -> usize {
+        self.lambdas.iter().sum()
+    }
+
+    pub fn adaptations(&self) -> u64 {
+        self.adaptations
+    }
+
+    /// Epoch update from per-gateway transmitted packet counts.
+    /// Returns true if any gateway's wavelength count changed.
+    pub fn epoch_update(&mut self, epoch_packets: &[usize], epoch_cycles: u64) -> bool {
+        assert_eq!(epoch_packets.len(), self.lambdas.len());
+        if epoch_cycles == 0 {
+            return false;
+        }
+        let mut changed = false;
+        for (g, lam) in self.lambdas.iter_mut().enumerate() {
+            let load = epoch_packets[g] as f64 / epoch_cycles as f64;
+            // Wavelengths needed to keep per-λ load at ρ.
+            let target = ((load / self.rho).ceil() as usize).clamp(1, self.max_lambda);
+            let next = if target > *lam {
+                (*lam + self.slew).min(target)
+            } else if target < *lam {
+                lam.saturating_sub(self.slew).max(target)
+            } else {
+                *lam
+            };
+            if next != *lam {
+                *lam = next;
+                changed = true;
+            }
+        }
+        if changed {
+            self.adaptations += 1;
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RHO: f64 = 0.0152 / 4.0;
+    const EPOCH: u64 = 100_000;
+
+    fn packets_for_load(load: f64) -> usize {
+        (load * EPOCH as f64) as usize
+    }
+
+    #[test]
+    fn starts_at_maximum() {
+        let c = ProwavesCtrl::new(6, 16, RHO);
+        assert_eq!(c.lambdas(), &[16; 6]);
+        assert_eq!(c.total_lambdas(), 96);
+    }
+
+    #[test]
+    fn low_load_steps_down_with_slew() {
+        let mut c = ProwavesCtrl::new(1, 16, RHO);
+        let pk = [packets_for_load(RHO * 1.5)]; // needs 2 λ
+        assert!(c.epoch_update(&pk, EPOCH));
+        assert_eq!(c.lambda_of(0), 12, "slew limits the drop to 4/epoch");
+        c.epoch_update(&pk, EPOCH);
+        c.epoch_update(&pk, EPOCH);
+        c.epoch_update(&pk, EPOCH);
+        assert_eq!(c.lambda_of(0), 2, "converges to the demand");
+        assert!(!c.epoch_update(&pk, EPOCH), "stable once converged");
+    }
+
+    #[test]
+    fn high_load_steps_up() {
+        let mut c = ProwavesCtrl::new(1, 16, RHO);
+        // Converge down to 1 first.
+        for _ in 0..5 {
+            c.epoch_update(&[0], EPOCH);
+        }
+        assert_eq!(c.lambda_of(0), 1);
+        // Load needing 16 λ: climbs at slew rate.
+        let pk = [packets_for_load(RHO * 16.0)];
+        c.epoch_update(&pk, EPOCH);
+        assert_eq!(c.lambda_of(0), 5);
+        c.epoch_update(&pk, EPOCH);
+        c.epoch_update(&pk, EPOCH);
+        c.epoch_update(&pk, EPOCH);
+        assert_eq!(c.lambda_of(0), 16);
+    }
+
+    #[test]
+    fn settles_slower_than_resipi_claim() {
+        // App switch from max load to near-idle: how many epochs until
+        // stable? Must be > 3 (ReSiPI's settling) — the Fig. 12 contrast.
+        let mut c = ProwavesCtrl::new(1, 16, RHO);
+        let idle = [packets_for_load(RHO * 0.5)];
+        let mut epochs = 0;
+        loop {
+            let changed = c.epoch_update(&idle, EPOCH);
+            epochs += 1;
+            if !changed {
+                break;
+            }
+            assert!(epochs < 20);
+        }
+        assert!(epochs >= 4, "PROWAVES settling took {epochs} epochs");
+    }
+
+    #[test]
+    fn never_exceeds_bounds() {
+        let mut c = ProwavesCtrl::new(2, 16, RHO);
+        for _ in 0..10 {
+            c.epoch_update(&[usize::MAX / 1024, 0], EPOCH);
+            assert!(c.lambda_of(0) <= 16);
+            assert!(c.lambda_of(1) >= 1);
+        }
+    }
+
+    #[test]
+    fn per_gateway_independence() {
+        let mut c = ProwavesCtrl::new(2, 16, RHO);
+        let pk = [packets_for_load(RHO * 16.0), packets_for_load(RHO * 0.5)];
+        for _ in 0..6 {
+            c.epoch_update(&pk, EPOCH);
+        }
+        assert_eq!(c.lambda_of(0), 16);
+        assert_eq!(c.lambda_of(1), 1);
+    }
+}

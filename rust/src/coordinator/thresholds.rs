@@ -1,0 +1,163 @@
+//! Gateway-count threshold policy (paper §3.3, Eq. 5–7 and Fig. 6).
+//!
+//! The LGC measures the average active-gateway load `L_c` (Eq. 5, packets
+//! per cycle per gateway) each reconfiguration interval and compares it to
+//! two thresholds:
+//!
+//! * `T_P(g) = L_m` — above the maximum allowable load, add a gateway;
+//! * `T_N(g) = L_m (1 − 1/g)` — Eq. 7's hysteresis: remove a gateway only
+//!   when the remaining `g − 1` gateways can absorb the load without any of
+//!   them exceeding `L_m`.
+//!
+//! The derivation (Eq. 8–10): dropping from `g` to `g−1` redistributes the
+//! per-gateway load `L_c · g / (g−1)`; requiring that to stay ≤ `L_m` gives
+//! `L_c ≤ L_m (1 − 1/g)`.
+
+/// The LGC's per-epoch decision on the active gateway count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Activate one more gateway (`g → g + 1`).
+    Increase,
+    /// Drain and deactivate one gateway (`g → g − 1`).
+    Decrease,
+    /// Keep the current count.
+    Hold,
+}
+
+/// Threshold for increasing the count (Eq. 6): constant `L_m`.
+#[inline]
+pub fn t_p(l_m: f64) -> f64 {
+    l_m
+}
+
+/// Threshold for decreasing the count (Eq. 7): `L_m (1 − 1/g)`.
+#[inline]
+pub fn t_n(l_m: f64, g: usize) -> f64 {
+    debug_assert!(g >= 1);
+    l_m * (1.0 - 1.0 / g as f64)
+}
+
+/// Eq. 5: average gateway load for a chiplet this epoch — mean over the
+/// *active* gateways of `P_i / T_i`.
+pub fn average_load(packets_per_gateway: &[u64], epoch_cycles: u64) -> f64 {
+    if packets_per_gateway.is_empty() || epoch_cycles == 0 {
+        return 0.0;
+    }
+    let total: u64 = packets_per_gateway.iter().sum();
+    total as f64 / (packets_per_gateway.len() as u64 * epoch_cycles) as f64
+}
+
+/// The Fig. 6 decision automaton for one chiplet.
+pub fn decide(load: f64, g: usize, g_max: usize, l_m: f64) -> Decision {
+    debug_assert!(g >= 1 && g <= g_max);
+    if load > t_p(l_m) && g < g_max {
+        Decision::Increase
+    } else if g > 1 && load < t_n(l_m, g) {
+        Decision::Decrease
+    } else {
+        Decision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, PropConfig};
+
+    const L_M: f64 = 0.0152;
+
+    #[test]
+    fn fig6_threshold_table() {
+        // The table in Fig. 6: T_N for g = 2, 3, 4.
+        assert!((t_n(L_M, 2) - L_M * 0.5).abs() < 1e-12);
+        assert!((t_n(L_M, 3) - L_M * (2.0 / 3.0)).abs() < 1e-12);
+        assert!((t_n(L_M, 4) - L_M * 0.75).abs() < 1e-12);
+        // g = 1: threshold is 0 — never deactivate the last gateway.
+        assert_eq!(t_n(L_M, 1), 0.0);
+    }
+
+    #[test]
+    fn decide_increase_above_lm() {
+        assert_eq!(decide(L_M * 1.1, 2, 4, L_M), Decision::Increase);
+        // Saturated at g_max: hold even under overload.
+        assert_eq!(decide(L_M * 2.0, 4, 4, L_M), Decision::Hold);
+    }
+
+    #[test]
+    fn decide_decrease_below_tn() {
+        assert_eq!(decide(L_M * 0.4, 2, 4, L_M), Decision::Decrease);
+        assert_eq!(decide(L_M * 0.6, 2, 4, L_M), Decision::Hold);
+        // Last gateway never deactivates.
+        assert_eq!(decide(0.0, 1, 4, L_M), Decision::Hold);
+    }
+
+    #[test]
+    fn hysteresis_band_holds() {
+        // Between T_N(g) and L_m the count is stable.
+        for g in 2..=4 {
+            let mid = (t_n(L_M, g) + L_M) / 2.0;
+            assert_eq!(decide(mid, g, 4, L_M), Decision::Hold, "g={g}");
+        }
+    }
+
+    #[test]
+    fn average_load_eq5() {
+        // 3 active gateways, epoch 1000 cycles, 30 packets total.
+        assert!((average_load(&[20, 10, 0], 1000) - 0.01).abs() < 1e-12);
+        assert_eq!(average_load(&[], 1000), 0.0);
+        assert_eq!(average_load(&[5], 0), 0.0);
+    }
+
+    /// Property (no-oscillation): after an Eq. 7-motivated decrease, the
+    /// redistributed load on `g − 1` gateways does not immediately trigger
+    /// an increase. This is exactly the rationale the paper derives.
+    #[test]
+    fn prop_decrease_never_immediately_reverses() {
+        check(
+            &PropConfig::default(),
+            |rng| {
+                let g = rng.gen_range_usize(2, 5);
+                let load = rng.next_f64() * L_M * 1.5;
+                (g, load)
+            },
+            |&(g, load)| {
+                if decide(load, g, 4, L_M) == Decision::Decrease {
+                    // Total load conserved: per-gateway load after removal.
+                    let redistributed = load * g as f64 / (g - 1) as f64;
+                    if decide(redistributed, g - 1, 4, L_M) == Decision::Increase {
+                        return Err(format!(
+                            "oscillation: g={g}, load={load}, redistributed={redistributed}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: decisions are monotone in load — if some load triggers
+    /// Increase, any higher load also does; same for Decrease downward.
+    #[test]
+    fn prop_monotone_decisions() {
+        check(
+            &PropConfig::default(),
+            |rng| {
+                let g = rng.gen_range_usize(1, 5);
+                let a = rng.next_f64() * L_M * 2.0;
+                let b = rng.next_f64() * L_M * 2.0;
+                (g, a.min(b), a.max(b))
+            },
+            |&(g, lo, hi)| {
+                let d_lo = decide(lo, g, 4, L_M);
+                let d_hi = decide(hi, g, 4, L_M);
+                if d_lo == Decision::Increase && d_hi != Decision::Increase {
+                    return Err("higher load lost the Increase".into());
+                }
+                if d_hi == Decision::Decrease && d_lo != Decision::Decrease {
+                    return Err("lower load lost the Decrease".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Result alias used throughout the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// ReSiPI error taxonomy.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Configuration file / preset problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Simulation invariant violated (indicates a bug, surfaced loudly).
+    #[error("simulation invariant violated: {0}")]
+    Invariant(String),
+
+    /// Trace file parsing problems.
+    #[error("trace error: {0}")]
+    Trace(String),
+
+    /// PJRT / XLA runtime problems (artifact loading, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Filesystem / IO errors.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn invariant(msg: impl Into<String>) -> Self {
+        Error::Invariant(msg.into())
+    }
+    pub fn trace(msg: impl Into<String>) -> Self {
+        Error::Trace(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+}

@@ -1,0 +1,167 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! * **thresholds** — Eq. 7's hysteresis vs a naive `T_N = L_m` policy:
+//!   counts reconfiguration churn (PCMC switches) and its latency cost;
+//! * **gwsel** — the Fig. 8 vicinity maps vs a round-robin router→gateway
+//!   assignment that ignores hop distance;
+//! * **epoch** — reconfiguration-interval length sweep (§3.3's
+//!   responsiveness-vs-overhead trade-off).
+
+use crate::config::{Architecture, Config};
+use crate::sim::{Geometry, Network, Summary};
+use crate::traffic::parsec::{app_by_name, ParsecTraffic};
+use crate::util::io::Csv;
+use crate::util::pool::par_map_auto;
+use crate::Result;
+
+/// One ablation row: a labeled summary.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub label: String,
+    pub summary: Summary,
+    /// Total PCMC switch events (churn indicator).
+    pub pcmc_switch_energy_nj: f64,
+}
+
+fn run_one(mut cfg: Config, label: &str, seed: u64) -> Result<AblationRow> {
+    cfg.sim.seed = seed;
+    let geo = Geometry::from_config(&cfg);
+    let app = app_by_name("dedup").unwrap();
+    let traffic = Box::new(ParsecTraffic::new(geo, app, seed ^ 0xAB1));
+    let mut net = Network::new(cfg, traffic)?;
+    net.run()?;
+    let summary = net.summary();
+    Ok(AblationRow {
+        label: label.to_string(),
+        pcmc_switch_energy_nj: summary.pcmc_switch_energy_nj,
+        summary,
+    })
+}
+
+/// Eq. 7 hysteresis vs naive thresholds.
+pub fn thresholds(cycles: u64, seed: u64) -> Result<Vec<AblationRow>> {
+    let jobs: Vec<(&str, bool)> = vec![("eq7-hysteresis", false), ("naive-no-hysteresis", true)];
+    par_map_auto(jobs, |&(label, naive)| {
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.sim.cycles = cycles;
+        cfg.controller.epoch_cycles = (cycles / 20).max(10_000);
+        cfg.controller.no_hysteresis = naive;
+        run_one(cfg, label, seed)
+    })
+    .into_iter()
+    .collect()
+}
+
+/// Vicinity maps vs naive round-robin gateway selection.
+pub fn gateway_selection(cycles: u64, seed: u64) -> Result<Vec<AblationRow>> {
+    let jobs: Vec<(&str, bool)> = vec![("fig8-vicinity", false), ("naive-round-robin", true)];
+    par_map_auto(jobs, |&(label, naive)| {
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.sim.cycles = cycles;
+        cfg.controller.epoch_cycles = (cycles / 20).max(10_000);
+        cfg.controller.gwsel_naive = naive;
+        run_one(cfg, label, seed)
+    })
+    .into_iter()
+    .collect()
+}
+
+/// Epoch-length sweep.
+pub fn epoch_length(cycles: u64, seed: u64) -> Result<Vec<AblationRow>> {
+    let lengths: Vec<u64> = vec![cycles / 100, cycles / 40, cycles / 20, cycles / 8]
+        .into_iter()
+        .map(|e| e.max(5_000))
+        .collect();
+    par_map_auto(lengths, |&epoch| {
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.sim.cycles = cycles;
+        cfg.controller.epoch_cycles = epoch;
+        run_one(cfg, &format!("epoch-{epoch}"), seed)
+    })
+    .into_iter()
+    .collect()
+}
+
+pub fn to_csv(rows: &[AblationRow]) -> Csv {
+    let mut csv = Csv::new(vec![
+        "variant",
+        "avg_latency_cycles",
+        "avg_power_mw",
+        "energy_metric_pj",
+        "pcmc_switch_energy_nj",
+        "avg_active_gateways",
+        "delivery_ratio",
+    ]);
+    for r in rows {
+        csv.row(vec![
+            r.label.clone(),
+            format!("{:.3}", r.summary.avg_latency_cycles),
+            format!("{:.3}", r.summary.avg_power_mw),
+            format!("{:.3}", r.summary.energy_metric_pj),
+            format!("{:.1}", r.pcmc_switch_energy_nj),
+            format!("{:.2}", r.summary.avg_active_gateways),
+            format!("{:.4}", r.summary.delivery_ratio),
+        ]);
+    }
+    csv
+}
+
+pub fn report(title: &str, rows: &[AblationRow]) -> String {
+    let mut out = format!("Ablation: {title}\n\n");
+    out.push_str("variant                 latency    power(mW)  switches(nJ)  gateways\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{:<23} {:<10.2} {:<10.1} {:<13.1} {:<8.2}\n",
+            r.label,
+            r.summary.avg_latency_cycles,
+            r.summary.avg_power_mw,
+            r.pcmc_switch_energy_nj,
+            r.summary.avg_active_gateways
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hysteresis_reduces_churn() {
+        let rows = thresholds(200_000, 0xAB).unwrap();
+        assert_eq!(rows.len(), 2);
+        let eq7 = &rows[0];
+        let naive = &rows[1];
+        assert!(
+            naive.pcmc_switch_energy_nj >= eq7.pcmc_switch_energy_nj,
+            "no-hysteresis must churn at least as much: {} vs {}",
+            naive.pcmc_switch_energy_nj,
+            eq7.pcmc_switch_energy_nj
+        );
+    }
+
+    #[test]
+    fn vicinity_beats_round_robin_latency() {
+        let rows = gateway_selection(200_000, 0xAB2).unwrap();
+        let vic = &rows[0];
+        let naive = &rows[1];
+        assert!(
+            vic.summary.avg_latency_cycles < naive.summary.avg_latency_cycles,
+            "vicinity {} vs round-robin {}",
+            vic.summary.avg_latency_cycles,
+            naive.summary.avg_latency_cycles
+        );
+    }
+
+    #[test]
+    fn epoch_sweep_runs_all_lengths() {
+        let rows = epoch_length(160_000, 0xAB3).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.summary.delivery_ratio > 0.8, "{}", r.label);
+        }
+        let csv = to_csv(&rows);
+        assert_eq!(csv.len(), 4);
+        assert!(report("epoch", &rows).contains("epoch-"));
+    }
+}

@@ -1,0 +1,195 @@
+//! Fig. 11 — latency (a), power (b), and energy (c) for the eight PARSEC
+//! applications under the four compared architectures: AWGR [8],
+//! PROWAVES [16], ReSiPI, and the ReSiPI-all-gateways-on variant (§4.4).
+//!
+//! Paper's headline (means over the eight apps, ReSiPI vs PROWAVES):
+//! ≈37% lower latency, ≈25% lower power, ≈53% lower energy; AWGR has the
+//! worst power; ReSiPI-all-on is slightly faster but markedly more
+//! power-hungry than adaptive ReSiPI.
+
+use crate::config::{Architecture, Config};
+use crate::sim::{Geometry, Network, Summary};
+use crate::traffic::parsec::{ParsecTraffic, PARSEC_APPS};
+use crate::util::io::{Csv, Json};
+use crate::util::pool::par_map_auto;
+use crate::Result;
+
+pub const ARCHS: [Architecture; 4] = [
+    Architecture::Awgr,
+    Architecture::Prowaves,
+    Architecture::Resipi,
+    Architecture::ResipiAllOn,
+];
+
+/// Full Fig. 11 result grid.
+#[derive(Debug, Clone)]
+pub struct Fig11 {
+    /// One summary per (app, arch), row-major by app then arch (ARCHS order).
+    pub cells: Vec<Summary>,
+    /// Mean ReSiPI-vs-PROWAVES improvements over apps: (latency, power,
+    /// energy), as fractions (0.37 = 37% lower).
+    pub headline: (f64, f64, f64),
+}
+
+impl Fig11 {
+    pub fn cell(&self, app: usize, arch: usize) -> &Summary {
+        &self.cells[app * ARCHS.len() + arch]
+    }
+}
+
+/// Run the grid. `cycles` per point (paper: 100 M).
+pub fn run(cycles: u64, seed: u64) -> Result<Fig11> {
+    let jobs: Vec<(usize, usize)> = (0..PARSEC_APPS.len())
+        .flat_map(|a| (0..ARCHS.len()).map(move |r| (a, r)))
+        .collect();
+    let results = par_map_auto(jobs, |&(a, r)| -> Result<Summary> {
+        let app = PARSEC_APPS[a];
+        let mut cfg = Config::table1(ARCHS[r]);
+        cfg.sim.cycles = cycles;
+        cfg.sim.seed = seed ^ ((a as u64) << 16) ^ ((r as u64) << 4);
+        cfg.controller.epoch_cycles = (cycles / 20).max(10_000);
+        let geo = Geometry::from_config(&cfg);
+        let traffic = Box::new(ParsecTraffic::new(geo, app, cfg.sim.seed ^ 0xA11));
+        let mut net = Network::new(cfg, traffic)?;
+        net.run()?;
+        Ok(net.summary())
+    });
+    let cells: Vec<Summary> = results.into_iter().collect::<Result<_>>()?;
+
+    // Headline improvements: mean over apps of 1 − resipi/prowaves.
+    let idx = |a: usize, r: usize| a * ARCHS.len() + r;
+    let (mut dl, mut dp, mut de) = (0.0, 0.0, 0.0);
+    for a in 0..PARSEC_APPS.len() {
+        let pw = &cells[idx(a, 1)];
+        let rs = &cells[idx(a, 2)];
+        dl += 1.0 - rs.avg_latency_cycles / pw.avg_latency_cycles;
+        dp += 1.0 - rs.avg_power_mw / pw.avg_power_mw;
+        de += 1.0 - rs.energy_metric_pj / pw.energy_metric_pj;
+    }
+    let n = PARSEC_APPS.len() as f64;
+    Ok(Fig11 {
+        cells,
+        headline: (dl / n, dp / n, de / n),
+    })
+}
+
+pub fn to_csv(fig: &Fig11) -> Csv {
+    let mut csv = Csv::new(vec![
+        "app",
+        "arch",
+        "avg_latency_cycles",
+        "p99_latency_cycles",
+        "avg_power_mw",
+        "laser_mw",
+        "tuning_mw",
+        "tia_mw",
+        "driver_mw",
+        "energy_metric_pj",
+        "total_energy_uj",
+        "avg_active_gateways",
+        "avg_total_lambdas",
+        "delivery_ratio",
+    ]);
+    for (a, app) in PARSEC_APPS.iter().enumerate() {
+        for (r, _) in ARCHS.iter().enumerate() {
+            let s = fig.cell(a, r);
+            csv.row(vec![
+                app.name.to_string(),
+                s.arch.clone(),
+                format!("{:.3}", s.avg_latency_cycles),
+                format!("{:.3}", s.p99_latency_cycles),
+                format!("{:.3}", s.avg_power_mw),
+                format!("{:.3}", s.power.laser_mw),
+                format!("{:.3}", s.power.tuning_mw),
+                format!("{:.3}", s.power.tia_mw),
+                format!("{:.3}", s.power.driver_mw),
+                format!("{:.3}", s.energy_metric_pj),
+                format!("{:.3}", s.total_energy_uj),
+                format!("{:.2}", s.avg_active_gateways),
+                format!("{:.2}", s.avg_total_lambdas),
+                format!("{:.4}", s.delivery_ratio),
+            ]);
+        }
+    }
+    csv
+}
+
+pub fn to_json(fig: &Fig11) -> Json {
+    let mut j = Json::obj();
+    j.set("experiment", "fig11");
+    j.set("latency_improvement_vs_prowaves", fig.headline.0);
+    j.set("power_improvement_vs_prowaves", fig.headline.1);
+    j.set("energy_improvement_vs_prowaves", fig.headline.2);
+    j.set(
+        "paper_claims",
+        Json::Arr(vec![
+            Json::Str("latency -37%".into()),
+            Json::Str("power -25%".into()),
+            Json::Str("energy -53%".into()),
+        ]),
+    );
+    j
+}
+
+pub fn report(fig: &Fig11) -> String {
+    let mut out = String::new();
+    out.push_str("Fig. 11 — latency / power / energy per app × architecture\n\n");
+    out.push_str("app            arch           latency    power(mW)  energy(pJ)\n");
+    for (a, app) in PARSEC_APPS.iter().enumerate() {
+        for (r, _) in ARCHS.iter().enumerate() {
+            let s = fig.cell(a, r);
+            out.push_str(&format!(
+                "{:<14} {:<14} {:<10.2} {:<10.1} {:<10.1}\n",
+                app.name, s.arch, s.avg_latency_cycles, s.avg_power_mw, s.energy_metric_pj
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "\nReSiPI vs PROWAVES (mean over apps): latency −{:.0}%, power −{:.0}%, energy −{:.0}%\n\
+         Paper reports:                        latency −37%, power −25%, energy −53%\n",
+        fig.headline.0 * 100.0,
+        fig.headline.1 * 100.0,
+        fig.headline.2 * 100.0
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scaled-down Fig. 11 must reproduce the paper's *shape*: ReSiPI
+    /// beats PROWAVES on latency, power, and energy on average; AWGR burns
+    /// the most power; all-on ReSiPI uses more power than adaptive ReSiPI.
+    #[test]
+    fn shape_of_fig11_holds_at_small_scale() {
+        let fig = run(150_000, 0xF11).unwrap();
+        assert_eq!(fig.cells.len(), 32);
+        let (dl, dp, de) = fig.headline;
+        assert!(dl > 0.0, "ReSiPI must cut latency vs PROWAVES (got {dl:.2})");
+        assert!(dp > 0.0, "ReSiPI must cut power vs PROWAVES (got {dp:.2})");
+        assert!(de > 0.10, "ReSiPI must cut energy vs PROWAVES (got {de:.2})");
+
+        // AWGR worst power on average.
+        let mean_power = |arch_idx: usize| -> f64 {
+            (0..PARSEC_APPS.len())
+                .map(|a| fig.cell(a, arch_idx).avg_power_mw)
+                .sum::<f64>()
+                / PARSEC_APPS.len() as f64
+        };
+        let awgr = mean_power(0);
+        for r in 1..4 {
+            assert!(
+                awgr > mean_power(r),
+                "AWGR should have the worst power: {awgr} vs {}",
+                mean_power(r)
+            );
+        }
+        // All-on ReSiPI > adaptive ReSiPI power.
+        assert!(mean_power(3) > mean_power(2));
+        // Every cell delivered sensibly.
+        for s in &fig.cells {
+            assert!(s.delivery_ratio > 0.6, "{}: ratio {}", s.arch, s.delivery_ratio);
+        }
+    }
+}

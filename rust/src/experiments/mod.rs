@@ -1,0 +1,28 @@
+//! Experiment harness: one module per paper artifact (DESIGN.md §6).
+
+pub mod ablations;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod scaling;
+pub mod table2;
+
+use std::path::PathBuf;
+
+/// Where experiment outputs (CSV/JSON) land.
+pub fn output_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("RESIPI_RESULTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from("results")
+}
+
+/// Shared run-scale knob: the paper simulates 100 M cycles per point; CI
+/// scales down. `RESIPI_SCALE` multiplies the default per-point horizon.
+pub fn scale() -> f64 {
+    std::env::var("RESIPI_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}

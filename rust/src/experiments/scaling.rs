@@ -1,0 +1,142 @@
+//! Scalability extension (paper §1–2 motivation: "the interposer network
+//! can suffer from traffic congestion especially when the system scales
+//! up"): sweep the chiplet count at fixed per-core load and compare how
+//! ReSiPI's distributed gateways and PROWAVES's single-gateway-per-chiplet
+//! design scale in latency and power.
+//!
+//! Not a paper figure — an extension experiment DESIGN.md §6 lists (the
+//! paper defers scale-out to future work).
+
+use crate::config::{Architecture, Config};
+use crate::sim::{Geometry, Network, Summary};
+use crate::traffic::parsec::{app_by_name, ParsecTraffic};
+use crate::util::io::Csv;
+use crate::util::pool::par_map_auto;
+use crate::Result;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub chiplets: usize,
+    pub summary: Summary,
+}
+
+/// Run the sweep over chiplet counts for both architectures on the median
+/// workload (dedup).
+pub fn run(chiplet_counts: &[usize], cycles: u64, seed: u64) -> Result<Vec<ScalePoint>> {
+    let jobs: Vec<(usize, Architecture)> = chiplet_counts
+        .iter()
+        .flat_map(|&c| {
+            [Architecture::Resipi, Architecture::Prowaves]
+                .into_iter()
+                .map(move |a| (c, a))
+        })
+        .collect();
+    par_map_auto(jobs, |&(chiplets, arch)| -> Result<ScalePoint> {
+        let mut cfg = Config::table1(arch);
+        cfg.topology.chiplets = chiplets;
+        // Memory controllers scale with the system (one per two chiplets,
+        // minimum two — mirrors Table 1's 2-per-4).
+        cfg.gateways.memory_gateways = (chiplets / 2).max(2);
+        cfg.sim.cycles = cycles;
+        cfg.sim.seed = seed ^ ((chiplets as u64) << 24) ^ arch.name().len() as u64;
+        cfg.controller.epoch_cycles = (cycles / 20).max(10_000);
+        cfg.validate()?;
+        let geo = Geometry::from_config(&cfg);
+        let app = app_by_name("dedup").unwrap();
+        let traffic = Box::new(ParsecTraffic::new(geo, app, cfg.sim.seed ^ 0x5CA1E));
+        let mut net = Network::new(cfg, traffic)?;
+        net.run()?;
+        Ok(ScalePoint {
+            chiplets,
+            summary: net.summary(),
+        })
+    })
+    .into_iter()
+    .collect()
+}
+
+pub fn to_csv(points: &[ScalePoint]) -> Csv {
+    let mut csv = Csv::new(vec![
+        "chiplets",
+        "arch",
+        "avg_latency_cycles",
+        "avg_power_mw",
+        "energy_metric_pj",
+        "avg_active_gateways",
+        "delivery_ratio",
+    ]);
+    for p in points {
+        csv.row(vec![
+            p.chiplets.to_string(),
+            p.summary.arch.clone(),
+            format!("{:.3}", p.summary.avg_latency_cycles),
+            format!("{:.1}", p.summary.avg_power_mw),
+            format!("{:.1}", p.summary.energy_metric_pj),
+            format!("{:.2}", p.summary.avg_active_gateways),
+            format!("{:.4}", p.summary.delivery_ratio),
+        ]);
+    }
+    csv
+}
+
+pub fn report(points: &[ScalePoint]) -> String {
+    let mut out = String::new();
+    out.push_str("Scalability sweep (dedup, fixed per-core load)\n\n");
+    out.push_str("chiplets  arch       latency    power(mW)  gateways  delivery\n");
+    for p in points {
+        out.push_str(&format!(
+            "{:<9} {:<10} {:<10.2} {:<10.0} {:<9.2} {:<8.4}\n",
+            p.chiplets,
+            p.summary.arch,
+            p.summary.avg_latency_cycles,
+            p.summary.avg_power_mw,
+            p.summary.avg_active_gateways,
+            p.summary.delivery_ratio
+        ));
+    }
+    out.push_str(
+        "\nExpected: PROWAVES's latency deteriorates with scale (more chiplets\n\
+         funneling through single gateways); ReSiPI's distributed gateways and\n\
+         per-chiplet adaptation keep latency roughly flat at higher power cost.\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_runs_and_scales() {
+        let pts = run(&[2, 4, 6], 120_000, 0x5CA).unwrap();
+        assert_eq!(pts.len(), 6);
+        for p in &pts {
+            assert!(
+                p.summary.delivery_ratio > 0.8,
+                "{} @ {} chiplets: {}",
+                p.summary.arch,
+                p.chiplets,
+                p.summary.delivery_ratio
+            );
+        }
+        // ReSiPI at 6 chiplets must beat PROWAVES at 6 chiplets on latency.
+        let rs6 = pts
+            .iter()
+            .find(|p| p.chiplets == 6 && p.summary.arch == "resipi")
+            .unwrap();
+        let pw6 = pts
+            .iter()
+            .find(|p| p.chiplets == 6 && p.summary.arch == "prowaves")
+            .unwrap();
+        assert!(
+            rs6.summary.avg_latency_cycles < pw6.summary.avg_latency_cycles,
+            "resipi {} vs prowaves {}",
+            rs6.summary.avg_latency_cycles,
+            pw6.summary.avg_latency_cycles
+        );
+        let csv = to_csv(&pts);
+        assert_eq!(csv.len(), 6);
+        assert!(report(&pts).contains("Scalability"));
+    }
+}

@@ -1,0 +1,554 @@
+//! Gateway datapath state (paper §2.2, §3.2) and the memory-controller
+//! turnaround model.
+//!
+//! A gateway is the electronic circuit that bridges a chiplet's mesh to the
+//! photonic interposer. Writer side: flits arriving from the host router
+//! assemble into whole packets (store-and-forward), which then queue for
+//! the serializer. The writer queue is modeled as an **unbounded injection
+//! queue** (as in Noxim's local injection queues): this is the buffer
+//! decoupling that makes the 2.5D system deadlock-free — the mesh can
+//! always drain into gateways, so no cyclic buffer dependency can form
+//! across the interposer (the failure mode DeFT [22] exists to prevent;
+//! see `routing`). Congestion then manifests as writer-queue depth — which
+//! is exactly the gateway load the LGC measures (Eq. 5). Reader side:
+//! packets landing from the fabric inject flit-by-flit into the host
+//! router; the Table 1 buffer size bounds the reader, and space is
+//! *reserved at transmission start* so an optical transfer can never be
+//! dropped.
+//!
+//! Memory-controller gateways have no host router: their reader feeds a
+//! DRAM-latency queue and their writer sends the replies. The internal queue
+//! is unbounded, which decouples the request and reply networks (standard
+//! protocol-deadlock avoidance).
+
+use std::collections::VecDeque;
+
+use crate::sim::ids::GatewayId;
+use crate::sim::packet::{Cycle, PacketId};
+
+/// Activation state of a gateway.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatewayState {
+    /// Fully operational.
+    Active,
+    /// Flushing in-flight traffic before deactivation (§3.3, Fig. 7).
+    Draining,
+    /// Power-gated: MRs parked, PCMC κ = 0, no laser share.
+    Inactive,
+}
+
+/// One gateway's buffers and accounting.
+#[derive(Debug)]
+pub struct Gateway {
+    pub id: GatewayId,
+    state: GatewayState,
+    /// Writer-side capacity in flits (Table 1: 8 for ReSiPI/AWGR, 32 for
+    /// PROWAVES). Reader side has the same capacity.
+    capacity_flits: usize,
+    /// Flits currently held on the writer side (assembling + queued).
+    writer_occupancy: usize,
+    /// Packet currently being assembled from the host router, with the
+    /// number of flits received so far.
+    assembling: Option<(PacketId, u8)>,
+    /// Fully assembled packets awaiting the serializer.
+    writer_queue: VecDeque<PacketId>,
+    /// Reader-side flits reserved by in-flight or queued packets.
+    reader_reserved: usize,
+    /// Landed packets being injected into the host router: `(packet,
+    /// next flit seq)`.
+    reader_queue: VecDeque<(PacketId, u8)>,
+    /// Packets serialized during the current reconfiguration interval
+    /// (the LGC's load measurement `P_i` in Eq. 5).
+    epoch_packets: u64,
+    /// Lifetime packets serialized.
+    total_packets: u64,
+    /// Cumulative cycles spent in the Active or Draining state (power
+    /// accounting interpolates activity within an epoch from this).
+    active_cycles: u64,
+}
+
+impl Gateway {
+    pub fn new(id: GatewayId, capacity_flits: usize, initially_active: bool) -> Self {
+        Self {
+            id,
+            state: if initially_active {
+                GatewayState::Active
+            } else {
+                GatewayState::Inactive
+            },
+            capacity_flits,
+            writer_occupancy: 0,
+            assembling: None,
+            writer_queue: VecDeque::new(),
+            reader_reserved: 0,
+            reader_queue: VecDeque::new(),
+            epoch_packets: 0,
+            total_packets: 0,
+            active_cycles: 0,
+        }
+    }
+
+    pub fn state(&self) -> GatewayState {
+        self.state
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.state == GatewayState::Active
+    }
+
+    /// Usable for *new* traffic assignment (not draining, not inactive).
+    pub fn accepts_new_packets(&self) -> bool {
+        self.state == GatewayState::Active
+    }
+
+    /// Operational at all (serializes queued traffic, receives reserved
+    /// in-flight transfers).
+    pub fn is_operational(&self) -> bool {
+        self.state != GatewayState::Inactive
+    }
+
+    /// Begin activation (instantaneous on the electronic side; the photonic
+    /// side's PCMC retune latency is modeled by the fabric stall).
+    pub fn activate(&mut self) {
+        self.state = GatewayState::Active;
+    }
+
+    /// Request deactivation; the gateway drains first (Fig. 7 "wait until
+    /// packets of the gateway are flushed").
+    pub fn begin_drain(&mut self) {
+        if self.state == GatewayState::Active {
+            self.state = GatewayState::Draining;
+        }
+    }
+
+    /// Cancel a pending drain (load rose again before the flush finished).
+    pub fn cancel_drain(&mut self) {
+        if self.state == GatewayState::Draining {
+            self.state = GatewayState::Active;
+        }
+    }
+
+    /// All buffers empty and nothing reserved?
+    pub fn is_flushed(&self) -> bool {
+        self.assembling.is_none()
+            && self.writer_queue.is_empty()
+            && self.reader_queue.is_empty()
+            && self.reader_reserved == 0
+            && self.writer_occupancy == 0
+    }
+
+    /// Complete a pending drain if flushed. Returns true when the gateway
+    /// transitioned to Inactive this call.
+    pub fn try_finish_drain(&mut self) -> bool {
+        if self.state == GatewayState::Draining && self.is_flushed() {
+            self.state = GatewayState::Inactive;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tick the activity counter (call once per cycle).
+    pub fn tick(&mut self) {
+        if self.state != GatewayState::Inactive {
+            self.active_cycles += 1;
+        }
+    }
+
+    pub fn active_cycles(&self) -> u64 {
+        self.active_cycles
+    }
+
+    // ------------------------------------------------------------------
+    // Writer side
+    // ------------------------------------------------------------------
+
+    /// Can the host router push one more flit into the writer? The writer
+    /// queue is unbounded (see module docs) — only power state gates it.
+    pub fn writer_can_accept(&self) -> bool {
+        self.is_operational()
+    }
+
+    /// Push one flit of `pkt` (flits arrive in order along the wormhole).
+    /// Returns `true` when this flit completed the packet.
+    pub fn writer_push_flit(&mut self, pkt: PacketId, is_tail: bool) -> bool {
+        assert!(self.writer_can_accept(), "gateway writer overrun");
+        self.writer_occupancy += 1;
+        match &mut self.assembling {
+            None => {
+                assert!(!is_tail || true); // single-flit packets allowed
+                if is_tail {
+                    self.writer_queue.push_back(pkt);
+                    return true;
+                }
+                self.assembling = Some((pkt, 1));
+            }
+            Some((cur, n)) => {
+                assert_eq!(*cur, pkt, "interleaved packets at gateway writer");
+                *n += 1;
+                if is_tail {
+                    self.assembling = None;
+                    self.writer_queue.push_back(pkt);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Next packet ready for serialization (peek).
+    pub fn writer_head(&self) -> Option<PacketId> {
+        self.writer_queue.front().copied()
+    }
+
+    /// Virtual-output-queueing lookahead: peek the first `depth` queued
+    /// packets (index, id). The serializer picks the first whose
+    /// destination reader has credit, so one congested destination (e.g. a
+    /// memory controller) cannot head-of-line-block traffic to the others.
+    pub fn writer_lookahead(&self, depth: usize) -> impl Iterator<Item = (usize, PacketId)> + '_ {
+        self.writer_queue
+            .iter()
+            .take(depth)
+            .copied()
+            .enumerate()
+    }
+
+    /// Remove the packet at queue index `idx` (chosen via
+    /// [`Gateway::writer_lookahead`]) after its serialization started.
+    pub fn writer_remove(&mut self, idx: usize, flits: u8) -> PacketId {
+        let pkt = self
+            .writer_queue
+            .remove(idx)
+            .expect("writer_remove index out of range");
+        debug_assert!(self.writer_occupancy >= flits as usize);
+        self.writer_occupancy -= flits as usize;
+        self.epoch_packets += 1;
+        self.total_packets += 1;
+        pkt
+    }
+
+    /// Number of complete packets queued at the writer.
+    pub fn writer_queued(&self) -> usize {
+        self.writer_queue.len()
+    }
+
+    /// Remove the head packet after serialization started, freeing buffer
+    /// space (`flits` of it) and counting the transmission for the LGC.
+    pub fn writer_pop(&mut self, flits: u8) -> PacketId {
+        let pkt = self
+            .writer_queue
+            .pop_front()
+            .expect("writer_pop on empty queue");
+        debug_assert!(self.writer_occupancy >= flits as usize);
+        self.writer_occupancy -= flits as usize;
+        self.epoch_packets += 1;
+        self.total_packets += 1;
+        pkt
+    }
+
+    /// Enqueue a locally generated packet (memory-controller replies bypass
+    /// flit assembly). Fails (returns false) only when power-gated.
+    pub fn writer_push_packet(&mut self, pkt: PacketId, flits: u8) -> bool {
+        if !self.is_operational() {
+            return false;
+        }
+        self.writer_occupancy += flits as usize;
+        self.writer_queue.push_back(pkt);
+        true
+    }
+
+    // ------------------------------------------------------------------
+    // Reader side
+    // ------------------------------------------------------------------
+
+    /// Can a remote writer reserve space for a `flits`-sized packet?
+    pub fn reader_can_reserve(&self, flits: u8) -> bool {
+        self.is_operational() && self.reader_reserved + flits as usize <= self.capacity_flits
+    }
+
+    /// Reserve reader space (called at transmission start).
+    pub fn reader_reserve(&mut self, flits: u8) {
+        assert!(self.reader_can_reserve(flits), "reader over-reservation");
+        self.reader_reserved += flits as usize;
+    }
+
+    /// A transfer landed: queue it for mesh injection.
+    pub fn reader_deliver(&mut self, pkt: PacketId) {
+        self.reader_queue.push_back((pkt, 0));
+    }
+
+    /// Head packet awaiting injection, with the next flit to send.
+    pub fn reader_head(&self) -> Option<(PacketId, u8)> {
+        self.reader_queue.front().copied()
+    }
+
+    /// One flit of the head packet was injected into the mesh (or consumed
+    /// by the MC). Frees the whole reservation when the tail goes.
+    pub fn reader_advance(&mut self, packet_flits: u8) {
+        let (pkt, seq) = self
+            .reader_queue
+            .front_mut()
+            .expect("reader_advance on empty queue");
+        let _ = pkt;
+        *seq += 1;
+        if *seq >= packet_flits {
+            self.reader_queue.pop_front();
+            debug_assert!(self.reader_reserved >= packet_flits as usize);
+            self.reader_reserved -= packet_flits as usize;
+        }
+    }
+
+    /// Pop a whole packet at once (memory-controller consumption).
+    pub fn reader_pop_packet(&mut self, packet_flits: u8) -> Option<PacketId> {
+        let (pkt, seq) = self.reader_queue.pop_front()?;
+        debug_assert_eq!(seq, 0, "MC consumes whole packets");
+        debug_assert!(self.reader_reserved >= packet_flits as usize);
+        self.reader_reserved -= packet_flits as usize;
+        Some(pkt)
+    }
+
+    pub fn reader_queued(&self) -> usize {
+        self.reader_queue.len()
+    }
+
+    // ------------------------------------------------------------------
+    // Epoch accounting
+    // ------------------------------------------------------------------
+
+    /// Packets serialized this epoch (Eq. 5's `P_i`).
+    pub fn epoch_packets(&self) -> u64 {
+        self.epoch_packets
+    }
+
+    /// Reset the per-epoch counter at a reconfiguration boundary.
+    pub fn reset_epoch(&mut self) {
+        self.epoch_packets = 0;
+    }
+
+    pub fn total_packets(&self) -> u64 {
+        self.total_packets
+    }
+}
+
+/// DRAM service latency for the memory-controller model, cycles. Chosen to
+/// represent ~100 ns DRAM access at 1 GHz; the traffic model's conclusions
+/// are insensitive to the exact value (it shifts reply timing uniformly
+/// across all compared architectures).
+pub const MEMORY_LATENCY_CYCLES: u64 = 100;
+
+/// A memory controller behind a gateway: consumes request packets, issues
+/// reply packets after a fixed latency. The internal queue is unbounded
+/// (decouples request/reply, preventing protocol deadlock).
+#[derive(Debug, Default)]
+pub struct MemController {
+    /// `(ready_cycle, original request)` in FIFO order of arrival.
+    pending: VecDeque<(Cycle, PacketId)>,
+    served: u64,
+}
+
+impl MemController {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accept a request that arrived at `now`.
+    pub fn accept(&mut self, request: PacketId, now: Cycle) {
+        self.pending.push_back((now + MEMORY_LATENCY_CYCLES, request));
+    }
+
+    /// Requests whose service completes by `now`, in completion order.
+    /// The caller converts each into a reply packet and pushes it to the
+    /// gateway writer; requests stay queued here while the writer is full.
+    pub fn pop_ready(&mut self, now: Cycle) -> Option<PacketId> {
+        match self.pending.front() {
+            Some(&(ready, _)) if ready <= now => {
+                let (_, pkt) = self.pending.pop_front().unwrap();
+                self.served += 1;
+                Some(pkt)
+            }
+            _ => None,
+        }
+    }
+
+    /// Re-queue a request whose reply couldn't be pushed (writer full);
+    /// keeps FIFO order by putting it back at the front, ready immediately.
+    pub fn push_back_front(&mut self, request: PacketId, now: Cycle) {
+        self.pending.push_front((now, request));
+    }
+
+    pub fn backlog(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gw() -> Gateway {
+        Gateway::new(GatewayId(0), 8, true)
+    }
+
+    #[test]
+    fn writer_assembly_store_and_forward() {
+        let mut g = gw();
+        let pkt = PacketId(1);
+        for seq in 0..8u8 {
+            assert!(g.writer_can_accept());
+            let done = g.writer_push_flit(pkt, seq == 7);
+            assert_eq!(done, seq == 7);
+            // Not serializable until the tail lands.
+            if seq < 7 {
+                assert_eq!(g.writer_head(), None);
+            }
+        }
+        assert_eq!(g.writer_head(), Some(pkt));
+        // Writer queue is unbounded — still accepting.
+        assert!(g.writer_can_accept());
+        let popped = g.writer_pop(8);
+        assert_eq!(popped, pkt);
+        assert!(g.writer_can_accept());
+        assert_eq!(g.epoch_packets(), 1);
+        assert_eq!(g.total_packets(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "interleaved")]
+    fn writer_rejects_interleaved_packets() {
+        let mut g = gw();
+        g.writer_push_flit(PacketId(1), false);
+        g.writer_push_flit(PacketId(2), false);
+    }
+
+    #[test]
+    fn reader_reservation_protocol() {
+        let mut g = gw();
+        assert!(g.reader_can_reserve(8));
+        g.reader_reserve(8);
+        assert!(!g.reader_can_reserve(1), "8-flit buffer fully reserved");
+        g.reader_deliver(PacketId(3));
+        assert_eq!(g.reader_head(), Some((PacketId(3), 0)));
+        for i in 0..8u8 {
+            assert_eq!(g.reader_head(), Some((PacketId(3), i)));
+            g.reader_advance(8);
+        }
+        assert_eq!(g.reader_head(), None);
+        assert!(g.reader_can_reserve(8), "reservation freed at tail");
+    }
+
+    #[test]
+    fn prowaves_buffer_holds_four_packets() {
+        let mut g = Gateway::new(GatewayId(0), 32, true);
+        for p in 0..4u32 {
+            assert!(g.reader_can_reserve(8));
+            g.reader_reserve(8);
+            g.reader_deliver(PacketId(p));
+        }
+        assert!(!g.reader_can_reserve(8));
+        assert_eq!(g.reader_queued(), 4);
+    }
+
+    #[test]
+    fn drain_lifecycle() {
+        let mut g = gw();
+        assert!(g.accepts_new_packets());
+        // Mid-assembly drain must wait for the flush.
+        g.writer_push_flit(PacketId(1), false);
+        g.begin_drain();
+        assert_eq!(g.state(), GatewayState::Draining);
+        assert!(!g.accepts_new_packets());
+        assert!(g.is_operational(), "draining gateway still moves traffic");
+        assert!(!g.try_finish_drain());
+        // Finish the packet, serialize it out.
+        for seq in 1..8u8 {
+            g.writer_push_flit(PacketId(1), seq == 7);
+        }
+        assert!(!g.try_finish_drain(), "queued packet still present");
+        g.writer_pop(8);
+        assert!(g.try_finish_drain());
+        assert_eq!(g.state(), GatewayState::Inactive);
+        assert!(!g.writer_can_accept());
+        // Reactivation.
+        g.activate();
+        assert!(g.accepts_new_packets());
+    }
+
+    #[test]
+    fn cancel_drain_restores_active() {
+        let mut g = gw();
+        g.begin_drain();
+        g.cancel_drain();
+        assert_eq!(g.state(), GatewayState::Active);
+    }
+
+    #[test]
+    fn inactive_gateway_refuses_traffic() {
+        let mut g = Gateway::new(GatewayId(0), 8, false);
+        assert!(!g.writer_can_accept());
+        assert!(!g.reader_can_reserve(8));
+        assert!(!g.writer_push_packet(PacketId(0), 8));
+    }
+
+    #[test]
+    fn writer_push_packet_unbounded_queue() {
+        let mut g = gw();
+        assert!(g.writer_push_packet(PacketId(0), 8));
+        assert!(g.writer_push_packet(PacketId(1), 8), "writer queue is unbounded");
+        assert_eq!(g.writer_queued(), 2);
+        g.writer_pop(8);
+        g.writer_pop(8);
+        assert!(g.is_flushed());
+    }
+
+    #[test]
+    fn epoch_counter_resets() {
+        let mut g = gw();
+        g.writer_push_packet(PacketId(0), 8);
+        g.writer_pop(8);
+        assert_eq!(g.epoch_packets(), 1);
+        g.reset_epoch();
+        assert_eq!(g.epoch_packets(), 0);
+        assert_eq!(g.total_packets(), 1);
+    }
+
+    #[test]
+    fn memory_controller_latency_and_order() {
+        let mut mc = MemController::new();
+        mc.accept(PacketId(1), 100);
+        mc.accept(PacketId(2), 105);
+        assert_eq!(mc.pop_ready(150), None);
+        assert_eq!(mc.pop_ready(100 + MEMORY_LATENCY_CYCLES), Some(PacketId(1)));
+        assert_eq!(mc.pop_ready(100 + MEMORY_LATENCY_CYCLES), None);
+        assert_eq!(mc.pop_ready(105 + MEMORY_LATENCY_CYCLES), Some(PacketId(2)));
+        assert_eq!(mc.served(), 2);
+        assert_eq!(mc.backlog(), 0);
+    }
+
+    #[test]
+    fn memory_controller_retry_keeps_order() {
+        let mut mc = MemController::new();
+        mc.accept(PacketId(1), 0);
+        mc.accept(PacketId(2), 0);
+        let first = mc.pop_ready(MEMORY_LATENCY_CYCLES).unwrap();
+        // Writer was full: push back; next pop returns the same packet.
+        mc.push_back_front(first, MEMORY_LATENCY_CYCLES);
+        assert_eq!(mc.pop_ready(MEMORY_LATENCY_CYCLES), Some(first));
+        assert_eq!(mc.pop_ready(MEMORY_LATENCY_CYCLES), Some(PacketId(2)));
+    }
+
+    #[test]
+    fn tick_counts_operational_cycles() {
+        let mut g = gw();
+        g.tick();
+        g.tick();
+        g.begin_drain();
+        g.tick();
+        assert!(g.try_finish_drain());
+        g.tick(); // inactive — not counted
+        assert_eq!(g.active_cycles(), 3);
+    }
+}

@@ -1,0 +1,18 @@
+//! The photonic interposer substrate: SWMR waveguides with WDM
+//! serialization ([`phy`]), gateway datapaths ([`gateway`]), the PCM-based
+//! coupler chain ([`pcmc`]), and microring-group device inventory ([`mrg`]).
+//!
+//! The AWGR baseline [8] shares this substrate: an AWGR port is modeled as a
+//! gateway with one dedicated wavelength and no PCMC gating; its higher
+//! insertion loss (1.8 dB) enters through the power model
+//! (`power::optics`), not the timing path.
+
+pub mod gateway;
+pub mod mrg;
+pub mod pcmc;
+pub mod phy;
+
+pub use gateway::{Gateway, GatewayState, MemController, MEMORY_LATENCY_CYCLES};
+pub use mrg::MrgLayout;
+pub use pcmc::{kappa_schedule, power_split, Pcmc};
+pub use phy::{Photonic, PROPAGATION_CYCLES};

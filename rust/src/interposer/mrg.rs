@@ -1,0 +1,182 @@
+//! Microring-resonator group (MRG) layout accounting (paper §3.2, Fig. 4).
+//!
+//! Each gateway owns one MRG on the interposer. An MRG spans all `N`
+//! waveguide bundles; per wavelength it holds **one modulator MR** (the row
+//! that writes onto this gateway's own waveguide) and **N−1 filter MRs**
+//! (one row per *other* gateway it can read from). These counts drive the
+//! thermal-tuning, driver, and TIA terms of the power model, and the
+//! PCM-gating logic decides which of them are actually tuned (= consuming
+//! power) in a given epoch.
+
+/// Static MRG/interposer device inventory for an `N`-gateway, `W`-wavelength
+/// SWMR design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MrgLayout {
+    /// Total gateways (= MRGs = waveguide bundles).
+    pub gateways: usize,
+    /// Wavelengths per waveguide.
+    pub wavelengths: usize,
+}
+
+impl MrgLayout {
+    pub fn new(gateways: usize, wavelengths: usize) -> Self {
+        assert!(gateways >= 2, "SWMR needs at least two gateways");
+        assert!(wavelengths >= 1);
+        Self {
+            gateways,
+            wavelengths,
+        }
+    }
+
+    /// Modulator MRs per MRG (one row).
+    pub fn modulators_per_mrg(&self) -> usize {
+        self.wavelengths
+    }
+
+    /// Filter MRs per MRG (N−1 reader rows, cf. Fig. 4's five rows for six
+    /// gateways).
+    pub fn filters_per_mrg(&self) -> usize {
+        (self.gateways - 1) * self.wavelengths
+    }
+
+    /// All MRs in one MRG.
+    pub fn mrs_per_mrg(&self) -> usize {
+        self.modulators_per_mrg() + self.filters_per_mrg()
+    }
+
+    /// Total MRs on the interposer.
+    pub fn total_mrs(&self) -> usize {
+        self.gateways * self.mrs_per_mrg()
+    }
+
+    /// Number of chain PCMCs (N−1; the last MRG taps the final Bar output).
+    pub fn pcmc_count(&self) -> usize {
+        self.gateways - 1
+    }
+
+    /// Photodiodes per MRG (one per filter MR).
+    pub fn pds_per_mrg(&self) -> usize {
+        self.filters_per_mrg()
+    }
+
+    /// Tuned (power-consuming) MR count for a given activity pattern.
+    ///
+    /// * An **active writer** tunes its `W` modulators.
+    /// * An **active reader** tunes one filter row (`W` filters) per *active
+    ///   remote writer* it must listen to; rows facing idle writers are
+    ///   PCM-gated (κ = 0 ⇒ no light ⇒ filters parked, as in [32]).
+    /// * Idle gateways tune nothing (non-volatile parking).
+    pub fn tuned_mrs(&self, active: &[bool]) -> usize {
+        assert_eq!(active.len(), self.gateways);
+        let n_active = active.iter().filter(|&&a| a).count();
+        if n_active == 0 {
+            return 0;
+        }
+        let modulators = n_active * self.wavelengths;
+        // Each active reader listens to (n_active − 1) active remote writers.
+        let filters = n_active * (n_active - 1) * self.wavelengths;
+        modulators + filters
+    }
+
+    /// Active photodiode (TIA-consuming) count: one per tuned filter.
+    pub fn active_pds(&self, active: &[bool]) -> usize {
+        assert_eq!(active.len(), self.gateways);
+        let n_active = active.iter().filter(|&&a| a).count();
+        if n_active == 0 {
+            0
+        } else {
+            n_active * (n_active - 1) * self.wavelengths
+        }
+    }
+
+    /// Active modulator-driver count.
+    pub fn active_modulators(&self, active: &[bool]) -> usize {
+        assert_eq!(active.len(), self.gateways);
+        active.iter().filter(|&&a| a).count() * self.wavelengths
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, PropConfig};
+
+    #[test]
+    fn fig4_example_six_gateways_four_wavelengths() {
+        // The paper's Fig. 4: six gateways, four wavelengths → each MRG has
+        // one modulator row + five filter rows of 4 MRs each.
+        let l = MrgLayout::new(6, 4);
+        assert_eq!(l.modulators_per_mrg(), 4);
+        assert_eq!(l.filters_per_mrg(), 20);
+        assert_eq!(l.mrs_per_mrg(), 24);
+        assert_eq!(l.total_mrs(), 144);
+        assert_eq!(l.pcmc_count(), 5);
+    }
+
+    #[test]
+    fn table1_resipi_inventory() {
+        // 18 gateways, 4 wavelengths.
+        let l = MrgLayout::new(18, 4);
+        assert_eq!(l.mrs_per_mrg(), 4 + 17 * 4);
+        assert_eq!(l.total_mrs(), 18 * 72);
+        assert_eq!(l.pcmc_count(), 17);
+    }
+
+    #[test]
+    fn all_active_tunes_everything() {
+        let l = MrgLayout::new(6, 4);
+        let active = vec![true; 6];
+        assert_eq!(l.tuned_mrs(&active), l.total_mrs());
+        assert_eq!(l.active_pds(&active), 6 * 5 * 4);
+        assert_eq!(l.active_modulators(&active), 24);
+    }
+
+    #[test]
+    fn none_active_tunes_nothing() {
+        let l = MrgLayout::new(6, 4);
+        let active = vec![false; 6];
+        assert_eq!(l.tuned_mrs(&active), 0);
+        assert_eq!(l.active_pds(&active), 0);
+        assert_eq!(l.active_modulators(&active), 0);
+    }
+
+    #[test]
+    fn partial_activity_counts() {
+        let l = MrgLayout::new(4, 2);
+        let active = vec![true, false, true, false];
+        // 2 active: modulators 2*2=4; filters 2 readers × 1 active remote × 2λ = 4.
+        assert_eq!(l.tuned_mrs(&active), 8);
+        assert_eq!(l.active_pds(&active), 4);
+        assert_eq!(l.active_modulators(&active), 4);
+    }
+
+    /// Property: tuned count is monotone in activity and bounded by total.
+    #[test]
+    fn prop_tuned_monotone_and_bounded() {
+        check(
+            &PropConfig::default(),
+            |rng| {
+                let n = rng.gen_range_usize(2, 19);
+                let w = rng.gen_range_usize(1, 17);
+                let active: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.5)).collect();
+                (n, w, active)
+            },
+            |(n, w, active)| {
+                let l = MrgLayout::new(*n, *w);
+                let tuned = l.tuned_mrs(active);
+                if tuned > l.total_mrs() {
+                    return Err(format!("tuned {tuned} > total {}", l.total_mrs()));
+                }
+                // Activating one more gateway never decreases the count.
+                if let Some(idx) = active.iter().position(|&a| !a) {
+                    let mut more = active.clone();
+                    more[idx] = true;
+                    if l.tuned_mrs(&more) < tuned {
+                        return Err("tuned count not monotone".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,227 @@
+//! PCM-based reconfigurable directional coupler (PCMC) model (paper §3.2).
+//!
+//! A PCMC divides its input light between the Bar (continues down the
+//! coupler chain) and Cross (feeds one writer gateway's MRG) outputs
+//! according to the coupling ratio κ (Eq. 1–3). κ is set by partially
+//! crystallizing the PCM with a microheater; switching is *non-volatile*
+//! (zero holding power) but slow — ~100 ns (= 100 cycles @ 1 GHz, [10]) and
+//! ~2 nJ per event [28].
+//!
+//! [`kappa_schedule`] implements the paper's Eq. 4 generalized to an
+//! arbitrary active/idle pattern: each *active* writer receives an equal
+//! `1/GT` share of the laser input, and idle writers' MRGs are fully
+//! power-gated (κ = 0).
+
+use crate::sim::packet::Cycle;
+
+/// One PCMC device: current κ, pending retune, and lifetime accounting.
+#[derive(Debug, Clone)]
+pub struct Pcmc {
+    kappa: f64,
+    target: f64,
+    /// Cycle at which an in-progress state change completes.
+    busy_until: Cycle,
+    /// Number of state-change events (for switching-energy accounting).
+    switches: u64,
+}
+
+impl Pcmc {
+    pub fn new(kappa: f64) -> Self {
+        Self {
+            kappa,
+            target: kappa,
+            busy_until: 0,
+            switches: 0,
+        }
+    }
+
+    /// Effective κ at cycle `now` (the old value until the switch lands).
+    pub fn kappa_at(&self, now: Cycle) -> f64 {
+        if now >= self.busy_until {
+            self.target
+        } else {
+            self.kappa
+        }
+    }
+
+    /// Final κ after any pending switch.
+    pub fn target(&self) -> f64 {
+        self.target
+    }
+
+    pub fn is_switching(&self, now: Cycle) -> bool {
+        now < self.busy_until
+    }
+
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Begin a retune to `kappa`, taking `reconfig_cycles`. Returns `true`
+    /// if a state change was actually needed (κ differs), i.e. whether the
+    /// 2 nJ switching energy should be charged.
+    pub fn retune(&mut self, kappa: f64, now: Cycle, reconfig_cycles: u64) -> bool {
+        // Settle any previous switch first.
+        if now >= self.busy_until {
+            self.kappa = self.target;
+        }
+        if (kappa - self.target).abs() < 1e-12 {
+            return false;
+        }
+        self.target = kappa;
+        self.busy_until = now + reconfig_cycles;
+        self.switches += 1;
+        true
+    }
+}
+
+/// Eq. 4 generalized: κ for each of the `N-1` chain PCMCs given the active
+/// mask over all `N` writers (the last writer is fed by the final Bar output
+/// and has no PCMC).
+///
+/// Invariant (tested): with input power 1.0, every active writer receives
+/// exactly `1/GT`, idle writers receive 0, and no light is wasted except the
+/// residue when the final writer is idle.
+pub fn kappa_schedule(active: &[bool]) -> Vec<f64> {
+    let n = active.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // remaining_active[j] = number of active writers at position >= j.
+    let mut remaining = vec![0usize; n + 1];
+    for j in (0..n).rev() {
+        remaining[j] = remaining[j + 1] + usize::from(active[j]);
+    }
+    (0..n - 1)
+        .map(|j| {
+            if active[j] {
+                1.0 / remaining[j] as f64
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Propagate input power through the chain: returns per-writer received
+/// power fractions (rust mirror of the L1 Pallas kernel's chain stage; the
+/// integration tests cross-validate the two).
+pub fn power_split(kappas: &[f64], last_active: bool, input: f64) -> Vec<f64> {
+    let n = kappas.len() + 1;
+    let mut out = vec![0.0; n];
+    let mut p = input;
+    for (j, &k) in kappas.iter().enumerate() {
+        out[j] = k * p;
+        p *= 1.0 - k;
+    }
+    out[n - 1] = if last_active { p } else { 0.0 };
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, PropConfig};
+
+    #[test]
+    fn all_active_equal_split() {
+        let active = vec![true; 6];
+        let ks = kappa_schedule(&active);
+        assert_eq!(ks.len(), 5);
+        // Paper Eq. 4 with GT = 6: 1/6, 1/5, 1/4, 1/3, 1/2.
+        let expect = [1.0 / 6.0, 1.0 / 5.0, 1.0 / 4.0, 1.0 / 3.0, 1.0 / 2.0];
+        for (k, e) in ks.iter().zip(expect) {
+            assert!((k - e).abs() < 1e-12, "{ks:?}");
+        }
+        let split = power_split(&ks, true, 1.0);
+        for s in &split {
+            assert!((s - 1.0 / 6.0).abs() < 1e-12, "{split:?}");
+        }
+    }
+
+    #[test]
+    fn idle_writers_get_zero() {
+        let active = vec![true, false, true, false, true];
+        let ks = kappa_schedule(&active);
+        let split = power_split(&ks, *active.last().unwrap(), 1.0);
+        assert!((split[0] - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(split[1], 0.0);
+        assert!((split[2] - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(split[3], 0.0);
+        assert!((split[4] - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_active_writer_takes_everything() {
+        let active = vec![false, false, true, false];
+        let ks = kappa_schedule(&active);
+        let split = power_split(&ks, false, 1.0);
+        assert!((split[2] - 1.0).abs() < 1e-12, "{split:?}");
+        assert_eq!(split[0] + split[1] + split[3], 0.0);
+    }
+
+    #[test]
+    fn none_active_all_zero() {
+        let active = vec![false; 4];
+        let ks = kappa_schedule(&active);
+        assert!(ks.iter().all(|&k| k == 0.0));
+        let split = power_split(&ks, false, 1.0);
+        assert!(split.iter().all(|&s| s == 0.0));
+    }
+
+    /// Property (Eq. 4 invariant): every active writer receives exactly
+    /// 1/GT of the input; conservation holds.
+    #[test]
+    fn prop_equal_share_for_any_pattern() {
+        check(
+            &PropConfig::default(),
+            |rng| {
+                let n = rng.gen_range_usize(2, 19);
+                (0..n).map(|_| rng.gen_bool(0.5)).collect::<Vec<bool>>()
+            },
+            |active| {
+                let gt = active.iter().filter(|&&a| a).count();
+                let ks = kappa_schedule(active);
+                for &k in &ks {
+                    if !(0.0..=1.0).contains(&k) {
+                        return Err(format!("kappa out of range: {k}"));
+                    }
+                }
+                let split = power_split(&ks, *active.last().unwrap(), 1.0);
+                let total: f64 = split.iter().sum();
+                if total > 1.0 + 1e-9 {
+                    return Err(format!("power created from nothing: {total}"));
+                }
+                for (j, (&a, &s)) in active.iter().zip(&split).enumerate() {
+                    let want = if a { 1.0 / gt as f64 } else { 0.0 };
+                    if (s - want).abs() > 1e-9 {
+                        return Err(format!(
+                            "writer {j}: got {s}, want {want} (active={a}, GT={gt})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn retune_timing_and_energy_events() {
+        let mut p = Pcmc::new(0.0);
+        assert!(!p.is_switching(0));
+        // Retune at cycle 10 with 100-cycle reconfig.
+        assert!(p.retune(0.25, 10, 100));
+        assert!(p.is_switching(50));
+        assert_eq!(p.kappa_at(50), 0.0, "old state holds during switching");
+        assert_eq!(p.kappa_at(110), 0.25, "new state after reconfig");
+        assert_eq!(p.switches(), 1);
+        // Same-value retune is free (non-volatile hold).
+        assert!(!p.retune(0.25, 300, 100));
+        assert_eq!(p.switches(), 1);
+        // Different value costs another event.
+        assert!(p.retune(0.5, 400, 100));
+        assert_eq!(p.switches(), 2);
+        assert_eq!(p.kappa_at(450), 0.25);
+        assert_eq!(p.kappa_at(500), 0.5);
+    }
+}

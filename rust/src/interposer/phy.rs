@@ -1,0 +1,268 @@
+//! Photonic transmission engine: SWMR waveguides with WDM serialization.
+//!
+//! Each gateway owns one waveguide bundle it *writes* (Single-Writer); every
+//! other gateway's MRG has a filter row on that bundle and can *read* it
+//! (Multiple-Reader). A transmission therefore never contends for the
+//! medium — only for the writer's serializer (one packet at a time per
+//! writer) and the destination reader's buffer (reserved by the caller
+//! before start).
+//!
+//! Serialization time is the paper's Table 1 arithmetic: a packet of
+//! `F × bits_per_flit` bits over `λ` wavelengths at 12 Gb/s/λ on a 1 GHz
+//! clock moves `12·λ` bits per cycle. Optical propagation across the
+//! interposer is [`PROPAGATION_CYCLES`] (sub-ns flight + O/E conversion).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::ids::GatewayId;
+use crate::sim::packet::{Cycle, PacketId};
+
+/// Fixed optical flight + conversion latency, cycles.
+pub const PROPAGATION_CYCLES: u64 = 2;
+
+/// An in-flight photonic transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct InFlight {
+    arrive: Cycle,
+    /// Monotone tiebreaker so heap order is deterministic.
+    seqno: u64,
+    packet: PacketId,
+    dst: GatewayId,
+}
+
+impl Ord for InFlight {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.arrive, self.seqno).cmp(&(other.arrive, other.seqno))
+    }
+}
+impl PartialOrd for InFlight {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The photonic fabric state: per-writer serializer occupancy plus the
+/// in-flight packet heap.
+///
+/// A writer owns `channels` independent serializer lanes: 1 for WDM
+/// designs (ReSiPI, PROWAVES — one packet at a time across the whole
+/// wavelength group) and N−1 for AWGR (one single-wavelength lane per
+/// destination, [8]).
+#[derive(Debug)]
+pub struct Photonic {
+    /// Per-writer, per-channel cycle at which that serializer lane frees.
+    writer_busy_until: Vec<Vec<Cycle>>,
+    /// Per-writer stall deadline imposed by PCMC reconfiguration (§4.3:
+    /// 100 cycles): a writer may not *start* a new transmission while its
+    /// laser feed is being retuned.
+    writer_stall_until: Vec<Cycle>,
+    in_flight: BinaryHeap<Reverse<InFlight>>,
+    seqno: u64,
+    /// Bits serialized per cycle per wavelength (12 in Table 1).
+    bits_per_cycle_per_lambda: f64,
+    /// Total photonic transfers started (metrics).
+    transfers: u64,
+}
+
+impl Photonic {
+    pub fn new(gateways: usize, bits_per_cycle_per_lambda: f64) -> Self {
+        Self::with_channels(gateways, bits_per_cycle_per_lambda, 1)
+    }
+
+    /// Fabric with `channels` serializer lanes per writer (AWGR: N−1).
+    pub fn with_channels(
+        gateways: usize,
+        bits_per_cycle_per_lambda: f64,
+        channels: usize,
+    ) -> Self {
+        assert!(bits_per_cycle_per_lambda > 0.0);
+        assert!(channels >= 1);
+        Self {
+            writer_busy_until: vec![vec![0; channels]; gateways],
+            writer_stall_until: vec![0; gateways],
+            in_flight: BinaryHeap::new(),
+            seqno: 0,
+            bits_per_cycle_per_lambda,
+            transfers: 0,
+        }
+    }
+
+    /// Serialization latency in cycles for `bits` over `lambdas` wavelengths.
+    pub fn serialization_cycles(&self, bits: usize, lambdas: usize) -> u64 {
+        assert!(lambdas >= 1);
+        let per_cycle = self.bits_per_cycle_per_lambda * lambdas as f64;
+        (bits as f64 / per_cycle).ceil() as u64
+    }
+
+    /// Does this writer have a free serializer lane at `now`?
+    pub fn writer_free(&self, w: GatewayId, now: Cycle) -> bool {
+        now >= self.writer_stall_until[w.0]
+            && self.writer_busy_until[w.0].iter().any(|&b| now >= b)
+    }
+
+    /// Stall a writer until `until` (PCMC retune in progress on its feed).
+    pub fn stall_writer(&mut self, w: GatewayId, until: Cycle) {
+        let s = &mut self.writer_stall_until[w.0];
+        *s = (*s).max(until);
+    }
+
+    /// Begin a transfer. Caller has verified `writer_free` and reserved
+    /// reader buffer space at `dst`. Returns the arrival cycle.
+    ///
+    /// Optical **cut-through**: when the link serializes at ≥1 flit/cycle
+    /// (`ser ≤ flits`, true for any WDM group with λ·12 ≥ 32 b), the reader
+    /// starts injecting as soon as the head flit's bits land — the packet
+    /// is delivered at `now + prop + head_time` and reader injection
+    /// (1 flit/cycle) can never outrun the photons. Slower links (AWGR's
+    /// single-λ lanes) fall back to tail delivery.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        &mut self,
+        writer: GatewayId,
+        dst: GatewayId,
+        packet: PacketId,
+        bits: usize,
+        flits: usize,
+        lambdas: usize,
+        now: Cycle,
+    ) -> Cycle {
+        debug_assert!(self.writer_free(writer, now), "writer serializer busy");
+        debug_assert_ne!(writer, dst, "SWMR writer cannot address itself");
+        let ser = self.serialization_cycles(bits, lambdas);
+        let done = now + ser;
+        let lane = self.writer_busy_until[writer.0]
+            .iter()
+            .position(|&b| now >= b)
+            .expect("writer_free checked");
+        self.writer_busy_until[writer.0][lane] = done;
+        let deliver_after = if ser <= flits as u64 {
+            ser.div_ceil(flits as u64) // head flit's serialization time
+        } else {
+            ser
+        };
+        let arrive = now + deliver_after + PROPAGATION_CYCLES;
+        self.seqno += 1;
+        self.in_flight.push(Reverse(InFlight {
+            arrive,
+            seqno: self.seqno,
+            packet,
+            dst,
+        }));
+        self.transfers += 1;
+        arrive
+    }
+
+    /// Pop every transfer that lands at or before `now`.
+    pub fn arrivals(&mut self, now: Cycle) -> Vec<(PacketId, GatewayId)> {
+        let mut out = Vec::new();
+        while let Some(Reverse(head)) = self.in_flight.peek() {
+            if head.arrive > now {
+                break;
+            }
+            let Reverse(f) = self.in_flight.pop().unwrap();
+            out.push((f.packet, f.dst));
+        }
+        out
+    }
+
+    /// Packets currently on the optical medium.
+    pub fn in_flight_count(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phy() -> Photonic {
+        Photonic::new(18, 12.0)
+    }
+
+    #[test]
+    fn table1_serialization_arithmetic() {
+        let p = phy();
+        // 8 flits × 32 b = 256 b. 4λ × 12 b/cy = 48 b/cy → 6 cycles.
+        assert_eq!(p.serialization_cycles(256, 4), 6);
+        // PROWAVES at full 16λ: 192 b/cy → 2 cycles.
+        assert_eq!(p.serialization_cycles(256, 16), 2);
+        // AWGR 1λ: 12 b/cy → ceil(256/12) = 22 cycles.
+        assert_eq!(p.serialization_cycles(256, 1), 22);
+    }
+
+    #[test]
+    fn writer_occupancy_and_arrival_timing() {
+        let mut p = phy();
+        let w = GatewayId(0);
+        let d = GatewayId(5);
+        assert!(p.writer_free(w, 0));
+        let arrive = p.start(w, d, PacketId(7), 256, 8, 4, 100);
+        // cut-through: head flit (1 cycle of serialization) + flight.
+        assert_eq!(arrive, 100 + 1 + PROPAGATION_CYCLES);
+        assert!(!p.writer_free(w, 101));
+        assert!(!p.writer_free(w, 105));
+        assert!(p.writer_free(w, 106), "free once serialization ends");
+        // Other writers are unaffected (SWMR: no medium contention).
+        assert!(p.writer_free(GatewayId(1), 101));
+
+        assert!(p.arrivals(arrive - 1).is_empty());
+        let got = p.arrivals(arrive);
+        assert_eq!(got, vec![(PacketId(7), d)]);
+        assert_eq!(p.in_flight_count(), 0);
+    }
+
+    #[test]
+    fn arrivals_pop_in_time_order() {
+        let mut p = phy();
+        // Start long (1λ) then short (16λ) transfers from different writers.
+        let a1 = p.start(GatewayId(0), GatewayId(3), PacketId(1), 256, 8, 1, 0);
+        let a2 = p.start(GatewayId(1), GatewayId(3), PacketId(2), 256, 8, 16, 0);
+        assert!(a2 < a1);
+        let got = p.arrivals(a1);
+        assert_eq!(
+            got,
+            vec![(PacketId(2), GatewayId(3)), (PacketId(1), GatewayId(3))]
+        );
+    }
+
+    #[test]
+    fn pcmc_stall_blocks_new_transfers() {
+        let mut p = phy();
+        let w = GatewayId(2);
+        p.stall_writer(w, 150);
+        assert!(!p.writer_free(w, 100));
+        assert!(p.writer_free(w, 150));
+        // Stalls never shrink.
+        p.stall_writer(w, 120);
+        assert!(!p.writer_free(w, 140));
+    }
+
+    #[test]
+    fn awgr_channels_transmit_concurrently() {
+        let mut p = Photonic::with_channels(18, 12.0, 17);
+        let w = GatewayId(0);
+        // 17 concurrent 1λ transfers to distinct destinations all start.
+        for d in 1..18usize {
+            assert!(p.writer_free(w, 0), "lane {d} should be free");
+            p.start(w, GatewayId(d), PacketId(d as u32), 256, 8, 1, 0);
+        }
+        assert!(!p.writer_free(w, 0), "all 17 lanes busy");
+        // All 17 land at the same time (22 + propagation).
+        let arrive = 22 + PROPAGATION_CYCLES;
+        assert_eq!(p.arrivals(arrive).len(), 17);
+        assert!(p.writer_free(w, 22));
+    }
+
+    #[test]
+    fn transfer_counter() {
+        let mut p = phy();
+        p.start(GatewayId(0), GatewayId(1), PacketId(0), 256, 8, 4, 0);
+        p.start(GatewayId(1), GatewayId(2), PacketId(1), 256, 8, 4, 0);
+        assert_eq!(p.transfers(), 2);
+    }
+}

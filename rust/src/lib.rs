@@ -1,0 +1,56 @@
+//! # ReSiPI — Reconfigurable Silicon-Photonic 2.5D Interposer Network
+//!
+//! A full reproduction of *"ReSiPI: A Reconfigurable Silicon-Photonic 2.5D
+//! Chiplet Network with PCMs for Energy-Efficient Interposer Communication"*
+//! (Taheri, Pasricha, Nikdast — 2022): a cycle-accurate 2.5D chiplet
+//! network simulator with a photonic SWMR interposer, the ReSiPI
+//! reconfiguration control plane (dynamic gateway activation, PCMC-based
+//! laser gating, adaptive gateway selection), the AWGR and PROWAVES
+//! baselines, calibrated PARSEC-like workloads, and the photonic power
+//! model compiled ahead-of-time from JAX/Pallas to an XLA/PJRT artifact
+//! executed from rust.
+//!
+//! ```no_run
+//! use resipi::prelude::*;
+//!
+//! let cfg = Config::table1(Architecture::Resipi);
+//! let geo = Geometry::from_config(&cfg);
+//! let app = resipi::traffic::parsec::app_by_name("dedup").unwrap();
+//! let traffic = Box::new(ParsecTraffic::new(geo, app, cfg.sim.seed));
+//! let mut net = Network::new(cfg, traffic).unwrap();
+//! net.run().unwrap();
+//! println!("{:#?}", net.summary());
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod experiments;
+pub mod interposer;
+pub mod metrics;
+pub mod power;
+pub mod routing;
+pub mod runtime;
+pub mod sim;
+pub mod traffic;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Crate version.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Common imports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{Architecture, Config};
+    pub use crate::coordinator::{Lgc, LgcAction, ProwavesCtrl, VicinityMap};
+    pub use crate::error::{Error, Result};
+    pub use crate::metrics::{EpochRecord, Metrics};
+    pub use crate::power::{EpochPowerModel, PowerBreakdown, RustPowerModel};
+    pub use crate::sim::{Coord, Cycle, Geometry, Network, Node, Summary};
+    pub use crate::traffic::{
+        AppProfile, NewPacket, ParsecTraffic, Traffic, TraceReader, UniformTraffic, PARSEC_APPS,
+    };
+}

@@ -1,0 +1,383 @@
+//! `resipi` — command-line driver for the ReSiPI reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts (DESIGN.md §6):
+//!
+//! ```text
+//! resipi run     --arch resipi --app dedup [--cycles N] [--seed S] [--config F]
+//! resipi fig10   [--cycles N]          # design-space exploration → L_m
+//! resipi fig11   [--cycles N]          # latency/power/energy grid
+//! resipi fig12   [--epochs N] [--epoch-cycles N]
+//! resipi fig13   [--cycles N]          # residency heat maps
+//! resipi table2                        # controller overhead
+//! resipi ablate  <thresholds|gwsel|epoch> [--cycles N]
+//! resipi sweep                         # batched HLO power-model sweep
+//! resipi all     [--cycles N]          # every artifact, written to results/
+//! ```
+//!
+//! Outputs land in `results/` (override with `RESIPI_RESULTS`). The
+//! hand-rolled flag parser exists because the offline build lacks `clap`
+//! (DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use resipi::config::{Architecture, Config};
+use resipi::experiments::{ablations, fig10, fig11, fig12, fig13, output_dir, scaling, table2};
+use resipi::power::controller_area::ControllerParams;
+use resipi::runtime::{best_power_model, BatchPowerModel, ARTIFACT_GATEWAYS};
+use resipi::sim::{Geometry, Network};
+use resipi::traffic::parsec::{app_by_name, ParsecTraffic};
+use resipi::traffic::{TraceReader, UniformTraffic};
+use resipi::util::io::Json;
+use resipi::Result;
+
+/// Parsed `--flag value` arguments.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> std::result::Result<Self, String> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| format!("flag --{name} needs a value"))?;
+                    flags.insert(name.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> std::result::Result<u64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| format!("--{key} must be an integer, got {v:?}")),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+const USAGE: &str = "resipi — ReSiPI 2.5D photonic interposer reproduction
+
+USAGE:
+  resipi run    --arch <resipi|resipi-allon|prowaves|awgr|static-gN>
+                --app <parsec app|uniform:<rate>|trace:<file>>
+                [--cycles N] [--seed S] [--config FILE] [--json]
+  resipi fig10  [--cycles N] [--seed S]
+  resipi fig11  [--cycles N] [--seed S]
+  resipi fig12  [--epochs N] [--epoch-cycles N] [--seed S]
+  resipi fig13  [--cycles N] [--seed S]
+  resipi table2
+  resipi ablate <thresholds|gwsel|epoch> [--cycles N] [--seed S]
+  resipi scale  [--cycles N]             # scalability extension (2-8 chiplets)
+  resipi sweep
+  resipi all    [--cycles N]
+
+Outputs are written under results/ (override with RESIPI_RESULTS).
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+        print!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "fig10" => cmd_fig10(&args),
+        "fig11" => cmd_fig11(&args),
+        "fig12" => cmd_fig12(&args),
+        "fig13" => cmd_fig13(&args),
+        "table2" => cmd_table2(),
+        "ablate" => cmd_ablate(&args),
+        "scale" => cmd_scale(&args),
+        "sweep" => cmd_sweep(),
+        "all" => cmd_all(&args),
+        other => {
+            eprintln!("error: unknown subcommand {other:?}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn out_path(name: &str) -> PathBuf {
+    output_dir().join(name)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let arch = Architecture::from_name(&args.get_str("arch", "resipi"))?;
+    let mut cfg = if let Some(path) = args.flags.get("config") {
+        Config::from_file(std::path::Path::new(path))?
+    } else {
+        Config::table1(arch)
+    };
+    if args.flags.get("config").is_none() {
+        cfg.arch = arch;
+    }
+    cfg.sim.cycles = args
+        .get_u64("cycles", cfg.sim.cycles)
+        .map_err(resipi::Error::config)?;
+    cfg.sim.seed = args
+        .get_u64("seed", cfg.sim.seed)
+        .map_err(resipi::Error::config)?;
+    cfg.controller.epoch_cycles = args
+        .get_u64("epoch-cycles", cfg.controller.epoch_cycles)
+        .map_err(resipi::Error::config)?;
+    cfg.validate()?;
+
+    let geo = Geometry::from_config(&cfg);
+    let app_spec = args.get_str("app", "dedup");
+    let traffic: Box<dyn resipi::traffic::Traffic> = if let Some(rate) =
+        app_spec.strip_prefix("uniform:")
+    {
+        let rate: f64 = rate
+            .parse()
+            .map_err(|_| resipi::Error::config(format!("bad uniform rate {rate:?}")))?;
+        Box::new(UniformTraffic::new(geo, rate, cfg.sim.seed))
+    } else if let Some(path) = app_spec.strip_prefix("trace:") {
+        Box::new(TraceReader::from_file(std::path::Path::new(path))?)
+    } else {
+        let app = app_by_name(&app_spec)
+            .ok_or_else(|| resipi::Error::config(format!("unknown app {app_spec:?}")))?;
+        Box::new(ParsecTraffic::new(geo, app, cfg.sim.seed))
+    };
+
+    let mut net = Network::with_power_model(cfg, traffic, best_power_model())?;
+    net.run()?;
+    if args.flags.contains_key("debug") {
+        eprintln!("{}", net.congestion_report());
+    }
+    let s = net.summary();
+    if args.flags.contains_key("json") {
+        let mut j = Json::obj();
+        j.set("arch", s.arch.as_str());
+        j.set("traffic", s.traffic.as_str());
+        j.set("cycles", s.cycles);
+        j.set("created", s.created);
+        j.set("delivered", s.delivered);
+        j.set("avg_latency_cycles", s.avg_latency_cycles);
+        j.set("p99_latency_cycles", s.p99_latency_cycles);
+        j.set("avg_power_mw", s.avg_power_mw);
+        j.set("total_energy_uj", s.total_energy_uj);
+        j.set("energy_metric_pj", s.energy_metric_pj);
+        j.set("avg_active_gateways", s.avg_active_gateways);
+        j.set("power_backend", s.power_backend);
+        println!("{}", j.to_string());
+    } else {
+        println!("arch:               {}", s.arch);
+        println!("traffic:            {}", s.traffic);
+        println!("cycles:             {}", s.cycles);
+        println!("packets:            {} created / {} delivered", s.created, s.delivered);
+        println!("avg latency:        {:.2} cycles (p99 {:.1})", s.avg_latency_cycles, s.p99_latency_cycles);
+        println!(
+            "avg power:          {:.1} mW  (laser {:.1}, tuning {:.1}, tia {:.1}, driver {:.1}, ctrl {:.3})",
+            s.avg_power_mw,
+            s.power.laser_mw,
+            s.power.tuning_mw,
+            s.power.tia_mw,
+            s.power.driver_mw,
+            s.power.controller_mw
+        );
+        println!("energy metric:      {:.1} pJ (power × latency)", s.energy_metric_pj);
+        println!("total energy:       {:.1} uJ", s.total_energy_uj);
+        println!("avg gateways:       {:.2}", s.avg_active_gateways);
+        println!("avg wavelengths:    {:.2}", s.avg_total_lambdas);
+        println!("power backend:      {}", s.power_backend);
+    }
+    Ok(())
+}
+
+fn cmd_fig10(args: &Args) -> Result<()> {
+    let cycles = args.get_u64("cycles", 1_000_000).map_err(resipi::Error::config)?;
+    let seed = args.get_u64("seed", 0xF16).map_err(resipi::Error::config)?;
+    let accept: f64 = args
+        .get_str("accept", "0.10")
+        .parse()
+        .map_err(|_| resipi::Error::config("--accept must be a number"))?;
+    let fig = fig10::run_with_accept(cycles, seed, accept)?;
+    fig10::to_csv(&fig).write(&out_path("fig10.csv"))?;
+    print!("{}", fig10::report(&fig));
+    println!("wrote {}", out_path("fig10.csv").display());
+    Ok(())
+}
+
+fn cmd_fig11(args: &Args) -> Result<()> {
+    let cycles = args.get_u64("cycles", 1_000_000).map_err(resipi::Error::config)?;
+    let seed = args.get_u64("seed", 0xF11).map_err(resipi::Error::config)?;
+    let fig = fig11::run(cycles, seed)?;
+    fig11::to_csv(&fig).write(&out_path("fig11.csv"))?;
+    fig11::to_json(&fig).write(&out_path("fig11_headline.json"))?;
+    print!("{}", fig11::report(&fig));
+    println!("wrote {}", out_path("fig11.csv").display());
+    Ok(())
+}
+
+fn cmd_fig12(args: &Args) -> Result<()> {
+    let epochs = args.get_u64("epochs", 100).map_err(resipi::Error::config)?;
+    let epoch_cycles = args
+        .get_u64("epoch-cycles", 100_000)
+        .map_err(resipi::Error::config)?;
+    let seed = args.get_u64("seed", 0xF12).map_err(resipi::Error::config)?;
+    let fig = fig12::run(epochs, epoch_cycles, seed)?;
+    fig12::to_csv(&fig).write(&out_path("fig12.csv"))?;
+    print!("{}", fig12::report(&fig));
+    println!("wrote {}", out_path("fig12.csv").display());
+    Ok(())
+}
+
+fn cmd_fig13(args: &Args) -> Result<()> {
+    let cycles = args.get_u64("cycles", 1_000_000).map_err(resipi::Error::config)?;
+    let seed = args.get_u64("seed", 0xF13).map_err(resipi::Error::config)?;
+    let fig = fig13::run(cycles, seed)?;
+    fig13::to_csv(&fig).write(&out_path("fig13.csv"))?;
+    print!("{}", fig13::report(&fig));
+    println!("wrote {}", out_path("fig13.csv").display());
+    Ok(())
+}
+
+fn cmd_table2() -> Result<()> {
+    let t = table2::run(&ControllerParams::default());
+    table2::to_csv(&t).write(&out_path("table2.csv"))?;
+    print!("{}", table2::report(&t));
+    println!("wrote {}", out_path("table2.csv").display());
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("thresholds");
+    let cycles = args.get_u64("cycles", 600_000).map_err(resipi::Error::config)?;
+    let seed = args.get_u64("seed", 0xAB).map_err(resipi::Error::config)?;
+    let rows = match which {
+        "thresholds" => ablations::thresholds(cycles, seed)?,
+        "gwsel" => ablations::gateway_selection(cycles, seed)?,
+        "epoch" => ablations::epoch_length(cycles, seed)?,
+        other => {
+            return Err(resipi::Error::config(format!(
+                "unknown ablation {other:?} (thresholds|gwsel|epoch)"
+            )))
+        }
+    };
+    ablations::to_csv(&rows).write(&out_path(&format!("ablation_{which}.csv")))?;
+    print!("{}", ablations::report(which, &rows));
+    Ok(())
+}
+
+fn cmd_scale(args: &Args) -> Result<()> {
+    let cycles = args.get_u64("cycles", 400_000).map_err(resipi::Error::config)?;
+    let seed = args.get_u64("seed", 0x5CA).map_err(resipi::Error::config)?;
+    let points = scaling::run(&[2, 4, 6, 8], cycles, seed)?;
+    scaling::to_csv(&points).write(&out_path("scaling.csv"))?;
+    print!("{}", scaling::report(&points));
+    println!("wrote {}", out_path("scaling.csv").display());
+    Ok(())
+}
+
+fn cmd_sweep() -> Result<()> {
+    // Batched HLO power-model sweep over every gateway-count pattern:
+    // the §3.4 "pre-analysed scenarios" evaluated on the L1 kernel.
+    let model = BatchPowerModel::load_default().map_err(|e| {
+        resipi::Error::runtime(format!(
+            "{e}; run `make artifacts` first to build the HLO power model"
+        ))
+    })?;
+    let cfg = Config::table1(Architecture::Resipi);
+    let mut active = Vec::new();
+    let mut lambdas = Vec::new();
+    let mut labels = Vec::new();
+    for g in 1..=4usize {
+        for lam in [1usize, 2, 4, 8] {
+            let mut mask = vec![false; ARTIFACT_GATEWAYS];
+            for c in 0..4 {
+                for k in 0..g {
+                    mask[c * 4 + k] = true;
+                }
+            }
+            mask[16] = true;
+            mask[17] = true;
+            active.push(mask);
+            lambdas.push(vec![lam; ARTIFACT_GATEWAYS]);
+            labels.push(format!("g={g} lambda={lam}"));
+        }
+    }
+    let spec = resipi::power::ArchPowerSpec::resipi(5);
+    let rows = model.evaluate(&active, &lambdas, &cfg.power, &spec)?;
+    println!("Batched HLO power-model sweep (backend: hlo-pjrt)");
+    println!("config           laser(mW)  tuning    tia       driver    total");
+    for (label, r) in labels.iter().zip(&rows) {
+        println!(
+            "{:<16} {:<10.1} {:<9.1} {:<9.1} {:<9.1} {:<9.1}",
+            label, r[0], r[1], r[2], r[3], r[4]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_all(args: &Args) -> Result<()> {
+    cmd_table2()?;
+    cmd_fig10(args)?;
+    cmd_fig11(args)?;
+    cmd_fig13(args)?;
+    let f12 = Args {
+        positional: vec![],
+        flags: HashMap::from([
+            ("epochs".to_string(), "40".to_string()),
+            (
+                "epoch-cycles".to_string(),
+                args.get_str("epoch-cycles", "50000"),
+            ),
+        ]),
+    };
+    cmd_fig12(&f12)?;
+    for which in ["thresholds", "gwsel", "epoch"] {
+        let a = Args {
+            positional: vec![which.to_string()],
+            flags: args.flags.clone(),
+        };
+        cmd_ablate(&a)?;
+    }
+    println!("\nAll artifacts regenerated under {}", output_dir().display());
+    Ok(())
+}

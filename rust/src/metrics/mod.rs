@@ -1,0 +1,340 @@
+//! Simulation metrics: packet latency, per-epoch adaptation series
+//! (Fig. 12), per-router flit residency (Fig. 13), and power/energy
+//! integration (Fig. 11).
+//!
+//! ## Energy metrics
+//!
+//! Two energies are reported:
+//!
+//! * `total_energy_uj` — ∫ power dt over the measured window (µJ), plus
+//!   PCMC switching energy. With a fixed simulated horizon this tracks
+//!   average power.
+//! * `energy_metric_pj` — average power × average packet latency (mW × ns
+//!   = pJ): the energy the network burns per packet *transit*. This is the
+//!   energy-delay-shaped quantity that Fig. 11c's ~53% reduction reflects
+//!   (−25% power × −37% latency ⇒ ≈ −53%).
+
+use crate::power::PowerBreakdown;
+use crate::sim::packet::Cycle;
+use crate::util::stats::{Histogram, Running};
+
+/// One reconfiguration interval's record (a Fig. 12 sample).
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub index: u64,
+    pub start_cycle: Cycle,
+    pub cycles: u64,
+    /// Packets delivered during the epoch.
+    pub delivered: u64,
+    /// Average latency of packets delivered during the epoch, cycles.
+    pub avg_latency: f64,
+    /// Average measured gateway load over active chiplet gateways
+    /// (Eq. 5's `L_c`, averaged over chiplets) — Fig. 10's x-axis.
+    pub avg_gateway_load: f64,
+    /// Total active gateways after this boundary's reconfiguration
+    /// (Fig. 12c).
+    pub active_gateways: usize,
+    /// Total active wavelengths across gateways (Fig. 12d for PROWAVES).
+    pub total_lambdas: usize,
+    /// Power in force after the boundary.
+    pub power: PowerBreakdown,
+    /// PCMC switch events at this boundary.
+    pub pcmc_switches: usize,
+}
+
+/// Cumulative metrics for one simulation run.
+#[derive(Debug)]
+pub struct Metrics {
+    /// Packets created (offered load), post-warmup.
+    pub created: u64,
+    /// Packets delivered post-warmup.
+    pub delivered: u64,
+    /// Of which crossed the interposer.
+    pub inter_chiplet: u64,
+    /// Latency of delivered packets (creation → tail ejection), cycles.
+    pub latency: Running,
+    pub latency_hist: Histogram,
+    /// Per-epoch adaptation series.
+    pub epochs: Vec<EpochRecord>,
+    /// Integrated energy, µJ (power × time, at 1 GHz: mW × cycles / 1e6).
+    pub total_energy_uj: f64,
+    /// PCMC switching energy, nJ.
+    pub switch_energy_nj: f64,
+    /// Time-weighted average power, mW (valid after finalize).
+    pub avg_power_mw: f64,
+    /// Time-weighted average power breakdown accumulators (mW·cycles).
+    acc_power: PowerAcc,
+    /// Epoch-local accumulators.
+    epoch_latency: Running,
+    epoch_delivered: u64,
+    /// Warm-up horizon: packets created before this are not measured.
+    pub warmup: Cycle,
+    measured_cycles: u64,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct PowerAcc {
+    laser: f64,
+    tuning: f64,
+    tia: f64,
+    driver: f64,
+    controller: f64,
+    total: f64,
+    cycles: u64,
+}
+
+impl Metrics {
+    pub fn new(warmup: Cycle) -> Self {
+        Self {
+            created: 0,
+            delivered: 0,
+            inter_chiplet: 0,
+            latency: Running::new(),
+            latency_hist: Histogram::new(4096, 1.0),
+            epochs: Vec::new(),
+            total_energy_uj: 0.0,
+            switch_energy_nj: 0.0,
+            avg_power_mw: 0.0,
+            acc_power: PowerAcc::default(),
+            epoch_latency: Running::new(),
+            epoch_delivered: 0,
+            warmup,
+            measured_cycles: 0,
+        }
+    }
+
+    #[inline]
+    pub fn on_created(&mut self, created_at: Cycle) {
+        if created_at >= self.warmup {
+            self.created += 1;
+        }
+    }
+
+    /// Record a delivery. `created_at` is the packet's creation cycle.
+    #[inline]
+    pub fn on_delivered(&mut self, created_at: Cycle, now: Cycle, crossed_interposer: bool) {
+        if created_at < self.warmup {
+            return;
+        }
+        let lat = (now - created_at) as f64;
+        self.delivered += 1;
+        if crossed_interposer {
+            self.inter_chiplet += 1;
+        }
+        self.latency.push(lat);
+        self.latency_hist.record(lat);
+        self.epoch_latency.push(lat);
+        self.epoch_delivered += 1;
+    }
+
+    /// Integrate `power` held for `cycles` cycles (1 GHz ⇒ 1 cycle = 1 ns;
+    /// mW × ns = pJ; accumulate in µJ). Cycles before warm-up still burn
+    /// energy physically but are excluded from the measured window, like
+    /// the latency statistics.
+    pub fn integrate_power(&mut self, power: &PowerBreakdown, cycles: u64, from: Cycle) {
+        if cycles == 0 {
+            return;
+        }
+        // Clip the segment to the measured (post-warmup) window.
+        let end = from + cycles;
+        if end <= self.warmup {
+            return;
+        }
+        let measured = end - from.max(self.warmup);
+        let c = measured as f64;
+        self.acc_power.laser += power.laser_mw * c;
+        self.acc_power.tuning += power.tuning_mw * c;
+        self.acc_power.tia += power.tia_mw * c;
+        self.acc_power.driver += power.driver_mw * c;
+        self.acc_power.controller += power.controller_mw * c;
+        self.acc_power.total += power.total_mw * c;
+        self.acc_power.cycles += measured;
+        self.total_energy_uj += power.total_mw * c / 1.0e6;
+        self.measured_cycles += measured;
+    }
+
+    pub fn on_pcmc_switches(&mut self, energy_nj: f64) {
+        self.switch_energy_nj += energy_nj;
+        self.total_energy_uj += energy_nj / 1000.0;
+    }
+
+    /// Close an epoch: fold the epoch-local accumulators into a record.
+    #[allow(clippy::too_many_arguments)]
+    pub fn close_epoch(
+        &mut self,
+        index: u64,
+        start_cycle: Cycle,
+        cycles: u64,
+        avg_gateway_load: f64,
+        active_gateways: usize,
+        total_lambdas: usize,
+        power: PowerBreakdown,
+        pcmc_switches: usize,
+    ) {
+        self.epochs.push(EpochRecord {
+            index,
+            start_cycle,
+            cycles,
+            delivered: self.epoch_delivered,
+            avg_latency: self.epoch_latency.mean(),
+            avg_gateway_load,
+            active_gateways,
+            total_lambdas,
+            power,
+            pcmc_switches,
+        });
+        self.epoch_latency = Running::new();
+        self.epoch_delivered = 0;
+    }
+
+    /// Finalize time-weighted averages.
+    pub fn finalize(&mut self) {
+        if self.acc_power.cycles > 0 {
+            self.avg_power_mw = self.acc_power.total / self.acc_power.cycles as f64;
+        }
+    }
+
+    /// Time-weighted average power breakdown, mW.
+    pub fn avg_power_breakdown(&self) -> PowerBreakdown {
+        let c = self.acc_power.cycles.max(1) as f64;
+        PowerBreakdown {
+            laser_mw: self.acc_power.laser / c,
+            tuning_mw: self.acc_power.tuning / c,
+            tia_mw: self.acc_power.tia / c,
+            driver_mw: self.acc_power.driver / c,
+            controller_mw: self.acc_power.controller / c,
+            total_mw: self.acc_power.total / c,
+        }
+    }
+
+    /// Average packet latency, cycles.
+    pub fn avg_latency(&self) -> f64 {
+        self.latency.mean()
+    }
+
+    /// The energy-per-transit metric (pJ): avg power × avg latency.
+    pub fn energy_metric_pj(&self) -> f64 {
+        self.avg_power_breakdown().total_mw * self.avg_latency()
+    }
+
+    /// Measured (post-warmup) cycles integrated.
+    pub fn measured_cycles(&self) -> u64 {
+        self.measured_cycles
+    }
+
+    /// Fraction of offered packets delivered (saturation check).
+    pub fn delivery_ratio(&self) -> f64 {
+        if self.created == 0 {
+            return 1.0;
+        }
+        self.delivered as f64 / self.created as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bd(total: f64) -> PowerBreakdown {
+        PowerBreakdown {
+            laser_mw: total * 0.5,
+            tuning_mw: total * 0.3,
+            tia_mw: total * 0.1,
+            driver_mw: total * 0.1,
+            controller_mw: 0.0,
+            total_mw: total,
+        }
+    }
+
+    #[test]
+    fn warmup_excludes_early_packets() {
+        let mut m = Metrics::new(1000);
+        m.on_created(500);
+        m.on_delivered(500, 600, false);
+        assert_eq!(m.created, 0);
+        assert_eq!(m.delivered, 0);
+        m.on_created(1500);
+        m.on_delivered(1500, 1530, true);
+        assert_eq!(m.created, 1);
+        assert_eq!(m.delivered, 1);
+        assert_eq!(m.inter_chiplet, 1);
+        assert_eq!(m.avg_latency(), 30.0);
+    }
+
+    #[test]
+    fn power_integration_and_energy() {
+        let mut m = Metrics::new(0);
+        m.integrate_power(&bd(1000.0), 1_000_000, 0);
+        m.finalize();
+        // 1000 mW × 1e6 ns = 1e9 pJ = 1 mJ = 1000 µJ.
+        assert!((m.total_energy_uj - 1000.0).abs() < 1e-9);
+        assert!((m.avg_power_mw - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_integration_clips_warmup() {
+        let mut m = Metrics::new(500);
+        m.integrate_power(&bd(100.0), 400, 0); // fully inside warmup
+        assert_eq!(m.measured_cycles(), 0);
+        m.integrate_power(&bd(100.0), 200, 400); // straddles: 100 measured
+        assert_eq!(m.measured_cycles(), 100);
+        m.finalize();
+        assert!((m.avg_power_mw - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_weighted_average_power() {
+        let mut m = Metrics::new(0);
+        m.integrate_power(&bd(100.0), 100, 0);
+        m.integrate_power(&bd(300.0), 300, 100);
+        m.finalize();
+        // (100×100 + 300×300)/400 = 250.
+        assert!((m.avg_power_mw - 250.0).abs() < 1e-9);
+        let b = m.avg_power_breakdown();
+        assert!((b.laser_mw - 125.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn epoch_records_isolate_windows() {
+        let mut m = Metrics::new(0);
+        m.on_delivered(0, 10, false);
+        m.on_delivered(0, 20, false);
+        m.close_epoch(0, 0, 100, 0.01, 18, 72, bd(10.0), 2);
+        m.on_delivered(100, 140, false);
+        m.close_epoch(1, 100, 100, 0.02, 10, 40, bd(5.0), 0);
+        assert_eq!(m.epochs.len(), 2);
+        assert_eq!(m.epochs[0].delivered, 2);
+        assert!((m.epochs[0].avg_latency - 15.0).abs() < 1e-9);
+        assert_eq!(m.epochs[1].delivered, 1);
+        assert!((m.epochs[1].avg_latency - 40.0).abs() < 1e-9);
+        // Global stats unaffected by epoch closes.
+        assert_eq!(m.delivered, 3);
+    }
+
+    #[test]
+    fn switch_energy_counts_toward_total() {
+        let mut m = Metrics::new(0);
+        m.on_pcmc_switches(2000.0); // 2000 nJ = 2 µJ
+        assert!((m.total_energy_uj - 2.0).abs() < 1e-12);
+        assert_eq!(m.switch_energy_nj, 2000.0);
+    }
+
+    #[test]
+    fn energy_metric_is_power_times_latency() {
+        let mut m = Metrics::new(0);
+        m.on_delivered(0, 50, true);
+        m.integrate_power(&bd(200.0), 1000, 0);
+        m.finalize();
+        assert!((m.energy_metric_pj() - 200.0 * 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delivery_ratio() {
+        let mut m = Metrics::new(0);
+        assert_eq!(m.delivery_ratio(), 1.0);
+        m.on_created(1);
+        m.on_created(2);
+        m.on_delivered(1, 5, false);
+        assert_eq!(m.delivery_ratio(), 0.5);
+    }
+}

@@ -1,0 +1,69 @@
+//! Power and energy models: the photonic interposer power model
+//! ([`optics`], rust mirror of the AOT-compiled L2/L1 artifact) and the
+//! Table 2 controller area/power estimator ([`controller_area`]).
+
+pub mod controller_area;
+pub mod optics;
+
+pub use controller_area::{table2, BlockEstimate, ControllerParams};
+pub use optics::{epoch_power, required_laser_mw, OpticsInput, PowerBreakdown};
+
+/// Architecture-level power semantics (see [`OpticsInput`] for the field
+/// meanings). Built once per simulation from the [`crate::config::Architecture`].
+#[derive(Debug, Clone, Copy)]
+pub struct ArchPowerSpec {
+    pub use_pcmc: bool,
+    pub extra_loss_db: f64,
+    pub listen_sources: usize,
+    pub static_tune_lambda: usize,
+    pub links_per_writer: usize,
+    pub charge_controller: bool,
+}
+
+impl ArchPowerSpec {
+    /// ReSiPI-style defaults (PCM gating, per-chiplet listeners).
+    pub fn resipi(listen_sources: usize) -> Self {
+        Self {
+            use_pcmc: true,
+            extra_loss_db: 0.0,
+            listen_sources,
+            static_tune_lambda: 0,
+            links_per_writer: 1,
+            charge_controller: true,
+        }
+    }
+}
+
+/// Abstraction the InC uses to evaluate epoch power: either the compiled
+/// HLO artifact (`runtime::HloPowerModel`) or the pure-rust mirror
+/// ([`RustPowerModel`]). Both must agree numerically — an integration test
+/// cross-validates them.
+pub trait EpochPowerModel {
+    /// Compute the power breakdown for an epoch configuration.
+    fn epoch_power(
+        &mut self,
+        input: &OpticsInput<'_>,
+        power: &crate::config::PowerConfig,
+    ) -> PowerBreakdown;
+
+    /// Human-readable backend name (for logs / EXPERIMENTS.md provenance).
+    fn backend(&self) -> &'static str;
+}
+
+/// The pure-rust implementation of [`EpochPowerModel`].
+#[derive(Debug, Default, Clone)]
+pub struct RustPowerModel;
+
+impl EpochPowerModel for RustPowerModel {
+    fn epoch_power(
+        &mut self,
+        input: &OpticsInput<'_>,
+        power: &crate::config::PowerConfig,
+    ) -> PowerBreakdown {
+        optics::epoch_power(input, power)
+    }
+
+    fn backend(&self) -> &'static str {
+        "rust-mirror"
+    }
+}

@@ -1,0 +1,452 @@
+//! Photonic power model (paper §4.1; constants from PROWAVES [16]/[19]).
+//!
+//! This is the **rust mirror** of the L2 JAX model / L1 Pallas kernel in
+//! `python/compile/` — the same arithmetic, so the HLO artifact and this
+//! implementation cross-validate each other (see `rust/tests/`). The InC
+//! calls the compiled HLO through `runtime::HloPowerModel` when artifacts
+//! are present and falls back to this mirror otherwise, keeping the binary
+//! self-contained.
+//!
+//! ## Link budget
+//!
+//! The laser feeds the PCMC chain; writer `i`'s share reaches its MRG, is
+//! modulated, travels down the SWMR waveguide bundle, and is dropped at the
+//! reader's filter row. The per-writer *excess loss* is the worst-case
+//! (farthest active reader) path loss:
+//!
+//! `L_i = pcmc_loss + max_{j active, j≠i} |i−j| · (hop_loss + mrg_through)`
+//!
+//! The required laser feed for writer `i` is the nominal per-wavelength
+//! budget scaled by `10^{L_i/10}` — i.e. the SOA laser is tuned to the
+//! minimum level that still closes every active link (§3.2 "laser-power
+//! management"). Architectures without PCMC gating (PROWAVES, AWGR) skip
+//! the PCMC insertion term but pay a flat `extra_loss_db` (1.8 dB for AWGR
+//! [8]).
+
+use crate::config::PowerConfig;
+
+/// Per-epoch electrical + optical power breakdown, mW.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerBreakdown {
+    pub laser_mw: f64,
+    pub tuning_mw: f64,
+    pub tia_mw: f64,
+    pub driver_mw: f64,
+    pub controller_mw: f64,
+    pub total_mw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn zero() -> Self {
+        Self {
+            laser_mw: 0.0,
+            tuning_mw: 0.0,
+            tia_mw: 0.0,
+            driver_mw: 0.0,
+            controller_mw: 0.0,
+            total_mw: 0.0,
+        }
+    }
+}
+
+/// Inputs describing one epoch's interposer configuration.
+///
+/// The per-architecture fields encode the power asymmetries the paper's
+/// evaluation rests on:
+///
+/// * **PCM gating** (`use_pcmc`): ReSiPI parks idle microrings with zero
+///   holding power ([32], §3.2) — each active reader tunes at most
+///   [`OpticsInput::listen_sources`] filter rows (one per remote traffic
+///   source its vicinity maps can select). Non-PCM designs must keep
+///   rings thermally locked to stay usable.
+/// * **Static ring locking** (`static_tune_lambda`): PROWAVES adapts the
+///   *laser* per wavelength but its rings stay locked at the full
+///   wavelength complement (16λ rows per gateway) so bandwidth can return
+///   within an epoch.
+/// * **Parallel single-λ links** (`links_per_writer`): an AWGR port
+///   modulates one wavelength per *destination* (N−1 concurrent links,
+///   [8]), multiplying its laser/modulator/driver counts.
+#[derive(Debug, Clone)]
+pub struct OpticsInput<'a> {
+    /// Active mask over all `N` gateways (chain order = gateway id order).
+    pub active: &'a [bool],
+    /// Wavelengths per *link* each writer modulates (4 for ReSiPI, the
+    /// adaptive count for PROWAVES, 1 for AWGR).
+    pub lambdas: &'a [usize],
+    /// Does the design gate laser power with a PCMC chain (ReSiPI)?
+    pub use_pcmc: bool,
+    /// Flat extra insertion loss in dB (AWGR: 1.8; others: 0).
+    pub extra_loss_db: f64,
+    /// PCM designs: filter rows tuned per active reader (= remote traffic
+    /// sources: other chiplets + memory controllers). Ignored otherwise.
+    pub listen_sources: usize,
+    /// Non-PCM designs: wavelengths whose rings stay thermally locked per
+    /// filter row regardless of activity (PROWAVES: 16; AWGR: 0 — its
+    /// wavelength routing is a passive grating, no filter rings).
+    pub static_tune_lambda: usize,
+    /// Concurrent destination links per writer (AWGR: N−1; others: 1).
+    pub links_per_writer: usize,
+    /// Number of LGC instances to charge (ReSiPI: one per chiplet; 0 for
+    /// baselines without the controller).
+    pub lgc_count: usize,
+    /// Charge the global InC?
+    pub inc: bool,
+}
+
+impl<'a> OpticsInput<'a> {
+    /// Convenience constructor with ReSiPI-style defaults.
+    pub fn new(active: &'a [bool], lambdas: &'a [usize]) -> Self {
+        Self {
+            active,
+            lambdas,
+            use_pcmc: true,
+            extra_loss_db: 0.0,
+            listen_sources: 5,
+            static_tune_lambda: 0,
+            links_per_writer: 1,
+            lgc_count: 0,
+            inc: false,
+        }
+    }
+}
+
+#[inline]
+fn db_to_factor(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Worst-case excess path loss (dB) for writer `i` over active readers.
+pub fn worst_path_loss_db(i: usize, active: &[bool], p: &PowerConfig, use_pcmc: bool) -> f64 {
+    let per_hop = p.hop_loss_db + p.mrg_through_loss_db;
+    let max_dist = active
+        .iter()
+        .enumerate()
+        .filter(|&(j, &a)| a && j != i)
+        .map(|(j, _)| i.abs_diff(j))
+        .max()
+        .unwrap_or(0);
+    let pcmc = if use_pcmc { p.pcmc_loss_db } else { 0.0 };
+    pcmc + max_dist as f64 * per_hop
+}
+
+/// Required laser feed per writer, mW (0 for idle writers). Includes the
+/// per-destination link multiplier (AWGR).
+pub fn required_laser_mw(input: &OpticsInput, p: &PowerConfig) -> Vec<f64> {
+    let n = input.active.len();
+    assert_eq!(input.lambdas.len(), n);
+    (0..n)
+        .map(|i| {
+            if !input.active[i] || input.lambdas[i] == 0 {
+                return 0.0;
+            }
+            let loss = worst_path_loss_db(i, input.active, p, input.use_pcmc)
+                + input.extra_loss_db;
+            p.laser_mw_per_wavelength
+                * (input.lambdas[i] * input.links_per_writer) as f64
+                * db_to_factor(loss)
+        })
+        .collect()
+}
+
+/// Full epoch power breakdown for a configuration.
+pub fn epoch_power(input: &OpticsInput, p: &PowerConfig) -> PowerBreakdown {
+    let n = input.active.len();
+    assert_eq!(input.lambdas.len(), n);
+    let n_active = input.active.iter().filter(|&&a| a).count();
+    let sum_lambda_active: usize = input
+        .active
+        .iter()
+        .zip(input.lambdas)
+        .filter(|(&a, _)| a)
+        .map(|(_, &l)| l)
+        .sum();
+
+    let laser_mw: f64 = required_laser_mw(input, p).iter().sum();
+
+    // Modulator rings: one per wavelength per concurrent link.
+    let mod_mrs = sum_lambda_active * input.links_per_writer;
+    // Filter rings + the PDs behind them:
+    //  * PCM designs park idle rows — each active reader tunes at most
+    //    `listen_sources` rows (its possible traffic sources);
+    //  * non-PCM designs keep `static_tune_lambda` rings locked per row
+    //    for every remote writer (PROWAVES), or have none (AWGR's passive
+    //    grating), but their *receivers* (TIAs) still burn power on every
+    //    active wavelength lane.
+    let (filter_mrs, tia_pds) = if n_active == 0 {
+        (0, 0)
+    } else if input.use_pcmc {
+        let listen = input.listen_sources.min(n_active - 1);
+        let rows = listen * sum_lambda_active;
+        (rows, rows)
+    } else {
+        let locked = n_active * (n_active - 1) * input.static_tune_lambda;
+        let pds = (n_active - 1) * sum_lambda_active;
+        (locked, pds)
+    };
+
+    let tuning_mw = p.tuning_mw_per_mr * (mod_mrs + filter_mrs) as f64;
+    let tia_mw = p.tia_mw * tia_pds as f64;
+    let driver_mw = p.driver_mw * mod_mrs as f64;
+    let controller_mw =
+        (input.lgc_count as f64 * p.lgc_uw + if input.inc { p.inc_uw } else { 0.0 }) / 1000.0;
+    let total_mw = laser_mw + tuning_mw + tia_mw + driver_mw + controller_mw;
+    PowerBreakdown {
+        laser_mw,
+        tuning_mw,
+        tia_mw,
+        driver_mw,
+        controller_mw,
+        total_mw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Architecture, Config};
+    use crate::util::proptest::{check, PropConfig};
+
+    fn pcfg() -> PowerConfig {
+        Config::table1(Architecture::Resipi).power
+    }
+
+    fn input<'a>(
+        active: &'a [bool],
+        lambdas: &'a [usize],
+        use_pcmc: bool,
+        extra: f64,
+    ) -> OpticsInput<'a> {
+        let mut inp = OpticsInput::new(active, lambdas);
+        inp.use_pcmc = use_pcmc;
+        inp.extra_loss_db = extra;
+        inp
+    }
+
+    #[test]
+    fn laser_scales_with_active_writers() {
+        let p = pcfg();
+        let lambdas = vec![4usize; 18];
+        let all = vec![true; 18];
+        let mut half = vec![false; 18];
+        for i in 0..9 {
+            half[i * 2] = true;
+        }
+        let full = required_laser_mw(&input(&all, &lambdas, true, 0.0), &p);
+        let gated = required_laser_mw(&input(&half, &lambdas, true, 0.0), &p);
+        let full_total: f64 = full.iter().sum();
+        let gated_total: f64 = gated.iter().sum();
+        assert!(gated_total < full_total * 0.6, "PCMC gating must save laser power");
+        // Idle writers draw nothing.
+        for (i, &mw) in gated.iter().enumerate() {
+            if !half[i] {
+                assert_eq!(mw, 0.0);
+            } else {
+                assert!(mw >= p.laser_mw_per_wavelength * 4.0);
+            }
+        }
+    }
+
+    #[test]
+    fn awgr_loss_penalty() {
+        let p = pcfg();
+        let active = vec![true; 18];
+        let l1 = vec![1usize; 18];
+        let base: f64 = required_laser_mw(&input(&active, &l1, false, 0.0), &p)
+            .iter()
+            .sum();
+        let awgr: f64 = required_laser_mw(&input(&active, &l1, false, 1.8), &p)
+            .iter()
+            .sum();
+        let ratio = awgr / base;
+        assert!(
+            (ratio - db_to_factor(1.8)).abs() < 1e-9,
+            "1.8 dB ⇒ ×{:.3}, got ×{ratio:.3}",
+            db_to_factor(1.8)
+        );
+    }
+
+    #[test]
+    fn architecture_asymmetries() {
+        let p = pcfg();
+        // PROWAVES-style: 6 gateways, rings locked at 16λ even when only
+        // 2λ are active.
+        let active6 = vec![true; 6];
+        let lam2 = vec![2usize; 6];
+        let mut pw = input(&active6, &lam2, false, 0.0);
+        pw.static_tune_lambda = 16;
+        let b = epoch_power(&pw, &p);
+        // locked filters: 6×5×16 = 480; mods 12 → tuning 3×492.
+        assert!((b.tuning_mw - 3.0 * 492.0).abs() < 1e-9);
+        // TIA follows *active* lanes: (6−1)×12 = 60 PDs → 120 mW.
+        assert!((b.tia_mw - 120.0).abs() < 1e-9);
+
+        // AWGR-style: 1λ per link, 17 concurrent links, passive grating
+        // (no filter rings).
+        let active18 = vec![true; 18];
+        let lam1 = vec![1usize; 18];
+        let mut aw = input(&active18, &lam1, false, 1.8);
+        aw.static_tune_lambda = 0;
+        aw.links_per_writer = 17;
+        let a = epoch_power(&aw, &p);
+        // mods: 18×1×17 = 306 → driver 918 mW, tuning 3×306 (no filters).
+        assert!((a.driver_mw - 918.0).abs() < 1e-9);
+        assert!((a.tuning_mw - 918.0).abs() < 1e-9);
+        // PDs: (18−1)×18 lanes... = 17×18 = 306 → 612 mW.
+        assert!((a.tia_mw - 612.0).abs() < 1e-9);
+        // Laser: ≥ 30×17×18×10^0.18.
+        assert!(a.laser_mw > 30.0 * 17.0 * 18.0 * db_to_factor(1.8) - 1e-6);
+
+        // ReSiPI-style PCM parking beats PROWAVES' locked rings at equal
+        // peak bandwidth (18×4 vs 6×16 λ-waveguides, the Table 1 parity).
+        let lam4 = vec![4usize; 18];
+        let rs = epoch_power(&input(&active18, &lam4, true, 0.0), &p);
+        let lam16 = vec![16usize; 6];
+        let mut pw2 = input(&active6, &lam16, false, 0.0);
+        pw2.static_tune_lambda = 16;
+        let pwb = epoch_power(&pw2, &p);
+        assert!(
+            rs.total_mw < pwb.total_mw,
+            "ReSiPI {} vs PROWAVES {}",
+            rs.total_mw,
+            pwb.total_mw
+        );
+        // And the adaptive win: ReSiPI at its typical mid-load operating
+        // point (10 of 18 active) undercuts PROWAVES at the matching
+        // wavelength count by a wide margin.
+        let mut act10 = vec![false; 18];
+        for i in 0..10 {
+            act10[i] = true;
+        }
+        let rs10 = epoch_power(&input(&act10, &lam4, true, 0.0), &p);
+        let lam10 = vec![10usize; 6];
+        let mut pw10 = input(&active6, &lam10, false, 0.0);
+        pw10.static_tune_lambda = 16;
+        let pw10 = epoch_power(&pw10, &p);
+        assert!(
+            rs10.total_mw < pw10.total_mw * 0.85,
+            "adaptive ReSiPI {} vs PROWAVES {}",
+            rs10.total_mw,
+            pw10.total_mw
+        );
+    }
+
+    #[test]
+    fn breakdown_matches_hand_count_small() {
+        let p = pcfg();
+        // 3 gateways, 2 active, 2λ each, no losses for hand arithmetic.
+        let mut p0 = p.clone();
+        p0.hop_loss_db = 0.0;
+        p0.mrg_through_loss_db = 0.0;
+        p0.pcmc_loss_db = 0.0;
+        let active = [true, true, false];
+        let lambdas = [2usize, 2, 2];
+        let b = epoch_power(&input(&active, &lambdas, true, 0.0), &p0);
+        // laser: 2 writers × 2λ × 30 mW = 120.
+        assert!((b.laser_mw - 120.0).abs() < 1e-9);
+        // tuned MRs: Σλ=4 modulators + (2−1)·4 filters = 8 → 24 mW.
+        assert!((b.tuning_mw - 24.0).abs() < 1e-9);
+        // PDs: (2−1)·4 = 4 → 8 mW.
+        assert!((b.tia_mw - 8.0).abs() < 1e-9);
+        // drivers: 4 × 3 = 12 mW.
+        assert!((b.driver_mw - 12.0).abs() < 1e-9);
+        assert!((b.total_mw - (120.0 + 24.0 + 8.0 + 12.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn controller_overhead_is_microwatts() {
+        let p = pcfg();
+        let active = vec![true; 18];
+        let lambdas = vec![4usize; 18];
+        let mut inp = input(&active, &lambdas, true, 0.0);
+        inp.lgc_count = 4;
+        inp.inc = true;
+        let with = epoch_power(&inp, &p);
+        let without = epoch_power(&input(&active, &lambdas, true, 0.0), &p);
+        let delta = with.total_mw - without.total_mw;
+        // Table 2: 4×172 µW + 787 µW ≈ 1.475 mW.
+        assert!((delta - (4.0 * 172.0 + 787.0) / 1000.0).abs() < 1e-9);
+        assert!(delta / with.total_mw < 0.001, "controller must be negligible");
+    }
+
+    #[test]
+    fn all_idle_draws_nothing() {
+        let p = pcfg();
+        let active = vec![false; 6];
+        let lambdas = vec![4usize; 6];
+        let b = epoch_power(&input(&active, &lambdas, true, 0.0), &p);
+        assert_eq!(b.total_mw, 0.0);
+    }
+
+    /// Property: power is monotone — activating more gateways or adding
+    /// wavelengths never reduces any component.
+    #[test]
+    fn prop_power_monotone() {
+        let p = pcfg();
+        check(
+            &PropConfig::default(),
+            |rng| {
+                let n = rng.gen_range_usize(2, 19);
+                let active: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.5)).collect();
+                let lambdas: Vec<usize> =
+                    (0..n).map(|_| rng.gen_range_usize(1, 17)).collect();
+                (active, lambdas)
+            },
+            |(active, lambdas)| {
+                let b = epoch_power(&input(active, lambdas, true, 0.0), &p);
+                if let Some(idx) = active.iter().position(|&a| !a) {
+                    let mut more = active.clone();
+                    more[idx] = true;
+                    let b2 = epoch_power(&input(&more, lambdas, true, 0.0), &p);
+                    if b2.total_mw < b.total_mw - 1e-9 {
+                        return Err(format!(
+                            "activating gateway {idx} reduced power {} → {}",
+                            b.total_mw, b2.total_mw
+                        ));
+                    }
+                }
+                let mut lam2 = lambdas.clone();
+                lam2[0] += 1;
+                let b3 = epoch_power(&input(active, &lam2, true, 0.0), &p);
+                if b3.total_mw < b.total_mw - 1e-9 {
+                    return Err("adding a wavelength reduced power".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: required laser per active writer is at least the nominal
+    /// budget and within the worst-case chain loss bound.
+    #[test]
+    fn prop_laser_bounds() {
+        let p = pcfg();
+        check(
+            &PropConfig::default(),
+            |rng| {
+                let n = rng.gen_range_usize(2, 19);
+                (0..n).map(|_| rng.gen_bool(0.6)).collect::<Vec<bool>>()
+            },
+            |active| {
+                let n = active.len();
+                let lambdas = vec![4usize; n];
+                let mws = required_laser_mw(&input(active, &lambdas, true, 0.0), &p);
+                let nominal = p.laser_mw_per_wavelength * 4.0;
+                let worst = nominal
+                    * db_to_factor(
+                        p.pcmc_loss_db
+                            + (n - 1) as f64 * (p.hop_loss_db + p.mrg_through_loss_db),
+                    );
+                for (i, &mw) in mws.iter().enumerate() {
+                    if active[i] {
+                        if mw < nominal - 1e-9 || mw > worst + 1e-9 {
+                            return Err(format!("writer {i}: {mw} outside [{nominal}, {worst}]"));
+                        }
+                    } else if mw != 0.0 {
+                        return Err(format!("idle writer {i} draws {mw}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

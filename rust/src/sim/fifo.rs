@@ -1,0 +1,132 @@
+//! Bounded flit FIFO used for router input buffers and gateway buffers.
+
+use std::collections::VecDeque;
+
+use crate::sim::packet::Flit;
+
+/// Fixed-capacity flit queue.
+#[derive(Debug, Clone)]
+pub struct FlitFifo {
+    q: VecDeque<Flit>,
+    capacity: usize,
+    /// Cumulative occupancy (flit·cycles) for residency metrics.
+    occupancy_cycles: u64,
+}
+
+impl FlitFifo {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        Self {
+            q: VecDeque::with_capacity(capacity),
+            capacity,
+            occupancy_cycles: 0,
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.capacity
+    }
+
+    #[inline]
+    pub fn free(&self) -> usize {
+        self.capacity - self.q.len()
+    }
+
+    /// Push a flit; panics if full (callers must check `is_full` — flow
+    /// control is the caller's responsibility and overruns are bugs).
+    #[inline]
+    pub fn push(&mut self, flit: Flit) {
+        assert!(!self.is_full(), "flit FIFO overrun");
+        self.q.push_back(flit);
+    }
+
+    #[inline]
+    pub fn head(&self) -> Option<&Flit> {
+        self.q.front()
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<Flit> {
+        self.q.pop_front()
+    }
+
+    /// Account one cycle of residency for every buffered flit.
+    #[inline]
+    pub fn tick_occupancy(&mut self) {
+        self.occupancy_cycles += self.q.len() as u64;
+    }
+
+    pub fn occupancy_cycles(&self) -> u64 {
+        self.occupancy_cycles
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Flit> {
+        self.q.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::packet::PacketId;
+
+    fn flit(seq: u8) -> Flit {
+        Flit {
+            packet: PacketId(0),
+            seq,
+            len: 8,
+            moved_at: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_ordering_and_capacity() {
+        let mut f = FlitFifo::new(3);
+        assert!(f.is_empty());
+        f.push(flit(0));
+        f.push(flit(1));
+        f.push(flit(2));
+        assert!(f.is_full());
+        assert_eq!(f.free(), 0);
+        assert_eq!(f.head().unwrap().seq, 0);
+        assert_eq!(f.pop().unwrap().seq, 0);
+        assert_eq!(f.pop().unwrap().seq, 1);
+        assert_eq!(f.free(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "overrun")]
+    fn overrun_panics() {
+        let mut f = FlitFifo::new(1);
+        f.push(flit(0));
+        f.push(flit(1));
+    }
+
+    #[test]
+    fn occupancy_accumulates() {
+        let mut f = FlitFifo::new(4);
+        f.push(flit(0));
+        f.push(flit(1));
+        f.tick_occupancy();
+        f.tick_occupancy();
+        f.pop();
+        f.tick_occupancy();
+        assert_eq!(f.occupancy_cycles(), 5);
+    }
+}

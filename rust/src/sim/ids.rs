@@ -1,0 +1,227 @@
+//! Identifiers and geometry for the 2.5D system.
+//!
+//! The system is `C` chiplets, each an `X×Y` electronic mesh with one core
+//! per router, plus `M` standalone memory-controller gateways on the
+//! interposer. Everything is index-based (no pointers) so the hot loop stays
+//! cache-friendly and the whole state is trivially cloneable.
+
+use crate::config::Config;
+
+/// A chiplet index in `0..C`.
+pub type ChipletId = usize;
+
+/// Mesh coordinate within a chiplet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub x: usize,
+    pub y: usize,
+}
+
+impl Coord {
+    pub fn new(x: usize, y: usize) -> Self {
+        Self { x, y }
+    }
+
+    /// Manhattan distance.
+    pub fn dist(&self, other: Coord) -> usize {
+        self.x.abs_diff(other.x) + self.y.abs_diff(other.y)
+    }
+}
+
+/// Global router id: `chiplet * routers_per_chiplet + local_index`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RouterId(pub usize);
+
+/// Global gateway id. Chiplet gateways come first (`chiplet * G + k`),
+/// memory gateways follow (`C * G + m`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GatewayId(pub usize);
+
+/// A traffic endpoint: a core (one per mesh router) or a memory controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Node {
+    Core { chiplet: ChipletId, coord: Coord },
+    Memory { index: usize },
+}
+
+/// Immutable geometry derived from a [`Config`]; shared by routing, the
+/// coordinator, the traffic models, and the metrics code.
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub chiplets: usize,
+    pub mesh_x: usize,
+    pub mesh_y: usize,
+    /// Gateways per chiplet (maximum; activation is dynamic).
+    pub gw_per_chiplet: usize,
+    /// Standalone memory gateways.
+    pub mem_gateways: usize,
+    /// Host-router coordinates of chiplet gateways, in activation order.
+    pub gw_positions: Vec<Coord>,
+}
+
+impl Geometry {
+    pub fn from_config(cfg: &Config) -> Self {
+        Self {
+            chiplets: cfg.topology.chiplets,
+            mesh_x: cfg.topology.mesh_x,
+            mesh_y: cfg.topology.mesh_y,
+            gw_per_chiplet: cfg.gateways.per_chiplet,
+            mem_gateways: cfg.gateways.memory_gateways,
+            gw_positions: cfg.gateways.positions[..cfg.gateways.per_chiplet]
+                .iter()
+                .map(|&(x, y)| Coord::new(x, y))
+                .collect(),
+        }
+    }
+
+    pub fn routers_per_chiplet(&self) -> usize {
+        self.mesh_x * self.mesh_y
+    }
+
+    pub fn total_routers(&self) -> usize {
+        self.chiplets * self.routers_per_chiplet()
+    }
+
+    /// Total gateways: chiplet gateways + memory gateways (18 in Table 1).
+    pub fn total_gateways(&self) -> usize {
+        self.chiplets * self.gw_per_chiplet + self.mem_gateways
+    }
+
+    pub fn router_id(&self, chiplet: ChipletId, coord: Coord) -> RouterId {
+        debug_assert!(chiplet < self.chiplets);
+        debug_assert!(coord.x < self.mesh_x && coord.y < self.mesh_y);
+        RouterId(chiplet * self.routers_per_chiplet() + coord.y * self.mesh_x + coord.x)
+    }
+
+    pub fn router_chiplet(&self, id: RouterId) -> ChipletId {
+        id.0 / self.routers_per_chiplet()
+    }
+
+    pub fn router_coord(&self, id: RouterId) -> Coord {
+        let local = id.0 % self.routers_per_chiplet();
+        Coord::new(local % self.mesh_x, local / self.mesh_x)
+    }
+
+    /// Gateway id for chiplet `c`, slot `k` (activation order).
+    pub fn chiplet_gateway(&self, c: ChipletId, k: usize) -> GatewayId {
+        debug_assert!(c < self.chiplets && k < self.gw_per_chiplet);
+        GatewayId(c * self.gw_per_chiplet + k)
+    }
+
+    /// Gateway id of memory controller `m`.
+    pub fn memory_gateway(&self, m: usize) -> GatewayId {
+        debug_assert!(m < self.mem_gateways);
+        GatewayId(self.chiplets * self.gw_per_chiplet + m)
+    }
+
+    /// Is this a memory-controller gateway?
+    pub fn is_memory_gateway(&self, g: GatewayId) -> bool {
+        g.0 >= self.chiplets * self.gw_per_chiplet
+    }
+
+    /// For a chiplet gateway, its `(chiplet, slot)`; None for memory gateways.
+    pub fn gateway_slot(&self, g: GatewayId) -> Option<(ChipletId, usize)> {
+        if self.is_memory_gateway(g) {
+            None
+        } else {
+            Some((g.0 / self.gw_per_chiplet, g.0 % self.gw_per_chiplet))
+        }
+    }
+
+    /// For a memory gateway, its memory index.
+    pub fn memory_index(&self, g: GatewayId) -> Option<usize> {
+        if self.is_memory_gateway(g) {
+            Some(g.0 - self.chiplets * self.gw_per_chiplet)
+        } else {
+            None
+        }
+    }
+
+    /// Host router of a chiplet gateway.
+    pub fn gateway_router(&self, g: GatewayId) -> Option<RouterId> {
+        let (c, k) = self.gateway_slot(g)?;
+        Some(self.router_id(c, self.gw_positions[k]))
+    }
+
+    /// The chiplet a node lives on, or None for memory controllers.
+    pub fn node_chiplet(&self, n: Node) -> Option<ChipletId> {
+        match n {
+            Node::Core { chiplet, .. } => Some(chiplet),
+            Node::Memory { .. } => None,
+        }
+    }
+
+    /// Iterate all core nodes.
+    pub fn cores(&self) -> impl Iterator<Item = Node> + '_ {
+        (0..self.chiplets).flat_map(move |c| {
+            (0..self.mesh_y).flat_map(move |y| {
+                (0..self.mesh_x).map(move |x| Node::Core {
+                    chiplet: c,
+                    coord: Coord::new(x, y),
+                })
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Architecture, Config};
+
+    fn geo() -> Geometry {
+        Geometry::from_config(&Config::table1(Architecture::Resipi))
+    }
+
+    #[test]
+    fn table1_geometry() {
+        let g = geo();
+        assert_eq!(g.total_routers(), 64);
+        assert_eq!(g.total_gateways(), 18);
+        assert_eq!(g.routers_per_chiplet(), 16);
+        assert_eq!(g.cores().count(), 64);
+    }
+
+    #[test]
+    fn router_id_roundtrip() {
+        let g = geo();
+        for c in 0..g.chiplets {
+            for y in 0..g.mesh_y {
+                for x in 0..g.mesh_x {
+                    let id = g.router_id(c, Coord::new(x, y));
+                    assert_eq!(g.router_chiplet(id), c);
+                    assert_eq!(g.router_coord(id), Coord::new(x, y));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gateway_ids_partition() {
+        let g = geo();
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..g.chiplets {
+            for k in 0..g.gw_per_chiplet {
+                let gw = g.chiplet_gateway(c, k);
+                assert!(!g.is_memory_gateway(gw));
+                assert_eq!(g.gateway_slot(gw), Some((c, k)));
+                assert!(g.gateway_router(gw).is_some());
+                assert!(seen.insert(gw));
+            }
+        }
+        for m in 0..g.mem_gateways {
+            let gw = g.memory_gateway(m);
+            assert!(g.is_memory_gateway(gw));
+            assert_eq!(g.memory_index(gw), Some(m));
+            assert!(g.gateway_router(gw).is_none());
+            assert!(seen.insert(gw));
+        }
+        assert_eq!(seen.len(), g.total_gateways());
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        assert_eq!(Coord::new(0, 0).dist(Coord::new(3, 2)), 5);
+        assert_eq!(Coord::new(2, 2).dist(Coord::new(2, 2)), 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! The cycle-accurate simulation core: identifiers and geometry ([`ids`]),
+//! packets/flits ([`packet`]), bounded FIFOs ([`fifo`]), the wormhole mesh
+//! router ([`router`]), and the full-system network ([`network`]).
+
+pub mod fifo;
+pub mod ids;
+pub mod network;
+pub mod packet;
+pub mod router;
+
+pub use ids::{ChipletId, Coord, GatewayId, Geometry, Node, RouterId};
+pub use network::{Network, Summary};
+pub use packet::{Cycle, Flit, MsgClass, Packet, PacketArena, PacketId};
+pub use router::{Move, Port, Router, NUM_PORTS};

@@ -1,0 +1,1191 @@
+//! The full 2.5D system simulator: chiplet meshes, gateways, the photonic
+//! interposer, and the reconfiguration control plane, advanced one cycle at
+//! a time.
+//!
+//! ## Per-cycle phase order (`step`)
+//!
+//! 1. **Epoch boundary** — at multiples of the reconfiguration interval the
+//!    LGCs decide gateway counts (Eq. 5–7), vicinity maps rebuild (Fig. 8),
+//!    the InC retunes PCMCs/laser (Eq. 4, Fig. 7), PROWAVES adapts
+//!    wavelengths.
+//! 2. **Traffic** — the workload model emits new packets into per-core
+//!    source queues.
+//! 3. **Photonic arrivals** — transfers landing this cycle enter reader
+//!    buffers (space was reserved at start — never dropped).
+//! 4. **Memory controllers** — consume landed requests; emit due replies.
+//! 5. **Serialization** — free writers start transmissions; the
+//!    destination gateway is selected *now*, from the destination chiplet's
+//!    current vicinity map (§3.4's source-gateway decision).
+//! 6. **Routers** — wormhole switch allocation and flit movement; `moved_at`
+//!    stamps prevent multi-hop teleporting within a cycle.
+//! 7. **Reader injection** — landed packets stream into host routers.
+//! 8. **Source injection** — source queues stream into Local ports.
+//! 9. **Drain completion** — flushed gateways power-gate; laser steps down
+//!    (Fig. 7's ordering).
+//! 10. **Bookkeeping** — occupancy ticks, watchdog, time advance.
+//!
+//! Deadlock freedom is by construction (see `routing`); a watchdog turns
+//! any residual global stall into a loud `Error::Invariant` instead of a
+//! silent hang.
+
+use std::collections::VecDeque;
+
+use crate::config::{Architecture, Config};
+use crate::coordinator::{Inc, Lgc, LgcAction, ProwavesCtrl, VicinityMap};
+use crate::error::{Error, Result};
+use crate::interposer::{Gateway, MemController, Photonic};
+use crate::metrics::Metrics;
+use crate::power::{EpochPowerModel, PowerBreakdown, RustPowerModel};
+use crate::sim::ids::{GatewayId, Geometry, Node, RouterId};
+use crate::sim::packet::{Cycle, MsgClass, Packet, PacketArena, PacketId};
+use crate::sim::router::{Port, Router, NUM_PORTS};
+use crate::traffic::{NewPacket, Traffic};
+
+/// Cycles of zero forward progress (with packets live) before the watchdog
+/// declares a deadlock.
+const WATCHDOG_STALL_CYCLES: u64 = 200_000;
+
+/// Architecture-derived behavior switches.
+#[derive(Debug, Clone, Copy)]
+struct Mode {
+    dynamic_gateways: bool,
+    dynamic_lambda: bool,
+    initial_g: usize,
+    /// Serializer lanes per writer (AWGR: one per destination).
+    channels: usize,
+    /// Power-model semantics for this architecture.
+    spec: crate::power::ArchPowerSpec,
+}
+
+impl Mode {
+    fn from_arch(arch: Architecture, cfg: &Config) -> Self {
+        use crate::power::ArchPowerSpec;
+        let g_max = cfg.gateways.per_chiplet;
+        let total_gw = cfg.total_gateways();
+        // Remote traffic sources a reader's vicinity maps can select:
+        // other chiplets + the memory controllers.
+        let listen = (cfg.topology.chiplets - 1) + cfg.gateways.memory_gateways;
+        match arch {
+            Architecture::Resipi => Mode {
+                dynamic_gateways: true,
+                dynamic_lambda: false,
+                initial_g: g_max, // §3.3: starts at the maximum
+                channels: 1,
+                spec: ArchPowerSpec::resipi(listen),
+            },
+            Architecture::ResipiAllOn => Mode {
+                dynamic_gateways: false,
+                dynamic_lambda: false,
+                initial_g: g_max,
+                channels: 1,
+                spec: ArchPowerSpec::resipi(listen),
+            },
+            Architecture::Prowaves => Mode {
+                dynamic_gateways: false,
+                dynamic_lambda: true,
+                initial_g: g_max, // PROWAVES preset has per_chiplet = 1
+                channels: 1,
+                spec: ArchPowerSpec {
+                    use_pcmc: false,
+                    extra_loss_db: 0.0,
+                    listen_sources: 0,
+                    // Rings stay locked at the full complement so
+                    // bandwidth can return within an epoch.
+                    static_tune_lambda: cfg.photonics.max_wavelengths,
+                    links_per_writer: 1,
+                    charge_controller: false,
+                },
+            },
+            Architecture::Awgr => Mode {
+                dynamic_gateways: false,
+                dynamic_lambda: false,
+                initial_g: g_max,
+                // One single-λ lane per destination.
+                channels: total_gw - 1,
+                spec: ArchPowerSpec {
+                    use_pcmc: false,
+                    extra_loss_db: cfg.power.awgr_loss_db,
+                    listen_sources: 0,
+                    static_tune_lambda: 0, // passive grating: no filter rings
+                    links_per_writer: total_gw - 1,
+                    charge_controller: false,
+                },
+            },
+            Architecture::StaticGateways(g) => Mode {
+                dynamic_gateways: false,
+                dynamic_lambda: false,
+                initial_g: g,
+                channels: 1,
+                spec: ArchPowerSpec::resipi(listen),
+            },
+        }
+    }
+}
+
+/// End-of-run summary (one Fig. 10/11 data point).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub arch: String,
+    pub traffic: String,
+    pub cycles: u64,
+    pub created: u64,
+    pub delivered: u64,
+    pub delivery_ratio: f64,
+    pub avg_latency_cycles: f64,
+    pub p99_latency_cycles: f64,
+    pub avg_power_mw: f64,
+    pub power: PowerBreakdown,
+    pub total_energy_uj: f64,
+    pub energy_metric_pj: f64,
+    pub avg_active_gateways: f64,
+    pub avg_total_lambdas: f64,
+    pub avg_gateway_load: f64,
+    pub pcmc_switch_energy_nj: f64,
+    pub power_backend: &'static str,
+}
+
+/// The complete simulated system.
+pub struct Network {
+    cfg: Config,
+    geo: Geometry,
+    mode: Mode,
+    now: Cycle,
+
+    arena: PacketArena,
+    routers: Vec<Router>,
+    /// Gateway hosted at each router, precomputed (hot-loop lookup).
+    router_gateway: Vec<Option<GatewayId>>,
+    /// `(chiplet, coord)` per router, precomputed.
+    router_pos: Vec<(usize, crate::sim::ids::Coord)>,
+    /// Neighbor router index per (router, port), precomputed.
+    neighbor_table: Vec<[Option<u32>; NUM_PORTS]>,
+    /// Dense router-busy map: the per-cycle loop scans these 64 bytes
+    /// instead of striding over 400-byte Router structs.
+    router_busy: Vec<bool>,
+    /// Dense source-queue-nonempty map (same trick for injection).
+    src_busy: Vec<bool>,
+    /// Flits forwarded per router (residency denominator, Fig. 13).
+    flits_forwarded: Vec<u64>,
+    gateways: Vec<Gateway>,
+    mem_ctrls: Vec<MemController>,
+    phy: Photonic,
+
+    lgcs: Vec<Lgc>,
+    inc: Inc,
+    prowaves: Option<ProwavesCtrl>,
+    vicinity: Vec<VicinityMap>,
+    /// Current wavelengths per gateway.
+    lambdas: Vec<usize>,
+
+    traffic: Box<dyn Traffic>,
+    power_model: Box<dyn EpochPowerModel>,
+
+    /// Per-core unbounded source queues + injection progress of the head.
+    src_queues: Vec<VecDeque<PacketId>>,
+    src_next_seq: Vec<u8>,
+
+    metrics: Metrics,
+    epoch_index: u64,
+    epoch_start: Cycle,
+    /// Destination-side gateway selection alternator (§3.4 load balance).
+    dest_flip: bool,
+    /// Packets injected into each gateway's mesh path but not yet received
+    /// by its writer (drain-safety counter).
+    pending_writer: Vec<u32>,
+    last_power_change: Cycle,
+    boundary_switches: usize,
+
+    /// Watchdog state.
+    progress_counter: u64,
+    watchdog_last_counter: u64,
+    watchdog_last_change: Cycle,
+
+    traffic_buf: Vec<NewPacket>,
+    /// Reusable per-router move buffer (keeps the hot loop allocation-free).
+    moves_buf: Vec<crate::sim::router::Move>,
+}
+
+impl Network {
+    /// Build a system with the default (rust-mirror) power model.
+    pub fn new(cfg: Config, traffic: Box<dyn Traffic>) -> Result<Self> {
+        Self::with_power_model(cfg, traffic, Box::new(RustPowerModel))
+    }
+
+    /// Build a system with an explicit power-model backend (e.g. the AOT
+    /// HLO artifact via `runtime::HloPowerModel`).
+    pub fn with_power_model(
+        cfg: Config,
+        traffic: Box<dyn Traffic>,
+        power_model: Box<dyn EpochPowerModel>,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let geo = Geometry::from_config(&cfg);
+        let mode = Mode::from_arch(cfg.arch, &cfg);
+        let n_routers = geo.total_routers();
+        let n_gateways = geo.total_gateways();
+
+        let routers = (0..n_routers)
+            .map(|_| Router::new(cfg.router.buffer_flits))
+            .collect();
+        let router_gateway: Vec<Option<GatewayId>> = (0..n_routers)
+            .map(|r| {
+                let rid = RouterId(r);
+                let chiplet = geo.router_chiplet(rid);
+                let coord = geo.router_coord(rid);
+                (0..geo.gw_per_chiplet)
+                    .find(|&k| geo.gw_positions[k] == coord)
+                    .map(|k| geo.chiplet_gateway(chiplet, k))
+            })
+            .collect();
+        let router_pos: Vec<(usize, crate::sim::ids::Coord)> = (0..n_routers)
+            .map(|r| {
+                let rid = RouterId(r);
+                (geo.router_chiplet(rid), geo.router_coord(rid))
+            })
+            .collect();
+        let neighbor_table: Vec<[Option<u32>; NUM_PORTS]> = (0..n_routers)
+            .map(|r| {
+                let (chiplet, coord) = router_pos[r];
+                std::array::from_fn(|p| {
+                    crate::routing::neighbor(&geo, coord, Port::from_index(p))
+                        .map(|nc| geo.router_id(chiplet, nc).0 as u32)
+                })
+            })
+            .collect();
+
+        let mut gateways = Vec::with_capacity(n_gateways);
+        for c in 0..geo.chiplets {
+            for k in 0..geo.gw_per_chiplet {
+                gateways.push(Gateway::new(
+                    geo.chiplet_gateway(c, k),
+                    cfg.gateways.buffer_flits,
+                    k < mode.initial_g,
+                ));
+            }
+        }
+        for m in 0..geo.mem_gateways {
+            // Memory gateways are always on (they serve every chiplet).
+            gateways.push(Gateway::new(
+                geo.memory_gateway(m),
+                cfg.gateways.buffer_flits,
+                true,
+            ));
+        }
+
+        let lgcs = (0..geo.chiplets)
+            .map(|c| {
+                let lgc = Lgc::new(c, geo.gw_per_chiplet, cfg.controller.l_m, mode.initial_g);
+                if cfg.controller.no_hysteresis {
+                    lgc.with_no_hysteresis()
+                } else {
+                    lgc
+                }
+            })
+            .collect();
+
+        let prowaves = if mode.dynamic_lambda {
+            Some(ProwavesCtrl::new(
+                n_gateways,
+                cfg.photonics.max_wavelengths,
+                cfg.controller.prowaves_lambda_load,
+            ))
+        } else {
+            None
+        };
+        let lambdas = match &prowaves {
+            Some(p) => p.lambdas().to_vec(),
+            None => vec![cfg.photonics.wavelengths; n_gateways],
+        };
+
+        let vicinity = (0..geo.chiplets)
+            .map(|c| {
+                let slots: Vec<bool> = (0..geo.gw_per_chiplet)
+                    .map(|k| k < mode.initial_g)
+                    .collect();
+                if cfg.controller.gwsel_naive {
+                    VicinityMap::build_naive(&geo, c, &slots)
+                } else {
+                    VicinityMap::build(&geo, c, &slots)
+                }
+            })
+            .collect();
+
+        let phy = Photonic::with_channels(
+            n_gateways,
+            cfg.photonics.bits_per_cycle_per_wavelength(),
+            mode.channels,
+        );
+        let metrics = Metrics::new(cfg.sim.warmup_cycles);
+
+        let mut net = Self {
+            geo,
+            mode,
+            now: 0,
+            arena: PacketArena::new(),
+            routers,
+            router_gateway,
+            router_pos,
+            neighbor_table,
+            router_busy: vec![false; n_routers],
+            src_busy: vec![false; n_routers],
+            flits_forwarded: vec![0; n_routers],
+            gateways,
+            mem_ctrls: (0..cfg.gateways.memory_gateways)
+                .map(|_| MemController::new())
+                .collect(),
+            phy,
+            lgcs,
+            inc: Inc::new(n_gateways),
+            prowaves,
+            vicinity,
+            lambdas,
+            traffic,
+            power_model,
+            src_queues: vec![VecDeque::new(); n_routers],
+            src_next_seq: vec![0; n_routers],
+            metrics,
+            epoch_index: 0,
+            epoch_start: 0,
+            dest_flip: false,
+            pending_writer: vec![0; n_gateways],
+            last_power_change: 0,
+            boundary_switches: 0,
+            progress_counter: 0,
+            watchdog_last_counter: 0,
+            watchdog_last_change: 0,
+            traffic_buf: Vec::new(),
+            moves_buf: Vec::with_capacity(NUM_PORTS),
+            cfg,
+        };
+        // Initial reconfiguration: program the κ chain and laser level.
+        net.reconfigure_inc(0);
+        Ok(net)
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.geo
+    }
+
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Total currently active gateways (chiplet + memory).
+    pub fn active_gateways(&self) -> usize {
+        self.gateways.iter().filter(|g| g.is_operational()).count()
+    }
+
+    /// Average flit residency (cycles a flit spends buffered) per router,
+    /// Fig. 13's quantity. Index = global router id.
+    pub fn router_residency(&self) -> Vec<f64> {
+        self.routers
+            .iter()
+            .zip(&self.flits_forwarded)
+            .map(|(r, &f)| {
+                if f == 0 {
+                    0.0
+                } else {
+                    r.occupancy_cycles() as f64 / f as f64
+                }
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Control plane
+    // ------------------------------------------------------------------
+
+    /// Destination gateway for a packet destination (§3.4 step 2). The
+    /// source gateway weighs hop count *and* load: it alternates between
+    /// the destination router's two nearest active gateways (`flip`), so a
+    /// hot destination (directory/L2 home) cannot pin all of its traffic
+    /// onto one reader.
+    fn dest_gateway(&self, dst: Node, flip: bool) -> GatewayId {
+        match dst {
+            Node::Core { chiplet, coord } => {
+                if flip {
+                    self.vicinity[chiplet].alt_gateway_for(&self.geo, coord)
+                } else {
+                    self.vicinity[chiplet].gateway_for(&self.geo, coord)
+                }
+            }
+            Node::Memory { index } => self.geo.memory_gateway(index),
+        }
+    }
+
+    /// Current global active mask (operational = active or draining; a
+    /// draining gateway still carries light and burns power).
+    fn operational_mask(&self) -> Vec<bool> {
+        self.gateways.iter().map(|g| g.is_operational()).collect()
+    }
+
+    /// Retune PCMCs + laser for the current state; integrates the energy of
+    /// the segment that just ended.
+    fn reconfigure_inc(&mut self, now: Cycle) {
+        let power = self.inc.current_power();
+        self.metrics
+            .integrate_power(&power, now - self.last_power_change, self.last_power_change);
+        self.last_power_change = now;
+
+        let active = self.operational_mask();
+        let rec = self.inc.reconfigure(
+            &active,
+            &self.lambdas,
+            now,
+            &self.cfg,
+            self.power_model.as_mut(),
+            &self.mode.spec,
+        );
+        if let Some(stall) = rec.stall_until {
+            for (i, &a) in active.iter().enumerate() {
+                if a {
+                    self.phy.stall_writer(GatewayId(i), stall);
+                }
+            }
+        }
+        self.metrics.on_pcmc_switches(rec.switch_energy_nj);
+        self.boundary_switches += rec.pcmc_switches;
+    }
+
+    /// Rebuild a chiplet's vicinity map from its currently *assignable*
+    /// slots (active and not draining).
+    fn rebuild_vicinity(&mut self, chiplet: usize) {
+        let slots: Vec<bool> = (0..self.geo.gw_per_chiplet)
+            .map(|k| {
+                self.gateways[self.geo.chiplet_gateway(chiplet, k).0].accepts_new_packets()
+            })
+            .collect();
+        if slots.iter().any(|&s| s) {
+            self.vicinity[chiplet] = if self.cfg.controller.gwsel_naive {
+                VicinityMap::build_naive(&self.geo, chiplet, &slots)
+            } else {
+                VicinityMap::build(&self.geo, chiplet, &slots)
+            };
+        }
+    }
+
+    fn epoch_boundary(&mut self, now: Cycle) {
+        let epoch_cycles = now - self.epoch_start;
+        // Gather per-slot packet counts and close the epoch record first
+        // (it describes the interval that just ended).
+        let mut load_sum = 0.0;
+        for c in 0..self.geo.chiplets {
+            let counts: Vec<u64> = (0..self.geo.gw_per_chiplet)
+                .filter(|&k| self.gateways[self.geo.chiplet_gateway(c, k).0].is_active())
+                .map(|k| self.gateways[self.geo.chiplet_gateway(c, k).0].epoch_packets())
+                .collect();
+            load_sum += crate::coordinator::average_load(&counts, epoch_cycles);
+        }
+        let avg_load = load_sum / self.geo.chiplets as f64;
+        let total_lambdas: usize = self
+            .gateways
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.is_operational())
+            .map(|(i, _)| self.lambdas[i])
+            .sum();
+        self.metrics.close_epoch(
+            self.epoch_index,
+            self.epoch_start,
+            epoch_cycles,
+            avg_load,
+            self.active_gateways(),
+            total_lambdas,
+            self.inc.current_power(),
+            self.boundary_switches,
+        );
+        self.boundary_switches = 0;
+        self.epoch_index += 1;
+        self.epoch_start = now;
+
+        let mut need_reconfig = false;
+
+        if self.mode.dynamic_gateways {
+            for c in 0..self.geo.chiplets {
+                let packets: Vec<usize> = (0..self.geo.gw_per_chiplet)
+                    .map(|k| self.gateways[self.geo.chiplet_gateway(c, k).0].epoch_packets() as usize)
+                    .collect();
+                match self.lgcs[c].epoch_update(&packets, epoch_cycles) {
+                    LgcAction::Activate(slot) => {
+                        // Fig. 7: raise laser (reconfigure below), then the
+                        // gateway starts accepting traffic.
+                        let gid = self.geo.chiplet_gateway(c, slot);
+                        self.gateways[gid.0].activate();
+                        self.rebuild_vicinity(c);
+                        need_reconfig = true;
+                    }
+                    LgcAction::Drain(slot) => {
+                        let gid = self.geo.chiplet_gateway(c, slot);
+                        self.gateways[gid.0].begin_drain();
+                        // Stop assigning new packets immediately.
+                        self.rebuild_vicinity(c);
+                        // Laser steps down when the drain completes.
+                    }
+                    LgcAction::Hold => {}
+                }
+            }
+        }
+
+        if let Some(ctrl) = &mut self.prowaves {
+            let packets: Vec<usize> = self
+                .gateways
+                .iter()
+                .map(|g| g.epoch_packets() as usize)
+                .collect();
+            if ctrl.epoch_update(&packets, epoch_cycles) {
+                self.lambdas = ctrl.lambdas().to_vec();
+                need_reconfig = true;
+            }
+        }
+
+        if need_reconfig {
+            self.reconfigure_inc(now);
+        }
+
+        for g in &mut self.gateways {
+            g.reset_epoch();
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Data plane
+    // ------------------------------------------------------------------
+
+    fn create_packet(&mut self, np: NewPacket, now: Cycle) {
+        let (src_chiplet, src_coord) = match np.src {
+            Node::Core { chiplet, coord } => (chiplet, coord),
+            Node::Memory { .. } => unreachable!("traffic models emit core-sourced packets"),
+        };
+        // §3.4 step 1 happens at *injection* (the source router reads the
+        // then-current vicinity map), not at creation: packets can queue at
+        // the source for many cycles, and a stale gateway choice could
+        // target a gateway that has since drained and power-gated.
+        let id = self.arena.alloc(Packet {
+            src: np.src,
+            dst: np.dst,
+            class: np.class,
+            flits: self.cfg.packet.flits_per_packet as u8,
+            created: now,
+            injected: u64::MAX,
+            src_gateway: None,
+            dst_gateway: None,
+        });
+        let core = self.geo.router_id(src_chiplet, src_coord).0;
+        self.src_queues[core].push_back(id);
+        self.src_busy[core] = true;
+        self.metrics.on_created(now);
+    }
+
+    /// Deliver a packet at its final core (tail ejected) or at a memory
+    /// controller: record metrics and release the arena slot.
+    fn deliver(&mut self, id: PacketId, now: Cycle) {
+        let pkt = self.arena.release(id);
+        let crossed = pkt.src_gateway.is_some() || matches!(pkt.src, Node::Memory { .. });
+        self.metrics.on_delivered(pkt.created, now, crossed);
+        self.progress_counter += 1;
+    }
+
+    fn step_memory_controllers(&mut self, now: Cycle) {
+        let flits = self.cfg.packet.flits_per_packet as u8;
+        for m in 0..self.mem_ctrls.len() {
+            let gid = self.geo.memory_gateway(m);
+            // Consume landed requests into the MC (unbounded queue —
+            // decouples request/reply).
+            while let Some(pkt) = self.gateways[gid.0].reader_pop_packet(flits) {
+                // The request has reached memory: its network journey ends
+                // here; the reply is a fresh packet.
+                let created = self.arena.get(pkt).created;
+                self.metrics.on_delivered(created, now, true);
+                self.progress_counter += 1;
+                self.mem_ctrls[m].accept(pkt, now);
+            }
+            // Issue due replies while the writer has room.
+            loop {
+                let Some(req) = self.mem_ctrls[m].pop_ready(now) else {
+                    break;
+                };
+                let requester = self.arena.get(req).src;
+                let dst_ok = matches!(requester, Node::Core { .. });
+                debug_assert!(dst_ok, "memory replies target cores");
+                let reply = self.arena.alloc(Packet {
+                    src: Node::Memory { index: m },
+                    dst: requester,
+                    class: MsgClass::Reply,
+                    flits,
+                    created: now,
+                    injected: now,
+                    src_gateway: None, // replies start at the MC gateway
+                    dst_gateway: None,
+                });
+                if self.gateways[gid.0].writer_push_packet(reply, flits) {
+                    self.arena.release(req);
+                    self.metrics.on_created(now);
+                } else {
+                    // Writer full: undo and retry next cycle.
+                    self.arena.release(reply);
+                    self.mem_ctrls[m].push_back_front(req, now);
+                    break;
+                }
+            }
+        }
+    }
+
+    fn step_serializers(&mut self, now: Cycle) {
+        let flits = self.cfg.packet.flits_per_packet as u8;
+        let bits = self.cfg.packet.bits_per_packet();
+        for w in 0..self.gateways.len() {
+            if !self.gateways[w].is_operational() {
+                continue;
+            }
+            let wid = GatewayId(w);
+            // A writer may start one transfer per free serializer lane per
+            // cycle (1 for WDM designs; N−1 for AWGR). Bounded VOQ
+            // lookahead: a congested destination must not head-of-line
+            // block the rest of the queue.
+            const VOQ_LOOKAHEAD: usize = 8;
+            for _ in 0..self.mode.channels {
+                if !self.phy.writer_free(wid, now) {
+                    break;
+                }
+                // Find the first serializable packet among the head few.
+                let mut pick: Option<(usize, PacketId, GatewayId)> = None;
+                for (idx, pkt) in self.gateways[w].writer_lookahead(VOQ_LOOKAHEAD) {
+                    // §3.4 step 2: destination gateway from the *current*
+                    // map of the destination chiplet; try the near
+                    // candidate first, the load-balancing alternate second.
+                    let dst = self.arena.get(pkt).dst;
+                    for flip in [self.dest_flip, !self.dest_flip] {
+                        let dst_gw = self.dest_gateway(dst, flip);
+                        debug_assert_ne!(
+                            dst_gw, wid,
+                            "inter-chiplet packet addressed to own gateway"
+                        );
+                        if self.gateways[dst_gw.0].reader_can_reserve(flits) {
+                            pick = Some((idx, pkt, dst_gw));
+                            break;
+                        }
+                    }
+                    if pick.is_some() {
+                        break;
+                    }
+                }
+                let Some((idx, pkt, dst_gw)) = pick else {
+                    break;
+                };
+                self.dest_flip = !self.dest_flip;
+                self.gateways[dst_gw.0].reader_reserve(flits);
+                self.arena.get_mut(pkt).dst_gateway = Some(dst_gw);
+                self.phy
+                    .start(wid, dst_gw, pkt, bits, flits as usize, self.lambdas[w], now);
+                self.gateways[w].writer_remove(idx, flits);
+                self.progress_counter += 1;
+            }
+        }
+    }
+
+    fn step_routers(&mut self, now: Cycle) {
+        let n = self.routers.len();
+        let mut moves = std::mem::take(&mut self.moves_buf);
+        for r in 0..n {
+            // Idle fast-path: most routers hold no flits most cycles.
+            if !self.router_busy[r] {
+                continue;
+            }
+            let (chiplet, coord) = self.router_pos[r];
+            let hosted_gw = self.router_gateway[r];
+
+            // Pre-compute output readiness (immutable pass).
+            let mut ready = [false; NUM_PORTS];
+            ready[Port::Local.index()] = true; // core ejection always drains
+            ready[Port::Gateway.index()] = hosted_gw
+                .map(|g| self.gateways[g.0].writer_can_accept())
+                .unwrap_or(false);
+            for p in [Port::North, Port::East, Port::South, Port::West] {
+                if let Some(n) = self.neighbor_table[r][p.index()] {
+                    ready[p.index()] =
+                        self.routers[n as usize].can_accept(p.opposite());
+                }
+            }
+
+            let geo = &self.geo;
+            let arena = &self.arena;
+            moves.clear();
+            self.routers[r].select_moves(
+                now,
+                |pid| crate::routing::route_at(geo, arena.get(pid), chiplet, coord),
+                |port| ready[port.index()],
+                &mut moves,
+            );
+
+            for mv in &moves {
+                let flit = self.routers[r].commit_move(mv);
+                self.flits_forwarded[r] += 1;
+                self.progress_counter += 1;
+                match mv.to_output {
+                    Port::Local => {
+                        if flit.is_tail() {
+                            self.deliver(flit.packet, now);
+                        }
+                    }
+                    Port::Gateway => {
+                        let g = hosted_gw.expect("gateway move at non-gateway router");
+                        if flit.is_head() {
+                            // The packet has left the mesh: it no longer
+                            // blocks this gateway's drain.
+                            debug_assert!(self.pending_writer[g.0] > 0);
+                            self.pending_writer[g.0] =
+                                self.pending_writer[g.0].saturating_sub(1);
+                        }
+                        self.gateways[g.0].writer_push_flit(flit.packet, flit.is_tail());
+                    }
+                    dir => {
+                        let nid = self.neighbor_table[r][dir.index()]
+                            .expect("ready mesh move must have a neighbor")
+                            as usize;
+                        self.routers[nid].accept(dir.opposite(), flit, now);
+                        self.router_busy[nid] = true;
+                    }
+                }
+            }
+            self.router_busy[r] = !self.routers[r].is_idle();
+        }
+        self.moves_buf = moves;
+    }
+
+    fn step_reader_injection(&mut self, now: Cycle) {
+        let flits = self.cfg.packet.flits_per_packet as u8;
+        for c in 0..self.geo.chiplets {
+            for k in 0..self.geo.gw_per_chiplet {
+                let gid = self.geo.chiplet_gateway(c, k);
+                let Some((pkt, seq)) = self.gateways[gid.0].reader_head() else {
+                    continue;
+                };
+                let router = self
+                    .geo
+                    .gateway_router(gid)
+                    .expect("chiplet gateway has a host router");
+                if self.routers[router.0].can_accept(Port::Gateway) {
+                    let flit = self.arena.flit(pkt, seq, now);
+                    self.routers[router.0].accept(Port::Gateway, flit, now);
+                    self.router_busy[router.0] = true;
+                    self.gateways[gid.0].reader_advance(flits);
+                    self.progress_counter += 1;
+                }
+            }
+        }
+    }
+
+    fn step_source_injection(&mut self, now: Cycle) {
+        let flits = self.cfg.packet.flits_per_packet as u8;
+        for core in 0..self.src_queues.len() {
+            if !self.src_busy[core] {
+                continue;
+            }
+            let Some(&pkt) = self.src_queues[core].front() else {
+                self.src_busy[core] = false;
+                continue;
+            };
+            if !self.routers[core].can_accept(Port::Local) {
+                continue;
+            }
+            let seq = self.src_next_seq[core];
+            if seq == 0 {
+                // §3.4 step 1: the source router picks its gateway from
+                // the current vicinity map as the head flit enters.
+                let (src_chiplet, src_coord, needs_gw) = {
+                    let p = self.arena.get(pkt);
+                    let (c, xy) = match p.src {
+                        Node::Core { chiplet, coord } => (chiplet, coord),
+                        Node::Memory { .. } => unreachable!("cores own source queues"),
+                    };
+                    let needs = match p.dst {
+                        Node::Core { chiplet, .. } => chiplet != c,
+                        Node::Memory { .. } => true,
+                    };
+                    (c, xy, needs)
+                };
+                if needs_gw {
+                    let gw = self.vicinity[src_chiplet].gateway_for(&self.geo, src_coord);
+                    self.arena.get_mut(pkt).src_gateway = Some(gw);
+                    self.pending_writer[gw.0] += 1;
+                }
+                self.arena.get_mut(pkt).injected = now;
+            }
+            let flit = self.arena.flit(pkt, seq, now);
+            self.routers[core].accept(Port::Local, flit, now);
+            self.router_busy[core] = true;
+            self.progress_counter += 1;
+            if seq + 1 == flits {
+                self.src_queues[core].pop_front();
+                self.src_next_seq[core] = 0;
+                self.src_busy[core] = !self.src_queues[core].is_empty();
+            } else {
+                self.src_next_seq[core] = seq + 1;
+            }
+        }
+    }
+
+    fn step_drains(&mut self, now: Cycle) {
+        if !self.mode.dynamic_gateways {
+            return;
+        }
+        for c in 0..self.geo.chiplets {
+            let Some(slot) = self.lgcs[c].draining_slot() else {
+                continue;
+            };
+            let gid = self.geo.chiplet_gateway(c, slot);
+            // Flush must also cover packets still in the mesh that chose
+            // this gateway before the map changed.
+            if self.pending_writer[gid.0] > 0 {
+                continue;
+            }
+            if self.gateways[gid.0].try_finish_drain() {
+                self.lgcs[c].confirm_inactive(slot);
+                // Fig. 7: laser power reduced *after* deactivation.
+                self.reconfigure_inc(now);
+            }
+        }
+    }
+
+    fn watchdog(&mut self, now: Cycle) -> Result<()> {
+        if self.progress_counter != self.watchdog_last_counter {
+            self.watchdog_last_counter = self.progress_counter;
+            self.watchdog_last_change = now;
+            return Ok(());
+        }
+        if self.arena.live() > 0 && now - self.watchdog_last_change > WATCHDOG_STALL_CYCLES {
+            return Err(Error::invariant(format!(
+                "no forward progress for {} cycles at cycle {now} with {} packets live \
+                 ({} in flight photonically)",
+                WATCHDOG_STALL_CYCLES,
+                self.arena.live(),
+                self.phy.in_flight_count()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Advance one cycle.
+    pub fn step(&mut self) -> Result<()> {
+        let now = self.now;
+        if now > 0 && now % self.cfg.controller.epoch_cycles == 0 {
+            self.epoch_boundary(now);
+        }
+
+        self.traffic_buf.clear();
+        let mut buf = std::mem::take(&mut self.traffic_buf);
+        self.traffic.generate(now, &mut buf);
+        for np in buf.drain(..) {
+            self.create_packet(np, now);
+        }
+        self.traffic_buf = buf;
+
+        let arrivals = self.phy.arrivals(now);
+        for (pkt, dst) in arrivals {
+            self.gateways[dst.0].reader_deliver(pkt);
+            self.progress_counter += 1;
+        }
+
+        self.step_memory_controllers(now);
+        self.step_serializers(now);
+        self.step_routers(now);
+        self.step_reader_injection(now);
+        self.step_source_injection(now);
+        self.step_drains(now);
+
+        for (r, &busy) in self.routers.iter_mut().zip(&self.router_busy) {
+            if busy {
+                r.tick_occupancy();
+            }
+        }
+        for g in &mut self.gateways {
+            g.tick();
+        }
+        self.watchdog(now)?;
+        self.now = now + 1;
+        Ok(())
+    }
+
+    /// Run the configured horizon and finalize metrics.
+    pub fn run(&mut self) -> Result<()> {
+        self.run_for(self.cfg.sim.cycles)
+    }
+
+    /// Run `cycles` more cycles.
+    pub fn run_for(&mut self, cycles: u64) -> Result<()> {
+        let end = self.now + cycles;
+        while self.now < end {
+            self.step()?;
+        }
+        self.finish();
+        Ok(())
+    }
+
+    /// Integrate the trailing power segment and close the last epoch.
+    pub fn finish(&mut self) {
+        let power = self.inc.current_power();
+        self.metrics.integrate_power(
+            &power,
+            self.now - self.last_power_change,
+            self.last_power_change,
+        );
+        self.last_power_change = self.now;
+        if self.now > self.epoch_start {
+            self.epoch_boundary(self.now);
+        }
+        self.metrics.finalize();
+    }
+
+    /// One-line summary of the run.
+    pub fn summary(&self) -> Summary {
+        let m = &self.metrics;
+        let epochs = &m.epochs;
+        let avg_gw = if epochs.is_empty() {
+            self.active_gateways() as f64
+        } else {
+            epochs.iter().map(|e| e.active_gateways as f64).sum::<f64>() / epochs.len() as f64
+        };
+        let avg_lam = if epochs.is_empty() {
+            self.lambdas.iter().sum::<usize>() as f64
+        } else {
+            epochs.iter().map(|e| e.total_lambdas as f64).sum::<f64>() / epochs.len() as f64
+        };
+        let avg_load = if epochs.is_empty() {
+            0.0
+        } else {
+            epochs.iter().map(|e| e.avg_gateway_load).sum::<f64>() / epochs.len() as f64
+        };
+        Summary {
+            arch: self.cfg.arch.name(),
+            traffic: self.traffic.name().to_string(),
+            cycles: self.now,
+            created: m.created,
+            delivered: m.delivered,
+            delivery_ratio: m.delivery_ratio(),
+            avg_latency_cycles: m.avg_latency(),
+            p99_latency_cycles: m.latency_hist.quantile(0.99),
+            avg_power_mw: m.avg_power_mw,
+            power: m.avg_power_breakdown(),
+            total_energy_uj: m.total_energy_uj,
+            energy_metric_pj: m.energy_metric_pj(),
+            avg_active_gateways: avg_gw,
+            avg_total_lambdas: avg_lam,
+            avg_gateway_load: avg_load,
+            pcmc_switch_energy_nj: m.switch_energy_nj,
+            power_backend: self.power_model.backend(),
+        }
+    }
+
+    /// Live packet count (diagnostics).
+    pub fn live_packets(&self) -> usize {
+        self.arena.live()
+    }
+
+    /// Diagnostic snapshot of where traffic is queued (debugging /
+    /// perf-tuning aid; `resipi run --debug`).
+    pub fn congestion_report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "live={} in-flight={} src-queued={}",
+            self.arena.live(),
+            self.phy.in_flight_count(),
+            self.src_queues.iter().map(|q| q.len()).sum::<usize>()
+        );
+        for (i, g) in self.gateways.iter().enumerate() {
+            if g.writer_queued() > 0 || g.reader_queued() > 0 {
+                let _ = writeln!(
+                    out,
+                    "  gw{i:02} state={:?} writer_q={} reader_q={} epoch_pkts={}",
+                    g.state(),
+                    g.writer_queued(),
+                    g.reader_queued(),
+                    g.epoch_packets()
+                );
+            }
+        }
+        for (m, mc) in self.mem_ctrls.iter().enumerate() {
+            let _ = writeln!(out, "  mc{m} backlog={} served={}", mc.backlog(), mc.served());
+        }
+        // Busiest source queues.
+        let mut busiest: Vec<(usize, usize)> = self
+            .src_queues
+            .iter()
+            .enumerate()
+            .map(|(i, q)| (q.len(), i))
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|(l, i)| (i, l))
+            .collect();
+        busiest.sort_by_key(|&(_, l)| std::cmp::Reverse(l));
+        for &(i, l) in busiest.iter().take(5) {
+            if l > 0 {
+                let _ = writeln!(out, "  src core {i} queued={l}");
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::UniformTraffic;
+
+    fn quick_cfg(arch: Architecture) -> Config {
+        let mut c = Config::table1(arch);
+        c.sim.cycles = 60_000;
+        c.sim.warmup_cycles = 2_000;
+        c.controller.epoch_cycles = 10_000;
+        c
+    }
+
+    fn run_uniform(arch: Architecture, rate: f64, seed: u64) -> (Summary, Vec<f64>) {
+        let cfg = quick_cfg(arch);
+        let geo = Geometry::from_config(&cfg);
+        let traffic = Box::new(UniformTraffic::new(geo, rate, seed));
+        let mut net = Network::new(cfg, traffic).unwrap();
+        net.run().unwrap();
+        let residency = net.router_residency();
+        (net.summary(), residency)
+    }
+
+    #[test]
+    fn resipi_delivers_uniform_traffic() {
+        let (s, _) = run_uniform(Architecture::Resipi, 0.002, 42);
+        assert!(s.created > 1_000, "created {}", s.created);
+        assert!(
+            s.delivery_ratio > 0.95,
+            "delivery ratio {} (delivered {} / created {})",
+            s.delivery_ratio,
+            s.delivered,
+            s.created
+        );
+        assert!(s.avg_latency_cycles > 3.0 && s.avg_latency_cycles < 500.0);
+        assert!(s.avg_power_mw > 0.0);
+        assert!(s.total_energy_uj > 0.0);
+    }
+
+    #[test]
+    fn all_architectures_run_clean() {
+        for arch in [
+            Architecture::Resipi,
+            Architecture::ResipiAllOn,
+            Architecture::Prowaves,
+            Architecture::Awgr,
+            Architecture::StaticGateways(2),
+        ] {
+            let (s, _) = run_uniform(arch, 0.001, 7);
+            assert!(s.delivery_ratio > 0.9, "{}: ratio {}", s.arch, s.delivery_ratio);
+        }
+    }
+
+    #[test]
+    fn latency_measured_from_creation() {
+        let (s, _) = run_uniform(Architecture::Resipi, 0.0005, 3);
+        // Minimum plausible: ≥ packet length (wormhole streaming).
+        assert!(s.avg_latency_cycles >= 8.0, "{}", s.avg_latency_cycles);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a, _) = run_uniform(Architecture::Resipi, 0.002, 11);
+        let (b, _) = run_uniform(Architecture::Resipi, 0.002, 11);
+        assert_eq!(a.delivered, b.delivered);
+        assert_eq!(a.avg_latency_cycles, b.avg_latency_cycles);
+        assert_eq!(a.total_energy_uj, b.total_energy_uj);
+    }
+
+    #[test]
+    fn resipi_adapts_down_under_light_load() {
+        let (s, _) = run_uniform(Architecture::Resipi, 0.0002, 5);
+        // Light load: ReSiPI should deactivate gateways (avg < max 18).
+        assert!(
+            s.avg_active_gateways < 17.0,
+            "avg active gateways {}",
+            s.avg_active_gateways
+        );
+    }
+
+    #[test]
+    fn allon_keeps_every_gateway() {
+        let (s, _) = run_uniform(Architecture::ResipiAllOn, 0.0002, 5);
+        assert!((s.avg_active_gateways - 18.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resipi_saves_power_vs_allon_under_light_load() {
+        let (adaptive, _) = run_uniform(Architecture::Resipi, 0.0002, 9);
+        let (allon, _) = run_uniform(Architecture::ResipiAllOn, 0.0002, 9);
+        assert!(
+            adaptive.avg_power_mw < allon.avg_power_mw * 0.95,
+            "adaptive {} vs all-on {}",
+            adaptive.avg_power_mw,
+            allon.avg_power_mw
+        );
+    }
+
+    #[test]
+    fn residency_accumulates_on_used_routers() {
+        let (_, residency) = run_uniform(Architecture::Resipi, 0.002, 13);
+        assert!(residency.iter().any(|&r| r > 0.0));
+        assert!(residency.iter().all(|&r| r.is_finite()));
+    }
+
+    #[test]
+    fn network_drains_when_traffic_stops() {
+        // Zero-rate traffic after construction: nothing should be live.
+        let cfg = quick_cfg(Architecture::Resipi);
+        let geo = Geometry::from_config(&cfg);
+        let traffic = Box::new(UniformTraffic::new(geo, 0.0, 1));
+        let mut net = Network::new(cfg, traffic).unwrap();
+        net.run().unwrap();
+        assert_eq!(net.live_packets(), 0);
+        assert_eq!(net.metrics().created, 0);
+    }
+
+    #[test]
+    fn memory_traffic_generates_replies() {
+        use crate::sim::ids::Coord;
+        use crate::traffic::NewPacket;
+        // A tiny custom traffic: one core sends one memory request.
+        struct OneShot {
+            fired: bool,
+        }
+        impl Traffic for OneShot {
+            fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
+                if !self.fired && now == 10 {
+                    self.fired = true;
+                    sink.push(NewPacket {
+                        src: Node::Core {
+                            chiplet: 0,
+                            coord: Coord::new(0, 0),
+                        },
+                        dst: Node::Memory { index: 0 },
+                        class: MsgClass::Request,
+                    });
+                }
+            }
+            fn name(&self) -> &str {
+                "oneshot"
+            }
+        }
+        let mut cfg = quick_cfg(Architecture::Resipi);
+        cfg.sim.warmup_cycles = 0;
+        let mut net = Network::new(cfg, Box::new(OneShot { fired: false })).unwrap();
+        net.run_for(5_000).unwrap();
+        // Request delivered to MC + reply delivered to the core = 2.
+        assert_eq!(net.metrics().delivered, 2, "request + reply must both land");
+        assert_eq!(net.live_packets(), 0);
+        assert_eq!(net.metrics().inter_chiplet, 2);
+    }
+}

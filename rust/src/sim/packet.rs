@@ -1,0 +1,228 @@
+//! Packets, flits, and the packet arena.
+//!
+//! Packets are stored once in a slab-style arena; flits moving through the
+//! network are 8-byte handles `(packet id, sequence)`, which keeps the
+//! per-cycle hot loop allocation-free and buffers tiny.
+
+use crate::sim::ids::{GatewayId, Node};
+
+/// Simulation time in cycles.
+pub type Cycle = u64;
+
+/// Arena index of a live packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PacketId(pub u32);
+
+/// Message class. Requests flow core→core / core→memory; replies flow
+/// memory→core. Classes matter for the memory-controller turnaround and for
+/// metrics breakdowns (they share physical buffers, as in the paper's setup;
+/// protocol-level deadlock is broken by the MC's decoupling queue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgClass {
+    /// Coherence/data request.
+    Request,
+    /// Memory reply.
+    Reply,
+}
+
+/// A packet in flight.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub src: Node,
+    pub dst: Node,
+    pub class: MsgClass,
+    pub flits: u8,
+    /// Cycle the source created (enqueued) the packet.
+    pub created: Cycle,
+    /// Cycle the head flit entered the source router (u64::MAX = not yet).
+    pub injected: Cycle,
+    /// Source-side gateway chosen by the per-packet selection (§3.4), if the
+    /// packet crosses the interposer.
+    pub src_gateway: Option<GatewayId>,
+    /// Destination-side gateway chosen at the source gateway (§3.4).
+    pub dst_gateway: Option<GatewayId>,
+}
+
+/// A flit handle: which packet, which position within it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flit {
+    pub packet: PacketId,
+    pub seq: u8,
+    /// Total flits in the packet (copied here so head/tail checks don't need
+    /// an arena lookup on the hot path).
+    pub len: u8,
+    /// Cycle this flit last moved; a router may only forward flits that
+    /// arrived on an earlier cycle (prevents multi-hop teleporting within
+    /// one `step()`).
+    pub moved_at: Cycle,
+}
+
+impl Flit {
+    #[inline]
+    pub fn is_head(&self) -> bool {
+        self.seq == 0
+    }
+    #[inline]
+    pub fn is_tail(&self) -> bool {
+        self.seq + 1 == self.len
+    }
+}
+
+/// Slab arena of live packets with a free list. Indices are reused after
+/// [`PacketArena::release`]; metrics must copy what they need before release.
+#[derive(Debug, Default)]
+pub struct PacketArena {
+    slots: Vec<Option<Packet>>,
+    free: Vec<u32>,
+    live: usize,
+    allocated_total: u64,
+}
+
+impl PacketArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&mut self, pkt: Packet) -> PacketId {
+        self.live += 1;
+        self.allocated_total += 1;
+        if let Some(idx) = self.free.pop() {
+            self.slots[idx as usize] = Some(pkt);
+            PacketId(idx)
+        } else {
+            self.slots.push(Some(pkt));
+            PacketId((self.slots.len() - 1) as u32)
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, id: PacketId) -> &Packet {
+        self.slots[id.0 as usize]
+            .as_ref()
+            .expect("packet id referenced after release")
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: PacketId) -> &mut Packet {
+        self.slots[id.0 as usize]
+            .as_mut()
+            .expect("packet id referenced after release")
+    }
+
+    /// Release a delivered packet, returning it for final metrics.
+    pub fn release(&mut self, id: PacketId) -> Packet {
+        let pkt = self.slots[id.0 as usize]
+            .take()
+            .expect("double release of packet id");
+        self.free.push(id.0);
+        self.live -= 1;
+        pkt
+    }
+
+    /// Number of packets currently alive in the network.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Total packets ever allocated (delivered + live).
+    pub fn allocated_total(&self) -> u64 {
+        self.allocated_total
+    }
+
+    /// Iterate over live packets (slow path; diagnostics only).
+    pub fn iter_live(&self) -> impl Iterator<Item = (PacketId, &Packet)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|p| (PacketId(i as u32), p)))
+    }
+
+    /// Make the `seq`-th flit of a packet.
+    pub fn flit(&self, id: PacketId, seq: u8, now: Cycle) -> Flit {
+        let len = self.get(id).flits;
+        debug_assert!(seq < len);
+        Flit {
+            packet: id,
+            seq,
+            len,
+            moved_at: now,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ids::Coord;
+
+    fn mk_packet(created: Cycle) -> Packet {
+        Packet {
+            src: Node::Core {
+                chiplet: 0,
+                coord: Coord::new(0, 0),
+            },
+            dst: Node::Core {
+                chiplet: 1,
+                coord: Coord::new(3, 3),
+            },
+            class: MsgClass::Request,
+            flits: 8,
+            created,
+            injected: u64::MAX,
+            src_gateway: None,
+            dst_gateway: None,
+        }
+    }
+
+    #[test]
+    fn alloc_get_release_reuse() {
+        let mut arena = PacketArena::new();
+        let a = arena.alloc(mk_packet(1));
+        let b = arena.alloc(mk_packet(2));
+        assert_eq!(arena.live(), 2);
+        assert_eq!(arena.get(a).created, 1);
+        assert_eq!(arena.get(b).created, 2);
+
+        let released = arena.release(a);
+        assert_eq!(released.created, 1);
+        assert_eq!(arena.live(), 1);
+
+        // Freed slot is reused.
+        let c = arena.alloc(mk_packet(3));
+        assert_eq!(c, a);
+        assert_eq!(arena.get(c).created, 3);
+        assert_eq!(arena.allocated_total(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let mut arena = PacketArena::new();
+        let a = arena.alloc(mk_packet(1));
+        arena.release(a);
+        arena.release(a);
+    }
+
+    #[test]
+    fn flit_head_tail() {
+        let mut arena = PacketArena::new();
+        let a = arena.alloc(mk_packet(0));
+        let head = arena.flit(a, 0, 5);
+        let mid = arena.flit(a, 3, 5);
+        let tail = arena.flit(a, 7, 5);
+        assert!(head.is_head() && !head.is_tail());
+        assert!(!mid.is_head() && !mid.is_tail());
+        assert!(!tail.is_head() && tail.is_tail());
+        assert_eq!(head.moved_at, 5);
+    }
+
+    #[test]
+    fn iter_live_reflects_state() {
+        let mut arena = PacketArena::new();
+        let a = arena.alloc(mk_packet(1));
+        let _b = arena.alloc(mk_packet(2));
+        arena.release(a);
+        let lives: Vec<_> = arena.iter_live().map(|(_, p)| p.created).collect();
+        assert_eq!(lives, vec![2]);
+    }
+}

@@ -1,0 +1,281 @@
+//! Traffic generation: synthetic patterns, PARSEC-like application models
+//! ([`parsec`]), and gem5-style trace file replay ([`trace`]).
+//!
+//! A [`Traffic`] implementation is polled once per simulated cycle and
+//! pushes the packets created that cycle. Generators are seeded from the
+//! experiment's root seed and are fully deterministic.
+
+pub mod parsec;
+pub mod trace;
+
+use crate::sim::ids::{Coord, Geometry, Node};
+use crate::sim::packet::{Cycle, MsgClass};
+use crate::util::rng::Pcg32;
+
+pub use parsec::{AppProfile, ParsecTraffic, PARSEC_APPS};
+pub use trace::{format_node, parse_node, TraceReader, TraceRecord, TraceWriter};
+
+/// A packet request emitted by a traffic model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NewPacket {
+    pub src: Node,
+    pub dst: Node,
+    pub class: MsgClass,
+}
+
+/// A cycle-driven traffic source.
+pub trait Traffic {
+    /// Emit the packets created at cycle `now` into `sink`.
+    fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>);
+
+    /// Display name (CSV column labels etc.).
+    fn name(&self) -> &str;
+}
+
+/// Uniform-random synthetic traffic: every core injects at `rate`
+/// packets/cycle toward uniformly random *other* cores.
+pub struct UniformTraffic {
+    geo: Geometry,
+    rate: f64,
+    /// Per-core next injection cycle (geometric inter-arrival).
+    next_fire: Vec<Cycle>,
+    rng: Pcg32,
+    name: String,
+}
+
+impl UniformTraffic {
+    pub fn new(geo: Geometry, rate: f64, seed: u64) -> Self {
+        let n = geo.total_routers();
+        let mut rng = Pcg32::new(seed, 0x00F0);
+        let next_fire = (0..n)
+            .map(|_| if rate > 0.0 { rng.geometric(rate) } else { u64::MAX })
+            .collect();
+        Self {
+            geo,
+            rate,
+            next_fire,
+            rng,
+            name: format!("uniform-{rate}"),
+        }
+    }
+
+    fn core_node(&self, idx: usize) -> Node {
+        let c = idx / self.geo.routers_per_chiplet();
+        let local = idx % self.geo.routers_per_chiplet();
+        Node::Core {
+            chiplet: c,
+            coord: Coord::new(local % self.geo.mesh_x, local / self.geo.mesh_x),
+        }
+    }
+}
+
+impl Traffic for UniformTraffic {
+    fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
+        let n = self.geo.total_routers();
+        for i in 0..n {
+            if self.next_fire[i] > now {
+                continue;
+            }
+            // Uniform destination over other cores.
+            let mut dst = self.rng.gen_range_usize(0, n - 1);
+            if dst >= i {
+                dst += 1;
+            }
+            sink.push(NewPacket {
+                src: self.core_node(i),
+                dst: self.core_node(dst),
+                class: MsgClass::Request,
+            });
+            self.next_fire[i] = now + self.rng.geometric(self.rate);
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Transpose synthetic traffic: core `(c, x, y)` sends to `(C−1−c, y, x)` —
+/// a worst-case inter-chiplet stress pattern.
+pub struct TransposeTraffic {
+    geo: Geometry,
+    rate: f64,
+    next_fire: Vec<Cycle>,
+    rng: Pcg32,
+    name: String,
+}
+
+impl TransposeTraffic {
+    pub fn new(geo: Geometry, rate: f64, seed: u64) -> Self {
+        let n = geo.total_routers();
+        let mut rng = Pcg32::new(seed, 0x71A9);
+        let next_fire = (0..n)
+            .map(|_| if rate > 0.0 { rng.geometric(rate) } else { u64::MAX })
+            .collect();
+        Self {
+            geo,
+            rate,
+            next_fire,
+            rng,
+            name: format!("transpose-{rate}"),
+        }
+    }
+}
+
+impl Traffic for TransposeTraffic {
+    fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
+        let n = self.geo.total_routers();
+        let rpc = self.geo.routers_per_chiplet();
+        for i in 0..n {
+            if self.next_fire[i] > now {
+                continue;
+            }
+            let c = i / rpc;
+            let local = i % rpc;
+            let (x, y) = (local % self.geo.mesh_x, local / self.geo.mesh_x);
+            let src = Node::Core {
+                chiplet: c,
+                coord: Coord::new(x, y),
+            };
+            let dst = Node::Core {
+                chiplet: self.geo.chiplets - 1 - c,
+                coord: Coord::new(y, x),
+            };
+            if src != dst {
+                sink.push(NewPacket {
+                    src,
+                    dst,
+                    class: MsgClass::Request,
+                });
+            }
+            self.next_fire[i] = now + self.rng.geometric(self.rate);
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Hotspot traffic: like uniform, but a fraction of packets target a single
+/// hot core (stresses one gateway's vicinity — the PROWAVES failure mode).
+pub struct HotspotTraffic {
+    inner: UniformTraffic,
+    hot: Node,
+    hot_fraction: f64,
+    rng: Pcg32,
+    name: String,
+}
+
+impl HotspotTraffic {
+    pub fn new(geo: Geometry, rate: f64, hot: Node, hot_fraction: f64, seed: u64) -> Self {
+        Self {
+            inner: UniformTraffic::new(geo, rate, seed),
+            hot,
+            hot_fraction,
+            rng: Pcg32::new(seed, 0x1107),
+            name: format!("hotspot-{rate}"),
+        }
+    }
+}
+
+impl Traffic for HotspotTraffic {
+    fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
+        let base = sink.len();
+        self.inner.generate(now, sink);
+        for p in sink[base..].iter_mut() {
+            if p.src != self.hot && self.rng.gen_bool(self.hot_fraction) {
+                p.dst = self.hot;
+            }
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Architecture, Config};
+
+    fn geo() -> Geometry {
+        Geometry::from_config(&Config::table1(Architecture::Resipi))
+    }
+
+    fn run(t: &mut dyn Traffic, cycles: u64) -> Vec<NewPacket> {
+        let mut out = Vec::new();
+        for now in 0..cycles {
+            t.generate(now, &mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn uniform_rate_is_calibrated() {
+        let g = geo();
+        let rate = 0.002;
+        let cycles = 200_000u64;
+        let mut t = UniformTraffic::new(g.clone(), rate, 42);
+        let pkts = run(&mut t, cycles);
+        let expected = rate * cycles as f64 * g.total_routers() as f64;
+        let got = pkts.len() as f64;
+        assert!(
+            (got - expected).abs() / expected < 0.05,
+            "got {got}, expected ~{expected}"
+        );
+        // Never self-addressed.
+        assert!(pkts.iter().all(|p| p.src != p.dst));
+    }
+
+    #[test]
+    fn uniform_is_deterministic_per_seed() {
+        let g = geo();
+        let a = run(&mut UniformTraffic::new(g.clone(), 0.01, 7), 5_000);
+        let b = run(&mut UniformTraffic::new(g.clone(), 0.01, 7), 5_000);
+        let c = run(&mut UniformTraffic::new(g, 0.01, 8), 5_000);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn transpose_targets_mirror_chiplet() {
+        let g = geo();
+        let pkts = run(&mut TransposeTraffic::new(g, 0.01, 3), 10_000);
+        assert!(!pkts.is_empty());
+        for p in &pkts {
+            if let (Node::Core { chiplet: sc, coord: s }, Node::Core { chiplet: dc, coord: d }) =
+                (p.src, p.dst)
+            {
+                assert_eq!(dc, 3 - sc);
+                assert_eq!((d.x, d.y), (s.y, s.x));
+            } else {
+                panic!("transpose only emits core-core traffic");
+            }
+        }
+    }
+
+    #[test]
+    fn hotspot_concentrates_traffic() {
+        let g = geo();
+        let hot = Node::Core {
+            chiplet: 0,
+            coord: Coord::new(1, 1),
+        };
+        let pkts = run(
+            &mut HotspotTraffic::new(g, 0.01, hot, 0.5, 11),
+            20_000,
+        );
+        let hot_count = pkts.iter().filter(|p| p.dst == hot).count();
+        let frac = hot_count as f64 / pkts.len() as f64;
+        assert!(frac > 0.4, "hot fraction {frac}");
+    }
+
+    #[test]
+    fn zero_rate_emits_nothing() {
+        let g = geo();
+        let pkts = run(&mut UniformTraffic::new(g, 0.0, 1), 1_000);
+        assert!(pkts.is_empty());
+    }
+}

@@ -1,0 +1,300 @@
+//! Trace file replay and capture.
+//!
+//! Text format, one record per line:
+//!
+//! ```text
+//! <cycle> <src> <dst>
+//! ```
+//!
+//! where an endpoint is `c<chiplet>:<x>:<y>` for a core or `mem:<index>`
+//! for a memory controller, e.g. `1234 c0:1:2 mem:1`. Lines starting with
+//! `#` and blank lines are ignored. Records must be sorted by cycle.
+//! This is the adapter for users who *do* have gem5/Noxim-style traces
+//! (DESIGN.md §3); the test-suite also uses it to round-trip captured
+//! synthetic traffic.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::sim::ids::{Coord, Node};
+use crate::sim::packet::{Cycle, MsgClass};
+use crate::traffic::{NewPacket, Traffic};
+
+/// One parsed trace record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub cycle: Cycle,
+    pub src: Node,
+    pub dst: Node,
+}
+
+/// Parse an endpoint token.
+pub fn parse_node(tok: &str) -> Result<Node> {
+    if let Some(rest) = tok.strip_prefix("mem:") {
+        let index: usize = rest
+            .parse()
+            .map_err(|_| Error::trace(format!("bad memory index in {tok:?}")))?;
+        return Ok(Node::Memory { index });
+    }
+    if let Some(rest) = tok.strip_prefix('c') {
+        let parts: Vec<&str> = rest.split(':').collect();
+        if parts.len() == 3 {
+            let chiplet: usize = parts[0]
+                .parse()
+                .map_err(|_| Error::trace(format!("bad chiplet in {tok:?}")))?;
+            let x: usize = parts[1]
+                .parse()
+                .map_err(|_| Error::trace(format!("bad x in {tok:?}")))?;
+            let y: usize = parts[2]
+                .parse()
+                .map_err(|_| Error::trace(format!("bad y in {tok:?}")))?;
+            return Ok(Node::Core {
+                chiplet,
+                coord: Coord::new(x, y),
+            });
+        }
+    }
+    Err(Error::trace(format!(
+        "cannot parse endpoint {tok:?} (want cC:X:Y or mem:N)"
+    )))
+}
+
+/// Format an endpoint token (inverse of [`parse_node`]).
+pub fn format_node(n: Node) -> String {
+    match n {
+        Node::Core { chiplet, coord } => format!("c{chiplet}:{}:{}", coord.x, coord.y),
+        Node::Memory { index } => format!("mem:{index}"),
+    }
+}
+
+/// A [`Traffic`] source replaying a pre-parsed trace.
+#[derive(Debug)]
+pub struct TraceReader {
+    records: Vec<TraceRecord>,
+    next: usize,
+    name: String,
+}
+
+impl TraceReader {
+    /// Parse from any reader.
+    pub fn parse<R: BufRead>(reader: R, name: impl Into<String>) -> Result<Self> {
+        let mut records = Vec::new();
+        let mut last_cycle = 0u64;
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let (c, s, d) = match (toks.next(), toks.next(), toks.next()) {
+                (Some(c), Some(s), Some(d)) => (c, s, d),
+                _ => {
+                    return Err(Error::trace(format!(
+                        "line {}: expected `cycle src dst`",
+                        lineno + 1
+                    )))
+                }
+            };
+            let cycle: Cycle = c
+                .parse()
+                .map_err(|_| Error::trace(format!("line {}: bad cycle {c:?}", lineno + 1)))?;
+            if cycle < last_cycle {
+                return Err(Error::trace(format!(
+                    "line {}: trace not sorted by cycle ({cycle} after {last_cycle})",
+                    lineno + 1
+                )));
+            }
+            last_cycle = cycle;
+            records.push(TraceRecord {
+                cycle,
+                src: parse_node(s)?,
+                dst: parse_node(d)?,
+            });
+        }
+        Ok(Self {
+            records,
+            next: 0,
+            name: name.into(),
+        })
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "trace".into());
+        Self::parse(BufReader::new(f), name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Total span of the trace in cycles.
+    pub fn span(&self) -> Cycle {
+        self.records.last().map(|r| r.cycle + 1).unwrap_or(0)
+    }
+}
+
+impl Traffic for TraceReader {
+    fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
+        while self.next < self.records.len() && self.records[self.next].cycle == now {
+            let r = self.records[self.next];
+            sink.push(NewPacket {
+                src: r.src,
+                dst: r.dst,
+                class: MsgClass::Request,
+            });
+            self.next += 1;
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Captures generated traffic to a trace file (for reproducing a synthetic
+/// workload under another simulator, or goldens in tests).
+pub struct TraceWriter<W: Write> {
+    out: W,
+    written: usize,
+}
+
+impl<W: Write> TraceWriter<W> {
+    pub fn new(mut out: W) -> Result<Self> {
+        writeln!(out, "# resipi trace v1: cycle src dst")?;
+        Ok(Self { out, written: 0 })
+    }
+
+    pub fn record(&mut self, cycle: Cycle, p: &NewPacket) -> Result<()> {
+        writeln!(
+            self.out,
+            "{cycle} {} {}",
+            format_node(p.src),
+            format_node(p.dst)
+        )?;
+        self.written += 1;
+        Ok(())
+    }
+
+    pub fn written(&self) -> usize {
+        self.written
+    }
+
+    pub fn finish(self) -> W {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn node_roundtrip() {
+        for n in [
+            Node::Core {
+                chiplet: 2,
+                coord: Coord::new(3, 1),
+            },
+            Node::Memory { index: 1 },
+        ] {
+            assert_eq!(parse_node(&format_node(n)).unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_node("x1:2:3").is_err());
+        assert!(parse_node("c1:2").is_err());
+        assert!(parse_node("mem:x").is_err());
+        assert!(parse_node("c1:a:3").is_err());
+    }
+
+    #[test]
+    fn reader_replays_at_exact_cycles() {
+        let text = "# comment\n5 c0:0:0 c1:3:3\n5 c0:1:0 mem:0\n9 c2:2:2 c0:0:0\n";
+        let mut t = TraceReader::parse(Cursor::new(text), "test").unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.span(), 10);
+        let mut out = Vec::new();
+        for now in 0..12 {
+            let before = out.len();
+            t.generate(now, &mut out);
+            match now {
+                5 => assert_eq!(out.len() - before, 2),
+                9 => assert_eq!(out.len() - before, 1),
+                _ => assert_eq!(out.len(), before),
+            }
+        }
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[1].dst, Node::Memory { index: 0 });
+    }
+
+    #[test]
+    fn reader_rejects_unsorted() {
+        let text = "9 c0:0:0 c1:0:0\n5 c0:0:0 c1:0:0\n";
+        let err = TraceReader::parse(Cursor::new(text), "bad").unwrap_err();
+        assert!(err.to_string().contains("not sorted"));
+    }
+
+    #[test]
+    fn reader_rejects_malformed_lines() {
+        let err = TraceReader::parse(Cursor::new("5 c0:0:0\n"), "bad").unwrap_err();
+        assert!(err.to_string().contains("expected"));
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = TraceWriter::new(Vec::new()).unwrap();
+        let pkts = [
+            (
+                3u64,
+                NewPacket {
+                    src: Node::Core {
+                        chiplet: 0,
+                        coord: Coord::new(1, 2),
+                    },
+                    dst: Node::Memory { index: 1 },
+                    class: MsgClass::Request,
+                },
+            ),
+            (
+                7u64,
+                NewPacket {
+                    src: Node::Core {
+                        chiplet: 3,
+                        coord: Coord::new(0, 0),
+                    },
+                    dst: Node::Core {
+                        chiplet: 1,
+                        coord: Coord::new(3, 3),
+                    },
+                    class: MsgClass::Request,
+                },
+            ),
+        ];
+        for (c, p) in &pkts {
+            w.record(*c, p).unwrap();
+        }
+        assert_eq!(w.written(), 2);
+        let bytes = w.finish();
+        let mut r = TraceReader::parse(Cursor::new(bytes), "rt").unwrap();
+        let mut out = Vec::new();
+        for now in 0..10 {
+            r.generate(now, &mut out);
+        }
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].src, pkts[0].1.src);
+        assert_eq!(out[1].dst, pkts[1].1.dst);
+    }
+}

@@ -1,0 +1,139 @@
+//! Minimal benchmarking harness (the offline image has no `criterion`).
+//!
+//! Measures wall-time over warmup + timed iterations, reports mean ±
+//! stddev and throughput, in a criterion-like one-line format. Used by the
+//! `cargo bench` targets (`harness = false`).
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    /// Optional work units per iteration (e.g. simulated cycles) for
+    /// throughput reporting.
+    pub units_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        let (val, unit) = humanize(self.mean_s);
+        let (sd, sd_unit) = humanize(self.stddev_s);
+        let mut line = format!(
+            "{:<44} {:>9.3} {unit} ± {:>7.3} {sd_unit} ({} iters)",
+            self.name, val, sd, self.iters
+        );
+        if let Some(u) = self.units_per_iter {
+            let rate = u / self.mean_s;
+            line.push_str(&format!("  [{:.2} Munits/s]", rate / 1e6));
+        }
+        line
+    }
+}
+
+fn humanize(s: f64) -> (f64, &'static str) {
+    if s >= 1.0 {
+        (s, "s ")
+    } else if s >= 1e-3 {
+        (s * 1e3, "ms")
+    } else if s >= 1e-6 {
+        (s * 1e6, "us")
+    } else {
+        (s * 1e9, "ns")
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure iteration counts.
+pub struct Bench {
+    warmup: u32,
+    iters: u32,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new(2, 5)
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: u32, iters: u32) -> Self {
+        assert!(iters >= 1);
+        Self {
+            warmup,
+            iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which returns an arbitrary value that is black-boxed to
+    /// keep the optimizer honest.
+    pub fn run<R>(&mut self, name: &str, units_per_iter: Option<f64>, mut f: impl FnMut() -> R) {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = if samples.len() > 1 {
+            samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / (samples.len() - 1) as f64
+        } else {
+            0.0
+        };
+        let m = Measurement {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: mean,
+            stddev_s: var.sqrt(),
+            units_per_iter,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Find a result by name (for regression assertions in CI scripts).
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.results.iter().find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench::new(1, 3);
+        b.run("spin", Some(1000.0), || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        let m = b.get("spin").unwrap();
+        assert!(m.mean_s > 0.0);
+        assert_eq!(m.iters, 3);
+        assert!(m.report().contains("spin"));
+        assert!(b.get("missing").is_none());
+    }
+
+    #[test]
+    fn humanize_ranges() {
+        assert_eq!(humanize(2.0).1, "s ");
+        assert_eq!(humanize(2e-3).1, "ms");
+        assert_eq!(humanize(2e-6).1, "us");
+        assert_eq!(humanize(2e-9).1, "ns");
+    }
+}

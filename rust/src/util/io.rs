@@ -1,0 +1,328 @@
+//! CSV / JSON output writers for experiment results.
+//!
+//! The offline image has no `serde`/`csv` crates; these hand-rolled writers
+//! cover everything the experiment harness emits: flat tables (CSV) and
+//! nested summaries (JSON). Escaping follows RFC 4180 / RFC 8259 for the
+//! value shapes we produce.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple CSV table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics in debug builds if the arity mismatches.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        debug_assert_eq!(cells.len(), self.header.len(), "CSV arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn escape(cell: &str) -> String {
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header
+                .iter()
+                .map(|c| Self::escape(c))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+/// Minimal JSON value for structured experiment summaries.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Insert/replace a key in an object; panics on non-objects.
+    pub fn set<S: Into<String>, V: Into<Json>>(&mut self, key: S, value: V) -> &mut Self {
+        match self {
+            Json::Obj(pairs) => {
+                let key = key.into();
+                let value = value.into();
+                if let Some(p) = pairs.iter_mut().find(|(k, _)| *k == key) {
+                    p.1 = value;
+                } else {
+                    pairs.push((key, value));
+                }
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+        self
+    }
+
+    /// Lookup in an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    fn escape_str(s: &str, out: &mut String) {
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(out, "\\u{:04x}", c as u32);
+                }
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+
+    fn write_to(&self, out: &mut String, indent: usize) {
+        let pad = "  ".repeat(indent);
+        let pad_in = "  ".repeat(indent + 1);
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    if *x == x.trunc() && x.abs() < 1e15 {
+                        let _ = write!(out, "{}", *x as i64);
+                    } else {
+                        let _ = write!(out, "{x}");
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => Self::escape_str(s, out),
+            Json::Arr(xs) => {
+                if xs.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, x) in xs.iter().enumerate() {
+                    out.push_str(&pad_in);
+                    x.write_to(out, indent + 1);
+                    if i + 1 < xs.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                out.push_str(&pad);
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                if pairs.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    out.push_str(&pad_in);
+                    Self::escape_str(k, out);
+                    out.push_str(": ");
+                    v.write_to(out, indent + 1);
+                    if i + 1 < pairs.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                out.push_str(&pad);
+                out.push('}');
+            }
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write_to(&mut out, 0);
+        out
+    }
+
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Self {
+        Json::Num(x)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<u32> for Json {
+    fn from(x: u32) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(x: bool) -> Self {
+        Json::Bool(x)
+    }
+}
+impl From<&str> for Json {
+    fn from(x: &str) -> Self {
+        Json::Str(x.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(x: String) -> Self {
+        Json::Str(x)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(x: Vec<Json>) -> Self {
+        Json::Arr(x)
+    }
+}
+impl From<Vec<f64>> for Json {
+    fn from(x: Vec<f64>) -> Self {
+        Json::Arr(x.into_iter().map(Json::from).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_with_escaping() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.row(vec!["1", "plain"]);
+        c.row(vec!["2", "has,comma"]);
+        c.row(vec!["3", "has\"quote"]);
+        let s = c.to_string();
+        assert!(s.contains("\"has,comma\""));
+        assert!(s.contains("\"has\"\"quote\""));
+        assert_eq!(s.lines().count(), 4);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn json_formatting() {
+        let mut j = Json::obj();
+        j.set("name", "resipi");
+        j.set("latency", 12.5);
+        j.set("cycles", 1_000_000u64);
+        j.set("nested", {
+            let mut n = Json::obj();
+            n.set("ok", true);
+            n
+        });
+        j.set("series", vec![1.0, 2.0, 3.5]);
+        let s = j.to_string();
+        assert!(s.contains("\"name\": \"resipi\""));
+        assert!(s.contains("\"latency\": 12.5"));
+        assert!(s.contains("\"cycles\": 1000000"));
+        assert!(s.contains("\"ok\": true"));
+        assert!(s.contains("3.5"));
+    }
+
+    #[test]
+    fn json_escapes_control_chars() {
+        let j = Json::Str("line\nbreak\ttab \"q\"".into());
+        let s = j.to_string();
+        assert_eq!(s, "\"line\\nbreak\\ttab \\\"q\\\"\"");
+    }
+
+    #[test]
+    fn json_nan_becomes_null() {
+        let j = Json::Num(f64::NAN);
+        assert_eq!(j.to_string(), "null");
+    }
+
+    #[test]
+    fn json_get_and_set_replace() {
+        let mut j = Json::obj();
+        j.set("k", 1.0);
+        j.set("k", 2.0);
+        assert_eq!(j.get("k").and_then(|v| v.as_f64()), Some(2.0));
+        assert!(j.get("missing").is_none());
+    }
+}

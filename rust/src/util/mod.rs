@@ -1,0 +1,19 @@
+//! Shared infrastructure: deterministic RNG, scoped thread pool, statistics,
+//! CSV/JSON writers, and an in-house property-testing driver.
+//!
+//! These exist because the offline build environment only vendors the `xla`
+//! crate's dependency tree (no `rand`, `rayon`, `serde`, `proptest`); see
+//! DESIGN.md §3 for the substitution table.
+
+pub mod bench;
+pub mod io;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use bench::Bench;
+pub use io::{Csv, Json};
+pub use pool::{par_map, par_map_auto};
+pub use rng::{Pcg32, SplitMix64};
+pub use stats::{Ewma, Histogram, Running};

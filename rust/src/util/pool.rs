@@ -1,0 +1,122 @@
+//! A minimal scoped thread pool for embarrassingly-parallel experiment
+//! sweeps (the offline image has no `rayon`/`tokio`).
+//!
+//! The only operation we need is a parallel map over independent jobs —
+//! each experiment point (app × architecture × seed) runs a private
+//! simulator instance, so there is no shared mutable state.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: `RESIPI_THREADS` env var, else the
+/// available parallelism, else 4.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("RESIPI_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Parallel map: applies `f` to every element of `items`, preserving order.
+/// Work-steals via a shared atomic index; results land in a pre-sized slot
+/// vector, so ordering is deterministic regardless of scheduling.
+pub fn par_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let items_ref = &items;
+    let f_ref = &f;
+    let next_ref = &next;
+    let slots_ref = &slots;
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f_ref(&items_ref[i]);
+                *slots_ref[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// Convenience: parallel map with the default thread count.
+pub fn par_map_auto<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map(default_threads(), items, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = par_map(8, items.clone(), |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = par_map(1, vec![1, 2, 3], |&x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<u32> = par_map(4, Vec::<u32>::new(), |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = par_map(64, vec![5, 6], |&x| x * x);
+        assert_eq!(out, vec![25, 36]);
+    }
+
+    #[test]
+    fn heavy_jobs_all_complete() {
+        let items: Vec<u64> = (0..32).collect();
+        let out = par_map(4, items, |&x| {
+            // small busy loop so threads actually interleave
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i * x);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 32);
+    }
+}

@@ -1,0 +1,205 @@
+//! In-house property-based testing driver.
+//!
+//! The offline image does not ship the `proptest` crate, so we provide a
+//! small equivalent: seeded random case generation, a configurable number of
+//! cases, and greedy shrinking for integer-vector inputs. It is deliberately
+//! tiny but covers what the test-suite needs: "for N random inputs drawn
+//! from a generator, an invariant holds; on failure, report the seed and a
+//! shrunk counterexample".
+
+use crate::util::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    /// Number of random cases to execute.
+    pub cases: u32,
+    /// Root seed; every case derives its own stream from it.
+    pub seed: u64,
+    /// Maximum shrink iterations on failure.
+    pub max_shrink: u32,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // RESIPI_PROPTEST_CASES lets CI dial coverage up/down.
+        let cases = std::env::var("RESIPI_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(128);
+        Self {
+            cases,
+            seed: 0x5EED_CAFE_F00D_D00D,
+            max_shrink: 400,
+        }
+    }
+}
+
+/// Run `property` against `cases` inputs drawn from `generate`.
+/// Panics with the seed and case index on the first failure.
+pub fn check<T, G, P>(config: &PropConfig, mut generate: G, mut property: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Pcg32) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let mut rng = Pcg32::new(config.seed, case as u64);
+        let input = generate(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property failed (seed={:#x}, case={case}):\n  input: {input:?}\n  error: {msg}",
+                config.seed
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with greedy shrinking via a user-provided shrinker that
+/// yields strictly "smaller" candidates for a failing input.
+pub fn check_shrink<T, G, P, S>(
+    config: &PropConfig,
+    mut generate: G,
+    mut property: P,
+    mut shrink: S,
+) where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Pcg32) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: FnMut(&T) -> Vec<T>,
+{
+    for case in 0..config.cases {
+        let mut rng = Pcg32::new(config.seed, case as u64);
+        let input = generate(&mut rng);
+        let err = match property(&input) {
+            Ok(()) => continue,
+            Err(e) => e,
+        };
+        // Greedy shrink: repeatedly move to the first failing candidate.
+        let mut best = input;
+        let mut best_err = err;
+        let mut budget = config.max_shrink;
+        'outer: while budget > 0 {
+            for cand in shrink(&best) {
+                budget = budget.saturating_sub(1);
+                if budget == 0 {
+                    break 'outer;
+                }
+                if let Err(e) = property(&cand) {
+                    best = cand;
+                    best_err = e;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (seed={:#x}, case={case}):\n  shrunk input: {best:?}\n  error: {best_err}",
+            config.seed
+        );
+    }
+}
+
+/// Generic shrinker for `Vec<u64>`-like inputs: drop elements, halve values.
+pub fn shrink_vec_u64(xs: &[u64]) -> Vec<Vec<u64>> {
+    let mut out = Vec::new();
+    // Remove each element.
+    for i in 0..xs.len() {
+        let mut v = xs.to_vec();
+        v.remove(i);
+        out.push(v);
+    }
+    // Halve each element.
+    for i in 0..xs.len() {
+        if xs[i] > 0 {
+            let mut v = xs.to_vec();
+            v[i] /= 2;
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0u32;
+        let cfg = PropConfig {
+            cases: 50,
+            ..Default::default()
+        };
+        check(
+            &cfg,
+            |rng| rng.gen_range(100),
+            |_| {
+                ran += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        let cfg = PropConfig {
+            cases: 50,
+            ..Default::default()
+        };
+        check(
+            &cfg,
+            |rng| rng.gen_range(100),
+            |&x| {
+                if x < 95 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let cfg = PropConfig {
+            cases: 20,
+            ..Default::default()
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check_shrink(
+                &cfg,
+                |rng| {
+                    let n = rng.gen_range_usize(1, 12);
+                    (0..n).map(|_| rng.next_u64() % 1000).collect::<Vec<u64>>()
+                },
+                |xs| {
+                    // Fails whenever the sum exceeds 500.
+                    if xs.iter().sum::<u64>() <= 500 {
+                        Ok(())
+                    } else {
+                        Err("sum too large".into())
+                    }
+                },
+                |xs| shrink_vec_u64(xs),
+            )
+        }));
+        let err = result.expect_err("property should fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("shrunk input"), "got: {msg}");
+    }
+
+    #[test]
+    fn shrink_vec_u64_produces_smaller() {
+        let cands = shrink_vec_u64(&[10, 20]);
+        assert!(cands.contains(&vec![20]));
+        assert!(cands.contains(&vec![10]));
+        assert!(cands.contains(&vec![5, 20]));
+        assert!(cands.contains(&vec![10, 10]));
+    }
+}
