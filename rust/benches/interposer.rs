@@ -8,7 +8,9 @@
 use resipi::config::{Architecture, Config};
 use resipi::interposer::pcmc::{kappa_schedule, power_split};
 use resipi::power::{epoch_power, EpochPowerModel, OpticsInput};
+use resipi::routing::RouteTable;
 use resipi::sim::{Geometry, Network};
+use resipi::topology::TopologyKind;
 use resipi::traffic::parsec::{app_by_name, ParsecTraffic};
 use resipi::traffic::UniformTraffic;
 use resipi::util::bench::Bench;
@@ -48,6 +50,69 @@ fn bench_network_step(b: &mut Bench) {
             net.run().unwrap();
             net.metrics().delivered
         });
+    }
+    // Full-system step cost with the torus fabric (wrap links + restricted
+    // routing must not slow the hot loop: it is the same LUT lookup).
+    b.run("network_step/resipi-torus/dedup", Some(STEP_CYCLES as f64), || {
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.set_topology(TopologyKind::Torus);
+        cfg.sim.cycles = STEP_CYCLES;
+        cfg.controller.epoch_cycles = 10_000;
+        let geo = Geometry::from_config(&cfg);
+        let app = app_by_name("dedup").unwrap();
+        let traffic = Box::new(ParsecTraffic::new(geo, app, 42));
+        let mut net = Network::new(cfg, traffic).unwrap();
+        net.run().unwrap();
+        net.metrics().delivered
+    });
+}
+
+/// Per-route-decision cost, mesh vs torus, LUT (the simulator's hot path)
+/// vs trait dispatch — guards the topology refactor against reintroducing
+/// per-cycle dynamic dispatch overhead.
+fn bench_routing_hot_path(b: &mut Bench) {
+    const SWEEPS: usize = 1_000;
+    for kind in [TopologyKind::Mesh, TopologyKind::Torus] {
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.set_topology(kind);
+        let geo = Geometry::from_config(&cfg);
+        let lut = RouteTable::build(&geo);
+        let n = geo.routers_per_chiplet();
+        let pairs = (n * n * SWEEPS) as f64;
+
+        b.run(
+            &format!("routing_hot_path/{}/lut", kind.name()),
+            Some(pairs),
+            || {
+                let mut acc = 0usize;
+                for _ in 0..SWEEPS {
+                    for s in 0..n {
+                        for d in 0..n {
+                            acc += lut.step(s, d).index();
+                        }
+                    }
+                }
+                acc
+            },
+        );
+
+        let topo = geo.topology();
+        let coords: Vec<_> = (0..n).map(|i| topo.coord_of(i)).collect();
+        b.run(
+            &format!("routing_hot_path/{}/dyn", kind.name()),
+            Some(pairs),
+            || {
+                let mut acc = 0usize;
+                for _ in 0..SWEEPS {
+                    for &s in &coords {
+                        for &d in &coords {
+                            acc += topo.route_step(s, d).index();
+                        }
+                    }
+                }
+                acc
+            },
+        );
     }
 }
 
@@ -97,6 +162,7 @@ fn main() {
     println!("== interposer microbenchmarks ==");
     let mut b = Bench::new(1, 4);
     bench_network_step(&mut b);
+    bench_routing_hot_path(&mut b);
     bench_kappa(&mut b);
     bench_power_models(&mut b);
     // Headline for EXPERIMENTS.md §Perf: simulated cycles per second.

@@ -8,6 +8,7 @@
 pub mod parser;
 
 use crate::error::{Error, Result};
+use crate::topology::TopologyKind;
 use parser::ConfigMap;
 
 /// Which interposer network architecture to simulate (paper §4.1).
@@ -60,9 +61,16 @@ impl Architecture {
 /// Intra-chiplet topology (Table 1: four chiplets, each a 4×4 mesh).
 #[derive(Debug, Clone)]
 pub struct TopologyConfig {
+    /// Intra-chiplet fabric kind (`mesh` is the paper's Table 1 baseline;
+    /// `torus` and `cmesh` are scaling extensions).
+    pub kind: TopologyKind,
     pub chiplets: usize,
+    /// Core-grid width of one chiplet. Equals the router grid except under
+    /// `cmesh`, where `concentration` cores share each router.
     pub mesh_x: usize,
     pub mesh_y: usize,
+    /// Cores per router: 1 for mesh/torus; 2 or 4 for cmesh.
+    pub concentration: usize,
 }
 
 impl TopologyConfig {
@@ -71,6 +79,16 @@ impl TopologyConfig {
     }
     pub fn total_cores(&self) -> usize {
         self.chiplets * self.cores_per_chiplet()
+    }
+    /// `cx × cy` factorization of the concentration degree.
+    pub fn concentration_factors(&self) -> Result<(usize, usize)> {
+        crate::topology::concentration_factors(self.concentration)
+    }
+    /// Router-grid dimensions of one chiplet (what gateway positions and
+    /// vicinity maps are expressed in).
+    pub fn router_dims(&self) -> (usize, usize) {
+        let (cx, cy) = self.concentration_factors().unwrap_or((1, 1));
+        (self.mesh_x / cx.max(1), self.mesh_y / cy.max(1))
     }
 }
 
@@ -83,8 +101,10 @@ pub struct GatewayConfig {
     pub memory_gateways: usize,
     /// Gateway buffer depth in flits (8 for ReSiPI/AWGR, 32 for PROWAVES).
     pub buffer_flits: usize,
-    /// Mesh coordinates `(x, y)` of the routers hosting each gateway,
-    /// in activation order G1..G4 (paper Fig. 8d placement, from [29]).
+    /// Core-grid coordinates `(x, y)` of each gateway's host, in
+    /// activation order G1..G4 (paper Fig. 8d placement, from [29]). The
+    /// topology maps each onto its host router — identity for mesh/torus;
+    /// under `cmesh` concentration the router serving that core block.
     pub positions: Vec<(usize, usize)>,
 }
 
@@ -222,9 +242,11 @@ impl Config {
         Config {
             arch,
             topology: TopologyConfig {
+                kind: TopologyKind::Mesh,
                 chiplets: 4,
                 mesh_x: 4,
                 mesh_y: 4,
+                concentration: 1,
             },
             gateways: GatewayConfig {
                 per_chiplet,
@@ -290,6 +312,25 @@ impl Config {
         self.topology.chiplets * self.gateways.per_chiplet + self.gateways.memory_gateways
     }
 
+    /// Switch the intra-chiplet topology kind. Gateway positions are
+    /// core-grid coords and stay untouched — `Geometry::from_config` maps
+    /// each onto its host router (under `cmesh` concentration that is the
+    /// router of the position's core block). Idempotent. Note that
+    /// switching away from `cmesh` resets `concentration` to 1 (required
+    /// by `validate()`), so an explicit non-default concentration does not
+    /// survive a round-trip through another kind — re-set it after
+    /// switching back. Follow with [`Config::validate`].
+    pub fn set_topology(&mut self, kind: TopologyKind) {
+        self.topology.kind = kind;
+        if kind == TopologyKind::CMesh {
+            if self.topology.concentration == 1 {
+                self.topology.concentration = 4;
+            }
+        } else {
+            self.topology.concentration = 1;
+        }
+    }
+
     /// Apply overrides from a parsed config file. Unknown keys are rejected
     /// so typos fail loudly.
     pub fn apply_overrides(&mut self, map: &ConfigMap) -> Result<()> {
@@ -302,6 +343,22 @@ impl Config {
                     self.arch = Architecture::from_name(name)?;
                 }
                 "topology.chiplets" => self.topology.chiplets = req_usize(map, key)?,
+                "topology.kind" => {
+                    let name = map
+                        .get_str(key)
+                        .ok_or_else(|| Error::config("topology.kind must be a string"))?;
+                    self.topology.kind = TopologyKind::from_name(name)?;
+                    // Default the cmesh concentration only when the file
+                    // doesn't set it; an explicit (possibly inconsistent)
+                    // value is left for validate() to reject loudly.
+                    if self.topology.kind == TopologyKind::CMesh
+                        && map.get("topology.concentration").is_none()
+                        && self.topology.concentration == 1
+                    {
+                        self.topology.concentration = 4;
+                    }
+                }
+                "topology.concentration" => self.topology.concentration = req_usize(map, key)?,
                 "topology.mesh_x" => self.topology.mesh_x = req_usize(map, key)?,
                 "topology.mesh_y" => self.topology.mesh_y = req_usize(map, key)?,
                 "gateways.per_chiplet" => self.gateways.per_chiplet = req_usize(map, key)?,
@@ -382,8 +439,39 @@ impl Config {
         if t.chiplets == 0 || t.mesh_x == 0 || t.mesh_y == 0 {
             return Err(Error::config("topology dimensions must be nonzero"));
         }
+        match t.kind {
+            TopologyKind::CMesh => {
+                let (cx, cy) = t.concentration_factors()?;
+                if cx == 1 && cy == 1 {
+                    return Err(Error::config(
+                        "cmesh needs topology.concentration of 2 or 4",
+                    ));
+                }
+                if t.mesh_x % cx != 0 || t.mesh_y % cy != 0 {
+                    return Err(Error::config(format!(
+                        "cmesh concentration {cx}x{cy} must divide the {}x{} core grid",
+                        t.mesh_x, t.mesh_y
+                    )));
+                }
+            }
+            _ => {
+                if t.concentration != 1 {
+                    return Err(Error::config(format!(
+                        "topology.concentration {} requires topology.kind = \"cmesh\"",
+                        t.concentration
+                    )));
+                }
+            }
+        }
+        let (router_x, router_y) = t.router_dims();
         if self.gateways.per_chiplet == 0 {
             return Err(Error::config("need at least one gateway per chiplet"));
+        }
+        if self.gateways.per_chiplet > router_x * router_y {
+            return Err(Error::config(format!(
+                "{} gateways per chiplet exceed the {router_x}x{router_y} router grid",
+                self.gateways.per_chiplet
+            )));
         }
         if self.gateways.positions.len() < self.gateways.per_chiplet {
             return Err(Error::config(format!(
@@ -395,16 +483,26 @@ impl Config {
         for &(x, y) in &self.gateways.positions[..self.gateways.per_chiplet] {
             if x >= t.mesh_x || y >= t.mesh_y {
                 return Err(Error::config(format!(
-                    "gateway position ({x},{y}) outside {}x{} mesh",
+                    "gateway position ({x},{y}) outside the {}x{} core grid",
                     t.mesh_x, t.mesh_y
                 )));
             }
         }
-        let mut uniq = self.gateways.positions[..self.gateways.per_chiplet].to_vec();
+        // Positions are core-grid coords; under concentration several cores
+        // share a router, so distinctness must hold after mapping onto the
+        // router grid (identity for mesh/torus).
+        let (cx, cy) = t.concentration_factors()?;
+        let mut uniq: Vec<(usize, usize)> = self.gateways.positions
+            [..self.gateways.per_chiplet]
+            .iter()
+            .map(|&(x, y)| (x / cx, y / cy))
+            .collect();
         uniq.sort_unstable();
         uniq.dedup();
         if uniq.len() != self.gateways.per_chiplet {
-            return Err(Error::config("gateway positions must be distinct"));
+            return Err(Error::config(
+                "gateway positions must map to distinct host routers",
+            ));
         }
         if self.photonics.wavelengths == 0
             || self.photonics.wavelengths > self.photonics.max_wavelengths
@@ -541,6 +639,90 @@ mod tests {
         let bad = ConfigMap::parse("[sim]\ncylces = 5\n").unwrap();
         let err = c.apply_overrides(&bad).unwrap_err();
         assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn set_topology_adapts_presets() {
+        // Torus keeps the mesh's geometry and gateway placement.
+        let mut t = Config::table1(Architecture::Resipi);
+        t.set_topology(TopologyKind::Torus);
+        assert_eq!(t.topology.router_dims(), (4, 4));
+        t.validate().unwrap();
+
+        // CMesh concentrates 4 cores per router; gateway positions stay in
+        // core-grid coords (Geometry maps them onto distinct routers).
+        let mut c = Config::table1(Architecture::Resipi);
+        c.set_topology(TopologyKind::CMesh);
+        assert_eq!(c.topology.concentration, 4);
+        assert_eq!(c.topology.router_dims(), (2, 2));
+        assert_eq!(c.topology.cores_per_chiplet(), 16);
+        assert_eq!(c.gateways.positions, vec![(1, 0), (2, 3), (2, 0), (1, 3)]);
+        c.validate().unwrap();
+
+        // Reversible: switching back restores the mesh semantics exactly.
+        c.set_topology(TopologyKind::Mesh);
+        assert_eq!(c.topology.concentration, 1);
+        assert_eq!(c.gateways.positions, vec![(1, 0), (2, 3), (2, 0), (1, 3)]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn topology_validation_rejects_bad_combinations() {
+        // Concentration without cmesh.
+        let mut c = Config::table1(Architecture::Resipi);
+        c.topology.concentration = 4;
+        assert!(c.validate().is_err());
+
+        // Concentration that does not divide the core grid.
+        let mut c = Config::table1(Architecture::Resipi);
+        c.set_topology(TopologyKind::CMesh);
+        c.topology.mesh_x = 5;
+        assert!(c.validate().is_err());
+
+        // Unsupported concentration degree.
+        let mut c = Config::table1(Architecture::Resipi);
+        c.set_topology(TopologyKind::CMesh);
+        c.topology.concentration = 3;
+        assert!(c.validate().is_err());
+
+        // Positions that collapse onto the same router under concentration
+        // must be rejected.
+        let mut c = Config::table1(Architecture::Resipi);
+        c.set_topology(TopologyKind::CMesh);
+        c.gateways.positions = vec![(0, 0), (1, 1), (2, 2), (3, 3)];
+        let err = c.validate().unwrap_err();
+        assert!(
+            err.to_string().contains("distinct host routers"),
+            "got: {err}"
+        );
+    }
+
+    #[test]
+    fn topology_overrides_from_file_text() {
+        let mut c = Config::table1(Architecture::Resipi);
+        let map = ConfigMap::parse("[topology]\nkind = \"torus\"\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert_eq!(c.topology.kind, TopologyKind::Torus);
+        c.validate().unwrap();
+
+        let mut c = Config::table1(Architecture::Resipi);
+        let map = ConfigMap::parse("[topology]\nkind = \"cmesh\"\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert_eq!(c.topology.concentration, 4);
+        c.validate().unwrap();
+
+        let map = ConfigMap::parse("[topology]\nkind = \"hyper\"\n").unwrap();
+        let mut c = Config::table1(Architecture::Resipi);
+        assert!(c.apply_overrides(&map).is_err());
+
+        // An explicitly inconsistent combination must fail loudly at
+        // validate() instead of being silently corrected.
+        let map =
+            ConfigMap::parse("[topology]\nkind = \"torus\"\nconcentration = 2\n").unwrap();
+        let mut c = Config::table1(Architecture::Resipi);
+        c.apply_overrides(&map).unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("cmesh"), "got: {err}");
     }
 
     #[test]

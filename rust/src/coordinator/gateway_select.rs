@@ -58,12 +58,14 @@ impl VicinityMap {
         // quota[i] for actives[i]
         let mut quota: Vec<usize> = (0..g).map(|i| base + usize::from(i < rem)).collect();
 
-        // All pairs sorted by (distance, slot, router).
+        // All pairs sorted by (distance, slot, router). Distance is the
+        // topology's routed hop count (Manhattan on a mesh — identical to
+        // the seed behavior there; ring-aware on a torus).
         let mut pairs: Vec<(usize, usize, usize)> = Vec::with_capacity(r * g);
         for router in 0..r {
             let rc = Coord::new(router % geo.mesh_x, router / geo.mesh_x);
             for (i, &slot) in actives.iter().enumerate() {
-                let d = rc.dist(geo.gw_positions[slot]);
+                let d = geo.hops(rc, geo.gw_positions[slot]);
                 pairs.push((d, i, router));
             }
         }
@@ -102,7 +104,7 @@ impl VicinityMap {
                     .iter()
                     .copied()
                     .filter(|&slot| slot != primary)
-                    .min_by_key(|&slot| (rc.dist(geo.gw_positions[slot]), slot))
+                    .min_by_key(|&slot| (geo.hops(rc, geo.gw_positions[slot]), slot))
                     .unwrap_or(primary)
             })
             .collect()
@@ -233,6 +235,29 @@ mod tests {
         let m1 = VicinityMap::build(&g, 0, &[true, false, false, false]);
         let c = Coord::new(2, 2);
         assert_eq!(m1.slot_for(&g, c), m1.alt_slot_for(&g, c));
+    }
+
+    #[test]
+    fn torus_and_cmesh_maps_stay_balanced_and_total() {
+        use crate::topology::TopologyKind;
+        for kind in [TopologyKind::Torus, TopologyKind::CMesh] {
+            let mut cfg = Config::table1(Architecture::Resipi);
+            cfg.set_topology(kind);
+            cfg.validate().unwrap();
+            let g = Geometry::from_config(&cfg);
+            let m = VicinityMap::build(&g, 0, &[true; 4]);
+            let counts = m.share_counts(&g);
+            let r = g.routers_per_chiplet();
+            assert_eq!(counts.iter().sum::<usize>(), r, "{kind:?} total");
+            let max = counts.iter().max().unwrap();
+            let min = counts.iter().min().unwrap();
+            assert!(max - min <= 1, "{kind:?} balance: {counts:?}");
+            // Every gateway host router still belongs to its own gateway
+            // when all four are active and hosts are distinct.
+            for k in 0..g.gw_per_chiplet {
+                assert_eq!(m.slot_for(&g, g.gw_positions[k]), k, "{kind:?} affinity");
+            }
+        }
     }
 
     #[test]

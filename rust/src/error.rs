@@ -1,32 +1,57 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls instead of `thiserror` — the offline
+//! image ships no external crates (see DESIGN.md §3).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Result alias used throughout the crate.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// ReSiPI error taxonomy.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / preset problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Simulation invariant violated (indicates a bug, surfaced loudly).
-    #[error("simulation invariant violated: {0}")]
     Invariant(String),
 
     /// Trace file parsing problems.
-    #[error("trace error: {0}")]
     Trace(String),
 
     /// PJRT / XLA runtime problems (artifact loading, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Filesystem / IO errors.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Invariant(msg) => write!(f, "simulation invariant violated: {msg}"),
+            Error::Trace(msg) => write!(f, "trace error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -41,5 +66,29 @@ impl Error {
     }
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_taxonomy() {
+        assert_eq!(Error::config("bad").to_string(), "config error: bad");
+        assert_eq!(
+            Error::invariant("stall").to_string(),
+            "simulation invariant violated: stall"
+        );
+        assert_eq!(Error::trace("eof").to_string(), "trace error: eof");
+        assert_eq!(Error::runtime("pjrt").to_string(), "runtime error: pjrt");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

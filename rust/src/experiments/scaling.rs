@@ -1,14 +1,19 @@
 //! Scalability extension (paper §1–2 motivation: "the interposer network
 //! can suffer from traffic congestion especially when the system scales
-//! up"): sweep the chiplet count at fixed per-core load and compare how
-//! ReSiPI's distributed gateways and PROWAVES's single-gateway-per-chiplet
-//! design scale in latency and power.
+//! up"): sweep the chiplet count × intra-chiplet topology kind at fixed
+//! per-core load and compare how ReSiPI's distributed gateways and
+//! PROWAVES's single-gateway-per-chiplet design scale in latency and
+//! power — and how much a torus's wraparound links or a concentrated
+//! mesh's shallower grid buy at each scale.
 //!
 //! Not a paper figure — an extension experiment DESIGN.md §6 lists (the
-//! paper defers scale-out to future work).
+//! paper defers scale-out to future work); the topology dimension follows
+//! the HexaMesh/PlaceIT observation that chiplet-count scaling is where
+//! 2.5D interposer networks are actually stressed.
 
 use crate::config::{Architecture, Config};
 use crate::sim::{Geometry, Network, Summary};
+use crate::topology::TopologyKind;
 use crate::traffic::parsec::{app_by_name, ParsecTraffic};
 use crate::util::io::Csv;
 use crate::util::pool::par_map_auto;
@@ -18,28 +23,36 @@ use crate::Result;
 #[derive(Debug, Clone)]
 pub struct ScalePoint {
     pub chiplets: usize,
+    pub topology: &'static str,
     pub summary: Summary,
 }
 
-/// Run the sweep over chiplet counts for both architectures on the median
-/// workload (dedup).
+/// Run the sweep over chiplet counts × topology kinds for both
+/// architectures on the median workload (dedup).
 pub fn run(chiplet_counts: &[usize], cycles: u64, seed: u64) -> Result<Vec<ScalePoint>> {
-    let jobs: Vec<(usize, Architecture)> = chiplet_counts
+    let jobs: Vec<(usize, TopologyKind, Architecture)> = chiplet_counts
         .iter()
         .flat_map(|&c| {
-            [Architecture::Resipi, Architecture::Prowaves]
-                .into_iter()
-                .map(move |a| (c, a))
+            TopologyKind::ALL.iter().flat_map(move |&kind| {
+                [Architecture::Resipi, Architecture::Prowaves]
+                    .into_iter()
+                    .map(move |a| (c, kind, a))
+            })
         })
         .collect();
-    par_map_auto(jobs, |&(chiplets, arch)| -> Result<ScalePoint> {
+    par_map_auto(jobs, |&(chiplets, kind, arch)| -> Result<ScalePoint> {
         let mut cfg = Config::table1(arch);
+        cfg.set_topology(kind);
         cfg.topology.chiplets = chiplets;
         // Memory controllers scale with the system (one per two chiplets,
         // minimum two — mirrors Table 1's 2-per-4).
         cfg.gateways.memory_gateways = (chiplets / 2).max(2);
         cfg.sim.cycles = cycles;
-        cfg.sim.seed = seed ^ ((chiplets as u64) << 24) ^ arch.name().len() as u64;
+        // Mesh keeps the seed's per-point seeds (the kind term is 0).
+        cfg.sim.seed = seed
+            ^ ((chiplets as u64) << 24)
+            ^ ((kind as u64) << 16)
+            ^ arch.name().len() as u64;
         cfg.controller.epoch_cycles = (cycles / 20).max(10_000);
         cfg.validate()?;
         let geo = Geometry::from_config(&cfg);
@@ -49,6 +62,7 @@ pub fn run(chiplet_counts: &[usize], cycles: u64, seed: u64) -> Result<Vec<Scale
         net.run()?;
         Ok(ScalePoint {
             chiplets,
+            topology: kind.name(),
             summary: net.summary(),
         })
     })
@@ -59,6 +73,7 @@ pub fn run(chiplet_counts: &[usize], cycles: u64, seed: u64) -> Result<Vec<Scale
 pub fn to_csv(points: &[ScalePoint]) -> Csv {
     let mut csv = Csv::new(vec![
         "chiplets",
+        "topology",
         "arch",
         "avg_latency_cycles",
         "avg_power_mw",
@@ -69,6 +84,7 @@ pub fn to_csv(points: &[ScalePoint]) -> Csv {
     for p in points {
         csv.row(vec![
             p.chiplets.to_string(),
+            p.topology.to_string(),
             p.summary.arch.clone(),
             format!("{:.3}", p.summary.avg_latency_cycles),
             format!("{:.1}", p.summary.avg_power_mw),
@@ -83,11 +99,12 @@ pub fn to_csv(points: &[ScalePoint]) -> Csv {
 pub fn report(points: &[ScalePoint]) -> String {
     let mut out = String::new();
     out.push_str("Scalability sweep (dedup, fixed per-core load)\n\n");
-    out.push_str("chiplets  arch       latency    power(mW)  gateways  delivery\n");
+    out.push_str("chiplets  topology  arch       latency    power(mW)  gateways  delivery\n");
     for p in points {
         out.push_str(&format!(
-            "{:<9} {:<10} {:<10.2} {:<10.0} {:<9.2} {:<8.4}\n",
+            "{:<9} {:<9} {:<10} {:<10.2} {:<10.0} {:<9.2} {:<8.4}\n",
             p.chiplets,
+            p.topology,
             p.summary.arch,
             p.summary.avg_latency_cycles,
             p.summary.avg_power_mw,
@@ -98,7 +115,9 @@ pub fn report(points: &[ScalePoint]) -> String {
     out.push_str(
         "\nExpected: PROWAVES's latency deteriorates with scale (more chiplets\n\
          funneling through single gateways); ReSiPI's distributed gateways and\n\
-         per-chiplet adaptation keep latency roughly flat at higher power cost.\n",
+         per-chiplet adaptation keep latency roughly flat at higher power cost.\n\
+         Torus trims intra-chiplet hops at every scale; cmesh trades router\n\
+         count against Local-port contention.\n",
     );
     out
 }
@@ -109,25 +128,28 @@ mod tests {
 
     #[test]
     fn sweep_runs_and_scales() {
-        let pts = run(&[2, 4, 6], 120_000, 0x5CA).unwrap();
-        assert_eq!(pts.len(), 6);
+        let pts = run(&[2, 6], 120_000, 0x5CA).unwrap();
+        // 2 counts × 3 topologies × 2 architectures.
+        assert_eq!(pts.len(), 12);
         for p in &pts {
             assert!(
                 p.summary.delivery_ratio > 0.8,
-                "{} @ {} chiplets: {}",
+                "{}/{} @ {} chiplets: {}",
                 p.summary.arch,
+                p.topology,
                 p.chiplets,
                 p.summary.delivery_ratio
             );
         }
-        // ReSiPI at 6 chiplets must beat PROWAVES at 6 chiplets on latency.
+        // ReSiPI at 6 chiplets must beat PROWAVES at 6 chiplets on latency
+        // (on the baseline mesh — the seed's original scaling claim).
         let rs6 = pts
             .iter()
-            .find(|p| p.chiplets == 6 && p.summary.arch == "resipi")
+            .find(|p| p.chiplets == 6 && p.topology == "mesh" && p.summary.arch == "resipi")
             .unwrap();
         let pw6 = pts
             .iter()
-            .find(|p| p.chiplets == 6 && p.summary.arch == "prowaves")
+            .find(|p| p.chiplets == 6 && p.topology == "mesh" && p.summary.arch == "prowaves")
             .unwrap();
         assert!(
             rs6.summary.avg_latency_cycles < pw6.summary.avg_latency_cycles,
@@ -136,7 +158,8 @@ mod tests {
             pw6.summary.avg_latency_cycles
         );
         let csv = to_csv(&pts);
-        assert_eq!(csv.len(), 6);
+        assert_eq!(csv.len(), 12);
         assert!(report(&pts).contains("Scalability"));
+        assert!(report(&pts).contains("torus"));
     }
 }

@@ -3,20 +3,23 @@
 //! Subcommands map one-to-one onto the paper's artifacts (DESIGN.md §6):
 //!
 //! ```text
-//! resipi run     --arch resipi --app dedup [--cycles N] [--seed S] [--config F]
+//! resipi run     --arch resipi --app dedup [--topology torus] [--cycles N]
 //! resipi fig10   [--cycles N]          # design-space exploration → L_m
 //! resipi fig11   [--cycles N]          # latency/power/energy grid
 //! resipi fig12   [--epochs N] [--epoch-cycles N]
 //! resipi fig13   [--cycles N]          # residency heat maps
 //! resipi table2                        # controller overhead
 //! resipi ablate  <thresholds|gwsel|epoch> [--cycles N]
+//! resipi scale   [--cycles N]          # chiplets × topology sweep
 //! resipi sweep                         # batched HLO power-model sweep
 //! resipi all     [--cycles N]          # every artifact, written to results/
 //! ```
 //!
 //! Outputs land in `results/` (override with `RESIPI_RESULTS`). The
 //! hand-rolled flag parser exists because the offline build lacks `clap`
-//! (DESIGN.md §3).
+//! (DESIGN.md §3); it is spec-driven per subcommand, so unknown flags and
+//! typos (`--cycels`) are rejected instead of silently ignored, and every
+//! subcommand answers `--help`.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -27,34 +30,267 @@ use resipi::experiments::{ablations, fig10, fig11, fig12, fig13, output_dir, sca
 use resipi::power::controller_area::ControllerParams;
 use resipi::runtime::{best_power_model, BatchPowerModel, ARTIFACT_GATEWAYS};
 use resipi::sim::{Geometry, Network};
+use resipi::topology::TopologyKind;
 use resipi::traffic::parsec::{app_by_name, ParsecTraffic};
 use resipi::traffic::{TraceReader, UniformTraffic};
 use resipi::util::io::Json;
 use resipi::Result;
 
-/// Parsed `--flag value` arguments.
+/// One flag a subcommand accepts. `value` names the flag's operand in the
+/// help text; `None` marks a boolean switch.
+struct Flag {
+    name: &'static str,
+    value: Option<&'static str>,
+    help: &'static str,
+}
+
+/// A subcommand's interface spec: drives parsing *and* `--help` output.
+struct Cmd {
+    name: &'static str,
+    args: &'static str,
+    summary: &'static str,
+    flags: &'static [Flag],
+}
+
+const CYCLES: Flag = Flag {
+    name: "cycles",
+    value: Some("N"),
+    help: "simulated cycles per point (underscores allowed)",
+};
+const SEED: Flag = Flag {
+    name: "seed",
+    value: Some("S"),
+    help: "root RNG seed",
+};
+
+const COMMANDS: &[Cmd] = &[
+    Cmd {
+        name: "run",
+        args: "",
+        summary: "one simulation with printed summary metrics",
+        flags: &[
+            Flag {
+                name: "arch",
+                value: Some("A"),
+                help: "resipi | resipi-allon | prowaves | awgr | static-gN",
+            },
+            Flag {
+                name: "app",
+                value: Some("W"),
+                help: "PARSEC app name | uniform:<rate> | trace:<file>",
+            },
+            Flag {
+                name: "topology",
+                value: Some("T"),
+                help: "intra-chiplet fabric: mesh | torus | cmesh",
+            },
+            CYCLES,
+            SEED,
+            Flag {
+                name: "epoch-cycles",
+                value: Some("N"),
+                help: "reconfiguration interval length",
+            },
+            Flag {
+                name: "config",
+                value: Some("FILE"),
+                help: "TOML-subset config file applied over the preset",
+            },
+            Flag {
+                name: "json",
+                value: None,
+                help: "emit the summary as JSON",
+            },
+            Flag {
+                name: "debug",
+                value: None,
+                help: "print a congestion report after the run",
+            },
+        ],
+    },
+    Cmd {
+        name: "fig10",
+        args: "",
+        summary: "design-space exploration (latency vs gateway load) → L_m",
+        flags: &[
+            CYCLES,
+            SEED,
+            Flag {
+                name: "accept",
+                value: Some("F"),
+                help: "latency-overhead acceptance band (default 0.10)",
+            },
+        ],
+    },
+    Cmd {
+        name: "fig11",
+        args: "",
+        summary: "latency/power/energy grid: 8 apps x 4 architectures",
+        flags: &[CYCLES, SEED],
+    },
+    Cmd {
+        name: "fig12",
+        args: "",
+        summary: "adaptivity series (blackscholes -> facesim -> dedup)",
+        flags: &[
+            Flag {
+                name: "epochs",
+                value: Some("N"),
+                help: "reconfiguration intervals per application",
+            },
+            Flag {
+                name: "epoch-cycles",
+                value: Some("N"),
+                help: "cycles per reconfiguration interval",
+            },
+            SEED,
+        ],
+    },
+    Cmd {
+        name: "fig13",
+        args: "",
+        summary: "per-router flit-residency heat maps",
+        flags: &[CYCLES, SEED],
+    },
+    Cmd {
+        name: "table2",
+        args: "",
+        summary: "controller area/power overhead",
+        flags: &[],
+    },
+    Cmd {
+        name: "ablate",
+        args: "<thresholds|gwsel|epoch>",
+        summary: "ablation studies of the control-plane design choices",
+        flags: &[CYCLES, SEED],
+    },
+    Cmd {
+        name: "scale",
+        args: "",
+        summary: "scalability sweep: chiplet count x topology kind",
+        flags: &[CYCLES, SEED],
+    },
+    Cmd {
+        name: "sweep",
+        args: "",
+        summary: "batched HLO power-model design-space sweep",
+        flags: &[],
+    },
+    Cmd {
+        name: "all",
+        args: "",
+        summary: "regenerate every artifact under results/",
+        flags: &[
+            CYCLES,
+            SEED,
+            Flag {
+                name: "epoch-cycles",
+                value: Some("N"),
+                help: "fig12 interval length",
+            },
+            Flag {
+                name: "accept",
+                value: Some("F"),
+                help: "fig10 acceptance band",
+            },
+        ],
+    },
+];
+
+fn command(name: &str) -> Option<&'static Cmd> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+fn command_usage(c: &Cmd) -> String {
+    let mut out = format!("resipi {} {}\n  {}\n", c.name, c.args, c.summary);
+    if !c.flags.is_empty() {
+        out.push_str("\nFLAGS:\n");
+        for f in c.flags {
+            let left = match f.value {
+                Some(v) => format!("--{} <{v}>", f.name),
+                None => format!("--{}", f.name),
+            };
+            out.push_str(&format!("  {left:<24} {}\n", f.help));
+        }
+    }
+    out
+}
+
+fn global_usage() -> String {
+    let mut out = String::from(
+        "resipi — ReSiPI 2.5D photonic interposer reproduction\n\nUSAGE:\n  resipi <command> [flags]\n\nCOMMANDS:\n",
+    );
+    for c in COMMANDS {
+        let left = format!("{} {}", c.name, c.args);
+        out.push_str(&format!("  {left:<36} {}\n", c.summary));
+    }
+    out.push_str(
+        "\nRun `resipi <command> --help` for that command's flags.\n\
+         Outputs are written under results/ (override with RESIPI_RESULTS).\n",
+    );
+    out
+}
+
+/// Parsed `--flag value` arguments, validated against a [`Cmd`] spec.
 struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> std::result::Result<Self, String> {
+    fn empty() -> Self {
+        Self {
+            positional: Vec::new(),
+            flags: HashMap::new(),
+        }
+    }
+
+    fn parse(argv: &[String], cmd: &Cmd) -> std::result::Result<Self, String> {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
-                if let Some((k, v)) = name.split_once('=') {
-                    flags.insert(k.to_string(), v.to_string());
-                } else {
-                    let v = argv
-                        .get(i + 1)
-                        .ok_or_else(|| format!("flag --{name} needs a value"))?;
-                    flags.insert(name.to_string(), v.clone());
-                    i += 1;
+                let (key, inline) = match name.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = cmd.flags.iter().find(|f| f.name == key).ok_or_else(|| {
+                    let valid: Vec<String> =
+                        cmd.flags.iter().map(|f| format!("--{}", f.name)).collect();
+                    format!(
+                        "unknown flag --{key} for `resipi {}` (valid: {}; see `resipi {} --help`)",
+                        cmd.name,
+                        if valid.is_empty() {
+                            "none".to_string()
+                        } else {
+                            valid.join(", ")
+                        },
+                        cmd.name
+                    )
+                })?;
+                let value = match (spec.value, inline) {
+                    (Some(_), Some(v)) => v,
+                    (Some(_), None) => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("flag --{key} needs a value"))?
+                    }
+                    (None, None) => "true".to_string(),
+                    (None, Some(_)) => {
+                        return Err(format!("flag --{key} does not take a value"));
+                    }
+                };
+                if flags.insert(key.to_string(), value).is_some() {
+                    return Err(format!("flag --{key} given twice"));
                 }
+            } else if a.starts_with('-') && a.len() > 1 {
+                return Err(format!(
+                    "unknown flag {a:?} (see `resipi {} --help`)",
+                    cmd.name
+                ));
             } else {
                 positional.push(a.clone());
             }
@@ -81,40 +317,44 @@ impl Args {
     }
 }
 
-const USAGE: &str = "resipi — ReSiPI 2.5D photonic interposer reproduction
-
-USAGE:
-  resipi run    --arch <resipi|resipi-allon|prowaves|awgr|static-gN>
-                --app <parsec app|uniform:<rate>|trace:<file>>
-                [--cycles N] [--seed S] [--config FILE] [--json]
-  resipi fig10  [--cycles N] [--seed S]
-  resipi fig11  [--cycles N] [--seed S]
-  resipi fig12  [--epochs N] [--epoch-cycles N] [--seed S]
-  resipi fig13  [--cycles N] [--seed S]
-  resipi table2
-  resipi ablate <thresholds|gwsel|epoch> [--cycles N] [--seed S]
-  resipi scale  [--cycles N]             # scalability extension (2-8 chiplets)
-  resipi sweep
-  resipi all    [--cycles N]
-
-Outputs are written under results/ (override with RESIPI_RESULTS).
-";
-
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
-        print!("{USAGE}");
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{}", global_usage());
         return ExitCode::SUCCESS;
     }
-    let cmd = argv[0].clone();
-    let args = match Args::parse(&argv[1..]) {
+    if argv[0] == "help" {
+        match argv.get(1).and_then(|n| command(n)) {
+            Some(c) => print!("{}", command_usage(c)),
+            None => print!("{}", global_usage()),
+        }
+        return ExitCode::SUCCESS;
+    }
+    let Some(cmd) = command(&argv[0]) else {
+        eprintln!("error: unknown subcommand {:?}\n\n{}", argv[0], global_usage());
+        return ExitCode::FAILURE;
+    };
+    if argv[1..].iter().any(|a| a == "--help" || a == "-h") {
+        print!("{}", command_usage(cmd));
+        return ExitCode::SUCCESS;
+    }
+    let args = match Args::parse(&argv[1..], cmd) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n\n{USAGE}");
+            eprintln!("error: {e}");
             return ExitCode::FAILURE;
         }
     };
-    let result = match cmd.as_str() {
+    if cmd.args.is_empty() && !args.positional.is_empty() {
+        eprintln!(
+            "error: `resipi {}` takes no positional arguments (got {:?})\n\n{}",
+            cmd.name,
+            args.positional,
+            command_usage(cmd)
+        );
+        return ExitCode::FAILURE;
+    }
+    let result = match cmd.name {
         "run" => cmd_run(&args),
         "fig10" => cmd_fig10(&args),
         "fig11" => cmd_fig11(&args),
@@ -125,10 +365,7 @@ fn main() -> ExitCode {
         "scale" => cmd_scale(&args),
         "sweep" => cmd_sweep(),
         "all" => cmd_all(&args),
-        other => {
-            eprintln!("error: unknown subcommand {other:?}\n\n{USAGE}");
-            return ExitCode::FAILURE;
-        }
+        _ => unreachable!("command table covers every dispatch arm"),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,
@@ -153,6 +390,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flags.get("config").is_none() {
         cfg.arch = arch;
     }
+    if let Some(t) = args.flags.get("topology") {
+        cfg.set_topology(TopologyKind::from_name(t)?);
+    }
     cfg.sim.cycles = args
         .get_u64("cycles", cfg.sim.cycles)
         .map_err(resipi::Error::config)?;
@@ -165,6 +405,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.validate()?;
 
     let geo = Geometry::from_config(&cfg);
+    let topology = geo.topology_kind().name();
     let app_spec = args.get_str("app", "dedup");
     let traffic: Box<dyn resipi::traffic::Traffic> = if let Some(rate) =
         app_spec.strip_prefix("uniform:")
@@ -190,6 +431,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flags.contains_key("json") {
         let mut j = Json::obj();
         j.set("arch", s.arch.as_str());
+        j.set("topology", topology);
         j.set("traffic", s.traffic.as_str());
         j.set("cycles", s.cycles);
         j.set("created", s.created);
@@ -204,6 +446,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("{}", j.to_string());
     } else {
         println!("arch:               {}", s.arch);
+        println!("topology:           {topology}");
         println!("traffic:            {}", s.traffic);
         println!("cycles:             {}", s.cycles);
         println!("packets:            {} created / {} delivered", s.created, s.delivered);
@@ -360,16 +603,12 @@ fn cmd_all(args: &Args) -> Result<()> {
     cmd_fig10(args)?;
     cmd_fig11(args)?;
     cmd_fig13(args)?;
-    let f12 = Args {
-        positional: vec![],
-        flags: HashMap::from([
-            ("epochs".to_string(), "40".to_string()),
-            (
-                "epoch-cycles".to_string(),
-                args.get_str("epoch-cycles", "50000"),
-            ),
-        ]),
-    };
+    let mut f12 = Args::empty();
+    f12.flags.insert("epochs".to_string(), "40".to_string());
+    f12.flags.insert(
+        "epoch-cycles".to_string(),
+        args.get_str("epoch-cycles", "50000"),
+    );
     cmd_fig12(&f12)?;
     for which in ["thresholds", "gwsel", "epoch"] {
         let a = Args {

@@ -1,24 +1,37 @@
 //! Deadlock-free routing for the 2.5D system (DeFT-style, after [22]).
 //!
-//! Intra-chiplet routing is dimension-ordered XY (deadlock-free on a mesh).
-//! Inter-chiplet packets route in three decoupled phases, exactly as in the
-//! paper's §3.4:
+//! Intra-chiplet routing is delegated to the configured
+//! [`crate::topology::Topology`] (dimension-ordered XY for the mesh
+//! baseline; each implementation proves its own deadlock freedom via
+//! `Topology::validate`). Inter-chiplet packets route in three decoupled
+//! phases, exactly as in the paper's §3.4:
 //!
-//! 1. source router → selected source gateway (XY on the source chiplet),
+//! 1. source router → selected source gateway (topology routing on the
+//!    source chiplet),
 //! 2. source gateway → selected destination gateway (photonic interposer,
 //!    SWMR — no routing cycles possible on the optical medium),
-//! 3. destination gateway → destination router (XY on the destination
-//!    chiplet).
+//! 3. destination gateway → destination router (topology routing on the
+//!    destination chiplet).
 //!
 //! The DeFT property our implementation needs — no cyclic buffer dependency
 //! across the chiplet/interposer boundary — holds by construction: gateways
 //! are store-and-forward (a packet fully buffers before serialization),
 //! reader buffers are only reserved when space for the whole packet exists,
 //! memory controllers decouple request/response with an internal queue, and
-//! ejection at the destination core always drains. Each XY phase is
-//! individually deadlock-free, and the phases only interact through those
-//! decoupled buffers, so no system-wide cycle can form. A runtime watchdog
-//! (`sim::network`) additionally asserts forward progress.
+//! ejection at the destination core always drains. Each intra-chiplet phase
+//! is individually deadlock-free (proved per topology instance), and the
+//! phases only interact through those decoupled buffers, so no system-wide
+//! cycle can form. A runtime watchdog (`sim::network`) additionally asserts
+//! forward progress.
+//!
+//! ## Hot path
+//!
+//! [`route`]/[`route_at`] go through the topology trait object — fine for
+//! tests and diagnostics, but the per-cycle loop must not pay dynamic
+//! dispatch per head flit. [`RouteTable`] resolves the routing function
+//! into a flat `routers × routers → Port` lookup table (plus core→router
+//! and gateway-slot→router maps) at `Network` build time; every chiplet
+//! shares the one table since chiplets are identical.
 
 use crate::sim::ids::{ChipletId, Coord, Geometry, Node, RouterId};
 use crate::sim::packet::Packet;
@@ -32,16 +45,14 @@ pub fn route(geo: &Geometry, pkt: &Packet, router: RouterId) -> Port {
     route_at(geo, pkt, geo.router_chiplet(router), geo.router_coord(router))
 }
 
-/// [`route`] with the router's position precomputed (hot-loop variant: the
-/// simulator caches every router's `(chiplet, coord)` to avoid div/mod in
-/// the per-cycle loop).
+/// [`route`] with the router's position precomputed. Trait-dispatch
+/// variant; the simulator's per-cycle loop uses [`RouteTable`] instead.
 pub fn route_at(geo: &Geometry, pkt: &Packet, c: ChipletId, here: Coord) -> Port {
-
-    // Destination core on this chiplet → XY toward it (phase 3 or
-    // intra-chiplet traffic).
+    // Destination core on this chiplet → route toward its host router
+    // (phase 3 or intra-chiplet traffic).
     if let Node::Core { chiplet, coord } = pkt.dst {
         if chiplet == c {
-            return xy_step(here, coord, Port::Local);
+            return geo.topology().route_step(here, geo.core_router_coord(coord));
         }
     }
 
@@ -58,7 +69,111 @@ pub fn route_at(geo: &Geometry, pkt: &Packet, c: ChipletId, here: Coord) -> Port
         "packet routed onto a chiplet that is neither source nor destination"
     );
     let target = geo.router_coord(gw_router);
-    xy_step(here, target, Port::Gateway)
+    match geo.topology().route_step(here, target) {
+        Port::Local => Port::Gateway,
+        p => p,
+    }
+}
+
+/// The topology's routing function flattened into per-router lookup
+/// tables: one `step` per (here, dst-router) pair, a core→host-router map,
+/// and a gateway-slot→host-router map. Built once per simulation; shared
+/// by every chiplet. Lookups are two adds and a load — no dynamic dispatch
+/// on the per-cycle hot path.
+#[derive(Debug, Clone)]
+pub struct RouteTable {
+    routers: usize,
+    core_x: usize,
+    /// `routers × routers` next-hop ports (`Local` on the diagonal).
+    steps: Vec<u8>,
+    /// Chiplet-local core index → chiplet-local host-router index.
+    core_router: Vec<u16>,
+    /// Gateway slot → chiplet-local host-router index.
+    gw_router: Vec<u16>,
+}
+
+impl RouteTable {
+    pub fn build(geo: &Geometry) -> Self {
+        let topo = geo.topology();
+        let n = topo.routers();
+        debug_assert!(n < u16::MAX as usize, "router grid too large for u16 LUT");
+        let mut steps = vec![0u8; n * n];
+        for s in 0..n {
+            for d in 0..n {
+                steps[s * n + d] =
+                    topo.route_step(topo.coord_of(s), topo.coord_of(d)).index() as u8;
+            }
+        }
+        let (core_x, core_y) = topo.core_dims();
+        let core_router = (0..core_x * core_y)
+            .map(|i| topo.local_of(topo.core_router(Coord::new(i % core_x, i / core_x))) as u16)
+            .collect();
+        let gw_router = geo
+            .gw_positions
+            .iter()
+            .map(|&p| topo.local_of(p) as u16)
+            .collect();
+        Self {
+            routers: n,
+            core_x,
+            steps,
+            core_router,
+            gw_router,
+        }
+    }
+
+    /// Next hop from local router `here_local` toward local router
+    /// `dst_local` (`Port::Local` on arrival).
+    #[inline]
+    pub fn step(&self, here_local: usize, dst_local: usize) -> Port {
+        Port::from_index(self.steps[here_local * self.routers + dst_local] as usize)
+    }
+
+    /// Chiplet-local host-router index of a core coord.
+    #[inline]
+    pub fn core_router_local(&self, core: Coord) -> usize {
+        self.core_router[core.y * self.core_x + core.x] as usize
+    }
+
+    /// Chiplet-local host-router index of a gateway slot.
+    #[inline]
+    pub fn gw_router_local(&self, slot: usize) -> usize {
+        self.gw_router[slot] as usize
+    }
+
+    /// Phase-aware next hop for `pkt` at local router `here_local` of
+    /// chiplet `chiplet` — the LUT mirror of [`route_at`], and the exact
+    /// function the simulator's per-cycle loop executes (a test asserts
+    /// the two agree, so the hot path cannot silently diverge).
+    #[inline]
+    pub fn route_packet(
+        &self,
+        pkt: &Packet,
+        chiplet: ChipletId,
+        here_local: usize,
+        gw_per_chiplet: usize,
+    ) -> Port {
+        // Destination core on this chiplet → route toward its host router
+        // (phase 3 or intra-chiplet traffic).
+        if let Node::Core { chiplet: dc, coord } = pkt.dst {
+            if dc == chiplet {
+                return self.step(here_local, self.core_router_local(coord));
+            }
+        }
+        // Phase 1: head to the selected source gateway.
+        let gw = pkt
+            .src_gateway
+            .expect("inter-chiplet packet without a source gateway");
+        debug_assert_eq!(
+            gw.0 / gw_per_chiplet,
+            chiplet,
+            "packet routed onto a chiplet that is neither source nor destination"
+        );
+        match self.step(here_local, self.gw_router_local(gw.0 % gw_per_chiplet)) {
+            Port::Local => Port::Gateway,
+            p => p,
+        }
+    }
 }
 
 /// One XY step from `here` toward `target`; `arrived` is the port to use
@@ -84,16 +199,11 @@ pub fn xy_hops(a: Coord, b: Coord) -> usize {
     a.dist(b)
 }
 
-/// Apply a mesh port to a coordinate (for tests / trajectory checks).
-/// Returns `None` if the move would leave the mesh.
+/// Apply a directional port to a router coordinate (topology-aware:
+/// includes torus wraparound links). Returns `None` if the port is
+/// unwired.
 pub fn neighbor(geo: &Geometry, at: Coord, port: Port) -> Option<Coord> {
-    match port {
-        Port::North => (at.y > 0).then(|| Coord::new(at.x, at.y - 1)),
-        Port::South => (at.y + 1 < geo.mesh_y).then(|| Coord::new(at.x, at.y + 1)),
-        Port::East => (at.x + 1 < geo.mesh_x).then(|| Coord::new(at.x + 1, at.y)),
-        Port::West => (at.x > 0).then(|| Coord::new(at.x - 1, at.y)),
-        _ => None,
-    }
+    geo.topology().neighbor(at, port)
 }
 
 #[cfg(test)]
@@ -102,11 +212,19 @@ mod tests {
     use crate::config::{Architecture, Config};
     use crate::sim::ids::GatewayId;
     use crate::sim::packet::MsgClass;
+    use crate::topology::TopologyKind;
     use crate::util::proptest::{check, PropConfig};
     use crate::util::rng::Pcg32;
 
     fn geo() -> Geometry {
         Geometry::from_config(&Config::table1(Architecture::Resipi))
+    }
+
+    fn geo_for(kind: TopologyKind) -> Geometry {
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.set_topology(kind);
+        cfg.validate().unwrap();
+        Geometry::from_config(&cfg)
     }
 
     fn core(c: usize, x: usize, y: usize) -> Node {
@@ -259,6 +377,160 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Byte-identical-results guard: on the Table 1 mesh, the route table
+    /// must agree with the seed's `xy_step` on every (router, target) pair,
+    /// for both ejection (Local) and gateway-handoff semantics.
+    #[test]
+    fn mesh_route_table_reproduces_seed_xy() {
+        let g = geo();
+        let lut = RouteTable::build(&g);
+        let topo = g.topology();
+        let n = topo.routers();
+        for s in 0..n {
+            for d in 0..n {
+                let (here, dst) = (topo.coord_of(s), topo.coord_of(d));
+                assert_eq!(lut.step(s, d), xy_step(here, dst, Port::Local), "{s}->{d}");
+            }
+        }
+        for k in 0..g.gw_per_chiplet {
+            assert_eq!(lut.gw_router_local(k), topo.local_of(g.gw_positions[k]));
+        }
+    }
+
+    /// The route table must agree with the trait path for every topology.
+    #[test]
+    fn route_table_matches_topology_for_all_kinds() {
+        for kind in TopologyKind::ALL {
+            let g = geo_for(kind);
+            let lut = RouteTable::build(&g);
+            let topo = g.topology();
+            let n = topo.routers();
+            for s in 0..n {
+                for d in 0..n {
+                    assert_eq!(
+                        lut.step(s, d),
+                        topo.route_step(topo.coord_of(s), topo.coord_of(d)),
+                        "{kind:?} {s}->{d}"
+                    );
+                }
+            }
+            let (cx, cy) = topo.core_dims();
+            for y in 0..cy {
+                for x in 0..cx {
+                    let core = Coord::new(x, y);
+                    assert_eq!(
+                        lut.core_router_local(core),
+                        topo.local_of(topo.core_router(core)),
+                        "{kind:?} core ({x},{y})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Property (all topologies): every random (src, dst) router pair
+    /// terminates within the topology's diameter and never revisits a
+    /// router — the satellite guarantee that a topology swap cannot
+    /// introduce livelock.
+    #[test]
+    fn prop_routing_terminates_within_diameter_all_topologies() {
+        for kind in TopologyKind::ALL {
+            let g = geo_for(kind);
+            let topo = g.topology();
+            let n = topo.routers();
+            check(
+                &PropConfig::default(),
+                |rng: &mut Pcg32| (rng.gen_range_usize(0, n), rng.gen_range_usize(0, n)),
+                |&(s, d)| {
+                    let (from, to) = (topo.coord_of(s), topo.coord_of(d));
+                    let mut at = from;
+                    let mut visited = std::collections::HashSet::new();
+                    visited.insert(at);
+                    let mut hops = 0usize;
+                    while at != to {
+                        let port = topo.route_step(at, to);
+                        at = topo
+                            .neighbor(at, port)
+                            .ok_or_else(|| format!("{kind:?}: left fabric at {at:?} via {port:?}"))?;
+                        if !visited.insert(at) {
+                            return Err(format!("{kind:?}: revisited {at:?}"));
+                        }
+                        hops += 1;
+                        if hops > topo.diameter() {
+                            return Err(format!(
+                                "{kind:?}: {from:?}->{to:?} exceeded diameter {}",
+                                topo.diameter()
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    /// The LUT phase logic the simulator executes (`route_packet`) must
+    /// agree with the trait path (`route_at`) for every packet shape at
+    /// every router, on every topology.
+    #[test]
+    fn route_packet_matches_route_at_for_all_packet_shapes() {
+        for kind in TopologyKind::ALL {
+            let g = geo_for(kind);
+            let lut = RouteTable::build(&g);
+            let (cx, cy) = g.core_dims();
+            let chiplet = 1usize;
+            // Representative packets: intra-chiplet core, inter-chiplet
+            // core via each gateway slot, memory-bound via each slot.
+            let mut pkts = Vec::new();
+            for y in 0..cy {
+                for x in 0..cx {
+                    pkts.push(pkt(core(chiplet, 0, 0), core(chiplet, x, y), None));
+                }
+            }
+            for k in 0..g.gw_per_chiplet {
+                let gw = g.chiplet_gateway(chiplet, k);
+                pkts.push(pkt(core(chiplet, 0, 0), core(0, 1, 1), Some(gw)));
+                pkts.push(pkt(core(chiplet, 0, 0), Node::Memory { index: 0 }, Some(gw)));
+            }
+            for local in 0..g.routers_per_chiplet() {
+                let here = g.topology().coord_of(local);
+                for p in &pkts {
+                    assert_eq!(
+                        lut.route_packet(p, chiplet, local, g.gw_per_chiplet),
+                        route_at(&g, p, chiplet, here),
+                        "{kind:?} at {here:?}, pkt {:?} -> {:?}",
+                        p.src,
+                        p.dst
+                    );
+                }
+            }
+        }
+    }
+
+    /// Phase-1 semantics hold on every topology: routing a packet toward
+    /// its source gateway ends in a Gateway handoff at the host router.
+    #[test]
+    fn gateway_handoff_on_all_topologies() {
+        for kind in TopologyKind::ALL {
+            let g = geo_for(kind);
+            let gw = g.chiplet_gateway(0, 0);
+            let host = g.router_coord(g.gateway_router(gw).unwrap());
+            let p = pkt(core(0, 0, 0), Node::Memory { index: 0 }, Some(gw));
+            let mut at = Coord::new(0, 0);
+            let mut hops = 0;
+            loop {
+                let port = route_at(&g, &p, 0, at);
+                if port == Port::Gateway {
+                    break;
+                }
+                at = neighbor(&g, at, port).expect("stays on fabric");
+                hops += 1;
+                assert!(hops <= g.diameter(), "{kind:?} must reach the gateway");
+            }
+            assert_eq!(at, host, "{kind:?} hands off at the host router");
+        }
     }
 
     /// Property: XY never makes a South/North → East/West turn (the

@@ -1,14 +1,20 @@
 //! PJRT runtime: load and execute the AOT-compiled photonic power model.
 //!
 //! The build path (`make artifacts`) lowers the L2 JAX model (which calls
-//! the L1 Pallas kernel) to **HLO text** — see `python/compile/aot.py` and
-//! /opt/xla-example/README.md for why text, not serialized protos, is the
-//! interchange format. This module loads `artifacts/power_model.hlo.txt`
-//! with the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
-//! from_text_file` → compile → execute) and exposes it through the
-//! [`EpochPowerModel`] trait the InC consumes. Python is never on the
-//! simulation path: the executable is compiled once and invoked per
-//! reconfiguration epoch.
+//! the L1 Pallas kernel) to **HLO text** — see `python/compile/aot.py` for
+//! why text, not serialized protos, is the interchange format. The
+//! [`pjrt`] backend loads `artifacts/power_model.hlo.txt` with the `xla`
+//! crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` → compile
+//! → execute) and exposes it through the [`EpochPowerModel`] trait the InC
+//! consumes. Python is never on the simulation path: the executable is
+//! compiled once and invoked per reconfiguration epoch.
+//!
+//! The offline image does not ship the `xla` crate, so the PJRT backend is
+//! gated behind the `xla` cargo feature. Without it this module exposes
+//! API-compatible stubs whose loaders fail gracefully, and
+//! [`best_power_model`] falls back to the rust mirror
+//! ([`crate::power::RustPowerModel`]) — every caller already handles the
+//! artifacts-unavailable case.
 //!
 //! ## Artifact contract (must match `python/compile/model.py`)
 //!
@@ -28,16 +34,20 @@
 //! `f(active f32[128,N], lambdas f32[128,N], params f32[11]) →
 //! (out f32[128,5],)` used by the design-space sweep.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
+#[cfg(any(feature = "xla", test))]
 use crate::config::PowerConfig;
-use crate::error::{Error, Result};
-use crate::power::{EpochPowerModel, OpticsInput, PowerBreakdown};
+use crate::power::EpochPowerModel;
+#[cfg(any(feature = "xla", test))]
+use crate::power::OpticsInput;
 
 /// Gateways the shipped artifacts are lowered for (Table 1: 18).
 pub const ARTIFACT_GATEWAYS: usize = 18;
 /// Batch size of the sweep artifact.
 pub const ARTIFACT_BATCH: usize = 128;
+/// Parameter-vector layout shared with `python/compile/model.py`.
+pub const PARAMS_LEN: usize = 11;
 
 /// Where artifacts live relative to the repo root.
 pub fn default_artifact_dir() -> PathBuf {
@@ -47,66 +57,7 @@ pub fn default_artifact_dir() -> PathBuf {
     PathBuf::from("artifacts")
 }
 
-/// A compiled HLO executable with its PJRT client.
-pub struct HloExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    path: PathBuf,
-}
-
-impl HloExecutable {
-    /// Load + compile an HLO text file on the CPU PJRT client.
-    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::runtime("non-UTF8 artifact path"))?,
-        )
-        .map_err(|e| Error::runtime(format!("parse {}: {e}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| Error::runtime(format!("compile {}: {e}", path.display())))?;
-        Ok(Self {
-            exe,
-            path: path.to_path_buf(),
-        })
-    }
-
-    /// Execute with f32 inputs and return the flattened f32 outputs of the
-    /// first tuple element.
-    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| Error::runtime(format!("execute {}: {e}", self.path.display())))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::runtime(format!("fetch result: {e}")))?;
-        // aot.py lowers with return_tuple=True → 1-tuple.
-        let out = result
-            .to_tuple1()
-            .map_err(|e| Error::runtime(format!("untuple result: {e}")))?;
-        out.to_vec::<f32>()
-            .map_err(|e| Error::runtime(format!("read result: {e}")))
-    }
-
-    pub fn path(&self) -> &Path {
-        &self.path
-    }
-}
-
-fn literal_1d(data: &[f32]) -> xla::Literal {
-    xla::Literal::vec1(data)
-}
-
-fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    debug_assert_eq!(data.len(), rows * cols);
-    xla::Literal::vec1(data)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| Error::runtime(format!("reshape literal: {e}")))
-}
-
-/// Parameter-vector layout shared with `python/compile/model.py`.
-pub const PARAMS_LEN: usize = 11;
-
+#[cfg(any(feature = "xla", test))]
 fn params_vec(p: &PowerConfig, input: &OpticsInput<'_>) -> [f32; PARAMS_LEN] {
     [
         p.laser_mw_per_wavelength as f32,
@@ -127,191 +78,335 @@ fn params_vec(p: &PowerConfig, input: &OpticsInput<'_>) -> [f32; PARAMS_LEN] {
     ]
 }
 
-/// The per-epoch power model backed by the AOT HLO artifact.
-pub struct HloPowerModel {
-    exe: HloExecutable,
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    /// Reused input buffers (the epoch path allocates nothing else).
-    active_buf: Vec<f32>,
-    lambda_buf: Vec<f32>,
-}
+/// The `xla`-crate-backed implementation (requires the `xla` feature and
+/// the crate itself; see the module docs).
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::path::{Path, PathBuf};
 
-impl HloPowerModel {
-    /// Load `power_model.hlo.txt` from `dir`.
-    pub fn load_from(dir: &Path) -> Result<Self> {
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| Error::runtime(format!("PJRT cpu client: {e}")))?;
-        let exe = HloExecutable::load(&client, &dir.join("power_model.hlo.txt"))?;
-        Ok(Self {
-            exe,
-            client,
-            active_buf: vec![0.0; ARTIFACT_GATEWAYS],
-            lambda_buf: vec![0.0; ARTIFACT_GATEWAYS],
-        })
+    use super::{params_vec, ARTIFACT_BATCH, ARTIFACT_GATEWAYS};
+    use crate::config::PowerConfig;
+    use crate::error::{Error, Result};
+    use crate::power::{EpochPowerModel, OpticsInput, PowerBreakdown};
+
+    /// A compiled HLO executable with its PJRT client.
+    pub struct HloExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        path: PathBuf,
     }
 
-    /// Load from the default artifact directory.
-    pub fn load_default() -> Result<Self> {
-        Self::load_from(&default_artifact_dir())
-    }
-
-    /// Does the default artifact exist (built by `make artifacts`)?
-    pub fn artifacts_available() -> bool {
-        default_artifact_dir().join("power_model.hlo.txt").exists()
-    }
-
-    fn run(
-        &mut self,
-        input: &OpticsInput<'_>,
-        power: &PowerConfig,
-    ) -> Result<PowerBreakdown> {
-        if input.active.len() != ARTIFACT_GATEWAYS {
-            return Err(Error::runtime(format!(
-                "artifact lowered for {ARTIFACT_GATEWAYS} gateways, got {}",
-                input.active.len()
-            )));
-        }
-        for (dst, &a) in self.active_buf.iter_mut().zip(input.active) {
-            *dst = if a { 1.0 } else { 0.0 };
-        }
-        for (dst, &l) in self.lambda_buf.iter_mut().zip(input.lambdas) {
-            *dst = l as f32;
-        }
-        let params = params_vec(power, input);
-        let out = self.exe.run_f32(&[
-            literal_1d(&self.active_buf),
-            literal_1d(&self.lambda_buf),
-            literal_1d(&params),
-        ])?;
-        if out.len() != 5 {
-            return Err(Error::runtime(format!(
-                "artifact returned {} values, expected 5",
-                out.len()
-            )));
-        }
-        let controller_mw = (input.lgc_count as f64 * power.lgc_uw
-            + if input.inc { power.inc_uw } else { 0.0 })
-            / 1000.0;
-        Ok(PowerBreakdown {
-            laser_mw: out[0] as f64,
-            tuning_mw: out[1] as f64,
-            tia_mw: out[2] as f64,
-            driver_mw: out[3] as f64,
-            controller_mw,
-            total_mw: out[4] as f64 + controller_mw,
-        })
-    }
-}
-
-impl EpochPowerModel for HloPowerModel {
-    fn epoch_power(
-        &mut self,
-        input: &OpticsInput<'_>,
-        power: &PowerConfig,
-    ) -> PowerBreakdown {
-        // The InC's epoch path cannot surface errors mid-simulation; any
-        // artifact-contract violation is a build bug — fail loudly.
-        self.run(input, power)
-            .expect("HLO power model execution failed (rebuild artifacts?)")
-    }
-
-    fn backend(&self) -> &'static str {
-        "hlo-pjrt"
-    }
-}
-
-/// The batched design-space evaluator backed by `power_model_b128.hlo.txt`.
-/// Evaluates 128 candidate configurations per call (used by `resipi sweep`
-/// and the perf benches; also a honest proxy for the controller's
-/// "pre-analysed scenarios" of §3.4).
-pub struct BatchPowerModel {
-    exe: HloExecutable,
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-}
-
-impl BatchPowerModel {
-    pub fn load_from(dir: &Path) -> Result<Self> {
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| Error::runtime(format!("PJRT cpu client: {e}")))?;
-        let exe = HloExecutable::load(&client, &dir.join("power_model_b128.hlo.txt"))?;
-        Ok(Self { exe, client })
-    }
-
-    pub fn load_default() -> Result<Self> {
-        Self::load_from(&default_artifact_dir())
-    }
-
-    /// Evaluate up to [`ARTIFACT_BATCH`] configurations. Each row of
-    /// `active`/`lambdas` is one configuration over [`ARTIFACT_GATEWAYS`]
-    /// gateways. Returns one `[laser, tuning, tia, driver, total]` row per
-    /// configuration.
-    pub fn evaluate(
-        &self,
-        active: &[Vec<bool>],
-        lambdas: &[Vec<usize>],
-        power: &PowerConfig,
-        spec: &crate::power::ArchPowerSpec,
-    ) -> Result<Vec<[f64; 5]>> {
-        let b = active.len();
-        if b == 0 || b > ARTIFACT_BATCH {
-            return Err(Error::runtime(format!(
-                "batch size {b} outside 1..={ARTIFACT_BATCH}"
-            )));
-        }
-        if lambdas.len() != b {
-            return Err(Error::runtime("active/lambdas batch mismatch"));
-        }
-        let mut act = vec![0.0f32; ARTIFACT_BATCH * ARTIFACT_GATEWAYS];
-        let mut lam = vec![0.0f32; ARTIFACT_BATCH * ARTIFACT_GATEWAYS];
-        for (i, (a_row, l_row)) in active.iter().zip(lambdas).enumerate() {
-            if a_row.len() != ARTIFACT_GATEWAYS || l_row.len() != ARTIFACT_GATEWAYS {
-                return Err(Error::runtime("configuration width mismatch"));
-            }
-            for j in 0..ARTIFACT_GATEWAYS {
-                act[i * ARTIFACT_GATEWAYS + j] = if a_row[j] { 1.0 } else { 0.0 };
-                lam[i * ARTIFACT_GATEWAYS + j] = l_row[j] as f32;
-            }
-        }
-        // Reuse the single-config layout; only the spec fields matter.
-        let probe = OpticsInput {
-            active: &[],
-            lambdas: &[],
-            use_pcmc: spec.use_pcmc,
-            extra_loss_db: spec.extra_loss_db,
-            listen_sources: spec.listen_sources,
-            static_tune_lambda: spec.static_tune_lambda,
-            links_per_writer: spec.links_per_writer,
-            lgc_count: 0,
-            inc: false,
-        };
-        let params = params_vec(power, &probe);
-        let out = self.exe.run_f32(&[
-            literal_2d(&act, ARTIFACT_BATCH, ARTIFACT_GATEWAYS)?,
-            literal_2d(&lam, ARTIFACT_BATCH, ARTIFACT_GATEWAYS)?,
-            literal_1d(&params),
-        ])?;
-        if out.len() != ARTIFACT_BATCH * 5 {
-            return Err(Error::runtime(format!(
-                "batched artifact returned {} values",
-                out.len()
-            )));
-        }
-        Ok((0..b)
-            .map(|i| {
-                let row = &out[i * 5..(i + 1) * 5];
-                [
-                    row[0] as f64,
-                    row[1] as f64,
-                    row[2] as f64,
-                    row[3] as f64,
-                    row[4] as f64,
-                ]
+    impl HloExecutable {
+        /// Load + compile an HLO text file on the CPU PJRT client.
+        pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::runtime("non-UTF8 artifact path"))?,
+            )
+            .map_err(|e| Error::runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::runtime(format!("compile {}: {e}", path.display())))?;
+            Ok(Self {
+                exe,
+                path: path.to_path_buf(),
             })
-            .collect())
+        }
+
+        /// Execute with f32 inputs and return the flattened f32 outputs of
+        /// the first tuple element.
+        pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| Error::runtime(format!("execute {}: {e}", self.path.display())))?[0]
+                [0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("fetch result: {e}")))?;
+            // aot.py lowers with return_tuple=True → 1-tuple.
+            let out = result
+                .to_tuple1()
+                .map_err(|e| Error::runtime(format!("untuple result: {e}")))?;
+            out.to_vec::<f32>()
+                .map_err(|e| Error::runtime(format!("read result: {e}")))
+        }
+
+        pub fn path(&self) -> &Path {
+            &self.path
+        }
+    }
+
+    fn literal_1d(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| Error::runtime(format!("reshape literal: {e}")))
+    }
+
+    /// The per-epoch power model backed by the AOT HLO artifact.
+    pub struct HloPowerModel {
+        exe: HloExecutable,
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        /// Reused input buffers (the epoch path allocates nothing else).
+        active_buf: Vec<f32>,
+        lambda_buf: Vec<f32>,
+    }
+
+    impl HloPowerModel {
+        /// Load `power_model.hlo.txt` from `dir`.
+        pub fn load_from(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::runtime(format!("PJRT cpu client: {e}")))?;
+            let exe = HloExecutable::load(&client, &dir.join("power_model.hlo.txt"))?;
+            Ok(Self {
+                exe,
+                client,
+                active_buf: vec![0.0; ARTIFACT_GATEWAYS],
+                lambda_buf: vec![0.0; ARTIFACT_GATEWAYS],
+            })
+        }
+
+        /// Load from the default artifact directory.
+        pub fn load_default() -> Result<Self> {
+            Self::load_from(&super::default_artifact_dir())
+        }
+
+        /// Does the default artifact exist (built by `make artifacts`)?
+        pub fn artifacts_available() -> bool {
+            super::default_artifact_dir()
+                .join("power_model.hlo.txt")
+                .exists()
+        }
+
+        fn run(&mut self, input: &OpticsInput<'_>, power: &PowerConfig) -> Result<PowerBreakdown> {
+            if input.active.len() != ARTIFACT_GATEWAYS {
+                return Err(Error::runtime(format!(
+                    "artifact lowered for {ARTIFACT_GATEWAYS} gateways, got {}",
+                    input.active.len()
+                )));
+            }
+            for (dst, &a) in self.active_buf.iter_mut().zip(input.active) {
+                *dst = if a { 1.0 } else { 0.0 };
+            }
+            for (dst, &l) in self.lambda_buf.iter_mut().zip(input.lambdas) {
+                *dst = l as f32;
+            }
+            let params = params_vec(power, input);
+            let out = self.exe.run_f32(&[
+                literal_1d(&self.active_buf),
+                literal_1d(&self.lambda_buf),
+                literal_1d(&params),
+            ])?;
+            if out.len() != 5 {
+                return Err(Error::runtime(format!(
+                    "artifact returned {} values, expected 5",
+                    out.len()
+                )));
+            }
+            let controller_mw = (input.lgc_count as f64 * power.lgc_uw
+                + if input.inc { power.inc_uw } else { 0.0 })
+                / 1000.0;
+            Ok(PowerBreakdown {
+                laser_mw: out[0] as f64,
+                tuning_mw: out[1] as f64,
+                tia_mw: out[2] as f64,
+                driver_mw: out[3] as f64,
+                controller_mw,
+                total_mw: out[4] as f64 + controller_mw,
+            })
+        }
+    }
+
+    impl EpochPowerModel for HloPowerModel {
+        fn epoch_power(&mut self, input: &OpticsInput<'_>, power: &PowerConfig) -> PowerBreakdown {
+            // The InC's epoch path cannot surface errors mid-simulation; any
+            // artifact-contract violation is a build bug — fail loudly.
+            self.run(input, power)
+                .expect("HLO power model execution failed (rebuild artifacts?)")
+        }
+
+        fn backend(&self) -> &'static str {
+            "hlo-pjrt"
+        }
+    }
+
+    /// The batched design-space evaluator backed by
+    /// `power_model_b128.hlo.txt`. Evaluates 128 candidate configurations
+    /// per call (used by `resipi sweep` and the perf benches; also an
+    /// honest proxy for the controller's "pre-analysed scenarios" of §3.4).
+    pub struct BatchPowerModel {
+        exe: HloExecutable,
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+    }
+
+    impl BatchPowerModel {
+        pub fn load_from(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::runtime(format!("PJRT cpu client: {e}")))?;
+            let exe = HloExecutable::load(&client, &dir.join("power_model_b128.hlo.txt"))?;
+            Ok(Self { exe, client })
+        }
+
+        pub fn load_default() -> Result<Self> {
+            Self::load_from(&super::default_artifact_dir())
+        }
+
+        /// Evaluate up to [`ARTIFACT_BATCH`] configurations. Each row of
+        /// `active`/`lambdas` is one configuration over
+        /// [`ARTIFACT_GATEWAYS`] gateways. Returns one `[laser, tuning,
+        /// tia, driver, total]` row per configuration.
+        pub fn evaluate(
+            &self,
+            active: &[Vec<bool>],
+            lambdas: &[Vec<usize>],
+            power: &PowerConfig,
+            spec: &crate::power::ArchPowerSpec,
+        ) -> Result<Vec<[f64; 5]>> {
+            let b = active.len();
+            if b == 0 || b > ARTIFACT_BATCH {
+                return Err(Error::runtime(format!(
+                    "batch size {b} outside 1..={ARTIFACT_BATCH}"
+                )));
+            }
+            if lambdas.len() != b {
+                return Err(Error::runtime("active/lambdas batch mismatch"));
+            }
+            let mut act = vec![0.0f32; ARTIFACT_BATCH * ARTIFACT_GATEWAYS];
+            let mut lam = vec![0.0f32; ARTIFACT_BATCH * ARTIFACT_GATEWAYS];
+            for (i, (a_row, l_row)) in active.iter().zip(lambdas).enumerate() {
+                if a_row.len() != ARTIFACT_GATEWAYS || l_row.len() != ARTIFACT_GATEWAYS {
+                    return Err(Error::runtime("configuration width mismatch"));
+                }
+                for j in 0..ARTIFACT_GATEWAYS {
+                    act[i * ARTIFACT_GATEWAYS + j] = if a_row[j] { 1.0 } else { 0.0 };
+                    lam[i * ARTIFACT_GATEWAYS + j] = l_row[j] as f32;
+                }
+            }
+            // Reuse the single-config layout; only the spec fields matter.
+            let probe = OpticsInput {
+                active: &[],
+                lambdas: &[],
+                use_pcmc: spec.use_pcmc,
+                extra_loss_db: spec.extra_loss_db,
+                listen_sources: spec.listen_sources,
+                static_tune_lambda: spec.static_tune_lambda,
+                links_per_writer: spec.links_per_writer,
+                lgc_count: 0,
+                inc: false,
+            };
+            let params = params_vec(power, &probe);
+            let out = self.exe.run_f32(&[
+                literal_2d(&act, ARTIFACT_BATCH, ARTIFACT_GATEWAYS)?,
+                literal_2d(&lam, ARTIFACT_BATCH, ARTIFACT_GATEWAYS)?,
+                literal_1d(&params),
+            ])?;
+            if out.len() != ARTIFACT_BATCH * 5 {
+                return Err(Error::runtime(format!(
+                    "batched artifact returned {} values",
+                    out.len()
+                )));
+            }
+            Ok((0..b)
+                .map(|i| {
+                    let row = &out[i * 5..(i + 1) * 5];
+                    [
+                        row[0] as f64,
+                        row[1] as f64,
+                        row[2] as f64,
+                        row[3] as f64,
+                        row[4] as f64,
+                    ]
+                })
+                .collect())
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use pjrt::{BatchPowerModel, HloExecutable, HloPowerModel};
+
+/// API-compatible stubs for builds without the `xla` feature: loaders fail
+/// with a descriptive error and `artifacts_available()` is `false`, so
+/// every caller takes its rust-mirror fallback path.
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
+
+    use crate::config::PowerConfig;
+    use crate::error::{Error, Result};
+    use crate::power::{ArchPowerSpec, EpochPowerModel, OpticsInput, PowerBreakdown};
+
+    fn unavailable() -> Error {
+        Error::runtime(
+            "HLO power model unavailable: resipi was built without the `xla` feature \
+             (the offline image has no `xla` crate); using the rust mirror instead",
+        )
+    }
+
+    /// Stub for the AOT HLO power model (never constructible).
+    pub struct HloPowerModel {
+        _private: (),
+    }
+
+    impl HloPowerModel {
+        pub fn load_from(_dir: &Path) -> Result<Self> {
+            Err(unavailable())
+        }
+
+        pub fn load_default() -> Result<Self> {
+            Err(unavailable())
+        }
+
+        /// Always `false`: artifacts cannot be executed without PJRT.
+        pub fn artifacts_available() -> bool {
+            false
+        }
+    }
+
+    impl EpochPowerModel for HloPowerModel {
+        fn epoch_power(&mut self, _input: &OpticsInput<'_>, _power: &PowerConfig) -> PowerBreakdown {
+            unreachable!("stub HloPowerModel cannot be constructed")
+        }
+
+        fn backend(&self) -> &'static str {
+            "hlo-unavailable"
+        }
+    }
+
+    /// Stub for the batched evaluator (never constructible).
+    pub struct BatchPowerModel {
+        _private: (),
+    }
+
+    impl BatchPowerModel {
+        pub fn load_from(_dir: &Path) -> Result<Self> {
+            Err(unavailable())
+        }
+
+        pub fn load_default() -> Result<Self> {
+            Err(unavailable())
+        }
+
+        pub fn evaluate(
+            &self,
+            _active: &[Vec<bool>],
+            _lambdas: &[Vec<usize>],
+            _power: &PowerConfig,
+            _spec: &ArchPowerSpec,
+        ) -> Result<Vec<[f64; 5]>> {
+            unreachable!("stub BatchPowerModel cannot be constructed")
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{BatchPowerModel, HloPowerModel};
 
 /// Best-available power model: the HLO artifact when present, the rust
 /// mirror otherwise (keeps `cargo test` independent of `make artifacts`).
@@ -325,6 +420,7 @@ pub fn best_power_model() -> Box<dyn EpochPowerModel> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     #[test]
     fn params_vec_layout() {
@@ -355,10 +451,16 @@ mod tests {
     fn artifact_dir_env_override() {
         // Note: other tests don't read this env var concurrently.
         std::env::set_var("RESIPI_ARTIFACTS", "/tmp/custom-artifacts");
-        assert_eq!(
-            default_artifact_dir(),
-            PathBuf::from("/tmp/custom-artifacts")
-        );
+        assert_eq!(default_artifact_dir(), PathBuf::from("/tmp/custom-artifacts"));
         std::env::remove_var("RESIPI_ARTIFACTS");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_falls_back_to_rust_mirror() {
+        assert!(!HloPowerModel::artifacts_available());
+        assert!(HloPowerModel::load_default().is_err());
+        assert!(BatchPowerModel::load_default().is_err());
+        assert_eq!(best_power_model().backend(), "rust-mirror");
     }
 }

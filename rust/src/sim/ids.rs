@@ -1,11 +1,22 @@
 //! Identifiers and geometry for the 2.5D system.
 //!
-//! The system is `C` chiplets, each an `X×Y` electronic mesh with one core
-//! per router, plus `M` standalone memory-controller gateways on the
-//! interposer. Everything is index-based (no pointers) so the hot loop stays
-//! cache-friendly and the whole state is trivially cloneable.
+//! The system is `C` chiplets — each an instance of the configured
+//! [`Topology`] (mesh, torus, or concentrated mesh) — plus `M` standalone
+//! memory-controller gateways on the interposer. Everything is index-based
+//! (no pointers) so the hot loop stays cache-friendly and the whole state
+//! is trivially cloneable (the topology is shared behind an `Arc`).
+//!
+//! Two coordinate spaces coexist (they coincide except under
+//! concentration): **core coords** over [`Geometry::core_dims`], used by
+//! `Node::Core` and the traffic models, and **router coords** over
+//! `mesh_x × mesh_y`, used by routing, the vicinity maps, and every
+//! router-indexed array. [`Geometry::core_router_coord`] maps the former
+//! onto the latter.
+
+use std::sync::Arc;
 
 use crate::config::Config;
+use crate::topology::{Topology, TopologyKind};
 
 /// A chiplet index in `0..C`.
 pub type ChipletId = usize;
@@ -49,6 +60,8 @@ pub enum Node {
 #[derive(Debug, Clone)]
 pub struct Geometry {
     pub chiplets: usize,
+    /// Router-grid width of one chiplet (equals the core grid except under
+    /// a concentrated topology).
     pub mesh_x: usize,
     pub mesh_y: usize,
     /// Gateways per chiplet (maximum; activation is dynamic).
@@ -57,25 +70,92 @@ pub struct Geometry {
     pub mem_gateways: usize,
     /// Host-router coordinates of chiplet gateways, in activation order.
     pub gw_positions: Vec<Coord>,
+    /// The intra-chiplet fabric (identical for every chiplet).
+    topo: Arc<dyn Topology>,
 }
 
 impl Geometry {
     pub fn from_config(cfg: &Config) -> Self {
+        let topo = crate::topology::build(&cfg.topology)
+            .expect("invalid topology configuration (Config::validate rejects this)");
+        let (mesh_x, mesh_y) = topo.router_dims();
         Self {
             chiplets: cfg.topology.chiplets,
-            mesh_x: cfg.topology.mesh_x,
-            mesh_y: cfg.topology.mesh_y,
+            mesh_x,
+            mesh_y,
             gw_per_chiplet: cfg.gateways.per_chiplet,
             mem_gateways: cfg.gateways.memory_gateways,
+            // Configured positions are core-grid coords; the host router is
+            // the one serving that core (identity except under
+            // concentration).
             gw_positions: cfg.gateways.positions[..cfg.gateways.per_chiplet]
                 .iter()
-                .map(|&(x, y)| Coord::new(x, y))
+                .map(|&(x, y)| topo.core_router(Coord::new(x, y)))
                 .collect(),
+            topo,
         }
+    }
+
+    /// The intra-chiplet topology instance.
+    pub fn topology(&self) -> &dyn Topology {
+        self.topo.as_ref()
+    }
+
+    pub fn topology_kind(&self) -> TopologyKind {
+        self.topo.kind()
     }
 
     pub fn routers_per_chiplet(&self) -> usize {
         self.mesh_x * self.mesh_y
+    }
+
+    /// Cores per chiplet (`routers × concentration`).
+    pub fn cores_per_chiplet(&self) -> usize {
+        self.topo.cores()
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.chiplets * self.cores_per_chiplet()
+    }
+
+    /// Core-grid dimensions of one chiplet.
+    pub fn core_dims(&self) -> (usize, usize) {
+        self.topo.core_dims()
+    }
+
+    /// Core coord of a chiplet-local core index (row-major over the core
+    /// grid — the inverse of [`Geometry::core_index`]).
+    pub fn core_coord(&self, local: usize) -> Coord {
+        let (cx, _) = self.core_dims();
+        Coord::new(local % cx, local / cx)
+    }
+
+    /// Chiplet-local core index of a core coord.
+    pub fn core_index(&self, core: Coord) -> usize {
+        let (cx, _) = self.core_dims();
+        core.y * cx + core.x
+    }
+
+    /// Router coord hosting a core coord (identity except under
+    /// concentration).
+    pub fn core_router_coord(&self, core: Coord) -> Coord {
+        self.topo.core_router(core)
+    }
+
+    /// Global id of the router hosting core `core` of chiplet `chiplet`.
+    pub fn core_router(&self, chiplet: ChipletId, core: Coord) -> RouterId {
+        self.router_id(chiplet, self.core_router_coord(core))
+    }
+
+    /// Routed hop count between two router coords (topology-aware; not
+    /// necessarily symmetric for restricted routing functions).
+    pub fn hops(&self, from: Coord, to: Coord) -> usize {
+        self.topo.hops(from, to)
+    }
+
+    /// Maximum routed hop count within one chiplet.
+    pub fn diameter(&self) -> usize {
+        self.topo.diameter()
     }
 
     pub fn total_routers(&self) -> usize {
@@ -151,11 +231,12 @@ impl Geometry {
         }
     }
 
-    /// Iterate all core nodes.
+    /// Iterate all core nodes (core-grid coords).
     pub fn cores(&self) -> impl Iterator<Item = Node> + '_ {
+        let (cx, cy) = self.core_dims();
         (0..self.chiplets).flat_map(move |c| {
-            (0..self.mesh_y).flat_map(move |y| {
-                (0..self.mesh_x).map(move |x| Node::Core {
+            (0..cy).flat_map(move |y| {
+                (0..cx).map(move |x| Node::Core {
                     chiplet: c,
                     coord: Coord::new(x, y),
                 })
@@ -223,5 +304,53 @@ mod tests {
     fn manhattan_distance() {
         assert_eq!(Coord::new(0, 0).dist(Coord::new(3, 2)), 5);
         assert_eq!(Coord::new(2, 2).dist(Coord::new(2, 2)), 0);
+    }
+
+    #[test]
+    fn mesh_core_space_equals_router_space() {
+        let g = geo();
+        assert_eq!(g.total_cores(), g.total_routers());
+        assert_eq!(g.core_dims(), (g.mesh_x, g.mesh_y));
+        for local in 0..g.routers_per_chiplet() {
+            let c = g.core_coord(local);
+            assert_eq!(g.core_index(c), local);
+            assert_eq!(g.core_router_coord(c), c);
+        }
+        assert_eq!(g.hops(Coord::new(0, 0), Coord::new(3, 2)), 5);
+        assert_eq!(g.diameter(), 6);
+    }
+
+    #[test]
+    fn cmesh_geometry_concentrates() {
+        use crate::topology::TopologyKind;
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.set_topology(TopologyKind::CMesh);
+        cfg.validate().unwrap();
+        let g = Geometry::from_config(&cfg);
+        assert_eq!(g.topology_kind(), TopologyKind::CMesh);
+        assert_eq!((g.mesh_x, g.mesh_y), (2, 2));
+        assert_eq!(g.routers_per_chiplet(), 4);
+        assert_eq!(g.cores_per_chiplet(), 16);
+        assert_eq!(g.total_cores(), 64);
+        assert_eq!(g.cores().count(), 64);
+        // Cores map onto their quadrant's router; gateways hosted in-grid.
+        assert_eq!(g.core_router_coord(Coord::new(3, 3)), Coord::new(1, 1));
+        assert_eq!(g.core_router(1, Coord::new(0, 0)), g.router_id(1, Coord::new(0, 0)));
+        for k in 0..g.gw_per_chiplet {
+            assert!(g.gw_positions[k].x < 2 && g.gw_positions[k].y < 2);
+        }
+    }
+
+    #[test]
+    fn torus_geometry_matches_mesh_shape() {
+        use crate::topology::TopologyKind;
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.set_topology(TopologyKind::Torus);
+        let g = Geometry::from_config(&cfg);
+        assert_eq!(g.total_routers(), 64);
+        assert_eq!(g.total_cores(), 64);
+        // Wraparound shortens the corner-to-corner route.
+        assert_eq!(g.hops(Coord::new(3, 3), Coord::new(0, 0)), 2);
+        assert_eq!(g.diameter(), 4);
     }
 }

@@ -36,6 +36,7 @@ use crate::error::{Error, Result};
 use crate::interposer::{Gateway, MemController, Photonic};
 use crate::metrics::Metrics;
 use crate::power::{EpochPowerModel, PowerBreakdown, RustPowerModel};
+use crate::routing::RouteTable;
 use crate::sim::ids::{GatewayId, Geometry, Node, RouterId};
 use crate::sim::packet::{Cycle, MsgClass, Packet, PacketArena, PacketId};
 use crate::sim::router::{Port, Router, NUM_PORTS};
@@ -157,6 +158,9 @@ pub struct Network {
     router_gateway: Vec<Option<GatewayId>>,
     /// `(chiplet, coord)` per router, precomputed.
     router_pos: Vec<(usize, crate::sim::ids::Coord)>,
+    /// The topology's routing function flattened to lookup tables at build
+    /// time — the per-cycle loop never pays dynamic dispatch.
+    route_lut: RouteTable,
     /// Neighbor router index per (router, port), precomputed.
     neighbor_table: Vec<[Option<u32>; NUM_PORTS]>,
     /// Dense router-busy map: the per-cycle loop scans these 64 bytes
@@ -220,12 +224,26 @@ impl Network {
     ) -> Result<Self> {
         cfg.validate()?;
         let geo = Geometry::from_config(&cfg);
+        // Prove the configured topology's routing function is total and
+        // deadlock-free before simulating a single cycle.
+        geo.topology().validate()?;
+        let ports = geo.topology().num_ports();
+        // The simulator's port encoding is positional (Local=0 .. Gateway=5):
+        // a smaller router would silently exclude the Gateway output and
+        // stall every inter-chiplet packet. Refuse loudly instead.
+        if ports != NUM_PORTS {
+            return Err(Error::invariant(format!(
+                "topology declares {ports} router ports; the simulator's port encoding \
+                 (Local=0..Gateway=5) requires exactly {NUM_PORTS}"
+            )));
+        }
+        let route_lut = RouteTable::build(&geo);
         let mode = Mode::from_arch(cfg.arch, &cfg);
         let n_routers = geo.total_routers();
         let n_gateways = geo.total_gateways();
 
         let routers = (0..n_routers)
-            .map(|_| Router::new(cfg.router.buffer_flits))
+            .map(|_| Router::new(cfg.router.buffer_flits, ports))
             .collect();
         let router_gateway: Vec<Option<GatewayId>> = (0..n_routers)
             .map(|r| {
@@ -325,6 +343,7 @@ impl Network {
             routers,
             router_gateway,
             router_pos,
+            route_lut,
             neighbor_table,
             router_busy: vec![false; n_routers],
             src_busy: vec![false; n_routers],
@@ -411,10 +430,14 @@ impl Network {
     fn dest_gateway(&self, dst: Node, flip: bool) -> GatewayId {
         match dst {
             Node::Core { chiplet, coord } => {
+                // Vicinity maps speak router coords; translate the core's
+                // coord onto its host router (identity except under
+                // concentration).
+                let router = self.geo.core_router_coord(coord);
                 if flip {
-                    self.vicinity[chiplet].alt_gateway_for(&self.geo, coord)
+                    self.vicinity[chiplet].alt_gateway_for(&self.geo, router)
                 } else {
-                    self.vicinity[chiplet].gateway_for(&self.geo, coord)
+                    self.vicinity[chiplet].gateway_for(&self.geo, router)
                 }
             }
             Node::Memory { index } => self.geo.memory_gateway(index),
@@ -578,7 +601,7 @@ impl Network {
             src_gateway: None,
             dst_gateway: None,
         });
-        let core = self.geo.router_id(src_chiplet, src_coord).0;
+        let core = self.geo.core_router(src_chiplet, src_coord).0;
         self.src_queues[core].push_back(id);
         self.src_busy[core] = true;
         self.metrics.on_created(now);
@@ -693,13 +716,16 @@ impl Network {
 
     fn step_routers(&mut self, now: Cycle) {
         let n = self.routers.len();
+        let rpc = self.geo.routers_per_chiplet();
+        let gw_per_chiplet = self.geo.gw_per_chiplet;
         let mut moves = std::mem::take(&mut self.moves_buf);
         for r in 0..n {
             // Idle fast-path: most routers hold no flits most cycles.
             if !self.router_busy[r] {
                 continue;
             }
-            let (chiplet, coord) = self.router_pos[r];
+            let (chiplet, _coord) = self.router_pos[r];
+            let local = r - chiplet * rpc;
             let hosted_gw = self.router_gateway[r];
 
             // Pre-compute output readiness (immutable pass).
@@ -715,12 +741,12 @@ impl Network {
                 }
             }
 
-            let geo = &self.geo;
+            let lut = &self.route_lut;
             let arena = &self.arena;
             moves.clear();
             self.routers[r].select_moves(
                 now,
-                |pid| crate::routing::route_at(geo, arena.get(pid), chiplet, coord),
+                |pid| lut.route_packet(arena.get(pid), chiplet, local, gw_per_chiplet),
                 |port| ready[port.index()],
                 &mut moves,
             );
@@ -813,7 +839,8 @@ impl Network {
                     (c, xy, needs)
                 };
                 if needs_gw {
-                    let gw = self.vicinity[src_chiplet].gateway_for(&self.geo, src_coord);
+                    let src_router = self.geo.core_router_coord(src_coord);
+                    let gw = self.vicinity[src_chiplet].gateway_for(&self.geo, src_router);
                     self.arena.get_mut(pkt).src_gateway = Some(gw);
                     self.pending_writer[gw.0] += 1;
                 }
@@ -1139,6 +1166,49 @@ mod tests {
         let (_, residency) = run_uniform(Architecture::Resipi, 0.002, 13);
         assert!(residency.iter().any(|&r| r > 0.0));
         assert!(residency.iter().all(|&r| r.is_finite()));
+    }
+
+    #[test]
+    fn torus_and_cmesh_run_clean() {
+        use crate::topology::TopologyKind;
+        for kind in [TopologyKind::Torus, TopologyKind::CMesh] {
+            let mut cfg = quick_cfg(Architecture::Resipi);
+            cfg.set_topology(kind);
+            cfg.validate().unwrap();
+            let geo = Geometry::from_config(&cfg);
+            let traffic = Box::new(UniformTraffic::new(geo, 0.002, 21));
+            let mut net = Network::new(cfg, traffic).unwrap();
+            net.run().unwrap(); // watchdog would Err on deadlock
+            let s = net.summary();
+            assert!(s.created > 1_000, "{kind:?}: created {}", s.created);
+            assert!(
+                s.delivery_ratio > 0.9,
+                "{kind:?}: delivery ratio {}",
+                s.delivery_ratio
+            );
+        }
+    }
+
+    #[test]
+    fn torus_cuts_latency_vs_mesh_on_uniform() {
+        // Wraparound links shorten edge-to-edge routes; uniform traffic
+        // must see it end to end.
+        use crate::topology::TopologyKind;
+        let run_kind = |kind: TopologyKind| {
+            let mut cfg = quick_cfg(Architecture::ResipiAllOn);
+            cfg.set_topology(kind);
+            let geo = Geometry::from_config(&cfg);
+            let traffic = Box::new(UniformTraffic::new(geo, 0.002, 17));
+            let mut net = Network::new(cfg, traffic).unwrap();
+            net.run().unwrap();
+            net.summary().avg_latency_cycles
+        };
+        let mesh = run_kind(TopologyKind::Mesh);
+        let torus = run_kind(TopologyKind::Torus);
+        assert!(
+            torus < mesh,
+            "torus ({torus:.2} cy) should beat mesh ({mesh:.2} cy)"
+        );
     }
 
     #[test]

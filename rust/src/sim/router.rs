@@ -74,26 +74,40 @@ struct OutputState {
 }
 
 /// An input-buffered wormhole router.
+///
+/// The port count is topology-derived (`Topology::num_ports`, at most
+/// [`NUM_PORTS`]): every shipped topology uses the full Local + N/E/S/W +
+/// Gateway space, but the buffers are sized by what the fabric declares.
 #[derive(Debug)]
 pub struct Router {
-    inputs: [FlitFifo; NUM_PORTS],
-    outputs: [OutputState; NUM_PORTS],
+    inputs: Vec<FlitFifo>,
+    outputs: Vec<OutputState>,
     /// Routed output port for the head packet of each input (cached once per
     /// head flit so body flits don't re-route).
-    routed: [Option<Port>; NUM_PORTS],
+    routed: Vec<Option<Port>>,
     /// Total buffered flits (maintained incrementally: the hot loop's idle
     /// fast-path checks this instead of scanning six FIFOs).
     buffered: u32,
 }
 
 impl Router {
-    pub fn new(buffer_flits: usize) -> Self {
+    pub fn new(buffer_flits: usize, ports: usize) -> Self {
+        assert!(
+            (1..=NUM_PORTS).contains(&ports),
+            "port count outside 1..={NUM_PORTS}"
+        );
         Self {
-            inputs: std::array::from_fn(|_| FlitFifo::new(buffer_flits)),
-            outputs: [OutputState::default(); NUM_PORTS],
-            routed: [None; NUM_PORTS],
+            inputs: (0..ports).map(|_| FlitFifo::new(buffer_flits)).collect(),
+            outputs: vec![OutputState::default(); ports],
+            routed: vec![None; ports],
             buffered: 0,
         }
+    }
+
+    /// Ports this router was built with.
+    #[inline]
+    pub fn ports(&self) -> usize {
+        self.inputs.len()
     }
 
     /// No flits buffered anywhere — the per-cycle loop can skip this
@@ -170,8 +184,9 @@ impl Router {
         if self.buffered == 0 {
             return;
         }
+        let ports = self.inputs.len();
         // Cache routing decisions for any new head flits at input heads.
-        for i in 0..NUM_PORTS {
+        for i in 0..ports {
             if self.routed[i].is_none() {
                 if let Some(head) = self.inputs[i].head() {
                     if head.is_head() {
@@ -189,7 +204,7 @@ impl Router {
             }
         }
 
-        for o in 0..NUM_PORTS {
+        for o in 0..ports {
             let out_port = Port::from_index(o);
             if !output_ready(out_port) {
                 continue;
@@ -212,8 +227,8 @@ impl Router {
                     // wants this output.
                     let rr = self.outputs[o].rr;
                     let mut found = None;
-                    for k in 0..NUM_PORTS {
-                        let i = (rr + k) % NUM_PORTS;
+                    for k in 0..ports {
+                        let i = (rr + k) % ports;
                         if self.routed[i] != Some(out_port) {
                             continue;
                         }
@@ -253,7 +268,7 @@ impl Router {
         if flit.is_head() {
             debug_assert!(self.outputs[o].lock.is_none());
             // Advance RR past the winner for fairness.
-            self.outputs[o].rr = (i + 1) % NUM_PORTS;
+            self.outputs[o].rr = (i + 1) % self.inputs.len();
             if !flit.is_tail() {
                 self.outputs[o].lock = Some(mv.from_input);
             } else {
@@ -306,7 +321,7 @@ mod tests {
 
     #[test]
     fn single_packet_streams_in_order() {
-        let mut r = Router::new(8);
+        let mut r = Router::new(8, NUM_PORTS);
         load_packet(&mut r, Port::West, 1, 4);
         let mut seqs = Vec::new();
         for now in 1..=5 {
@@ -322,7 +337,7 @@ mod tests {
 
     #[test]
     fn wormhole_lock_blocks_interleaving() {
-        let mut r = Router::new(8);
+        let mut r = Router::new(8, NUM_PORTS);
         load_packet(&mut r, Port::West, 1, 3);
         load_packet(&mut r, Port::North, 2, 3);
         // Both want East. Packet 1 (lower RR start) should win and stream
@@ -344,7 +359,7 @@ mod tests {
 
     #[test]
     fn different_outputs_move_in_parallel() {
-        let mut r = Router::new(8);
+        let mut r = Router::new(8, NUM_PORTS);
         load_packet(&mut r, Port::West, 1, 2);
         load_packet(&mut r, Port::North, 2, 2);
         let route = |p: PacketId| {
@@ -360,7 +375,7 @@ mod tests {
 
     #[test]
     fn output_backpressure_blocks() {
-        let mut r = Router::new(8);
+        let mut r = Router::new(8, NUM_PORTS);
         load_packet(&mut r, Port::West, 1, 2);
         let moves = select(&mut r, 1, |_| Port::East, |p| p != Port::East);
         assert!(moves.is_empty());
@@ -368,7 +383,7 @@ mod tests {
 
     #[test]
     fn same_cycle_flits_do_not_teleport() {
-        let mut r = Router::new(8);
+        let mut r = Router::new(8, NUM_PORTS);
         // Flit arrived *this* cycle (moved_at == now) must wait.
         r.accept(Port::West, flit(1, 0, 1, 0), 5);
         let moves = select(&mut r, 5, |_| Port::East, |_| true);
@@ -379,7 +394,7 @@ mod tests {
 
     #[test]
     fn round_robin_alternates_between_inputs() {
-        let mut r = Router::new(8);
+        let mut r = Router::new(8, NUM_PORTS);
         // Two streams of single-flit packets contending for East.
         for k in 0..3 {
             r.accept(Port::West, flit(10 + k, 0, 1, 0), 0);
@@ -402,7 +417,7 @@ mod tests {
 
     #[test]
     fn single_flit_packet_leaves_no_lock() {
-        let mut r = Router::new(4);
+        let mut r = Router::new(4, NUM_PORTS);
         r.accept(Port::West, flit(1, 0, 1, 0), 0);
         let moves = select(&mut r, 1, |_| Port::East, |_| true);
         r.commit_move(&moves[0]);

@@ -1,0 +1,129 @@
+//! Concentrated mesh: several cores share each router.
+//!
+//! The core grid (what `Node::Core` and the traffic models address) stays
+//! at the configured `mesh_x × mesh_y`; a `cx × cy` block of cores maps
+//! onto each router, shrinking the router grid to
+//! `(mesh_x/cx) × (mesh_y/cy)`. Routing over the router grid is the same
+//! dimension-ordered XY as [`super::Mesh`] — deadlock-free for the same
+//! reason — but average hop counts drop (fewer routers between any two
+//! cores) at the price of contention on the shared Local injection and
+//! ejection port.
+
+use crate::error::{Error, Result};
+use crate::sim::ids::Coord;
+use crate::sim::router::Port;
+
+use super::{validate_routing, Topology, TopologyKind};
+
+/// A concentrated mesh: `core_x × core_y` cores on a
+/// `(core_x/cx) × (core_y/cy)` router grid.
+#[derive(Debug, Clone)]
+pub struct CMesh {
+    core_x: usize,
+    core_y: usize,
+    cx: usize,
+    cy: usize,
+    rx: usize,
+    ry: usize,
+}
+
+impl CMesh {
+    pub fn new(core_x: usize, core_y: usize, cx: usize, cy: usize) -> Result<Self> {
+        if core_x == 0 || core_y == 0 || cx == 0 || cy == 0 {
+            return Err(Error::config("cmesh dimensions must be nonzero"));
+        }
+        if core_x % cx != 0 || core_y % cy != 0 {
+            return Err(Error::config(format!(
+                "cmesh concentration {cx}x{cy} must divide the {core_x}x{core_y} core grid"
+            )));
+        }
+        Ok(Self {
+            core_x,
+            core_y,
+            cx,
+            cy,
+            rx: core_x / cx,
+            ry: core_y / cy,
+        })
+    }
+}
+
+impl Topology for CMesh {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::CMesh
+    }
+
+    fn router_dims(&self) -> (usize, usize) {
+        (self.rx, self.ry)
+    }
+
+    fn core_dims(&self) -> (usize, usize) {
+        (self.core_x, self.core_y)
+    }
+
+    fn cores_per_router(&self) -> usize {
+        self.cx * self.cy
+    }
+
+    fn core_router(&self, core: Coord) -> Coord {
+        debug_assert!(core.x < self.core_x && core.y < self.core_y);
+        Coord::new(core.x / self.cx, core.y / self.cy)
+    }
+
+    fn neighbor(&self, at: Coord, port: Port) -> Option<Coord> {
+        super::grid_neighbor(at, port, self.rx, self.ry)
+    }
+
+    fn route_step(&self, here: Coord, dst: Coord) -> Port {
+        crate::routing::xy_step(here, dst, Port::Local)
+    }
+
+    fn diameter(&self) -> usize {
+        (self.rx - 1) + (self.ry - 1)
+    }
+
+    fn hops(&self, from: Coord, to: Coord) -> usize {
+        from.dist(to)
+    }
+
+    fn validate(&self) -> Result<()> {
+        validate_routing(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_concentration_4() {
+        // 4×4 cores concentrated 2×2 → 2×2 routers, 4 cores each.
+        let c = CMesh::new(4, 4, 2, 2).unwrap();
+        assert_eq!(c.router_dims(), (2, 2));
+        assert_eq!(c.core_dims(), (4, 4));
+        assert_eq!(c.cores_per_router(), 4);
+        assert_eq!(c.routers(), 4);
+        assert_eq!(c.cores(), 16);
+        assert_eq!(c.diameter(), 2);
+        // The four cores of the top-left quadrant share router (0,0).
+        for &(x, y) in &[(0, 0), (1, 0), (0, 1), (1, 1)] {
+            assert_eq!(c.core_router(Coord::new(x, y)), Coord::new(0, 0));
+        }
+        assert_eq!(c.core_router(Coord::new(3, 2)), Coord::new(1, 1));
+    }
+
+    #[test]
+    fn rejects_non_dividing_concentration() {
+        assert!(CMesh::new(5, 4, 2, 2).is_err());
+        assert!(CMesh::new(4, 3, 2, 2).is_err());
+        assert!(CMesh::new(4, 4, 0, 2).is_err());
+    }
+
+    #[test]
+    fn concentration_2_is_rectangular() {
+        let c = CMesh::new(8, 4, 2, 1).unwrap();
+        assert_eq!(c.router_dims(), (4, 4));
+        assert_eq!(c.cores_per_router(), 2);
+        assert_eq!(c.core_router(Coord::new(7, 3)), Coord::new(3, 3));
+    }
+}

@@ -1,0 +1,527 @@
+//! Pluggable intra-chiplet topology layer.
+//!
+//! The seed hard-coded one fabric — a 4×4 mesh with dimension-ordered XY
+//! routing — across `sim/ids.rs`, `routing/`, and `sim/network.rs`. This
+//! module lifts that assumption into a [`Topology`] trait that owns the
+//! geometry (router grid, core→router concentration, neighbor wiring) and
+//! the deadlock-free routing function of one chiplet. Three implementations
+//! ship:
+//!
+//! * [`Mesh`] — the paper's Table 1 fabric, bit-for-bit identical to the
+//!   seed's XY behavior (`resipi fig10`/`fig11` outputs are unchanged);
+//! * [`Torus`] — adds wraparound links with a VC-less-safe restriction:
+//!   a wrap link may only be the *first* hop out of its edge router, and
+//!   only when strictly shorter (see `torus.rs` for the deadlock-freedom
+//!   argument);
+//! * [`CMesh`] — a concentrated mesh: `concentration` cores share each
+//!   router, shrinking the router grid while the core grid (and therefore
+//!   the traffic models) stays fixed.
+//!
+//! ## Contract
+//!
+//! A topology must provide a *total*, *terminating*, *deadlock-free*
+//! routing function `route_step(here, dst) -> Port` over its router grid:
+//! `Port::Local` exactly when `here == dst`, a mesh direction otherwise,
+//! and the walk it induces must reach `dst` within [`Topology::diameter`]
+//! hops without revisiting a router. [`validate_routing`] *proves* these
+//! properties for an instance by exhaustively walking every (src, dst)
+//! pair and checking that the induced channel-dependency graph is acyclic
+//! (Dally & Seitz's criterion); `Network` construction runs it once per
+//! simulation.
+//!
+//! ## Adding a topology
+//!
+//! 1. Implement [`Topology`] (geometry + `route_step`); delegate
+//!    `validate` to [`validate_routing`] — if your routing function can
+//!    deadlock or livelock, construction fails loudly instead of hanging a
+//!    simulation.
+//! 2. Add a [`TopologyKind`] variant and wire it into [`build`] and
+//!    `TopologyKind::from_name`.
+//! 3. The simulator core needs no changes: `sim/network.rs` resolves the
+//!    trait into a flat per-router lookup table (`routing::RouteTable`) at
+//!    build time, so the per-cycle hot loop never pays dynamic dispatch.
+
+pub mod cmesh;
+pub mod mesh;
+pub mod torus;
+
+pub use cmesh::CMesh;
+pub use mesh::Mesh;
+pub use torus::Torus;
+
+use std::sync::Arc;
+
+use crate::config::TopologyConfig;
+use crate::error::{Error, Result};
+use crate::sim::ids::Coord;
+use crate::sim::router::{Port, NUM_PORTS};
+
+/// Which intra-chiplet fabric to simulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TopologyKind {
+    /// Dimension-ordered XY mesh (Table 1 baseline).
+    Mesh,
+    /// Mesh plus wraparound links, edge-wrap-restricted routing.
+    Torus,
+    /// Concentrated mesh: several cores per router.
+    CMesh,
+}
+
+impl TopologyKind {
+    /// Every supported kind (sweeps, tests).
+    pub const ALL: [TopologyKind; 3] = [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Mesh => "mesh",
+            TopologyKind::Torus => "torus",
+            TopologyKind::CMesh => "cmesh",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "mesh" => Ok(TopologyKind::Mesh),
+            "torus" => Ok(TopologyKind::Torus),
+            "cmesh" | "concentrated-mesh" => Ok(TopologyKind::CMesh),
+            other => Err(Error::config(format!(
+                "unknown topology {other:?} (expected mesh, torus, cmesh)"
+            ))),
+        }
+    }
+}
+
+/// One chiplet's fabric: geometry plus a deadlock-free routing function.
+///
+/// Coordinates fall in two spaces: **router coords** over
+/// [`Topology::router_dims`] (what `route_step`, `neighbor`, and the
+/// vicinity maps speak) and **core coords** over [`Topology::core_dims`]
+/// (what `Node::Core` and the traffic models speak). They coincide except
+/// under concentration; [`Topology::core_router`] maps between them.
+pub trait Topology: std::fmt::Debug + Send + Sync {
+    fn kind(&self) -> TopologyKind;
+
+    /// Router-grid dimensions of one chiplet.
+    fn router_dims(&self) -> (usize, usize);
+
+    /// Core-grid dimensions of one chiplet.
+    fn core_dims(&self) -> (usize, usize);
+
+    /// Cores sharing each router (1 except under concentration).
+    fn cores_per_router(&self) -> usize {
+        1
+    }
+
+    /// Routers per chiplet.
+    fn routers(&self) -> usize {
+        let (x, y) = self.router_dims();
+        x * y
+    }
+
+    /// Cores per chiplet.
+    fn cores(&self) -> usize {
+        self.routers() * self.cores_per_router()
+    }
+
+    /// Router ports this fabric uses (the simulator sizes router buffers by
+    /// this). The current simulator's port encoding is positional
+    /// (`Local=0 .. Gateway=5`), so `Network` construction rejects any
+    /// value other than [`NUM_PORTS`] — override only together with a port
+    /// re-encoding in `sim/router.rs`.
+    fn num_ports(&self) -> usize {
+        NUM_PORTS
+    }
+
+    /// Router coord of local router index `local` (canonical row-major
+    /// layout: `local = y * router_x + x`).
+    fn coord_of(&self, local: usize) -> Coord {
+        let (x, _) = self.router_dims();
+        Coord::new(local % x, local / x)
+    }
+
+    /// Local router index of a router coord (inverse of
+    /// [`Topology::coord_of`]).
+    fn local_of(&self, coord: Coord) -> usize {
+        let (x, _) = self.router_dims();
+        coord.y * x + coord.x
+    }
+
+    /// The router hosting a core coord.
+    fn core_router(&self, core: Coord) -> Coord;
+
+    /// The router one hop away through `port`, or `None` when the port is
+    /// unwired (mesh edge, or a non-directional port).
+    fn neighbor(&self, at: Coord, port: Port) -> Option<Coord>;
+
+    /// One deadlock-free routing step from `here` toward `dst`; returns
+    /// `Port::Local` exactly when `here == dst` (callers map arrival onto
+    /// ejection or gateway handoff).
+    fn route_step(&self, here: Coord, dst: Coord) -> Port;
+
+    /// Maximum routed hop count over all router pairs.
+    fn diameter(&self) -> usize;
+
+    /// Routed hop count from `from` to `to` (not necessarily symmetric for
+    /// restricted routing functions). Default walks `route_step`.
+    fn hops(&self, from: Coord, to: Coord) -> usize {
+        let mut at = from;
+        let mut n = 0usize;
+        while at != to {
+            let port = self.route_step(at, to);
+            at = self
+                .neighbor(at, port)
+                .expect("route_step must stay on the fabric");
+            n += 1;
+            assert!(n <= self.routers(), "route_step must terminate");
+        }
+        n
+    }
+
+    /// Prove routing totality, termination, and deadlock freedom for this
+    /// instance (implementations delegate to [`validate_routing`]).
+    fn validate(&self) -> Result<()>;
+}
+
+/// Neighbor step on a bounded `x × y` grid (no wraparound) — the wiring
+/// shared by [`Mesh`] and [`CMesh`].
+pub(crate) fn grid_neighbor(at: Coord, port: Port, x: usize, y: usize) -> Option<Coord> {
+    match port {
+        Port::North => (at.y > 0).then(|| Coord::new(at.x, at.y - 1)),
+        Port::South => (at.y + 1 < y).then(|| Coord::new(at.x, at.y + 1)),
+        Port::East => (at.x + 1 < x).then(|| Coord::new(at.x + 1, at.y)),
+        Port::West => (at.x > 0).then(|| Coord::new(at.x - 1, at.y)),
+        _ => None,
+    }
+}
+
+/// `cx × cy` factorization of a concentration degree (cores per router).
+pub fn concentration_factors(concentration: usize) -> Result<(usize, usize)> {
+    match concentration {
+        1 => Ok((1, 1)),
+        2 => Ok((2, 1)),
+        4 => Ok((2, 2)),
+        other => Err(Error::config(format!(
+            "unsupported concentration {other} (expected 1, 2, or 4 cores per router)"
+        ))),
+    }
+}
+
+/// Construct the configured topology. `Config::validate` performs the same
+/// checks up front, so reachable errors here indicate an unvalidated
+/// config.
+pub fn build(cfg: &TopologyConfig) -> Result<Arc<dyn Topology>> {
+    match cfg.kind {
+        TopologyKind::Mesh => Ok(Arc::new(Mesh::new(cfg.mesh_x, cfg.mesh_y))),
+        TopologyKind::Torus => Ok(Arc::new(Torus::new(cfg.mesh_x, cfg.mesh_y))),
+        TopologyKind::CMesh => {
+            let (cx, cy) = concentration_factors(cfg.concentration)?;
+            Ok(Arc::new(CMesh::new(cfg.mesh_x, cfg.mesh_y, cx, cy)?))
+        }
+    }
+}
+
+/// Prove that a topology's routing function is **total** (every (src, dst)
+/// pair terminates at its destination without leaving the fabric or
+/// revisiting a router, within the claimed diameter) and **deadlock-free**
+/// (the channel-dependency graph induced by the routing function over the
+/// mesh channels is acyclic — Dally & Seitz). Cost is
+/// `O(routers² · diameter)`; `Network` construction runs it once.
+pub fn validate_routing(topo: &dyn Topology) -> Result<()> {
+    let n = topo.routers();
+    let diam = topo.diameter();
+    // Channel id = local router index × NUM_PORTS + output-port index.
+    let nch = n * NUM_PORTS;
+    let mut edges: Vec<std::collections::BTreeSet<usize>> = vec![Default::default(); nch];
+
+    for d in 0..n {
+        let c = topo.coord_of(d);
+        if topo.route_step(c, c) != Port::Local {
+            return Err(Error::invariant(format!(
+                "route_step({c:?}, {c:?}) must be Local"
+            )));
+        }
+    }
+
+    for s in 0..n {
+        for d in 0..n {
+            let from = topo.coord_of(s);
+            let to = topo.coord_of(d);
+            let mut at = from;
+            let mut prev: Option<usize> = None;
+            let mut visited = vec![false; n];
+            visited[topo.local_of(at)] = true;
+            let mut hops = 0usize;
+            while at != to {
+                let port = topo.route_step(at, to);
+                if !matches!(port, Port::North | Port::East | Port::South | Port::West) {
+                    return Err(Error::invariant(format!(
+                        "route_step({at:?}, {to:?}) returned {port:?} before arrival"
+                    )));
+                }
+                let ch = topo.local_of(at) * NUM_PORTS + port.index();
+                if let Some(p) = prev {
+                    edges[p].insert(ch);
+                }
+                prev = Some(ch);
+                let here = at;
+                at = topo.neighbor(here, port).ok_or_else(|| {
+                    Error::invariant(format!(
+                        "route {from:?}->{to:?} left the fabric at {here:?} via {port:?}"
+                    ))
+                })?;
+                let l = topo.local_of(at);
+                if visited[l] {
+                    return Err(Error::invariant(format!(
+                        "route {from:?}->{to:?} revisits {at:?}"
+                    )));
+                }
+                visited[l] = true;
+                hops += 1;
+                if hops > n {
+                    return Err(Error::invariant(format!(
+                        "route {from:?}->{to:?} does not terminate"
+                    )));
+                }
+            }
+            if hops > diam {
+                return Err(Error::invariant(format!(
+                    "route {from:?}->{to:?} took {hops} hops, claimed diameter is {diam}"
+                )));
+            }
+        }
+    }
+
+    // Cycle check over the recorded channel dependencies (iterative
+    // three-color DFS).
+    let adj: Vec<Vec<usize>> = edges.into_iter().map(|s| s.into_iter().collect()).collect();
+    let mut color = vec![0u8; nch];
+    for start in 0..nch {
+        if color[start] != 0 {
+            continue;
+        }
+        color[start] = 1;
+        let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+        while let Some(top) = stack.last_mut() {
+            let (node, idx) = *top;
+            if idx < adj[node].len() {
+                top.1 += 1;
+                let next = adj[node][idx];
+                match color[next] {
+                    0 => {
+                        color[next] = 1;
+                        stack.push((next, 0));
+                    }
+                    1 => {
+                        let router = next / NUM_PORTS;
+                        let port = Port::from_index(next % NUM_PORTS);
+                        return Err(Error::invariant(format!(
+                            "channel-dependency cycle through router {router} port {port:?} \
+                             — routing function is not deadlock-free"
+                        )));
+                    }
+                    _ => {}
+                }
+            } else {
+                color[node] = 2;
+                stack.pop();
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_exhaustive;
+
+    fn all_pairs(topo: &dyn Topology) -> Vec<(usize, usize)> {
+        let n = topo.routers();
+        (0..n).flat_map(|s| (0..n).map(move |d| (s, d))).collect()
+    }
+
+    /// Walk a route, returning hop count; errors on any totality violation.
+    fn walk(topo: &dyn Topology, s: usize, d: usize) -> std::result::Result<usize, String> {
+        let (from, to) = (topo.coord_of(s), topo.coord_of(d));
+        let mut at = from;
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(at);
+        let mut hops = 0usize;
+        while at != to {
+            let port = topo.route_step(at, to);
+            let next = topo
+                .neighbor(at, port)
+                .ok_or_else(|| format!("left fabric at {at:?} via {port:?}"))?;
+            if !seen.insert(next) {
+                return Err(format!("revisited {next:?}"));
+            }
+            at = next;
+            hops += 1;
+            if hops > topo.diameter() {
+                return Err(format!(
+                    "exceeded diameter {} routing {from:?}->{to:?}",
+                    topo.diameter()
+                ));
+            }
+        }
+        Ok(hops)
+    }
+
+    fn instances() -> Vec<Box<dyn Topology>> {
+        vec![
+            Box::new(Mesh::new(4, 4)),
+            Box::new(Mesh::new(5, 3)),
+            Box::new(Torus::new(4, 4)),
+            Box::new(Torus::new(6, 4)),
+            Box::new(Torus::new(5, 5)),
+            Box::new(CMesh::new(4, 4, 2, 2).unwrap()),
+            Box::new(CMesh::new(8, 4, 2, 1).unwrap()),
+        ]
+    }
+
+    #[test]
+    fn kinds_roundtrip_names() {
+        for kind in TopologyKind::ALL {
+            assert_eq!(TopologyKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert!(TopologyKind::from_name("hypercube").is_err());
+    }
+
+    #[test]
+    fn all_instances_validate() {
+        for topo in instances() {
+            topo.validate()
+                .unwrap_or_else(|e| panic!("{:?} failed validation: {e}", topo.kind()));
+        }
+    }
+
+    #[test]
+    fn prop_routing_total_within_diameter_no_revisit() {
+        for topo in instances() {
+            check_exhaustive(all_pairs(topo.as_ref()), |&(s, d)| {
+                walk(topo.as_ref(), s, d).map(|_| ())
+            });
+        }
+    }
+
+    #[test]
+    fn hops_and_diameter_agree_with_walk() {
+        for topo in instances() {
+            let mut worst = 0usize;
+            for (s, d) in all_pairs(topo.as_ref()) {
+                let h = walk(topo.as_ref(), s, d).unwrap();
+                assert_eq!(
+                    h,
+                    topo.hops(topo.coord_of(s), topo.coord_of(d)),
+                    "{:?} hops({s},{d})",
+                    topo.kind()
+                );
+                worst = worst.max(h);
+            }
+            assert_eq!(worst, topo.diameter(), "{:?} diameter", topo.kind());
+        }
+    }
+
+    #[test]
+    fn coord_index_roundtrip_and_core_mapping() {
+        for topo in instances() {
+            for local in 0..topo.routers() {
+                assert_eq!(topo.local_of(topo.coord_of(local)), local);
+            }
+            let (cx, cy) = topo.core_dims();
+            assert_eq!(cx * cy, topo.cores());
+            let (rx, ry) = topo.router_dims();
+            for y in 0..cy {
+                for x in 0..cx {
+                    let r = topo.core_router(Coord::new(x, y));
+                    assert!(r.x < rx && r.y < ry, "{:?}: core ({x},{y}) -> {r:?}", topo.kind());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn concentration_factor_table() {
+        assert_eq!(concentration_factors(1).unwrap(), (1, 1));
+        assert_eq!(concentration_factors(2).unwrap(), (2, 1));
+        assert_eq!(concentration_factors(4).unwrap(), (2, 2));
+        assert!(concentration_factors(3).is_err());
+        assert!(concentration_factors(8).is_err());
+    }
+
+    /// An unrestricted minimal torus routing (ties broken toward the wrap
+    /// direction) has the classic ring channel-dependency cycle; the
+    /// validator must refuse it. This is the failure mode the restricted
+    /// [`Torus`] routing exists to avoid.
+    #[derive(Debug)]
+    struct UnrestrictedTorus {
+        x: usize,
+        y: usize,
+    }
+
+    impl UnrestrictedTorus {
+        fn ring_step(here: usize, dst: usize, size: usize) -> i8 {
+            if here == dst {
+                return 0;
+            }
+            let fwd = (dst + size - here) % size;
+            let bwd = (here + size - dst) % size;
+            if fwd <= bwd {
+                1
+            } else {
+                -1
+            }
+        }
+    }
+
+    impl Topology for UnrestrictedTorus {
+        fn kind(&self) -> TopologyKind {
+            TopologyKind::Torus
+        }
+        fn router_dims(&self) -> (usize, usize) {
+            (self.x, self.y)
+        }
+        fn core_dims(&self) -> (usize, usize) {
+            (self.x, self.y)
+        }
+        fn core_router(&self, core: Coord) -> Coord {
+            core
+        }
+        fn neighbor(&self, at: Coord, port: Port) -> Option<Coord> {
+            match port {
+                Port::North => Some(Coord::new(at.x, (at.y + self.y - 1) % self.y)),
+                Port::South => Some(Coord::new(at.x, (at.y + 1) % self.y)),
+                Port::East => Some(Coord::new((at.x + 1) % self.x, at.y)),
+                Port::West => Some(Coord::new((at.x + self.x - 1) % self.x, at.y)),
+                _ => None,
+            }
+        }
+        fn route_step(&self, here: Coord, dst: Coord) -> Port {
+            match Self::ring_step(here.x, dst.x, self.x) {
+                1 => Port::East,
+                -1 => Port::West,
+                _ => match Self::ring_step(here.y, dst.y, self.y) {
+                    1 => Port::South,
+                    -1 => Port::North,
+                    _ => Port::Local,
+                },
+            }
+        }
+        fn diameter(&self) -> usize {
+            self.x / 2 + self.y / 2
+        }
+        fn validate(&self) -> Result<()> {
+            validate_routing(self)
+        }
+    }
+
+    #[test]
+    fn validator_rejects_cyclic_channel_dependencies() {
+        let bad = UnrestrictedTorus { x: 4, y: 4 };
+        let err = bad.validate().unwrap_err();
+        assert!(
+            err.to_string().contains("cycle"),
+            "expected a cycle diagnosis, got: {err}"
+        );
+    }
+}

@@ -45,7 +45,7 @@ pub struct UniformTraffic {
 
 impl UniformTraffic {
     pub fn new(geo: Geometry, rate: f64, seed: u64) -> Self {
-        let n = geo.total_routers();
+        let n = geo.total_cores();
         let mut rng = Pcg32::new(seed, 0x00F0);
         let next_fire = (0..n)
             .map(|_| if rate > 0.0 { rng.geometric(rate) } else { u64::MAX })
@@ -60,18 +60,18 @@ impl UniformTraffic {
     }
 
     fn core_node(&self, idx: usize) -> Node {
-        let c = idx / self.geo.routers_per_chiplet();
-        let local = idx % self.geo.routers_per_chiplet();
+        let c = idx / self.geo.cores_per_chiplet();
+        let local = idx % self.geo.cores_per_chiplet();
         Node::Core {
             chiplet: c,
-            coord: Coord::new(local % self.geo.mesh_x, local / self.geo.mesh_x),
+            coord: self.geo.core_coord(local),
         }
     }
 }
 
 impl Traffic for UniformTraffic {
     fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
-        let n = self.geo.total_routers();
+        let n = self.geo.total_cores();
         for i in 0..n {
             if self.next_fire[i] > now {
                 continue;
@@ -107,7 +107,7 @@ pub struct TransposeTraffic {
 
 impl TransposeTraffic {
     pub fn new(geo: Geometry, rate: f64, seed: u64) -> Self {
-        let n = geo.total_routers();
+        let n = geo.total_cores();
         let mut rng = Pcg32::new(seed, 0x71A9);
         let next_fire = (0..n)
             .map(|_| if rate > 0.0 { rng.geometric(rate) } else { u64::MAX })
@@ -124,15 +124,15 @@ impl TransposeTraffic {
 
 impl Traffic for TransposeTraffic {
     fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
-        let n = self.geo.total_routers();
-        let rpc = self.geo.routers_per_chiplet();
+        let n = self.geo.total_cores();
+        let cpc = self.geo.cores_per_chiplet();
         for i in 0..n {
             if self.next_fire[i] > now {
                 continue;
             }
-            let c = i / rpc;
-            let local = i % rpc;
-            let (x, y) = (local % self.geo.mesh_x, local / self.geo.mesh_x);
+            let c = i / cpc;
+            let local = i % cpc;
+            let Coord { x, y } = self.geo.core_coord(local);
             let src = Node::Core {
                 chiplet: c,
                 coord: Coord::new(x, y),

@@ -47,6 +47,7 @@ impl Csv {
         }
     }
 
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(
@@ -202,6 +203,7 @@ impl Json {
         }
     }
 
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write_to(&mut out, 0);

@@ -35,6 +35,36 @@ impl Default for PropConfig {
     }
 }
 
+impl PropConfig {
+    /// Default config with an explicit case count (env override still
+    /// wins for the default constructor; this one is exact).
+    pub fn with_cases(cases: u32) -> Self {
+        Self {
+            cases,
+            ..Self::default()
+        }
+    }
+}
+
+/// Deterministically check `property` over every element of a finite
+/// `domain` — same failure reporting as [`check`], but exhaustive instead
+/// of sampled. The topology layer uses this to *prove* routing totality
+/// over all (src, dst) pairs rather than spot-check it.
+pub fn check_exhaustive<T, I, P>(domain: I, mut property: P)
+where
+    T: std::fmt::Debug,
+    I: IntoIterator<Item = T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut case = 0usize;
+    for input in domain {
+        case += 1;
+        if let Err(msg) = property(&input) {
+            panic!("exhaustive property failed (case {case}):\n  input: {input:?}\n  error: {msg}");
+        }
+    }
+}
+
 /// Run `property` against `cases` inputs drawn from `generate`.
 /// Panics with the seed and case index on the first failure.
 pub fn check<T, G, P>(config: &PropConfig, mut generate: G, mut property: P)
@@ -192,6 +222,35 @@ mod tests {
             .cloned()
             .unwrap_or_default();
         assert!(msg.contains("shrunk input"), "got: {msg}");
+    }
+
+    #[test]
+    fn with_cases_overrides_count() {
+        let cfg = PropConfig::with_cases(7);
+        assert_eq!(cfg.cases, 7);
+        assert_eq!(cfg.max_shrink, PropConfig::default().max_shrink);
+    }
+
+    #[test]
+    fn exhaustive_visits_every_element() {
+        let mut seen = Vec::new();
+        check_exhaustive(0..5u32, |&x| {
+            seen.push(x);
+            Ok(())
+        });
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhaustive property failed")]
+    fn exhaustive_reports_failures() {
+        check_exhaustive(0..5u32, |&x| {
+            if x < 3 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        });
     }
 
     #[test]
