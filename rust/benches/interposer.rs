@@ -37,6 +37,19 @@ fn bench_network_step(b: &mut Bench) {
             net.metrics().delivered
         });
     }
+    // Zero-injection floor: with the active-list core an idle network's
+    // cycle costs O(active) = O(1) work — this pins that constant, the
+    // quantity that dominates hundreds-of-chiplet low-load sweeps.
+    b.run("network_step/resipi/idle", Some(STEP_CYCLES as f64), || {
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.sim.cycles = STEP_CYCLES;
+        cfg.controller.epoch_cycles = 10_000;
+        let geo = Geometry::from_config(&cfg);
+        let traffic = Box::new(UniformTraffic::new(geo, 0.0, 7));
+        let mut net = Network::new(cfg, traffic).unwrap();
+        net.run().unwrap();
+        net.metrics().delivered
+    });
     // Load sweep on ReSiPI: idle, moderate, heavy.
     for rate in [0.0005, 0.003, 0.008] {
         let name = format!("network_step/resipi/uniform-{rate}");

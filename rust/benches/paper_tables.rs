@@ -71,6 +71,18 @@ fn main() {
         peaks.0, peaks.1
     );
 
+    // The `resipi bench` quick matrix itself (one iteration per scenario):
+    // a `cargo bench` log thereby records the same scenario set the CI
+    // perf gate runs, alongside the paper artifacts.
+    let mut matrix_cycles = 0u64;
+    b.run("bench/quick_matrix", None, || {
+        let report = resipi::experiments::perf::run(true, 1, 2, 0xBE7C).unwrap();
+        assert!(report.scenarios.iter().all(|s| s.median_cps > 0.0));
+        matrix_cycles = report.scenarios.iter().map(|s| s.cycles).sum();
+        report.scenarios.len()
+    });
+    println!("  bench matrix: {matrix_cycles} simulated cycles across the quick scenarios");
+
     b.run("ablation/thresholds", Some(2.0 * cycles as f64), || {
         ablations::thresholds(cycles, 0xAB).unwrap().len()
     });

@@ -5,6 +5,7 @@ pub mod fig10;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;
+pub mod perf;
 pub mod scaling;
 pub mod table2;
 

@@ -1,0 +1,657 @@
+//! `resipi bench` — the simulator-performance scenario matrix, its
+//! machine-readable results file, and the CI regression gate.
+//!
+//! ## What is measured
+//!
+//! Each [`Scenario`] is one full simulation (topology × injection rate ×
+//! chiplet count) run for a fixed horizon; the score is **simulated cycles
+//! per wall-second**, taken as the median over several fresh runs. On top
+//! of the single-threaded matrix, the whole matrix is replayed through
+//! [`crate::util::pool::par_map`] at one and several worker threads
+//! (aggregate throughput), cross-checking that thread scheduling never
+//! changes simulation results.
+//!
+//! ## Determinism checksum
+//!
+//! Every scenario records [`crate::metrics::Metrics::checksum`] — a digest
+//! of the delivered/created counts, the full packet-latency histogram and
+//! the energy totals. Two runs of the same scenario must agree (enforced
+//! here), and the CI gate fails when a checksum drifts from the committed
+//! baseline: a perf PR that accidentally changes *behavior* is caught even
+//! if it is fast. Caveat: the traffic models draw geometric inter-arrivals
+//! through `ln`, so checksums are stable per libm; compare baselines
+//! produced on the same platform family (CI: ubuntu/glibc).
+//!
+//! ## Machine normalization
+//!
+//! Absolute cycles/sec depends on the host, so `BENCH_baseline.json`
+//! stores throughput divided by [`calibration_score`] — a fixed integer
+//! spin loop scored on the same machine just before the matrix. The CI
+//! gate compares these normalized scores and fails on a
+//! >[`REGRESSION_TOLERANCE`] drop. A committed baseline whose top-level
+//! `bootstrap` flag is `true` is a placeholder: the comparison table is
+//! printed but nothing is enforced, so the gate bootstraps cleanly before
+//! the first recorded run (see README "Benchmarking & performance gates"
+//! for the refresh procedure).
+
+use std::time::Instant;
+
+use crate::config::{Architecture, Config};
+use crate::error::{Error, Result};
+use crate::sim::{Geometry, Network};
+use crate::topology::TopologyKind;
+use crate::traffic::UniformTraffic;
+use crate::util::io::Json;
+use crate::util::pool;
+use crate::util::stats;
+
+/// Results-file schema version (`schema_version` in the JSON).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// CI gate: fail when a scenario's normalized median throughput drops more
+/// than this fraction below the baseline.
+pub const REGRESSION_TOLERANCE: f64 = 0.15;
+
+/// One benchmark point: a full simulation at a fixed configuration.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub topology: TopologyKind,
+    /// Per-core uniform injection rate, packets/cycle.
+    pub injection: f64,
+    pub chiplets: usize,
+    /// Simulated horizon per iteration.
+    pub cycles: u64,
+}
+
+impl Scenario {
+    /// Stable identifier — baselines are matched by this name.
+    pub fn name(&self) -> String {
+        format!(
+            "{}/c{}/inj{}",
+            self.topology.name(),
+            self.chiplets,
+            self.injection
+        )
+    }
+
+    /// The scenario's simulator configuration (ReSiPI architecture,
+    /// CI-scale epochs).
+    pub fn config(&self, seed: u64) -> Result<Config> {
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.set_topology(self.topology);
+        cfg.topology.chiplets = self.chiplets;
+        cfg.sim.cycles = self.cycles;
+        cfg.sim.warmup_cycles = (self.cycles / 10).min(5_000);
+        cfg.sim.seed = seed;
+        cfg.controller.epoch_cycles = 10_000;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// The benchmark matrix. `quick` is the CI size; the full matrix runs the
+/// same scenarios for a longer horizon.
+pub fn matrix(quick: bool) -> Vec<Scenario> {
+    let cycles = if quick { 30_000 } else { 120_000 };
+    let mut out = Vec::new();
+    for kind in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh] {
+        // 0.002: light load — exercises the active-list idle fast path.
+        // 0.05: saturating load — exercises the full router/serializer
+        // datapath (most routers busy every cycle).
+        for injection in [0.002, 0.05] {
+            out.push(Scenario {
+                topology: kind,
+                injection,
+                chiplets: 4,
+                cycles,
+            });
+        }
+    }
+    // Scaling point toward the HexaMesh/PlaceIT sweeps: double the
+    // chiplet count at light load.
+    out.push(Scenario {
+        topology: TopologyKind::Mesh,
+        injection: 0.002,
+        chiplets: 8,
+        cycles,
+    });
+    out
+}
+
+/// Measured result of one scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub name: String,
+    pub cycles: u64,
+    pub iters: usize,
+    /// Median simulated cycles per wall-second over the iterations.
+    pub median_cps: f64,
+    pub mean_cps: f64,
+    /// End-of-run metrics digest; identical across iterations (enforced).
+    pub checksum: u64,
+    pub created: u64,
+    pub delivered: u64,
+    pub avg_latency_cycles: f64,
+    pub total_energy_uj: f64,
+}
+
+/// Run one scenario `iters` times (fresh simulator each time) and take the
+/// median throughput. Errors if any two iterations disagree on the metrics
+/// checksum — the simulator must be deterministic in its seed.
+pub fn run_scenario(s: &Scenario, iters: usize, seed: u64) -> Result<ScenarioResult> {
+    assert!(iters >= 1, "need at least one iteration");
+    let mut cps = Vec::with_capacity(iters);
+    let mut out: Option<ScenarioResult> = None;
+    for _ in 0..iters {
+        let cfg = s.config(seed)?;
+        let geo = Geometry::from_config(&cfg);
+        let traffic = Box::new(UniformTraffic::new(geo, s.injection, seed));
+        let mut net = Network::new(cfg, traffic)?;
+        let t0 = Instant::now();
+        net.run()?;
+        cps.push(s.cycles as f64 / t0.elapsed().as_secs_f64().max(1e-9));
+        let m = net.metrics();
+        let r = ScenarioResult {
+            name: s.name(),
+            cycles: s.cycles,
+            iters,
+            median_cps: 0.0,
+            mean_cps: 0.0,
+            checksum: m.checksum(),
+            created: m.created,
+            delivered: m.delivered,
+            avg_latency_cycles: m.avg_latency(),
+            total_energy_uj: m.total_energy_uj,
+        };
+        if let Some(prev) = &out {
+            if prev.checksum != r.checksum {
+                return Err(Error::invariant(format!(
+                    "scenario {} is nondeterministic: checksum {:#018x} vs {:#018x}",
+                    r.name, prev.checksum, r.checksum
+                )));
+            }
+        }
+        out = Some(r);
+    }
+    let mut r = out.expect("iters >= 1 produced a result");
+    r.mean_cps = stats::mean(&cps);
+    r.median_cps = stats::median(&mut cps);
+    Ok(r)
+}
+
+/// Aggregate result of replaying the matrix through the thread pool.
+#[derive(Debug, Clone)]
+pub struct MtResult {
+    pub threads: usize,
+    pub total_cycles: u64,
+    /// Summed simulated cycles / batch wall-time.
+    pub aggregate_cps: f64,
+}
+
+/// Run every scenario once through `util::pool::par_map` with `threads`
+/// workers, measuring aggregate throughput. Each result's checksum is
+/// cross-checked against `expected` (the single-threaded matrix): worker
+/// scheduling must never leak into simulation results.
+pub fn run_matrix_parallel(
+    scenarios: &[Scenario],
+    threads: usize,
+    seed: u64,
+    expected: &[ScenarioResult],
+) -> Result<MtResult> {
+    assert_eq!(scenarios.len(), expected.len());
+    let jobs: Vec<Scenario> = scenarios.to_vec();
+    let t0 = Instant::now();
+    let results = pool::par_map(threads.max(1), jobs, |s| run_scenario(s, 1, seed));
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let mut total_cycles = 0u64;
+    for (r, e) in results.into_iter().zip(expected) {
+        let r = r?;
+        if r.checksum != e.checksum {
+            return Err(Error::invariant(format!(
+                "scenario {} changed results under {} threads: {:#018x} vs {:#018x}",
+                r.name, threads, r.checksum, e.checksum
+            )));
+        }
+        total_cycles += r.cycles;
+    }
+    Ok(MtResult {
+        threads,
+        total_cycles,
+        aggregate_cps: total_cycles as f64 / dt,
+    })
+}
+
+/// Machine-speed proxy: a fixed integer spin loop scored in iterations per
+/// wall-second (best of three to shed scheduler noise). Baselines store
+/// throughput divided by this, so the CI gate compares engine efficiency
+/// rather than runner hardware.
+pub fn calibration_score() -> f64 {
+    const N: u64 = 1 << 24;
+    let mut best = 0.0f64;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        for i in 0..N {
+            x = x.wrapping_mul(0x2545_F491_4F6C_DD1D).wrapping_add(i);
+            x ^= x >> 33;
+        }
+        std::hint::black_box(x);
+        let score = N as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        if score > best {
+            best = score;
+        }
+    }
+    best
+}
+
+/// A complete bench run.
+#[derive(Debug)]
+pub struct BenchReport {
+    pub quick: bool,
+    pub seed: u64,
+    pub iters: usize,
+    pub calibration: f64,
+    pub scenarios: Vec<ScenarioResult>,
+    pub mt: Vec<MtResult>,
+}
+
+/// Run the full benchmark: calibration, the single-threaded matrix, then
+/// the pooled matrix at 1 worker and (when `threads > 1`) at `threads`
+/// workers.
+pub fn run(quick: bool, iters: usize, threads: usize, seed: u64) -> Result<BenchReport> {
+    let scenarios = matrix(quick);
+    let calibration = calibration_score();
+    let mut results = Vec::with_capacity(scenarios.len());
+    for s in &scenarios {
+        results.push(run_scenario(s, iters, seed)?);
+    }
+    let mut mt = Vec::new();
+    let mut widths = vec![1usize];
+    if threads > 1 {
+        widths.push(threads);
+    }
+    for t in widths {
+        mt.push(run_matrix_parallel(&scenarios, t, seed, &results)?);
+    }
+    Ok(BenchReport {
+        quick,
+        seed,
+        iters,
+        calibration,
+        scenarios: results,
+        mt,
+    })
+}
+
+/// Human-readable table of a bench run.
+pub fn report_table(r: &BenchReport) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "calibration score: {:.1} Mops/s (normalizer for the committed baseline)",
+        r.calibration / 1e6
+    );
+    let _ = writeln!(
+        out,
+        "{:<24} {:>12} {:>10} {:>10} {:>10}  {}",
+        "scenario", "median cy/s", "normalized", "delivered", "latency", "checksum"
+    );
+    for s in &r.scenarios {
+        let _ = writeln!(
+            out,
+            "{:<24} {:>12.0} {:>10.4} {:>10} {:>10.1} {:>#018x}",
+            s.name,
+            s.median_cps,
+            s.median_cps / r.calibration,
+            s.delivered,
+            s.avg_latency_cycles,
+            s.checksum
+        );
+    }
+    for m in &r.mt {
+        let _ = writeln!(
+            out,
+            "matrix via util::pool @ {} thread(s): {:.2} M simulated cycles/s aggregate",
+            m.threads,
+            m.aggregate_cps / 1e6
+        );
+    }
+    out
+}
+
+/// Serialize a report to the `BENCH_results.json` schema.
+pub fn to_json(r: &BenchReport) -> Json {
+    let mut j = Json::obj();
+    j.set("schema_version", SCHEMA_VERSION);
+    j.set("bootstrap", false);
+    j.set("quick", r.quick);
+    j.set("seed", r.seed);
+    j.set("iters", r.iters);
+    j.set("calibration_score", r.calibration);
+    let scenarios: Vec<Json> = r
+        .scenarios
+        .iter()
+        .map(|s| {
+            let mut o = Json::obj();
+            o.set("name", s.name.as_str());
+            o.set("cycles", s.cycles);
+            o.set("median_cps", s.median_cps);
+            o.set("mean_cps", s.mean_cps);
+            o.set("normalized", s.median_cps / r.calibration);
+            o.set("checksum", format!("{:#018x}", s.checksum));
+            o.set("created", s.created);
+            o.set("delivered", s.delivered);
+            o.set("avg_latency_cycles", s.avg_latency_cycles);
+            o.set("total_energy_uj", s.total_energy_uj);
+            o
+        })
+        .collect();
+    j.set("scenarios", scenarios);
+    let mt: Vec<Json> = r
+        .mt
+        .iter()
+        .map(|m| {
+            let mut o = Json::obj();
+            o.set("threads", m.threads);
+            o.set("total_cycles", m.total_cycles);
+            o.set("aggregate_cps", m.aggregate_cps);
+            o
+        })
+        .collect();
+    j.set("mt", mt);
+    j
+}
+
+/// Outcome of checking a run against a committed baseline.
+#[derive(Debug)]
+pub struct Gate {
+    /// Printable comparison table (always produced).
+    pub table: String,
+    /// Hard failures: regressions, checksum drift, missing scenarios.
+    /// Empty when the gate passes or the baseline is a bootstrap
+    /// placeholder.
+    pub failures: Vec<String>,
+    /// True when the baseline declares `"bootstrap": true` — report-only.
+    pub bootstrap: bool,
+}
+
+/// Compare a run against a baseline document (`BENCH_baseline.json`).
+///
+/// Scenarios are matched by name. For each baseline scenario: a missing
+/// current result or a checksum mismatch is a failure, and a normalized
+/// median throughput more than [`REGRESSION_TOLERANCE`] below the
+/// baseline's is a failure. A `bootstrap` baseline suppresses all
+/// failures (the table still prints, so its output can seed a real
+/// baseline).
+pub fn compare(baseline: &Json, report: &BenchReport) -> Gate {
+    use std::fmt::Write as _;
+    let bootstrap = baseline
+        .get("bootstrap")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    let mut table = String::new();
+    let mut failures = Vec::new();
+    let _ = writeln!(
+        table,
+        "{:<24} {:>12} {:>12} {:>7}  {}",
+        "scenario", "base norm", "now norm", "ratio", "status"
+    );
+    let no_scenarios: Vec<Json> = Vec::new();
+    let base_scenarios = baseline
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .unwrap_or(&no_scenarios);
+    if base_scenarios.is_empty() && !bootstrap {
+        failures.push("baseline lists no scenarios (and is not marked bootstrap)".to_string());
+    }
+    for b in base_scenarios {
+        let Some(name) = b.get("name").and_then(Json::as_str) else {
+            failures.push("baseline scenario entry without a name".to_string());
+            continue;
+        };
+        let Some(cur) = report.scenarios.iter().find(|s| s.name == name) else {
+            failures.push(format!("scenario {name} missing from the current run"));
+            let _ = writeln!(table, "{name:<24} {:>12} {:>12} {:>7}  MISSING", "-", "-", "-");
+            continue;
+        };
+        let now_norm = cur.median_cps / report.calibration;
+        let mut status = "ok";
+        if let Some(base_ck) = b.get("checksum").and_then(Json::as_str) {
+            let now_ck = format!("{:#018x}", cur.checksum);
+            if base_ck != now_ck {
+                status = "CHECKSUM";
+                failures.push(format!(
+                    "scenario {name}: checksum {now_ck} differs from baseline {base_ck} \
+                     (simulation behavior changed; refresh the baseline if intended)"
+                ));
+            }
+        }
+        match b.get("normalized").and_then(Json::as_f64) {
+            Some(base_norm) if base_norm > 0.0 => {
+                let ratio = now_norm / base_norm;
+                if ratio < 1.0 - REGRESSION_TOLERANCE && status == "ok" {
+                    status = "REGRESSION";
+                    failures.push(format!(
+                        "scenario {name}: normalized throughput {now_norm:.4} is {:.0}% below \
+                         baseline {base_norm:.4}",
+                        (1.0 - ratio) * 100.0
+                    ));
+                }
+                let _ = writeln!(
+                    table,
+                    "{name:<24} {base_norm:>12.4} {now_norm:>12.4} {ratio:>7.2}  {status}"
+                );
+            }
+            _ => {
+                // A recorded (non-bootstrap) baseline entry without a usable
+                // score must not silently bypass the gate.
+                if !bootstrap {
+                    failures.push(format!(
+                        "scenario {name}: baseline entry lacks a positive 'normalized' score \
+                         (malformed baseline — re-record it)"
+                    ));
+                }
+                let _ = writeln!(
+                    table,
+                    "{name:<24} {:>12} {now_norm:>12.4} {:>7}  {}",
+                    "-",
+                    "-",
+                    if bootstrap {
+                        "bootstrap"
+                    } else if status == "ok" {
+                        "MALFORMED"
+                    } else {
+                        status
+                    }
+                );
+            }
+        }
+    }
+    if bootstrap {
+        failures.clear();
+    }
+    Gate {
+        table,
+        failures,
+        bootstrap,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scenario {
+        Scenario {
+            topology: TopologyKind::Mesh,
+            injection: 0.002,
+            chiplets: 4,
+            cycles: 8_000,
+        }
+    }
+
+    fn report_with(scenarios: Vec<ScenarioResult>) -> BenchReport {
+        BenchReport {
+            quick: true,
+            seed: 1,
+            iters: 1,
+            calibration: 100.0,
+            scenarios,
+            mt: Vec::new(),
+        }
+    }
+
+    fn result(name: &str, median_cps: f64, checksum: u64) -> ScenarioResult {
+        ScenarioResult {
+            name: name.to_string(),
+            cycles: 1000,
+            iters: 1,
+            median_cps,
+            mean_cps: median_cps,
+            checksum,
+            created: 10,
+            delivered: 10,
+            avg_latency_cycles: 20.0,
+            total_energy_uj: 1.0,
+        }
+    }
+
+    fn baseline_with(name: &str, normalized: f64, checksum: u64) -> Json {
+        let mut b = Json::obj();
+        b.set("schema_version", SCHEMA_VERSION);
+        let mut s = Json::obj();
+        s.set("name", name);
+        s.set("normalized", normalized);
+        s.set("checksum", format!("{checksum:#018x}"));
+        b.set("scenarios", vec![s]);
+        b
+    }
+
+    #[test]
+    fn matrix_covers_topologies_and_loads() {
+        let m = matrix(true);
+        assert_eq!(m.len(), 7);
+        for kind in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh] {
+            assert!(m.iter().any(|s| s.topology == kind));
+        }
+        assert!(m.iter().any(|s| s.injection >= 0.05), "needs a saturating point");
+        assert!(m.iter().any(|s| s.chiplets == 8), "needs a scaling point");
+        // Names are unique (baseline matching key).
+        let mut names: Vec<String> = m.iter().map(Scenario::name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), m.len());
+        // Full matrix runs longer.
+        assert!(matrix(false)[0].cycles > m[0].cycles);
+    }
+
+    #[test]
+    fn scenario_configs_validate() {
+        for s in matrix(true) {
+            s.config(1).unwrap();
+        }
+    }
+
+    #[test]
+    fn run_scenario_is_deterministic_and_scored() {
+        let r = run_scenario(&tiny(), 2, 42).unwrap();
+        assert!(r.median_cps > 0.0);
+        assert!(r.delivered > 0);
+        // Same scenario, same seed: identical digest.
+        let r2 = run_scenario(&tiny(), 1, 42).unwrap();
+        assert_eq!(r.checksum, r2.checksum);
+        assert_eq!(r.delivered, r2.delivered);
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let cur = result("mesh/c4/inj0.002", 95.0, 7);
+        let report = report_with(vec![cur]);
+        // Baseline normalized 1.0; current 95/100 = 0.95 → within 15%.
+        let gate = compare(&baseline_with("mesh/c4/inj0.002", 1.0, 7), &report);
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+        assert!(gate.table.contains("ok"));
+    }
+
+    #[test]
+    fn gate_fails_on_regression() {
+        let cur = result("mesh/c4/inj0.002", 50.0, 7);
+        let report = report_with(vec![cur]);
+        let gate = compare(&baseline_with("mesh/c4/inj0.002", 1.0, 7), &report);
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("below"), "{}", gate.failures[0]);
+        assert!(gate.table.contains("REGRESSION"));
+    }
+
+    #[test]
+    fn gate_fails_on_checksum_drift() {
+        let cur = result("mesh/c4/inj0.002", 100.0, 8);
+        let report = report_with(vec![cur]);
+        let gate = compare(&baseline_with("mesh/c4/inj0.002", 1.0, 7), &report);
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("checksum"), "{}", gate.failures[0]);
+    }
+
+    #[test]
+    fn gate_fails_on_missing_scenario() {
+        let report = report_with(vec![result("torus/c4/inj0.002", 100.0, 7)]);
+        let gate = compare(&baseline_with("mesh/c4/inj0.002", 1.0, 7), &report);
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("missing"));
+    }
+
+    #[test]
+    fn gate_fails_on_malformed_baseline_entry() {
+        // A recorded baseline whose entry lost its normalized score must
+        // fail loudly instead of silently skipping the regression check.
+        let mut b = Json::obj();
+        let mut s = Json::obj();
+        s.set("name", "mesh/c4/inj0.002");
+        s.set("normalized", 0.0); // unusable
+        b.set("scenarios", vec![s]);
+        let report = report_with(vec![result("mesh/c4/inj0.002", 100.0, 7)]);
+        let gate = compare(&b, &report);
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("normalized"), "{}", gate.failures[0]);
+        assert!(gate.table.contains("MALFORMED"));
+    }
+
+    #[test]
+    fn bootstrap_baseline_reports_without_enforcing() {
+        let mut b = Json::obj();
+        b.set("bootstrap", true);
+        b.set("scenarios", Vec::<Json>::new());
+        let report = report_with(vec![result("mesh/c4/inj0.002", 100.0, 7)]);
+        let gate = compare(&b, &report);
+        assert!(gate.bootstrap);
+        assert!(gate.failures.is_empty());
+    }
+
+    #[test]
+    fn json_schema_roundtrips() {
+        let mut report = report_with(vec![result("mesh/c4/inj0.002", 100.0, 0xABCD)]);
+        report.mt.push(MtResult {
+            threads: 4,
+            total_cycles: 4000,
+            aggregate_cps: 1e6,
+        });
+        let j = to_json(&report);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed, j);
+        let s = &parsed.get("scenarios").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(
+            s.get("checksum").and_then(Json::as_str),
+            Some("0x000000000000abcd")
+        );
+        assert_eq!(s.get("normalized").and_then(Json::as_f64), Some(1.0));
+        // A freshly recorded results file doubles as a usable baseline.
+        let gate = compare(&parsed, &report);
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+    }
+
+    #[test]
+    fn calibration_is_positive() {
+        assert!(calibration_score() > 0.0);
+    }
+}

@@ -79,9 +79,12 @@ impl Gateway {
             capacity_flits,
             writer_occupancy: 0,
             assembling: None,
-            writer_queue: VecDeque::new(),
+            // Pre-sized so queue growth cannot allocate inside the cycle
+            // loop except under sustained saturation (where it amortizes):
+            // the reader is hard-bounded by its flit reservation anyway.
+            writer_queue: VecDeque::with_capacity(16),
             reader_reserved: 0,
-            reader_queue: VecDeque::new(),
+            reader_queue: VecDeque::with_capacity(8),
             epoch_packets: 0,
             total_packets: 0,
             active_cycles: 0,

@@ -81,7 +81,11 @@ impl Photonic {
         Self {
             writer_busy_until: vec![vec![0; channels]; gateways],
             writer_stall_until: vec![0; gateways],
-            in_flight: BinaryHeap::new(),
+            // A lane serializes one packet at a time and arrival trails the
+            // serializer by at most head-time + propagation, so concurrent
+            // in-flight transfers are bounded by ~2 per lane: pre-sizing to
+            // that bound keeps the cycle loop allocation-free at any load.
+            in_flight: BinaryHeap::with_capacity(2 * gateways * channels),
             seqno: 0,
             bits_per_cycle_per_lambda,
             transfers: 0,
@@ -153,9 +157,11 @@ impl Photonic {
         arrive
     }
 
-    /// Pop every transfer that lands at or before `now`.
-    pub fn arrivals(&mut self, now: Cycle) -> Vec<(PacketId, GatewayId)> {
-        let mut out = Vec::new();
+    /// Pop every transfer that lands at or before `now` into `out`
+    /// (cleared first). The caller owns and reuses `out`, keeping the
+    /// per-cycle loop allocation-free.
+    pub fn arrivals_into(&mut self, now: Cycle, out: &mut Vec<(PacketId, GatewayId)>) {
+        out.clear();
         while let Some(Reverse(head)) = self.in_flight.peek() {
             if head.arrive > now {
                 break;
@@ -163,6 +169,13 @@ impl Photonic {
             let Reverse(f) = self.in_flight.pop().unwrap();
             out.push((f.packet, f.dst));
         }
+    }
+
+    /// Pop every transfer that lands at or before `now` (allocating
+    /// convenience wrapper over [`Photonic::arrivals_into`]).
+    pub fn arrivals(&mut self, now: Cycle) -> Vec<(PacketId, GatewayId)> {
+        let mut out = Vec::new();
+        self.arrivals_into(now, &mut out);
         out
     }
 
@@ -256,6 +269,20 @@ mod tests {
         let arrive = 22 + PROPAGATION_CYCLES;
         assert_eq!(p.arrivals(arrive).len(), 17);
         assert!(p.writer_free(w, 22));
+    }
+
+    #[test]
+    fn arrivals_into_reuses_buffer() {
+        let mut p = phy();
+        let mut buf = Vec::new();
+        let a = p.start(GatewayId(0), GatewayId(1), PacketId(1), 256, 8, 4, 0);
+        p.arrivals_into(a - 1, &mut buf);
+        assert!(buf.is_empty());
+        p.arrivals_into(a, &mut buf);
+        assert_eq!(buf, vec![(PacketId(1), GatewayId(1))]);
+        // Cleared on the next call even when nothing lands.
+        p.arrivals_into(a + 1, &mut buf);
+        assert!(buf.is_empty());
     }
 
     #[test]

@@ -27,6 +27,15 @@
 //! loop pays no dynamic dispatch. See the `topology` module docs for how
 //! to add a new fabric.
 //!
+//! ## Performance
+//!
+//! The cycle engine is an allocation-free **active-list core**: dense
+//! worklists carry the busy routers and pending sources, so idle cycles
+//! cost O(active) instead of O(routers) (see `sim::network` module docs
+//! for the invariants). `resipi bench` runs the committed performance
+//! matrix and `.github/workflows/ci.yml` gates regressions against
+//! `BENCH_baseline.json` (README "Benchmarking & performance gates").
+//!
 //! ```no_run
 //! use resipi::prelude::*;
 //!

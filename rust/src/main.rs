@@ -26,7 +26,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use resipi::config::{Architecture, Config};
-use resipi::experiments::{ablations, fig10, fig11, fig12, fig13, output_dir, scaling, table2};
+use resipi::experiments::{ablations, fig10, fig11, fig12, fig13, output_dir, perf, scaling, table2};
 use resipi::power::controller_area::ControllerParams;
 use resipi::runtime::{best_power_model, BatchPowerModel, ARTIFACT_GATEWAYS};
 use resipi::sim::{Geometry, Network};
@@ -175,6 +175,39 @@ const COMMANDS: &[Cmd] = &[
         args: "",
         summary: "batched HLO power-model design-space sweep",
         flags: &[],
+    },
+    Cmd {
+        name: "bench",
+        args: "",
+        summary: "performance matrix -> BENCH_results.json, with CI regression gate",
+        flags: &[
+            Flag {
+                name: "quick",
+                value: None,
+                help: "CI-sized matrix (shorter horizon, fewer iterations)",
+            },
+            Flag {
+                name: "iters",
+                value: Some("K"),
+                help: "timed iterations per scenario (default 5, 3 with --quick)",
+            },
+            Flag {
+                name: "threads",
+                value: Some("N"),
+                help: "workers for the pooled matrix (default RESIPI_THREADS/auto)",
+            },
+            Flag {
+                name: "out",
+                value: Some("FILE"),
+                help: "results JSON path (default BENCH_results.json)",
+            },
+            Flag {
+                name: "check",
+                value: Some("FILE"),
+                help: "baseline JSON to gate against (>15% median regression or checksum drift fails)",
+            },
+            SEED,
+        ],
     },
     Cmd {
         name: "all",
@@ -364,6 +397,7 @@ fn main() -> ExitCode {
         "ablate" => cmd_ablate(&args),
         "scale" => cmd_scale(&args),
         "sweep" => cmd_sweep(),
+        "bench" => cmd_bench(&args),
         "all" => cmd_all(&args),
         _ => unreachable!("command table covers every dispatch arm"),
     };
@@ -594,6 +628,56 @@ fn cmd_sweep() -> Result<()> {
             "{:<16} {:<10.1} {:<9.1} {:<9.1} {:<9.1} {:<9.1}",
             label, r[0], r[1], r[2], r[3], r[4]
         );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let quick = args.flags.contains_key("quick");
+    let default_iters = if quick { 3 } else { 5 };
+    let iters = args
+        .get_u64("iters", default_iters)
+        .map_err(resipi::Error::config)? as usize;
+    if iters == 0 {
+        return Err(resipi::Error::config("--iters must be >= 1"));
+    }
+    let threads = args
+        .get_u64("threads", resipi::util::pool::default_threads() as u64)
+        .map_err(resipi::Error::config)? as usize;
+    let seed = args.get_u64("seed", 0xBE7C).map_err(resipi::Error::config)?;
+    println!(
+        "== resipi bench ({} matrix, {iters} iter(s)/scenario, seed {seed:#x}) ==",
+        if quick { "quick" } else { "full" }
+    );
+    let report = perf::run(quick, iters, threads.max(1), seed)?;
+    print!("{}", perf::report_table(&report));
+
+    let out = args.get_str("out", "BENCH_results.json");
+    perf::to_json(&report).write(std::path::Path::new(&out))?;
+    println!("wrote {out}");
+
+    if let Some(baseline_path) = args.flags.get("check") {
+        let text = std::fs::read_to_string(baseline_path)?;
+        let baseline = resipi::util::io::Json::parse(&text)?;
+        let gate = perf::compare(&baseline, &report);
+        print!("{}", gate.table);
+        if gate.bootstrap {
+            println!("baseline {baseline_path} is a bootstrap placeholder — gate not enforced.");
+            println!("refresh it with: resipi bench --quick --out {baseline_path} (then commit)");
+        } else if gate.failures.is_empty() {
+            println!(
+                "gate OK: every scenario within {:.0}% of baseline, checksums match",
+                perf::REGRESSION_TOLERANCE * 100.0
+            );
+        } else {
+            for f in &gate.failures {
+                eprintln!("FAIL: {f}");
+            }
+            return Err(resipi::Error::invariant(format!(
+                "bench gate failed: {} problem(s) vs {baseline_path}",
+                gate.failures.len()
+            )));
+        }
     }
     Ok(())
 }

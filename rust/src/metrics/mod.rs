@@ -229,6 +229,38 @@ impl Metrics {
         }
         self.delivered as f64 / self.created as f64
     }
+
+    /// Pre-size the epoch series so `close_epoch` inside the cycle loop
+    /// never allocates (the counting-allocator test depends on this).
+    pub fn reserve_epochs(&mut self, epochs: usize) {
+        self.epochs.reserve(epochs);
+    }
+
+    /// Deterministic digest of the end-of-run measurement: packet counts,
+    /// the full latency histogram, and the latency/energy accumulators'
+    /// exact bit patterns (FNV-1a). Two runs with the same seed and config
+    /// must produce the same checksum — `resipi bench` records it and the
+    /// CI gate fails on a mismatch, catching accidental behavior changes
+    /// that a pure throughput gate would miss.
+    pub fn checksum(&self) -> u64 {
+        #[inline]
+        fn mix(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+        }
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        h = mix(h, self.created);
+        h = mix(h, self.delivered);
+        h = mix(h, self.inter_chiplet);
+        for &c in self.latency_hist.counts() {
+            h = mix(h, c);
+        }
+        h = mix(h, self.latency_hist.overflow());
+        h = mix(h, self.latency.mean().to_bits());
+        h = mix(h, self.total_energy_uj.to_bits());
+        h = mix(h, self.switch_energy_nj.to_bits());
+        h = mix(h, self.epochs.len() as u64);
+        h
+    }
 }
 
 #[cfg(test)]
@@ -326,6 +358,23 @@ mod tests {
         m.integrate_power(&bd(200.0), 1000, 0);
         m.finalize();
         assert!((m.energy_metric_pj() - 200.0 * 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn checksum_tracks_measured_state() {
+        let mut a = Metrics::new(0);
+        let mut b = Metrics::new(0);
+        assert_eq!(a.checksum(), b.checksum());
+        a.on_created(1);
+        a.on_delivered(1, 31, true);
+        assert_ne!(a.checksum(), b.checksum());
+        b.on_created(1);
+        b.on_delivered(1, 31, true);
+        assert_eq!(a.checksum(), b.checksum());
+        // Latency value differences show up through the histogram.
+        a.on_delivered(2, 40, false);
+        b.on_delivered(2, 41, false);
+        assert_ne!(a.checksum(), b.checksum());
     }
 
     #[test]

@@ -27,6 +27,32 @@
 //! Deadlock freedom is by construction (see `routing`); a watchdog turns
 //! any residual global stall into a loud `Error::Invariant` instead of a
 //! silent hang.
+//!
+//! ## Active-list core
+//!
+//! The per-cycle loop is *work-list driven*: idle cycles cost O(active)
+//! state touched, not O(routers). Two dense worklists carry the hot sets,
+//! with the corresponding `bool` map acting as the membership flag:
+//!
+//! * `active_routers` / `router_busy` — routers holding ≥ 1 buffered flit;
+//! * `active_sources` / `src_busy` — cores with a nonempty source queue.
+//!
+//! Invariants (checked by the `active_lists_match_busy_flags` test):
+//!
+//! 1. Between cycles, `router_busy[r]` ⟺ `routers[r]` is non-idle ⟺ `r`
+//!    appears in `active_routers` exactly once (same for sources); a
+//!    router/source is *woken* (flag set + pushed) at every flit/packet
+//!    admission and *retired* only by the step that drained it.
+//! 2. `step_routers` scans a sorted snapshot of the list, so arbitration
+//!    and downstream-readiness observe routers in ascending id order —
+//!    bit-identical to the dense `0..n` sweep it replaced.
+//! 3. The steady-state cycle loop performs **zero heap allocations**: all
+//!    per-cycle and per-epoch collections live in reusable scratch buffers
+//!    on `Network` (`moves_buf`, `traffic_buf`, `arrivals_buf`,
+//!    `op_mask_buf`, `epoch_counts_buf`, `epoch_packets_buf`,
+//!    `slots_buf`), enforced by the counting-allocator test in
+//!    `tests/alloc_free.rs`. Keep it that way: any new per-cycle state
+//!    belongs in a scratch buffer on `Network`, not in a local `Vec`.
 
 use std::collections::VecDeque;
 
@@ -163,11 +189,19 @@ pub struct Network {
     route_lut: RouteTable,
     /// Neighbor router index per (router, port), precomputed.
     neighbor_table: Vec<[Option<u32>; NUM_PORTS]>,
-    /// Dense router-busy map: the per-cycle loop scans these 64 bytes
-    /// instead of striding over 400-byte Router structs.
+    /// Router-busy membership flags for `active_routers` (see module docs:
+    /// flag ⟺ the router holds buffered flits ⟺ it is on the worklist).
     router_busy: Vec<bool>,
-    /// Dense source-queue-nonempty map (same trick for injection).
+    /// Dense worklist of busy routers; idle cycles never touch the rest.
+    active_routers: Vec<u32>,
+    /// Reusable snapshot buffer scanned (sorted) by `step_routers`.
+    router_scan_buf: Vec<u32>,
+    /// Source-queue-nonempty membership flags for `active_sources`.
     src_busy: Vec<bool>,
+    /// Dense worklist of cores with pending packets.
+    active_sources: Vec<u32>,
+    /// Reusable snapshot buffer scanned (sorted) by `step_source_injection`.
+    src_scan_buf: Vec<u32>,
     /// Flits forwarded per router (residency denominator, Fig. 13).
     flits_forwarded: Vec<u64>,
     gateways: Vec<Gateway>,
@@ -207,6 +241,16 @@ pub struct Network {
     traffic_buf: Vec<NewPacket>,
     /// Reusable per-router move buffer (keeps the hot loop allocation-free).
     moves_buf: Vec<crate::sim::router::Move>,
+    /// Reusable buffer for photonic arrivals landing this cycle.
+    arrivals_buf: Vec<(PacketId, GatewayId)>,
+    /// Scratch for the global operational mask handed to the InC.
+    op_mask_buf: Vec<bool>,
+    /// Scratch for per-chiplet per-slot epoch packet counts (Eq. 5 input).
+    epoch_counts_buf: Vec<u64>,
+    /// Scratch for the LGC/PROWAVES per-slot packet counts.
+    epoch_packets_buf: Vec<usize>,
+    /// Scratch for vicinity-map rebuild slot masks.
+    slots_buf: Vec<bool>,
 }
 
 impl Network {
@@ -333,20 +377,35 @@ impl Network {
             cfg.photonics.bits_per_cycle_per_wavelength(),
             mode.channels,
         );
-        let metrics = Metrics::new(cfg.sim.warmup_cycles);
+        let mut metrics = Metrics::new(cfg.sim.warmup_cycles);
+        // Pre-size the epoch series so closing an epoch never allocates
+        // inside the cycle loop (run_for can extend past sim.cycles; the
+        // reserve is a fast-path hint, not a bound).
+        metrics.reserve_epochs((cfg.sim.cycles / cfg.controller.epoch_cycles) as usize + 2);
 
+        let gw_slots = geo.gw_per_chiplet;
+        let n_cores = geo.total_cores();
+        // Pre-size the packet slab: the arena only allocates on a new
+        // live-packet high-water mark, so a head start keeps the cycle
+        // loop allocation-free from early on.
+        let mut arena = PacketArena::new();
+        arena.reserve(4 * n_routers);
         let mut net = Self {
             geo,
             mode,
             now: 0,
-            arena: PacketArena::new(),
+            arena,
             routers,
             router_gateway,
             router_pos,
             route_lut,
             neighbor_table,
             router_busy: vec![false; n_routers],
+            active_routers: Vec::with_capacity(n_routers),
+            router_scan_buf: Vec::with_capacity(n_routers),
             src_busy: vec![false; n_routers],
+            active_sources: Vec::with_capacity(n_routers),
+            src_scan_buf: Vec::with_capacity(n_routers),
             flits_forwarded: vec![0; n_routers],
             gateways,
             mem_ctrls: (0..cfg.gateways.memory_gateways)
@@ -360,7 +419,10 @@ impl Network {
             lambdas,
             traffic,
             power_model,
-            src_queues: vec![VecDeque::new(); n_routers],
+            // Small pre-sized queues: a source queue's first push must not
+            // allocate inside the cycle loop (depth > 8 only under
+            // saturation, where growth is amortized anyway).
+            src_queues: (0..n_routers).map(|_| VecDeque::with_capacity(8)).collect(),
             src_next_seq: vec![0; n_routers],
             metrics,
             epoch_index: 0,
@@ -372,8 +434,16 @@ impl Network {
             progress_counter: 0,
             watchdog_last_counter: 0,
             watchdog_last_change: 0,
-            traffic_buf: Vec::new(),
+            // Per-core traffic models emit at most one packet per core per
+            // cycle; pre-sizing to that bound keeps generation
+            // allocation-free (burstier models merely amortize growth).
+            traffic_buf: Vec::with_capacity(n_cores),
             moves_buf: Vec::with_capacity(NUM_PORTS),
+            arrivals_buf: Vec::with_capacity(n_gateways),
+            op_mask_buf: Vec::with_capacity(n_gateways),
+            epoch_counts_buf: Vec::with_capacity(n_gateways),
+            epoch_packets_buf: Vec::with_capacity(n_gateways),
+            slots_buf: Vec::with_capacity(gw_slots),
             cfg,
         };
         // Initial reconfiguration: program the κ chain and laser level.
@@ -444,21 +514,40 @@ impl Network {
         }
     }
 
-    /// Current global active mask (operational = active or draining; a
-    /// draining gateway still carries light and burns power).
-    fn operational_mask(&self) -> Vec<bool> {
-        self.gateways.iter().map(|g| g.is_operational()).collect()
+    /// Put a router on the busy worklist (no-op when already there).
+    /// Callers do this at every flit admission so the worklist membership
+    /// stays exactly "holds buffered flits".
+    #[inline]
+    fn wake_router(&mut self, r: usize) {
+        if !self.router_busy[r] {
+            self.router_busy[r] = true;
+            self.active_routers.push(r as u32);
+        }
+    }
+
+    /// Put a core's source queue on the pending worklist (no-op when
+    /// already there).
+    #[inline]
+    fn wake_source(&mut self, core: usize) {
+        if !self.src_busy[core] {
+            self.src_busy[core] = true;
+            self.active_sources.push(core as u32);
+        }
     }
 
     /// Retune PCMCs + laser for the current state; integrates the energy of
-    /// the segment that just ended.
+    /// the segment that just ended. The global operational mask (operational
+    /// = active or draining; a draining gateway still carries light and
+    /// burns power) is built in a reusable scratch buffer.
     fn reconfigure_inc(&mut self, now: Cycle) {
         let power = self.inc.current_power();
         self.metrics
             .integrate_power(&power, now - self.last_power_change, self.last_power_change);
         self.last_power_change = now;
 
-        let active = self.operational_mask();
+        let mut active = std::mem::take(&mut self.op_mask_buf);
+        active.clear();
+        active.extend(self.gateways.iter().map(|g| g.is_operational()));
         let rec = self.inc.reconfigure(
             &active,
             &self.lambdas,
@@ -474,6 +563,7 @@ impl Network {
                 }
             }
         }
+        self.op_mask_buf = active;
         self.metrics.on_pcmc_switches(rec.switch_energy_nj);
         self.boundary_switches += rec.pcmc_switches;
     }
@@ -481,11 +571,11 @@ impl Network {
     /// Rebuild a chiplet's vicinity map from its currently *assignable*
     /// slots (active and not draining).
     fn rebuild_vicinity(&mut self, chiplet: usize) {
-        let slots: Vec<bool> = (0..self.geo.gw_per_chiplet)
-            .map(|k| {
-                self.gateways[self.geo.chiplet_gateway(chiplet, k).0].accepts_new_packets()
-            })
-            .collect();
+        let mut slots = std::mem::take(&mut self.slots_buf);
+        slots.clear();
+        slots.extend((0..self.geo.gw_per_chiplet).map(|k| {
+            self.gateways[self.geo.chiplet_gateway(chiplet, k).0].accepts_new_packets()
+        }));
         if slots.iter().any(|&s| s) {
             self.vicinity[chiplet] = if self.cfg.controller.gwsel_naive {
                 VicinityMap::build_naive(&self.geo, chiplet, &slots)
@@ -493,20 +583,27 @@ impl Network {
                 VicinityMap::build(&self.geo, chiplet, &slots)
             };
         }
+        self.slots_buf = slots;
     }
 
     fn epoch_boundary(&mut self, now: Cycle) {
         let epoch_cycles = now - self.epoch_start;
         // Gather per-slot packet counts and close the epoch record first
-        // (it describes the interval that just ended).
+        // (it describes the interval that just ended). The collections are
+        // scratch buffers on `Network`: epoch boundaries sit inside the
+        // cycle loop and must not allocate.
+        let mut counts = std::mem::take(&mut self.epoch_counts_buf);
         let mut load_sum = 0.0;
         for c in 0..self.geo.chiplets {
-            let counts: Vec<u64> = (0..self.geo.gw_per_chiplet)
-                .filter(|&k| self.gateways[self.geo.chiplet_gateway(c, k).0].is_active())
-                .map(|k| self.gateways[self.geo.chiplet_gateway(c, k).0].epoch_packets())
-                .collect();
+            counts.clear();
+            counts.extend(
+                (0..self.geo.gw_per_chiplet)
+                    .filter(|&k| self.gateways[self.geo.chiplet_gateway(c, k).0].is_active())
+                    .map(|k| self.gateways[self.geo.chiplet_gateway(c, k).0].epoch_packets()),
+            );
             load_sum += crate::coordinator::average_load(&counts, epoch_cycles);
         }
+        self.epoch_counts_buf = counts;
         let avg_load = load_sum / self.geo.chiplets as f64;
         let total_lambdas: usize = self
             .gateways
@@ -530,12 +627,14 @@ impl Network {
         self.epoch_start = now;
 
         let mut need_reconfig = false;
+        let mut packets = std::mem::take(&mut self.epoch_packets_buf);
 
         if self.mode.dynamic_gateways {
             for c in 0..self.geo.chiplets {
-                let packets: Vec<usize> = (0..self.geo.gw_per_chiplet)
-                    .map(|k| self.gateways[self.geo.chiplet_gateway(c, k).0].epoch_packets() as usize)
-                    .collect();
+                packets.clear();
+                packets.extend((0..self.geo.gw_per_chiplet).map(|k| {
+                    self.gateways[self.geo.chiplet_gateway(c, k).0].epoch_packets() as usize
+                }));
                 match self.lgcs[c].epoch_update(&packets, epoch_cycles) {
                     LgcAction::Activate(slot) => {
                         // Fig. 7: raise laser (reconfigure below), then the
@@ -558,16 +657,14 @@ impl Network {
         }
 
         if let Some(ctrl) = &mut self.prowaves {
-            let packets: Vec<usize> = self
-                .gateways
-                .iter()
-                .map(|g| g.epoch_packets() as usize)
-                .collect();
+            packets.clear();
+            packets.extend(self.gateways.iter().map(|g| g.epoch_packets() as usize));
             if ctrl.epoch_update(&packets, epoch_cycles) {
-                self.lambdas = ctrl.lambdas().to_vec();
+                self.lambdas.copy_from_slice(ctrl.lambdas());
                 need_reconfig = true;
             }
         }
+        self.epoch_packets_buf = packets;
 
         if need_reconfig {
             self.reconfigure_inc(now);
@@ -603,7 +700,7 @@ impl Network {
         });
         let core = self.geo.core_router(src_chiplet, src_coord).0;
         self.src_queues[core].push_back(id);
-        self.src_busy[core] = true;
+        self.wake_source(core);
         self.metrics.on_created(now);
     }
 
@@ -668,6 +765,10 @@ impl Network {
             if !self.gateways[w].is_operational() {
                 continue;
             }
+            // Idle fast-path: nothing queued for serialization.
+            if self.gateways[w].writer_queued() == 0 {
+                continue;
+            }
             let wid = GatewayId(w);
             // A writer may start one transfer per free serializer lane per
             // cycle (1 for WDM designs; N−1 for AWGR). Bounded VOQ
@@ -715,15 +816,21 @@ impl Network {
     }
 
     fn step_routers(&mut self, now: Cycle) {
-        let n = self.routers.len();
         let rpc = self.geo.routers_per_chiplet();
         let gw_per_chiplet = self.geo.gw_per_chiplet;
         let mut moves = std::mem::take(&mut self.moves_buf);
-        for r in 0..n {
-            // Idle fast-path: most routers hold no flits most cycles.
-            if !self.router_busy[r] {
-                continue;
-            }
+        // Snapshot the busy worklist; routers woken *during* this scan hold
+        // only flits stamped `moved_at == now`, which cannot move until the
+        // next cycle, so deferring them to the next scan is exact. Sorting
+        // restores ascending-id order, keeping arbitration and readiness
+        // observations bit-identical to the dense sweep this replaced.
+        let mut scan = std::mem::take(&mut self.router_scan_buf);
+        scan.clear();
+        scan.append(&mut self.active_routers);
+        scan.sort_unstable();
+        for &r32 in &scan {
+            let r = r32 as usize;
+            debug_assert!(self.router_busy[r], "worklist entry lost its flag");
             let (chiplet, _coord) = self.router_pos[r];
             let local = r - chiplet * rpc;
             let hosted_gw = self.router_gateway[r];
@@ -777,13 +884,20 @@ impl Network {
                             .expect("ready mesh move must have a neighbor")
                             as usize;
                         self.routers[nid].accept(dir.opposite(), flit, now);
-                        self.router_busy[nid] = true;
+                        self.wake_router(nid);
                     }
                 }
             }
-            self.router_busy[r] = !self.routers[r].is_idle();
+            if self.routers[r].is_idle() {
+                self.router_busy[r] = false;
+            } else {
+                // Still holding flits: stay on the worklist. The flag is
+                // still set, so a same-cycle wake cannot double-insert.
+                self.active_routers.push(r32);
+            }
         }
         self.moves_buf = moves;
+        self.router_scan_buf = scan;
     }
 
     fn step_reader_injection(&mut self, now: Cycle) {
@@ -801,7 +915,7 @@ impl Network {
                 if self.routers[router.0].can_accept(Port::Gateway) {
                     let flit = self.arena.flit(pkt, seq, now);
                     self.routers[router.0].accept(Port::Gateway, flit, now);
-                    self.router_busy[router.0] = true;
+                    self.wake_router(router.0);
                     self.gateways[gid.0].reader_advance(flits);
                     self.progress_counter += 1;
                 }
@@ -811,15 +925,23 @@ impl Network {
 
     fn step_source_injection(&mut self, now: Cycle) {
         let flits = self.cfg.packet.flits_per_packet as u8;
-        for core in 0..self.src_queues.len() {
-            if !self.src_busy[core] {
-                continue;
-            }
+        // Snapshot the pending-source worklist (traffic for this cycle was
+        // already queued in `step`, so the snapshot is complete); scan in
+        // ascending core order like the dense sweep this replaced.
+        let mut scan = std::mem::take(&mut self.src_scan_buf);
+        scan.clear();
+        scan.append(&mut self.active_sources);
+        scan.sort_unstable();
+        for &c32 in &scan {
+            let core = c32 as usize;
+            debug_assert!(self.src_busy[core], "worklist entry lost its flag");
             let Some(&pkt) = self.src_queues[core].front() else {
                 self.src_busy[core] = false;
                 continue;
             };
             if !self.routers[core].can_accept(Port::Local) {
+                // Backpressured: stay on the worklist for the next cycle.
+                self.active_sources.push(c32);
                 continue;
             }
             let seq = self.src_next_seq[core];
@@ -848,16 +970,22 @@ impl Network {
             }
             let flit = self.arena.flit(pkt, seq, now);
             self.routers[core].accept(Port::Local, flit, now);
-            self.router_busy[core] = true;
+            self.wake_router(core);
             self.progress_counter += 1;
             if seq + 1 == flits {
                 self.src_queues[core].pop_front();
                 self.src_next_seq[core] = 0;
-                self.src_busy[core] = !self.src_queues[core].is_empty();
+                if self.src_queues[core].is_empty() {
+                    self.src_busy[core] = false;
+                } else {
+                    self.active_sources.push(c32);
+                }
             } else {
                 self.src_next_seq[core] = seq + 1;
+                self.active_sources.push(c32);
             }
         }
+        self.src_scan_buf = scan;
     }
 
     fn step_drains(&mut self, now: Cycle) {
@@ -915,11 +1043,13 @@ impl Network {
         }
         self.traffic_buf = buf;
 
-        let arrivals = self.phy.arrivals(now);
-        for (pkt, dst) in arrivals {
+        let mut arrivals = std::mem::take(&mut self.arrivals_buf);
+        self.phy.arrivals_into(now, &mut arrivals);
+        for &(pkt, dst) in &arrivals {
             self.gateways[dst.0].reader_deliver(pkt);
             self.progress_counter += 1;
         }
+        self.arrivals_buf = arrivals;
 
         self.step_memory_controllers(now);
         self.step_serializers(now);
@@ -928,10 +1058,9 @@ impl Network {
         self.step_source_injection(now);
         self.step_drains(now);
 
-        for (r, &busy) in self.routers.iter_mut().zip(&self.router_busy) {
-            if busy {
-                r.tick_occupancy();
-            }
+        // Occupancy only accrues on busy routers — touch exactly those.
+        for &r in &self.active_routers {
+            self.routers[r as usize].tick_occupancy();
         }
         for g in &mut self.gateways {
             g.tick();
@@ -1209,6 +1338,48 @@ mod tests {
             torus < mesh,
             "torus ({torus:.2} cy) should beat mesh ({mesh:.2} cy)"
         );
+    }
+
+    #[test]
+    fn active_lists_match_busy_flags() {
+        // The module-doc invariants: between cycles, the worklists hold
+        // exactly the busy routers / nonempty sources, once each.
+        let cfg = quick_cfg(Architecture::Resipi);
+        let geo = Geometry::from_config(&cfg);
+        let traffic = Box::new(UniformTraffic::new(geo, 0.004, 99));
+        let mut net = Network::new(cfg, traffic).unwrap();
+        for step in 0..30_000u64 {
+            net.step().unwrap();
+            if step % 977 != 0 {
+                continue;
+            }
+            let mut active = net.active_routers.clone();
+            active.sort_unstable();
+            let from_flags: Vec<u32> = (0..net.routers.len() as u32)
+                .filter(|&r| net.router_busy[r as usize])
+                .collect();
+            assert_eq!(active, from_flags, "router worklist diverged at cycle {step}");
+            for (r, router) in net.routers.iter().enumerate() {
+                assert_eq!(
+                    net.router_busy[r],
+                    !router.is_idle(),
+                    "router {r} flag out of sync at cycle {step}"
+                );
+            }
+            let mut pending = net.active_sources.clone();
+            pending.sort_unstable();
+            let src_flags: Vec<u32> = (0..net.src_queues.len() as u32)
+                .filter(|&c| net.src_busy[c as usize])
+                .collect();
+            assert_eq!(pending, src_flags, "source worklist diverged at cycle {step}");
+            for (c, q) in net.src_queues.iter().enumerate() {
+                assert_eq!(
+                    net.src_busy[c],
+                    !q.is_empty(),
+                    "source {c} flag out of sync at cycle {step}"
+                );
+            }
+        }
     }
 
     #[test]

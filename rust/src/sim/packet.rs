@@ -83,6 +83,15 @@ impl PacketArena {
         Self::default()
     }
 
+    /// Pre-size the slab for `additional` more live packets: allocation
+    /// inside the cycle loop only happens when the live-packet count sets
+    /// a new high-water mark, so reserving ahead keeps the steady-state
+    /// loop allocation-free from the first cycle.
+    pub fn reserve(&mut self, additional: usize) {
+        self.slots.reserve(additional);
+        self.free.reserve(additional);
+    }
+
     pub fn alloc(&mut self, pkt: Packet) -> PacketId {
         self.live += 1;
         self.allocated_total += 1;
@@ -172,6 +181,19 @@ mod tests {
             src_gateway: None,
             dst_gateway: None,
         }
+    }
+
+    #[test]
+    fn reserve_prevents_growth_allocations() {
+        let mut arena = PacketArena::new();
+        arena.reserve(64);
+        let before = arena.slots.capacity();
+        let ids: Vec<PacketId> = (0..64).map(|i| arena.alloc(mk_packet(i))).collect();
+        assert_eq!(arena.slots.capacity(), before, "reserved slab must not regrow");
+        for id in ids {
+            arena.release(id);
+        }
+        assert_eq!(arena.live(), 0);
     }
 
     #[test]

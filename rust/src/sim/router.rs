@@ -110,8 +110,11 @@ impl Router {
         self.inputs.len()
     }
 
-    /// No flits buffered anywhere — the per-cycle loop can skip this
-    /// router entirely.
+    /// No flits buffered anywhere. This is the retirement predicate of the
+    /// network's active-router worklist (`sim::network` module docs): a
+    /// router leaves the worklist exactly when this turns true after its
+    /// moves commit, and rejoins via `accept`, so `is_idle` must stay an
+    /// O(1) function of the incrementally-maintained `buffered` count.
     #[inline]
     pub fn is_idle(&self) -> bool {
         self.buffered == 0

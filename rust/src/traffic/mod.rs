@@ -8,6 +8,9 @@
 pub mod parsec;
 pub mod trace;
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::sim::ids::{Coord, Geometry, Node};
 use crate::sim::packet::{Cycle, MsgClass};
 use crate::util::rng::Pcg32;
@@ -34,11 +37,18 @@ pub trait Traffic {
 
 /// Uniform-random synthetic traffic: every core injects at `rate`
 /// packets/cycle toward uniformly random *other* cores.
+///
+/// Injections are event-driven: a min-heap of `(next fire cycle, core)`
+/// replaces the per-cycle all-core scan, so an idle cycle costs O(1) and a
+/// firing cycle O(log cores). Ties pop in ascending core order and each
+/// firing draws the shared RNG in the same order as the dense sweep it
+/// replaced, so the emitted packet stream is identical (when polled every
+/// cycle, as the simulator does). The heap holds exactly one entry per
+/// core, so steady-state generation never allocates.
 pub struct UniformTraffic {
     geo: Geometry,
     rate: f64,
-    /// Per-core next injection cycle (geometric inter-arrival).
-    next_fire: Vec<Cycle>,
+    pending: BinaryHeap<Reverse<(Cycle, u32)>>,
     rng: Pcg32,
     name: String,
 }
@@ -47,13 +57,16 @@ impl UniformTraffic {
     pub fn new(geo: Geometry, rate: f64, seed: u64) -> Self {
         let n = geo.total_cores();
         let mut rng = Pcg32::new(seed, 0x00F0);
-        let next_fire = (0..n)
-            .map(|_| if rate > 0.0 { rng.geometric(rate) } else { u64::MAX })
-            .collect();
+        let mut pending = BinaryHeap::with_capacity(n);
+        if rate > 0.0 {
+            for i in 0..n {
+                pending.push(Reverse((rng.geometric(rate), i as u32)));
+            }
+        }
         Self {
             geo,
             rate,
-            next_fire,
+            pending,
             rng,
             name: format!("uniform-{rate}"),
         }
@@ -72,10 +85,12 @@ impl UniformTraffic {
 impl Traffic for UniformTraffic {
     fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
         let n = self.geo.total_cores();
-        for i in 0..n {
-            if self.next_fire[i] > now {
-                continue;
+        while let Some(&Reverse((t, core))) = self.pending.peek() {
+            if t > now {
+                break;
             }
+            self.pending.pop();
+            let i = core as usize;
             // Uniform destination over other cores.
             let mut dst = self.rng.gen_range_usize(0, n - 1);
             if dst >= i {
@@ -86,7 +101,9 @@ impl Traffic for UniformTraffic {
                 dst: self.core_node(dst),
                 class: MsgClass::Request,
             });
-            self.next_fire[i] = now + self.rng.geometric(self.rate);
+            // `geometric` returns ≥ 1, so a re-armed core cannot pop twice
+            // in one cycle.
+            self.pending.push(Reverse((now + self.rng.geometric(self.rate), core)));
         }
     }
 
@@ -100,7 +117,8 @@ impl Traffic for UniformTraffic {
 pub struct TransposeTraffic {
     geo: Geometry,
     rate: f64,
-    next_fire: Vec<Cycle>,
+    /// Event heap, as in [`UniformTraffic`]: O(1) idle cycles.
+    pending: BinaryHeap<Reverse<(Cycle, u32)>>,
     rng: Pcg32,
     name: String,
 }
@@ -109,13 +127,16 @@ impl TransposeTraffic {
     pub fn new(geo: Geometry, rate: f64, seed: u64) -> Self {
         let n = geo.total_cores();
         let mut rng = Pcg32::new(seed, 0x71A9);
-        let next_fire = (0..n)
-            .map(|_| if rate > 0.0 { rng.geometric(rate) } else { u64::MAX })
-            .collect();
+        let mut pending = BinaryHeap::with_capacity(n);
+        if rate > 0.0 {
+            for i in 0..n {
+                pending.push(Reverse((rng.geometric(rate), i as u32)));
+            }
+        }
         Self {
             geo,
             rate,
-            next_fire,
+            pending,
             rng,
             name: format!("transpose-{rate}"),
         }
@@ -124,12 +145,13 @@ impl TransposeTraffic {
 
 impl Traffic for TransposeTraffic {
     fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
-        let n = self.geo.total_cores();
         let cpc = self.geo.cores_per_chiplet();
-        for i in 0..n {
-            if self.next_fire[i] > now {
-                continue;
+        while let Some(&Reverse((t, core))) = self.pending.peek() {
+            if t > now {
+                break;
             }
+            self.pending.pop();
+            let i = core as usize;
             let c = i / cpc;
             let local = i % cpc;
             let Coord { x, y } = self.geo.core_coord(local);
@@ -148,7 +170,7 @@ impl Traffic for TransposeTraffic {
                     class: MsgClass::Request,
                 });
             }
-            self.next_fire[i] = now + self.rng.geometric(self.rate);
+            self.pending.push(Reverse((now + self.rng.geometric(self.rate), core)));
         }
     }
 
@@ -270,6 +292,83 @@ mod tests {
         let hot_count = pkts.iter().filter(|p| p.dst == hot).count();
         let frac = hot_count as f64 / pkts.len() as f64;
         assert!(frac > 0.4, "hot fraction {frac}");
+    }
+
+    #[test]
+    fn uniform_heap_matches_dense_reference() {
+        // Pin the event-heap rewrite to the exact packet stream of the
+        // original per-cycle all-core scan (same shared-RNG draw order).
+        let g = geo();
+        let n = g.total_cores();
+        let (rate, seed, cycles) = (0.01, 99u64, 20_000u64);
+        let core_node = |geo: &Geometry, idx: usize| Node::Core {
+            chiplet: idx / geo.cores_per_chiplet(),
+            coord: geo.core_coord(idx % geo.cores_per_chiplet()),
+        };
+        let mut rng = Pcg32::new(seed, 0x00F0);
+        let mut next_fire: Vec<Cycle> = (0..n).map(|_| rng.geometric(rate)).collect();
+        let mut expect = Vec::new();
+        for now in 0..cycles {
+            for i in 0..n {
+                if next_fire[i] > now {
+                    continue;
+                }
+                let mut dst = rng.gen_range_usize(0, n - 1);
+                if dst >= i {
+                    dst += 1;
+                }
+                expect.push(NewPacket {
+                    src: core_node(&g, i),
+                    dst: core_node(&g, dst),
+                    class: MsgClass::Request,
+                });
+                next_fire[i] = now + rng.geometric(rate);
+            }
+        }
+        let got = run(&mut UniformTraffic::new(g, rate, seed), cycles);
+        assert!(!got.is_empty());
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn transpose_heap_matches_dense_reference() {
+        // Same pinning as the uniform test: the transpose event heap must
+        // reproduce the dense scan's packet stream exactly.
+        let g = geo();
+        let n = g.total_cores();
+        let (rate, seed, cycles) = (0.01, 5u64, 20_000u64);
+        let cpc = g.cores_per_chiplet();
+        let mut rng = Pcg32::new(seed, 0x71A9);
+        let mut next_fire: Vec<Cycle> = (0..n).map(|_| rng.geometric(rate)).collect();
+        let mut expect = Vec::new();
+        for now in 0..cycles {
+            for i in 0..n {
+                if next_fire[i] > now {
+                    continue;
+                }
+                let c = i / cpc;
+                let Coord { x, y } = g.core_coord(i % cpc);
+                let src = Node::Core {
+                    chiplet: c,
+                    coord: Coord::new(x, y),
+                };
+                let dst = Node::Core {
+                    chiplet: g.chiplets - 1 - c,
+                    coord: Coord::new(y, x),
+                };
+                if src != dst {
+                    expect.push(NewPacket {
+                        src,
+                        dst,
+                        class: MsgClass::Request,
+                    });
+                }
+                next_fire[i] = now + rng.geometric(rate);
+            }
+        }
+        let got = run(&mut TransposeTraffic::new(g, rate, seed), cycles);
+        assert!(!got.is_empty());
+        assert_eq!(got, expect);
     }
 
     #[test]

@@ -12,6 +12,9 @@ pub struct Measurement {
     pub name: String,
     pub iters: u32,
     pub mean_s: f64,
+    /// Median of the timed samples — what `resipi bench` baselines gate
+    /// on (robust to a single noisy iteration on shared CI runners).
+    pub median_s: f64,
     pub stddev_s: f64,
     /// Optional work units per iteration (e.g. simulated cycles) for
     /// throughput reporting.
@@ -27,8 +30,9 @@ impl Measurement {
             self.name, val, sd, self.iters
         );
         if let Some(u) = self.units_per_iter {
-            let rate = u / self.mean_s;
-            line.push_str(&format!("  [{:.2} Munits/s]", rate / 1e6));
+            // Throughput from the median sample: stable under CI noise.
+            let rate = u / self.median_s;
+            line.push_str(&format!("  [{:.2} Munits/s median]", rate / 1e6));
         }
         line
     }
@@ -87,10 +91,12 @@ impl Bench {
         } else {
             0.0
         };
+        let median = crate::util::stats::median(&mut samples);
         let m = Measurement {
             name: name.to_string(),
             iters: self.iters,
             mean_s: mean,
+            median_s: median,
             stddev_s: var.sqrt(),
             units_per_iter,
         };
@@ -124,6 +130,7 @@ mod tests {
         });
         let m = b.get("spin").unwrap();
         assert!(m.mean_s > 0.0);
+        assert!(m.median_s > 0.0);
         assert_eq!(m.iters, 3);
         assert!(m.report().contains("spin"));
         assert!(b.get("missing").is_none());

@@ -9,6 +9,8 @@ use std::fmt::Write as _;
 use std::io::Write as _;
 use std::path::Path;
 
+use crate::error::{Error, Result};
+
 /// A simple CSV table builder.
 #[derive(Debug, Default, Clone)]
 pub struct Csv {
@@ -126,6 +128,48 @@ impl Json {
         }
     }
 
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document (the RFC 8259 subset this writer emits:
+    /// objects, arrays, strings with standard escapes and BMP `\uXXXX`,
+    /// f64 numbers, booleans, null — no surrogate pairs). Used to read
+    /// committed baselines like `BENCH_baseline.json` back in.
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = JsonParser {
+            bytes: text.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(Error::config(format!(
+                "JSON: trailing data at byte {}",
+                p.pos
+            )));
+        }
+        Ok(v)
+    }
+
     fn escape_str(s: &str, out: &mut String) {
         out.push('"');
         for c in s.chars() {
@@ -215,6 +259,204 @@ impl Json {
             std::fs::create_dir_all(parent)?;
         }
         std::fs::write(path, self.to_string())
+    }
+}
+
+/// Recursive-descent parser backing [`Json::parse`].
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl JsonParser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(Error::config(format!(
+                "JSON: expected {:?} at byte {}",
+                b as char, self.pos
+            )))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(Error::config(format!(
+                "JSON: unexpected input at byte {}",
+                self.pos
+            ))),
+        }
+    }
+
+    fn literal(&mut self, word: &str, val: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(val)
+        } else {
+            Err(Error::config(format!(
+                "JSON: bad literal at byte {}",
+                self.pos
+            )))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .expect("number bytes are ASCII");
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| Error::config(format!("JSON: bad number {s:?} at byte {start}")))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        // Build as bytes: raw multi-byte UTF-8 passes through untouched
+        // (the input is a &str, so boundaries are already valid).
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let Some(b) = self.peek() else {
+                return Err(Error::config("JSON: unterminated string"));
+            };
+            self.pos += 1;
+            match b {
+                b'"' => {
+                    return Ok(String::from_utf8(out).expect("escapes produce valid UTF-8"))
+                }
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err(Error::config("JSON: unterminated escape"));
+                    };
+                    self.pos += 1;
+                    let ch = match e {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b'r' => '\r',
+                        b't' => '\t',
+                        b'b' => '\u{0008}',
+                        b'f' => '\u{000C}',
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err(Error::config("JSON: truncated \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| Error::config("JSON: non-ASCII \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16).map_err(|_| {
+                                Error::config(format!("JSON: bad \\u escape {hex:?}"))
+                            })?;
+                            self.pos += 4;
+                            char::from_u32(code).ok_or_else(|| {
+                                Error::config(format!(
+                                    "JSON: \\u{hex} is not a scalar value (surrogate pairs unsupported)"
+                                ))
+                            })?
+                        }
+                        other => {
+                            return Err(Error::config(format!(
+                                "JSON: bad escape \\{}",
+                                other as char
+                            )))
+                        }
+                    };
+                    let mut tmp = [0u8; 4];
+                    out.extend_from_slice(ch.encode_utf8(&mut tmp).as_bytes());
+                }
+                raw => out.push(raw),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => {
+                    return Err(Error::config(format!(
+                        "JSON: expected ',' or ']' at byte {}",
+                        self.pos
+                    )))
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => {
+                    return Err(Error::config(format!(
+                        "JSON: expected ',' or '}}' at byte {}",
+                        self.pos
+                    )))
+                }
+            }
+        }
     }
 }
 
@@ -317,6 +559,65 @@ mod tests {
     fn json_nan_becomes_null() {
         let j = Json::Num(f64::NAN);
         assert_eq!(j.to_string(), "null");
+    }
+
+    #[test]
+    fn json_parse_roundtrip() {
+        let mut j = Json::obj();
+        j.set("name", "resipi bench");
+        j.set("quick", true);
+        j.set("median_cps", 1234567.25);
+        j.set("checksum", "0x00ff");
+        j.set(
+            "scenarios",
+            vec![Json::Num(1.0), Json::Str("two".into()), Json::Null],
+        );
+        j.set("nested", {
+            let mut n = Json::obj();
+            n.set("esc", "a\"b\\c\nd");
+            n
+        });
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed, j);
+    }
+
+    #[test]
+    fn json_parse_accepts_plain_documents() {
+        assert_eq!(Json::parse(" 42 ").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(vec![]));
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(Json::parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+    }
+
+    #[test]
+    fn json_parse_rejects_malformed() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\":}",
+            "tru",
+            "\"unterminated",
+            "1 2",
+            "{\"a\" 1}",
+            "{\"a\": \"\\uD800\"}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn json_accessors() {
+        let mut j = Json::obj();
+        j.set("s", "x");
+        j.set("b", true);
+        j.set("a", vec![Json::Num(1.0)]);
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("x"));
+        assert_eq!(j.get("b").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("a").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+        assert!(j.get("s").and_then(Json::as_bool).is_none());
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Counting-allocator proof that the simulator's steady-state cycle loop —
+//! including epoch boundaries on a static control plane — performs zero
+//! heap allocations (the `sim::network` module-doc invariant 3).
+//!
+//! The binary installs a `#[global_allocator]` that counts allocation
+//! events made by threads that opted in (a thread-local flag), so the
+//! libtest harness threads cannot pollute the measurement. This file
+//! intentionally contains a single `#[test]`: everything measured runs
+//! sequentially under one tracked thread.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use resipi::config::{Architecture, Config};
+use resipi::sim::{Geometry, Network};
+use resipi::topology::TopologyKind;
+use resipi::traffic::UniformTraffic;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TRACKING: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Counts alloc/realloc/alloc_zeroed events from tracked threads; defers
+/// the actual work to the system allocator. The thread-local read uses
+/// `try_with` so TLS teardown can never recurse into the allocator.
+struct CountingAlloc;
+
+impl CountingAlloc {
+    #[inline]
+    fn record(&self) {
+        let tracked = TRACKING.try_with(|t| t.get()).unwrap_or(false);
+        if tracked {
+            ALLOC_EVENTS.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.record();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.record();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.record();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` with allocation tracking on; return its allocation-event count.
+fn allocations_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    TRACKING.with(|t| t.set(true));
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    let r = f();
+    let after = ALLOC_EVENTS.load(Ordering::SeqCst);
+    TRACKING.with(|t| t.set(false));
+    (after - before, r)
+}
+
+fn build(arch: Architecture, kind: TopologyKind, epoch_cycles: u64, rate: f64) -> Network {
+    let mut cfg = Config::table1(arch);
+    cfg.set_topology(kind);
+    cfg.sim.cycles = 100_000;
+    cfg.sim.warmup_cycles = 1_000;
+    cfg.controller.epoch_cycles = epoch_cycles;
+    cfg.validate().unwrap();
+    let geo = Geometry::from_config(&cfg);
+    let traffic = Box::new(UniformTraffic::new(geo, rate, 42));
+    Network::new(cfg, traffic).unwrap()
+}
+
+#[test]
+fn steady_state_cycle_loop_is_allocation_free() {
+    // Part 1 — steady-state windows (no epoch boundary): after a warm-up
+    // that lets every buffer, queue, and slab reach its high-water mark,
+    // 20 000 further cycles must not allocate once. Mesh and torus cover
+    // the two router datapaths.
+    for kind in [TopologyKind::Mesh, TopologyKind::Torus] {
+        let mut net = build(Architecture::Resipi, kind, 1_000_000, 0.002);
+        for _ in 0..60_000 {
+            net.step().unwrap();
+        }
+        let (allocs, _) = allocations_during(|| {
+            for _ in 0..20_000 {
+                net.step().unwrap();
+            }
+        });
+        assert_eq!(
+            allocs,
+            0,
+            "{}: steady-state window performed {allocs} heap allocation(s)",
+            kind.name()
+        );
+        assert!(net.metrics().delivered > 0, "window must carry real traffic");
+    }
+
+    // Part 2 — epoch boundaries included: with an all-on (static) control
+    // plane the per-epoch bookkeeping — slot/packet-count gathering,
+    // Eq. 5 load averaging, closing the epoch record — must also be
+    // allocation-free (the scratch-buffer bugfix this test pins down).
+    let mut net = build(Architecture::ResipiAllOn, TopologyKind::Mesh, 10_000, 0.002);
+    for _ in 0..45_000 {
+        net.step().unwrap();
+    }
+    let epochs_before = net.metrics().epochs.len();
+    let (allocs, _) = allocations_during(|| {
+        for _ in 0..30_000 {
+            net.step().unwrap();
+        }
+    });
+    let epochs_after = net.metrics().epochs.len();
+    assert!(
+        epochs_after >= epochs_before + 3,
+        "window must cross epoch boundaries ({epochs_before} -> {epochs_after})"
+    );
+    assert_eq!(
+        allocs, 0,
+        "epoch-crossing window performed {allocs} heap allocation(s)"
+    );
+}

@@ -1,0 +1,89 @@
+//! End-of-run determinism: the same seed must produce bit-identical
+//! metrics across consecutive runs and across worker-thread counts
+//! (`RESIPI_THREADS=1` vs `4`), for all three topologies. The worklist
+//! scheduling inside the engine and the scheduling of the experiment
+//! thread pool must never leak into simulation results.
+
+use resipi::experiments::perf::{self, Scenario, ScenarioResult};
+use resipi::topology::TopologyKind;
+use resipi::util::pool;
+
+fn scenarios() -> Vec<Scenario> {
+    [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh]
+        .into_iter()
+        .map(|kind| Scenario {
+            topology: kind,
+            injection: 0.002,
+            chiplets: 4,
+            cycles: 25_000,
+        })
+        .collect()
+}
+
+fn assert_identical(a: &ScenarioResult, b: &ScenarioResult, what: &str) {
+    assert_eq!(a.checksum, b.checksum, "{what}: {} checksum drifted", a.name);
+    assert_eq!(a.created, b.created, "{what}: {}", a.name);
+    assert_eq!(a.delivered, b.delivered, "{what}: {}", a.name);
+    // Exact bit patterns: the latency histogram checksum already pins the
+    // distribution; these pin the float accumulators too.
+    assert_eq!(
+        a.avg_latency_cycles.to_bits(),
+        b.avg_latency_cycles.to_bits(),
+        "{what}: {} latency",
+        a.name
+    );
+    assert_eq!(
+        a.total_energy_uj.to_bits(),
+        b.total_energy_uj.to_bits(),
+        "{what}: {} energy",
+        a.name
+    );
+}
+
+#[test]
+fn same_seed_identical_metrics_across_runs_and_pool_widths() {
+    let scenarios = scenarios();
+    // Two consecutive runs in the same process.
+    for s in &scenarios {
+        let a = perf::run_scenario(s, 1, 7).unwrap();
+        let b = perf::run_scenario(s, 1, 7).unwrap();
+        assert!(a.delivered > 0, "{} must carry traffic", s.name());
+        assert_identical(&a, &b, "consecutive runs");
+    }
+    // The whole matrix through the pool at 1 vs 4 workers.
+    let single = pool::par_map(1, scenarios.clone(), |s| {
+        perf::run_scenario(s, 1, 7).unwrap()
+    });
+    let pooled = pool::par_map(4, scenarios, |s| perf::run_scenario(s, 1, 7).unwrap());
+    assert_eq!(single.len(), pooled.len());
+    for (a, b) in single.iter().zip(&pooled) {
+        assert_identical(a, b, "1 vs 4 pool workers");
+    }
+}
+
+#[test]
+fn resipi_threads_env_is_honored_and_result_invariant() {
+    // `default_threads` is what `resipi bench --threads`/experiment sweeps
+    // fall back to. This is the only test in this binary touching the
+    // env var; the other test passes thread counts explicitly.
+    std::env::set_var("RESIPI_THREADS", "4");
+    assert_eq!(pool::default_threads(), 4);
+    std::env::set_var("RESIPI_THREADS", "1");
+    assert_eq!(pool::default_threads(), 1);
+    std::env::set_var("RESIPI_THREADS", "0"); // invalid: fall back
+    assert!(pool::default_threads() >= 1);
+
+    let scenarios = scenarios();
+    std::env::set_var("RESIPI_THREADS", "1");
+    let one = pool::par_map(pool::default_threads(), scenarios.clone(), |s| {
+        perf::run_scenario(s, 1, 3).unwrap()
+    });
+    std::env::set_var("RESIPI_THREADS", "4");
+    let four = pool::par_map(pool::default_threads(), scenarios, |s| {
+        perf::run_scenario(s, 1, 3).unwrap()
+    });
+    std::env::remove_var("RESIPI_THREADS");
+    for (a, b) in one.iter().zip(&four) {
+        assert_identical(a, b, "RESIPI_THREADS=1 vs 4");
+    }
+}
