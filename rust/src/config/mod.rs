@@ -9,6 +9,7 @@ pub mod parser;
 
 use crate::error::{Error, Result};
 use crate::topology::TopologyKind;
+use crate::traffic::TrafficSpec;
 use parser::ConfigMap;
 
 /// Which interposer network architecture to simulate (paper §4.1).
@@ -225,6 +226,12 @@ pub struct Config {
     pub controller: ControllerConfig,
     pub power: PowerConfig,
     pub sim: SimConfig,
+    /// Synthetic workload selection (the traffic registry). `None` means
+    /// the caller picks the workload itself (e.g. `resipi run --app`);
+    /// `Some` — set by [`Config::set_traffic`], `--traffic`, or any
+    /// `traffic.*` config key — makes the run use
+    /// [`TrafficSpec::build`].
+    pub traffic: Option<TrafficSpec>,
 }
 
 impl Config {
@@ -303,6 +310,7 @@ impl Config {
                 warmup_cycles: 10_000,
                 seed: 0xC0FFEE,
             },
+            traffic: None,
         }
     }
 
@@ -331,10 +339,23 @@ impl Config {
         }
     }
 
+    /// Select the synthetic workload (see [`TrafficSpec`]). Follow with
+    /// [`Config::validate`], which checks the spec against the topology.
+    pub fn set_traffic(&mut self, spec: TrafficSpec) {
+        self.traffic = Some(spec);
+    }
+
     /// Apply overrides from a parsed config file. Unknown keys are rejected
     /// so typos fail loudly.
     pub fn apply_overrides(&mut self, map: &ConfigMap) -> Result<()> {
         for key in map.keys() {
+            if let Some(rest) = key.strip_prefix("traffic.") {
+                // Any traffic.* key activates the traffic registry; fields
+                // not set keep their TrafficSpec defaults.
+                let spec = self.traffic.get_or_insert_with(TrafficSpec::default);
+                spec.apply_key(rest, map, key)?;
+                continue;
+            }
             match key {
                 "arch" => {
                     let name = map
@@ -541,6 +562,9 @@ impl Config {
                 )));
             }
         }
+        if let Some(spec) = &self.traffic {
+            spec.validate(t.total_cores())?;
+        }
         Ok(())
     }
 }
@@ -723,6 +747,73 @@ mod tests {
         c.apply_overrides(&map).unwrap();
         let err = c.validate().unwrap_err();
         assert!(err.to_string().contains("cmesh"), "got: {err}");
+    }
+
+    #[test]
+    fn traffic_overrides_from_file_text() {
+        use crate::traffic::TrafficKind;
+
+        // Any traffic.* key activates the registry with defaults filled in.
+        let mut c = Config::table1(Architecture::Resipi);
+        assert!(c.traffic.is_none());
+        let map = ConfigMap::parse("[traffic]\nkind = \"tornado\"\nrate = 0.02\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        let spec = c.traffic.as_ref().expect("traffic configured");
+        assert_eq!(spec.kind, TrafficKind::Tornado);
+        assert_eq!(spec.rate, 0.02);
+        c.validate().unwrap();
+
+        // Pattern-specific keys.
+        let mut c = Config::table1(Architecture::Resipi);
+        let map = ConfigMap::parse(
+            "[traffic]\nkind = \"hotspot\"\nrate = 0.01\nhot_fraction = 0.4\nhot_core = 5\n",
+        )
+        .unwrap();
+        c.apply_overrides(&map).unwrap();
+        let spec = c.traffic.as_ref().unwrap();
+        assert_eq!(spec.hot_fraction, 0.4);
+        assert_eq!(spec.hot_core, 5);
+        c.validate().unwrap();
+
+        // Phased with an explicit phase list.
+        let mut c = Config::table1(Architecture::Resipi);
+        let map = ConfigMap::parse(
+            "[traffic]\nkind = \"phased\"\nphases = [\"uniform\", \"bitcomp\"]\nphase_cycles = 5000\n",
+        )
+        .unwrap();
+        c.apply_overrides(&map).unwrap();
+        let spec = c.traffic.as_ref().unwrap();
+        assert_eq!(
+            spec.phases,
+            vec![TrafficKind::Uniform, TrafficKind::BitComplement]
+        );
+        c.validate().unwrap();
+
+        // Typos under traffic.* fail loudly.
+        let mut c = Config::table1(Architecture::Resipi);
+        let bad = ConfigMap::parse("[traffic]\nkinds = \"uniform\"\n").unwrap();
+        let err = c.apply_overrides(&bad).unwrap_err();
+        assert!(err.to_string().contains("traffic.kinds"), "got: {err}");
+
+        // Invalid parameters are caught by validate().
+        let mut c = Config::table1(Architecture::Resipi);
+        let map =
+            ConfigMap::parse("[traffic]\nkind = \"hotspot\"\nhot_fraction = 1.5\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn set_traffic_roundtrips_through_validate() {
+        use crate::traffic::{TrafficKind, TrafficSpec};
+        let mut c = Config::table1(Architecture::Resipi);
+        c.set_traffic(TrafficSpec::new(TrafficKind::Bursty, 0.01));
+        c.validate().unwrap();
+        // bitrev on a non-power-of-two system is rejected at validate().
+        let mut c = Config::table1(Architecture::Resipi);
+        c.topology.chiplets = 3;
+        c.set_traffic(TrafficSpec::new(TrafficKind::BitReversal, 0.01));
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,765 @@
+//! `resipi campaign` — the declarative scenario campaign engine.
+//!
+//! A [`CampaignSpec`] is a scenario *matrix*: architecture × topology ×
+//! chiplet count × traffic spec × injection rate × epoch length × seed
+//! replica. [`CampaignSpec::expand`] produces the cross product as
+//! [`CampaignScenario`]s; [`run_campaign`] shards them across
+//! [`crate::util::pool`] workers and streams **one JSONL record per
+//! completed scenario** to `campaign.jsonl` in the output directory.
+//!
+//! ## Resume semantics
+//!
+//! The JSONL stream doubles as the campaign's ledger: on startup the
+//! engine parses every line and skips scenarios that already have a valid
+//! record (matched by scenario name, derived seed, and horizon).
+//! Unparseable lines — e.g. the torn tail of a killed run — are counted
+//! and ignored, so a campaign interrupted at any byte boundary resumes by
+//! re-running only what is missing. The aggregate report is *always*
+//! rebuilt from the parsed JSONL records (never from in-memory results),
+//! so a resumed campaign and an uninterrupted one emit byte-identical
+//! reports.
+//!
+//! ## Seed derivation
+//!
+//! Every scenario's simulator seed is derived from the campaign root seed
+//! and the scenario's *name* (which encodes every axis value):
+//!
+//! ```text
+//! scenario_seed = SplitMix64(root_seed ^ fnv1a(name)).next()
+//! ```
+//!
+//! Because the name — not the expansion index — feeds the hash, adding or
+//! removing axis values never perturbs the seeds of unrelated scenarios,
+//! and sharding across any worker count is trivially deterministic.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::config::parser::{ConfigMap, Value};
+use crate::config::{Architecture, Config};
+use crate::error::{Error, Result};
+use crate::metrics::combine_checksums;
+use crate::sim::{Geometry, Network};
+use crate::topology::TopologyKind;
+use crate::traffic::{TrafficKind, TrafficSpec};
+use crate::util::io::{Csv, Json};
+use crate::util::pool;
+use crate::util::rng::{fnv1a_bytes, SplitMix64};
+
+/// Results-ledger schema version (`schema_version` in every record).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// The scenario matrix.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub archs: Vec<Architecture>,
+    pub topologies: Vec<TopologyKind>,
+    pub chiplets: Vec<usize>,
+    /// Traffic axis; each entry's `rate` is overridden by the rate axis.
+    pub traffics: Vec<TrafficSpec>,
+    /// Injection-rate axis (packets/cycle/core).
+    pub rates: Vec<f64>,
+    /// Reconfiguration-interval axis (cycles).
+    pub epoch_cycles: Vec<u64>,
+    /// Seed-replica axis: each index derives an independent scenario seed.
+    pub seeds: Vec<u64>,
+    /// Simulated horizon per scenario.
+    pub cycles: u64,
+    pub warmup_cycles: u64,
+    /// Root seed every scenario seed is derived from.
+    pub root_seed: u64,
+}
+
+impl CampaignSpec {
+    /// The CI-scale matrix: 2 architectures × 2 topologies × 2 chiplet
+    /// counts × 2 traffic kinds × 2 rates = 32 scenarios, short horizon.
+    pub fn quick() -> Self {
+        Self {
+            archs: vec![Architecture::Resipi, Architecture::Prowaves],
+            topologies: vec![TopologyKind::Mesh, TopologyKind::Torus],
+            chiplets: vec![2, 4],
+            traffics: vec![
+                TrafficSpec::new(TrafficKind::Uniform, 0.0),
+                TrafficSpec::new(TrafficKind::Tornado, 0.0),
+            ],
+            rates: vec![0.002, 0.01],
+            epoch_cycles: vec![2_000],
+            seeds: vec![0],
+            cycles: 6_000,
+            warmup_cycles: 500,
+            root_seed: 0xCA4A,
+        }
+    }
+
+    /// The full default matrix: every architecture, every topology, the
+    /// whole traffic catalog, light and heavy load.
+    pub fn full() -> Self {
+        Self {
+            archs: vec![
+                Architecture::Resipi,
+                Architecture::ResipiAllOn,
+                Architecture::Prowaves,
+                Architecture::Awgr,
+            ],
+            topologies: vec![TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh],
+            chiplets: vec![2, 4],
+            traffics: TrafficKind::ALL
+                .iter()
+                .map(|&k| TrafficSpec::new(k, 0.0))
+                .collect(),
+            rates: vec![0.002, 0.01],
+            epoch_cycles: vec![10_000],
+            seeds: vec![0],
+            cycles: 100_000,
+            warmup_cycles: 5_000,
+            root_seed: 0xCA4A,
+        }
+    }
+
+    /// Load a campaign file (TOML subset, `campaign.*` namespace) over the
+    /// quick preset. Scalar values are accepted where a single-element
+    /// axis is meant. Unknown keys are rejected so typos fail loudly.
+    pub fn from_config(map: &ConfigMap) -> Result<Self> {
+        let mut spec = Self::quick();
+        for key in map.keys() {
+            match key {
+                "campaign.arch" => {
+                    spec.archs = str_axis(map, key)?
+                        .iter()
+                        .map(|s| Architecture::from_name(s))
+                        .collect::<Result<_>>()?
+                }
+                "campaign.topology" => {
+                    spec.topologies = str_axis(map, key)?
+                        .iter()
+                        .map(|s| TopologyKind::from_name(s))
+                        .collect::<Result<_>>()?
+                }
+                "campaign.traffic" => {
+                    spec.traffics = str_axis(map, key)?
+                        .iter()
+                        .map(|s| TrafficSpec::parse(s))
+                        .collect::<Result<_>>()?
+                }
+                "campaign.chiplets" => {
+                    spec.chiplets = int_axis(map, key)?.iter().map(|&x| x as usize).collect()
+                }
+                "campaign.rate" => spec.rates = f64_axis(map, key)?,
+                "campaign.epoch_cycles" => spec.epoch_cycles = int_axis(map, key)?,
+                "campaign.seeds" => spec.seeds = int_axis(map, key)?,
+                "campaign.cycles" => spec.cycles = req_u64(map, key)?,
+                "campaign.warmup_cycles" => spec.warmup_cycles = req_u64(map, key)?,
+                "campaign.root_seed" => spec.root_seed = req_u64(map, key)?,
+                other => {
+                    return Err(Error::config(format!(
+                        "unknown campaign config key {other:?} (campaign files use the \
+                         campaign.* namespace)"
+                    )))
+                }
+            }
+        }
+        if spec.archs.is_empty()
+            || spec.topologies.is_empty()
+            || spec.chiplets.is_empty()
+            || spec.traffics.is_empty()
+            || spec.rates.is_empty()
+            || spec.epoch_cycles.is_empty()
+            || spec.seeds.is_empty()
+        {
+            return Err(Error::config("every campaign axis needs at least one value"));
+        }
+        Ok(spec)
+    }
+
+    /// Expand the cross product in canonical order (arch, topology,
+    /// chiplets, traffic, rate, epoch, seed — innermost last). The
+    /// aggregate report lists scenarios in exactly this order.
+    pub fn expand(&self) -> Vec<CampaignScenario> {
+        let mut out = Vec::new();
+        for &arch in &self.archs {
+            for &topology in &self.topologies {
+                for &chiplets in &self.chiplets {
+                    for traffic in &self.traffics {
+                        for &rate in &self.rates {
+                            for &epoch_cycles in &self.epoch_cycles {
+                                for &seed_index in &self.seeds {
+                                    let mut traffic = traffic.clone();
+                                    traffic.rate = rate;
+                                    out.push(CampaignScenario {
+                                        arch,
+                                        topology,
+                                        chiplets,
+                                        traffic,
+                                        epoch_cycles,
+                                        seed_index,
+                                        cycles: self.cycles,
+                                        warmup_cycles: self.warmup_cycles,
+                                        root_seed: self.root_seed,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One point of the expanded matrix.
+#[derive(Debug, Clone)]
+pub struct CampaignScenario {
+    pub arch: Architecture,
+    pub topology: TopologyKind,
+    pub chiplets: usize,
+    pub traffic: TrafficSpec,
+    pub epoch_cycles: u64,
+    pub seed_index: u64,
+    pub cycles: u64,
+    pub warmup_cycles: u64,
+    pub root_seed: u64,
+}
+
+impl CampaignScenario {
+    /// Stable identifier encoding every axis value — the JSONL ledger key.
+    pub fn name(&self) -> String {
+        format!(
+            "{}/{}/c{}/{}/e{}/s{}",
+            self.arch.name(),
+            self.topology.name(),
+            self.chiplets,
+            self.traffic.spec_string(),
+            self.epoch_cycles,
+            self.seed_index
+        )
+    }
+
+    /// The documented derivation rule: seeds depend on the scenario name,
+    /// never on the expansion order.
+    pub fn derived_seed(&self) -> u64 {
+        SplitMix64::new(self.root_seed ^ fnv1a_bytes(self.name().as_bytes())).next_u64()
+    }
+
+    /// The scenario's simulator configuration.
+    pub fn config(&self) -> Result<Config> {
+        let mut cfg = Config::table1(self.arch);
+        cfg.set_topology(self.topology);
+        cfg.topology.chiplets = self.chiplets;
+        cfg.controller.epoch_cycles = self.epoch_cycles;
+        cfg.sim.cycles = self.cycles;
+        cfg.sim.warmup_cycles = self.warmup_cycles;
+        cfg.sim.seed = self.derived_seed();
+        cfg.set_traffic(self.traffic.clone());
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Simulate the scenario and produce its JSONL record.
+    pub fn run(&self) -> Result<Json> {
+        let cfg = self.config()?;
+        let geo = Geometry::from_config(&cfg);
+        let traffic = self.traffic.build(&geo, cfg.sim.seed)?;
+        let mut net = Network::new(cfg, traffic)?;
+        net.run()?;
+        let checksum = net.metrics().checksum();
+        let s = net.summary();
+        let mut r = Json::obj();
+        r.set("schema_version", SCHEMA_VERSION);
+        r.set("name", self.name());
+        r.set("arch", self.arch.name());
+        r.set("topology", self.topology.name());
+        r.set("chiplets", self.chiplets);
+        r.set("traffic", self.traffic.spec_string());
+        r.set("rate", self.traffic.rate);
+        r.set("epoch_cycles", self.epoch_cycles);
+        r.set("seed_index", self.seed_index);
+        r.set("seed", format!("{:#018x}", self.derived_seed()));
+        r.set("cycles", self.cycles);
+        r.set("warmup_cycles", self.warmup_cycles);
+        r.set("created", s.created);
+        r.set("delivered", s.delivered);
+        r.set("delivery_ratio", s.delivery_ratio);
+        r.set("avg_latency_cycles", s.avg_latency_cycles);
+        r.set("p99_latency_cycles", s.p99_latency_cycles);
+        r.set("avg_power_mw", s.avg_power_mw);
+        r.set("total_energy_uj", s.total_energy_uj);
+        r.set("energy_metric_pj", s.energy_metric_pj);
+        r.set("avg_active_gateways", s.avg_active_gateways);
+        r.set("checksum", format!("{checksum:#018x}"));
+        Ok(r)
+    }
+
+    /// Does a parsed ledger record belong to this scenario (same name,
+    /// same derived seed, same horizon and warm-up, known schema, and a
+    /// parseable checksum)? Anything weaker re-runs rather than resumes.
+    fn matches_record(&self, record: &Json) -> bool {
+        record.get("schema_version").and_then(Json::as_f64) == Some(SCHEMA_VERSION as f64)
+            && record.get("name").and_then(Json::as_str) == Some(self.name().as_str())
+            && record.get("seed").and_then(Json::as_str)
+                == Some(format!("{:#018x}", self.derived_seed()).as_str())
+            && record.get("cycles").and_then(Json::as_f64) == Some(self.cycles as f64)
+            && record.get("warmup_cycles").and_then(Json::as_f64)
+                == Some(self.warmup_cycles as f64)
+            && record
+                .get("checksum")
+                .and_then(Json::as_str)
+                .and_then(parse_hex_u64)
+                .is_some()
+    }
+}
+
+/// Outcome of a [`run_campaign`] invocation.
+#[derive(Debug)]
+pub struct CampaignOutcome {
+    /// Expanded matrix size.
+    pub total: usize,
+    /// Scenarios simulated by this invocation.
+    pub ran: usize,
+    /// Scenarios skipped because the ledger already had a valid record.
+    pub skipped: usize,
+    /// Unparseable / foreign ledger lines ignored during resume.
+    pub ignored_lines: usize,
+    /// Campaign-level digest over scenario checksums in canonical order.
+    pub campaign_checksum: u64,
+    pub jsonl_path: PathBuf,
+    pub report_path: PathBuf,
+    pub csv_path: PathBuf,
+}
+
+impl CampaignOutcome {
+    /// Human-readable summary.
+    pub fn report(&self) -> String {
+        format!(
+            "campaign: {} scenario(s) — ran {}, resumed past {}, ignored {} ledger line(s)\n\
+             campaign checksum: {:#018x}\n\
+             ledger:   {}\n\
+             report:   {}\n\
+             csv:      {}\n",
+            self.total,
+            self.ran,
+            self.skipped,
+            self.ignored_lines,
+            self.campaign_checksum,
+            self.jsonl_path.display(),
+            self.report_path.display(),
+            self.csv_path.display()
+        )
+    }
+}
+
+/// Parsed state of the JSONL ledger.
+struct Ledger {
+    records: Vec<Json>,
+    /// Unparseable / foreign lines (e.g. the torn tail of a killed run).
+    ignored: usize,
+    /// False when a kill mid-write left the file without a trailing
+    /// newline — appending must restore the line boundary first.
+    ends_cleanly: bool,
+}
+
+/// Parse the JSONL ledger (tolerantly: bad lines are counted, not fatal).
+fn read_ledger(path: &Path) -> Result<Ledger> {
+    if !path.exists() {
+        return Ok(Ledger {
+            records: Vec::new(),
+            ignored: 0,
+            ends_cleanly: true,
+        });
+    }
+    let text = std::fs::read_to_string(path)?;
+    let mut records = Vec::new();
+    let mut ignored = 0usize;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match Json::parse(line) {
+            Ok(r) if r.get("name").and_then(Json::as_str).is_some() => records.push(r),
+            _ => ignored += 1,
+        }
+    }
+    Ok(Ledger {
+        records,
+        ignored,
+        ends_cleanly: text.is_empty() || text.ends_with('\n'),
+    })
+}
+
+/// Run (or resume) a campaign: skip scenarios already in the ledger,
+/// shard the rest over `threads` pool workers, stream JSONL records as
+/// scenarios complete, then rebuild the aggregate JSON/CSV reports from
+/// the ledger. The reports are byte-identical across worker counts and
+/// across interrupted-then-resumed runs.
+pub fn run_campaign(
+    spec: &CampaignSpec,
+    threads: usize,
+    out_dir: &Path,
+) -> Result<CampaignOutcome> {
+    std::fs::create_dir_all(out_dir)?;
+    let jsonl_path = out_dir.join("campaign.jsonl");
+    let report_path = out_dir.join("campaign_report.json");
+    let csv_path = out_dir.join("campaign_report.csv");
+
+    let scenarios = spec.expand();
+    if scenarios.is_empty() {
+        return Err(Error::config("campaign matrix expanded to zero scenarios"));
+    }
+    {
+        let mut names: Vec<String> = scenarios.iter().map(CampaignScenario::name).collect();
+        names.sort();
+        names.dedup();
+        if names.len() != scenarios.len() {
+            return Err(Error::config(
+                "campaign axes expand to duplicate scenario names (repeated axis value?)",
+            ));
+        }
+    }
+
+    // Resume: anything with a valid ledger record is done.
+    let existing = read_ledger(&jsonl_path)?;
+    let ignored_lines = existing.ignored;
+    let todo: Vec<CampaignScenario> = scenarios
+        .iter()
+        .filter(|sc| !existing.records.iter().any(|r| sc.matches_record(r)))
+        .cloned()
+        .collect();
+    let skipped = scenarios.len() - todo.len();
+
+    // Shard the remainder; stream each record as one atomic line write.
+    let ran = todo.len();
+    if !todo.is_empty() {
+        let mut handle = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&jsonl_path)?;
+        if !existing.ends_cleanly {
+            // Self-heal a torn tail: a kill mid-write can leave the ledger
+            // without its final newline; appending straight on would fuse
+            // the torn line with the first resumed record.
+            handle.write_all(b"\n")?;
+        }
+        let file = Mutex::new(handle);
+        let results = pool::par_map(threads.max(1), todo, |sc| -> Result<()> {
+            let record = sc.run()?;
+            let mut line = record.to_compact_string();
+            line.push('\n');
+            let mut f = file.lock().expect("ledger writer poisoned");
+            f.write_all(line.as_bytes())?;
+            f.flush()?;
+            Ok(())
+        });
+        for r in results {
+            r?;
+        }
+    }
+
+    // Aggregate strictly from the ledger so resumed and uninterrupted
+    // campaigns serialize identically (last matching record wins).
+    let ledger = read_ledger(&jsonl_path)?;
+    let mut ordered: Vec<Json> = Vec::with_capacity(scenarios.len());
+    for sc in &scenarios {
+        let record = ledger
+            .records
+            .iter()
+            .rev()
+            .find(|r| sc.matches_record(r))
+            .ok_or_else(|| {
+                Error::invariant(format!(
+                    "scenario {} has no ledger record after the campaign ran",
+                    sc.name()
+                ))
+            })?;
+        ordered.push(record.clone());
+    }
+
+    // matches_record guarantees every ordered record carries a parseable
+    // checksum; a failure here means the ledger changed under our feet.
+    let mut checksums = Vec::with_capacity(ordered.len());
+    for r in &ordered {
+        let c = r
+            .get("checksum")
+            .and_then(Json::as_str)
+            .and_then(parse_hex_u64)
+            .ok_or_else(|| Error::invariant("ledger record lost its checksum mid-run"))?;
+        checksums.push(c);
+    }
+    let campaign_checksum = combine_checksums(checksums);
+
+    let mut report = Json::obj();
+    report.set("schema_version", SCHEMA_VERSION);
+    report.set("root_seed", format!("{:#018x}", spec.root_seed));
+    report.set("cycles", spec.cycles);
+    report.set("warmup_cycles", spec.warmup_cycles);
+    report.set("scenarios_total", scenarios.len());
+    report.set("campaign_checksum", format!("{campaign_checksum:#018x}"));
+    report.set("scenarios", ordered.clone());
+    report.write(&report_path)?;
+
+    let mut csv = Csv::new(vec![
+        "name",
+        "arch",
+        "topology",
+        "chiplets",
+        "traffic",
+        "rate",
+        "epoch_cycles",
+        "seed",
+        "cycles",
+        "created",
+        "delivered",
+        "delivery_ratio",
+        "avg_latency_cycles",
+        "p99_latency_cycles",
+        "avg_power_mw",
+        "total_energy_uj",
+        "energy_metric_pj",
+        "checksum",
+    ]);
+    for r in &ordered {
+        csv.row(vec![
+            cell_str(r, "name"),
+            cell_str(r, "arch"),
+            cell_str(r, "topology"),
+            cell_num(r, "chiplets"),
+            cell_str(r, "traffic"),
+            cell_num(r, "rate"),
+            cell_num(r, "epoch_cycles"),
+            cell_str(r, "seed"),
+            cell_num(r, "cycles"),
+            cell_num(r, "created"),
+            cell_num(r, "delivered"),
+            cell_num(r, "delivery_ratio"),
+            cell_num(r, "avg_latency_cycles"),
+            cell_num(r, "p99_latency_cycles"),
+            cell_num(r, "avg_power_mw"),
+            cell_num(r, "total_energy_uj"),
+            cell_num(r, "energy_metric_pj"),
+            cell_str(r, "checksum"),
+        ]);
+    }
+    csv.write(&csv_path)?;
+
+    Ok(CampaignOutcome {
+        total: scenarios.len(),
+        ran,
+        skipped,
+        ignored_lines,
+        campaign_checksum,
+        jsonl_path,
+        report_path,
+        csv_path,
+    })
+}
+
+fn parse_hex_u64(text: &str) -> Option<u64> {
+    u64::from_str_radix(text.strip_prefix("0x")?, 16).ok()
+}
+
+fn cell_str(r: &Json, key: &str) -> String {
+    r.get(key).and_then(Json::as_str).unwrap_or("").to_string()
+}
+
+/// Format a numeric record field exactly as the JSON writer would, so the
+/// CSV is as byte-stable as the report. Missing fields become empty cells.
+fn cell_num(r: &Json, key: &str) -> String {
+    let mut out = String::new();
+    if let Some(x) = r.get(key).and_then(Json::as_f64) {
+        Json::format_num(x, &mut out);
+    }
+    out
+}
+
+fn str_axis(map: &ConfigMap, key: &str) -> Result<Vec<String>> {
+    match map.get(key) {
+        Some(Value::Str(s)) => Ok(vec![s.clone()]),
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::config(format!("{key} entries must be strings")))
+            })
+            .collect(),
+        _ => Err(Error::config(format!(
+            "{key} must be a string or an array of strings"
+        ))),
+    }
+}
+
+fn int_axis(map: &ConfigMap, key: &str) -> Result<Vec<u64>> {
+    match map.get(key) {
+        Some(Value::Int(x)) if *x >= 0 => Ok(vec![*x as u64]),
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_i64()
+                    .and_then(|x| u64::try_from(x).ok())
+                    .ok_or_else(|| {
+                        Error::config(format!("{key} entries must be non-negative integers"))
+                    })
+            })
+            .collect(),
+        _ => Err(Error::config(format!(
+            "{key} must be an integer or an array of integers"
+        ))),
+    }
+}
+
+fn f64_axis(map: &ConfigMap, key: &str) -> Result<Vec<f64>> {
+    match map.get(key) {
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| Error::config(format!("{key} entries must be numbers")))
+            })
+            .collect(),
+        Some(v) => v
+            .as_f64()
+            .map(|x| vec![x])
+            .ok_or_else(|| Error::config(format!("{key} must be a number or array of numbers"))),
+        None => unreachable!("caller iterates existing keys"),
+    }
+}
+
+fn req_u64(map: &ConfigMap, key: &str) -> Result<u64> {
+    map.get_u64(key)
+        .ok_or_else(|| Error::config(format!("{key} must be a non-negative integer")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_matrix_expands_to_32_unique_scenarios() {
+        let spec = CampaignSpec::quick();
+        let scenarios = spec.expand();
+        assert_eq!(scenarios.len(), 32);
+        assert!(scenarios.len() >= 24, "acceptance floor");
+        let mut names: Vec<String> = scenarios.iter().map(CampaignScenario::name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 32, "names must be unique ledger keys");
+        for sc in &scenarios {
+            sc.config().unwrap_or_else(|e| {
+                panic!("quick scenario {} has invalid config: {e}", sc.name())
+            });
+        }
+    }
+
+    #[test]
+    fn full_matrix_configs_validate() {
+        // Expansion is cheap; validating every config catches axis values
+        // that can't actually simulate (e.g. bitrev on non-pow2 systems).
+        for sc in CampaignSpec::full().expand() {
+            sc.config().unwrap_or_else(|e| {
+                panic!("full scenario {} has invalid config: {e}", sc.name())
+            });
+        }
+    }
+
+    #[test]
+    fn seeds_depend_on_names_not_expansion_order() {
+        let spec = CampaignSpec::quick();
+        let a = spec.expand();
+        // A spec with extra axis values must derive the same seeds for the
+        // scenarios it shares with the smaller spec.
+        let mut bigger = spec.clone();
+        bigger.rates.insert(0, 0.004);
+        let b = bigger.expand();
+        for sa in &a {
+            let twin = b
+                .iter()
+                .find(|sb| sb.name() == sa.name())
+                .expect("shared scenario survives axis growth");
+            assert_eq!(sa.derived_seed(), twin.derived_seed());
+        }
+        // Different replicas get different seeds.
+        let mut replicated = spec.clone();
+        replicated.seeds = vec![0, 1];
+        let r = replicated.expand();
+        let (s0, s1) = (&r[0], &r[1]);
+        assert_eq!(s0.seed_index, 0);
+        assert_eq!(s1.seed_index, 1);
+        assert_ne!(s0.derived_seed(), s1.derived_seed());
+    }
+
+    #[test]
+    fn from_config_parses_axes_and_rejects_typos() {
+        let map = ConfigMap::parse(
+            "[campaign]\n\
+             arch = [\"resipi\", \"awgr\"]\n\
+             topology = \"mesh\"\n\
+             chiplets = [2, 4]\n\
+             traffic = [\"uniform\", \"bursty:0.01:100:400\"]\n\
+             rate = [0.002]\n\
+             epoch_cycles = 3000\n\
+             seeds = [0, 1]\n\
+             cycles = 9000\n\
+             warmup_cycles = 100\n\
+             root_seed = 7\n",
+        )
+        .unwrap();
+        let spec = CampaignSpec::from_config(&map).unwrap();
+        assert_eq!(spec.archs, vec![Architecture::Resipi, Architecture::Awgr]);
+        assert_eq!(spec.topologies, vec![TopologyKind::Mesh]);
+        assert_eq!(spec.chiplets, vec![2, 4]);
+        assert_eq!(spec.traffics[1].kind, TrafficKind::Bursty);
+        assert_eq!(spec.traffics[1].burst_off, 400.0);
+        assert_eq!(spec.rates, vec![0.002]);
+        assert_eq!(spec.epoch_cycles, vec![3000]);
+        assert_eq!(spec.seeds, vec![0, 1]);
+        assert_eq!((spec.cycles, spec.warmup_cycles, spec.root_seed), (9000, 100, 7));
+        // 2 archs × 1 topology × 2 chiplet counts × 2 traffics × 1 rate
+        // × 1 epoch × 2 seeds.
+        assert_eq!(spec.expand().len(), 16);
+
+        let bad = ConfigMap::parse("[campaign]\narchs = [\"resipi\"]\n").unwrap();
+        let err = CampaignSpec::from_config(&bad).unwrap_err();
+        assert!(err.to_string().contains("campaign.archs"), "got: {err}");
+
+        let bad = ConfigMap::parse("[campaign]\narch = []\n").unwrap();
+        assert!(CampaignSpec::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn record_matching_is_strict() {
+        let scenarios = CampaignSpec::quick().expand();
+        let sc = &scenarios[0];
+        let mut r = Json::obj();
+        r.set("schema_version", SCHEMA_VERSION);
+        r.set("name", sc.name());
+        r.set("seed", format!("{:#018x}", sc.derived_seed()));
+        r.set("cycles", sc.cycles);
+        r.set("warmup_cycles", sc.warmup_cycles);
+        r.set("checksum", "0x0000000000000001");
+        assert!(sc.matches_record(&r));
+        // Wrong horizon → not a match (re-run, don't resume).
+        let mut wrong = r.clone();
+        wrong.set("cycles", sc.cycles + 1);
+        assert!(!sc.matches_record(&wrong));
+        // Wrong warm-up → not a match (metrics would cover a different
+        // measured window).
+        let mut wrong = r.clone();
+        wrong.set("warmup_cycles", sc.warmup_cycles + 1);
+        assert!(!sc.matches_record(&wrong));
+        // Wrong seed → not a match.
+        let mut wrong = r.clone();
+        wrong.set("seed", "0x0000000000000000");
+        assert!(!sc.matches_record(&wrong));
+        // Missing checksum → not a match.
+        let mut wrong = r.clone();
+        if let Json::Obj(pairs) = &mut wrong {
+            pairs.retain(|(k, _)| k != "checksum");
+        }
+        assert!(!sc.matches_record(&wrong));
+        // Unparseable checksum → not a match (never resume past garbage).
+        let mut wrong = r.clone();
+        wrong.set("checksum", "garbage");
+        assert!(!sc.matches_record(&wrong));
+    }
+}

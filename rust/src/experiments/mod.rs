@@ -1,6 +1,7 @@
 //! Experiment harness: one module per paper artifact (DESIGN.md §6).
 
 pub mod ablations;
+pub mod campaign;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;

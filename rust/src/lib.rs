@@ -36,6 +36,20 @@
 //! matrix and `.github/workflows/ci.yml` gates regressions against
 //! `BENCH_baseline.json` (README "Benchmarking & performance gates").
 //!
+//! ## Workloads & campaigns
+//!
+//! Synthetic traffic is a first-class subsystem: the
+//! [`traffic::TrafficKind`] registry catalogs uniform, transpose,
+//! hotspot, tornado, bit-complement, bit-reversal, bursty, and phased
+//! patterns, each constructible from config alone
+//! ([`traffic::TrafficSpec`], the `traffic.*` config keys, or
+//! `resipi run --traffic`). The [`experiments::campaign`] engine expands
+//! a declarative scenario matrix over architecture × topology × chiplets
+//! × traffic × rate × epoch × seed, shards it across [`util::pool`]
+//! workers with name-derived per-scenario seeds, streams a resumable
+//! JSONL ledger, and emits byte-stable aggregate reports (README
+//! "Campaigns & workloads").
+//!
 //! ```no_run
 //! use resipi::prelude::*;
 //!
@@ -79,6 +93,7 @@ pub mod prelude {
     pub use crate::sim::{Coord, Cycle, Geometry, Network, Node, Summary};
     pub use crate::topology::{Topology, TopologyKind};
     pub use crate::traffic::{
-        AppProfile, NewPacket, ParsecTraffic, Traffic, TraceReader, UniformTraffic, PARSEC_APPS,
+        AppProfile, NewPacket, ParsecTraffic, Traffic, TraceReader, TrafficKind, TrafficSpec,
+        UniformTraffic, PARSEC_APPS,
     };
 }

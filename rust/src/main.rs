@@ -12,6 +12,7 @@
 //! resipi ablate  <thresholds|gwsel|epoch> [--cycles N]
 //! resipi scale   [--cycles N]          # chiplets × topology sweep
 //! resipi sweep                         # batched HLO power-model sweep
+//! resipi campaign [--quick|--full|--config F] [axis flags]   # scenario matrix
 //! resipi all     [--cycles N]          # every artifact, written to results/
 //! ```
 //!
@@ -26,13 +27,14 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use resipi::config::{Architecture, Config};
+use resipi::experiments::campaign::{self, CampaignSpec};
 use resipi::experiments::{ablations, fig10, fig11, fig12, fig13, output_dir, perf, scaling, table2};
 use resipi::power::controller_area::ControllerParams;
 use resipi::runtime::{best_power_model, BatchPowerModel, ARTIFACT_GATEWAYS};
 use resipi::sim::{Geometry, Network};
 use resipi::topology::TopologyKind;
 use resipi::traffic::parsec::{app_by_name, ParsecTraffic};
-use resipi::traffic::{TraceReader, UniformTraffic};
+use resipi::traffic::{TraceReader, TrafficSpec, UniformTraffic};
 use resipi::util::io::Json;
 use resipi::Result;
 
@@ -78,6 +80,12 @@ const COMMANDS: &[Cmd] = &[
                 name: "app",
                 value: Some("W"),
                 help: "PARSEC app name | uniform:<rate> | trace:<file>",
+            },
+            Flag {
+                name: "traffic",
+                value: Some("SPEC"),
+                help: "synthetic pattern spec, e.g. tornado:0.01 or hotspot:0.01:0.3 \
+                       (see README catalog; mutually exclusive with --app)",
             },
             Flag {
                 name: "topology",
@@ -207,6 +215,85 @@ const COMMANDS: &[Cmd] = &[
                 help: "baseline JSON to gate against (>15% median regression or checksum drift fails)",
             },
             SEED,
+        ],
+    },
+    Cmd {
+        name: "campaign",
+        args: "",
+        summary: "scenario campaign: expand a matrix, shard it, stream JSONL, aggregate",
+        flags: &[
+            Flag {
+                name: "quick",
+                value: None,
+                help: "CI-sized 32-scenario preset matrix (the default without --config)",
+            },
+            Flag {
+                name: "full",
+                value: None,
+                help: "full catalog matrix (every arch/topology/traffic kind)",
+            },
+            Flag {
+                name: "config",
+                value: Some("FILE"),
+                help: "campaign file (campaign.* keys) overriding the preset axes",
+            },
+            Flag {
+                name: "arch",
+                value: Some("LIST"),
+                help: "comma-separated architecture axis (resipi,prowaves,...)",
+            },
+            Flag {
+                name: "topology",
+                value: Some("LIST"),
+                help: "comma-separated topology axis (mesh,torus,cmesh)",
+            },
+            Flag {
+                name: "chiplets",
+                value: Some("LIST"),
+                help: "comma-separated chiplet-count axis (2,4,8)",
+            },
+            Flag {
+                name: "traffic",
+                value: Some("LIST"),
+                help: "comma-separated traffic specs (uniform,tornado,bursty:0:100:400)",
+            },
+            Flag {
+                name: "rate",
+                value: Some("LIST"),
+                help: "comma-separated injection-rate axis (0.002,0.01)",
+            },
+            Flag {
+                name: "epoch-cycles",
+                value: Some("LIST"),
+                help: "comma-separated reconfiguration-interval axis",
+            },
+            Flag {
+                name: "seeds",
+                value: Some("LIST"),
+                help: "comma-separated seed-replica axis (0,1,2)",
+            },
+            CYCLES,
+            Flag {
+                name: "warmup",
+                value: Some("N"),
+                help: "warm-up cycles excluded from statistics",
+            },
+            SEED,
+            Flag {
+                name: "threads",
+                value: Some("N"),
+                help: "pool workers (default RESIPI_THREADS/auto); results are identical",
+            },
+            Flag {
+                name: "out",
+                value: Some("DIR"),
+                help: "output directory (default results/campaign)",
+            },
+            Flag {
+                name: "fresh",
+                value: None,
+                help: "discard an existing ledger instead of resuming from it",
+            },
         ],
     },
     Cmd {
@@ -398,6 +485,7 @@ fn main() -> ExitCode {
         "scale" => cmd_scale(&args),
         "sweep" => cmd_sweep(),
         "bench" => cmd_bench(&args),
+        "campaign" => cmd_campaign(&args),
         "all" => cmd_all(&args),
         _ => unreachable!("command table covers every dispatch arm"),
     };
@@ -438,22 +526,40 @@ fn cmd_run(args: &Args) -> Result<()> {
         .map_err(resipi::Error::config)?;
     cfg.validate()?;
 
+    if let Some(spec) = args.flags.get("traffic") {
+        if args.flags.contains_key("app") {
+            return Err(resipi::Error::config(
+                "--traffic and --app are mutually exclusive (pick one workload source)",
+            ));
+        }
+        cfg.set_traffic(TrafficSpec::parse(spec)?);
+        cfg.validate()?;
+    }
+
     let geo = Geometry::from_config(&cfg);
     let topology = geo.topology_kind().name();
-    let app_spec = args.get_str("app", "dedup");
-    let traffic: Box<dyn resipi::traffic::Traffic> = if let Some(rate) =
-        app_spec.strip_prefix("uniform:")
-    {
-        let rate: f64 = rate
-            .parse()
-            .map_err(|_| resipi::Error::config(format!("bad uniform rate {rate:?}")))?;
-        Box::new(UniformTraffic::new(geo, rate, cfg.sim.seed))
-    } else if let Some(path) = app_spec.strip_prefix("trace:") {
-        Box::new(TraceReader::from_file(std::path::Path::new(path))?)
+    let traffic: Box<dyn resipi::traffic::Traffic> = if let Some(spec) = &cfg.traffic {
+        // The registry path: --traffic, or traffic.* keys in --config.
+        if args.flags.contains_key("app") {
+            return Err(resipi::Error::config(
+                "--app conflicts with the [traffic] section of the config file",
+            ));
+        }
+        spec.build(&geo, cfg.sim.seed)?
     } else {
-        let app = app_by_name(&app_spec)
-            .ok_or_else(|| resipi::Error::config(format!("unknown app {app_spec:?}")))?;
-        Box::new(ParsecTraffic::new(geo, app, cfg.sim.seed))
+        let app_spec = args.get_str("app", "dedup");
+        if let Some(rate) = app_spec.strip_prefix("uniform:") {
+            let rate: f64 = rate
+                .parse()
+                .map_err(|_| resipi::Error::config(format!("bad uniform rate {rate:?}")))?;
+            Box::new(UniformTraffic::new(geo.clone(), rate, cfg.sim.seed))
+        } else if let Some(path) = app_spec.strip_prefix("trace:") {
+            Box::new(TraceReader::from_file(std::path::Path::new(path))?)
+        } else {
+            let app = app_by_name(&app_spec)
+                .ok_or_else(|| resipi::Error::config(format!("unknown app {app_spec:?}")))?;
+            Box::new(ParsecTraffic::new(geo.clone(), app, cfg.sim.seed))
+        }
     };
 
     let mut net = Network::with_power_model(cfg, traffic, best_power_model())?;
@@ -679,6 +785,110 @@ fn cmd_bench(args: &Args) -> Result<()> {
             )));
         }
     }
+    Ok(())
+}
+
+fn cmd_campaign(args: &Args) -> Result<()> {
+    if args.flags.contains_key("quick") && args.flags.contains_key("full") {
+        return Err(resipi::Error::config("--quick and --full are mutually exclusive"));
+    }
+    let mut spec = if let Some(path) = args.flags.get("config") {
+        if args.flags.contains_key("quick") || args.flags.contains_key("full") {
+            return Err(resipi::Error::config(
+                "--config replaces the preset matrix; drop --quick/--full",
+            ));
+        }
+        let text = std::fs::read_to_string(std::path::Path::new(path))?;
+        CampaignSpec::from_config(&resipi::config::parser::ConfigMap::parse(&text)?)?
+    } else if args.flags.contains_key("full") {
+        CampaignSpec::full()
+    } else {
+        CampaignSpec::quick()
+    };
+
+    fn list<T>(
+        args: &Args,
+        key: &str,
+        parse: impl Fn(&str) -> Result<T>,
+    ) -> Result<Option<Vec<T>>> {
+        match args.flags.get(key) {
+            None => Ok(None),
+            Some(text) => text
+                .split(',')
+                .map(|part| parse(part.trim()))
+                .collect::<Result<Vec<T>>>()
+                .map(Some),
+        }
+    }
+
+    if let Some(v) = list(args, "arch", Architecture::from_name)? {
+        spec.archs = v;
+    }
+    if let Some(v) = list(args, "topology", TopologyKind::from_name)? {
+        spec.topologies = v;
+    }
+    if let Some(v) = list(args, "chiplets", |s| {
+        s.parse::<usize>()
+            .map_err(|_| resipi::Error::config(format!("bad chiplet count {s:?}")))
+    })? {
+        spec.chiplets = v;
+    }
+    if let Some(v) = list(args, "traffic", TrafficSpec::parse)? {
+        spec.traffics = v;
+    }
+    if let Some(v) = list(args, "rate", |s| {
+        s.parse::<f64>()
+            .map_err(|_| resipi::Error::config(format!("bad rate {s:?}")))
+    })? {
+        spec.rates = v;
+    }
+    if let Some(v) = list(args, "epoch-cycles", |s| {
+        s.replace('_', "")
+            .parse::<u64>()
+            .map_err(|_| resipi::Error::config(format!("bad epoch length {s:?}")))
+    })? {
+        spec.epoch_cycles = v;
+    }
+    if let Some(v) = list(args, "seeds", |s| {
+        s.parse::<u64>()
+            .map_err(|_| resipi::Error::config(format!("bad seed replica {s:?}")))
+    })? {
+        spec.seeds = v;
+    }
+    spec.cycles = args
+        .get_u64("cycles", spec.cycles)
+        .map_err(resipi::Error::config)?;
+    spec.warmup_cycles = args
+        .get_u64("warmup", spec.warmup_cycles)
+        .map_err(resipi::Error::config)?;
+    spec.root_seed = args
+        .get_u64("seed", spec.root_seed)
+        .map_err(resipi::Error::config)?;
+    let threads = args
+        .get_u64("threads", resipi::util::pool::default_threads() as u64)
+        .map_err(resipi::Error::config)? as usize;
+
+    let out_dir = match args.flags.get("out") {
+        Some(dir) => PathBuf::from(dir),
+        None => output_dir().join("campaign"),
+    };
+    if args.flags.contains_key("fresh") {
+        for name in ["campaign.jsonl", "campaign_report.json", "campaign_report.csv"] {
+            let p = out_dir.join(name);
+            if p.exists() {
+                std::fs::remove_file(&p)?;
+            }
+        }
+    }
+
+    let n = spec.expand().len();
+    println!(
+        "== resipi campaign: {n} scenario(s) across {} worker(s), root seed {:#x} ==",
+        threads.max(1),
+        spec.root_seed
+    );
+    let outcome = campaign::run_campaign(&spec, threads, &out_dir)?;
+    print!("{}", outcome.report());
     Ok(())
 }
 

@@ -243,11 +243,8 @@ impl Metrics {
     /// CI gate fails on a mismatch, catching accidental behavior changes
     /// that a pure throughput gate would miss.
     pub fn checksum(&self) -> u64 {
-        #[inline]
-        fn mix(h: u64, v: u64) -> u64 {
-            (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
-        }
-        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        use crate::util::rng::{fnv1a_mix as mix, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
         h = mix(h, self.created);
         h = mix(h, self.delivered);
         h = mix(h, self.inter_chiplet);
@@ -261,6 +258,15 @@ impl Metrics {
         h = mix(h, self.epochs.len() as u64);
         h
     }
+}
+
+/// Fold per-run [`Metrics::checksum`] digests into one order-sensitive
+/// campaign-level digest (same FNV-1a mixing as `checksum` itself). The
+/// campaign engine records this over its scenarios in canonical expansion
+/// order, so two campaign runs agree iff every scenario agreed.
+pub fn combine_checksums<I: IntoIterator<Item = u64>>(checksums: I) -> u64 {
+    use crate::util::rng::{fnv1a_mix, FNV_OFFSET};
+    checksums.into_iter().fold(FNV_OFFSET, fnv1a_mix)
 }
 
 #[cfg(test)]
@@ -385,5 +391,18 @@ mod tests {
         m.on_created(2);
         m.on_delivered(1, 5, false);
         assert_eq!(m.delivery_ratio(), 0.5);
+    }
+
+    #[test]
+    fn combine_checksums_is_order_sensitive_and_deterministic() {
+        let a = combine_checksums([1u64, 2, 3]);
+        let b = combine_checksums([1u64, 2, 3]);
+        let c = combine_checksums([3u64, 2, 1]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(
+            combine_checksums(Vec::<u64>::new()),
+            combine_checksums([0u64])
+        );
     }
 }

@@ -1,11 +1,18 @@
-//! Traffic generation: synthetic patterns, PARSEC-like application models
-//! ([`parsec`]), and gem5-style trace file replay ([`trace`]).
+//! Traffic generation: synthetic patterns (this module plus the
+//! [`patterns`] catalog), PARSEC-like application models ([`parsec`]), and
+//! gem5-style trace file replay ([`trace`]).
 //!
 //! A [`Traffic`] implementation is polled once per simulated cycle and
 //! pushes the packets created that cycle. Generators are seeded from the
 //! experiment's root seed and are fully deterministic.
+//!
+//! Synthetic patterns are registered in [`spec::TrafficKind`]; construct
+//! them from config keys or CLI spec strings via [`spec::TrafficSpec`] —
+//! that is the path `resipi run --traffic` and the campaign engine use.
 
 pub mod parsec;
+pub mod patterns;
+pub mod spec;
 pub mod trace;
 
 use std::cmp::Reverse;
@@ -16,6 +23,8 @@ use crate::sim::packet::{Cycle, MsgClass};
 use crate::util::rng::Pcg32;
 
 pub use parsec::{AppProfile, ParsecTraffic, PARSEC_APPS};
+pub use patterns::{BurstyTraffic, PermKind, PermutationTraffic, PhasedTraffic};
+pub use spec::{TrafficKind, TrafficSpec};
 pub use trace::{format_node, parse_node, TraceReader, TraceRecord, TraceWriter};
 
 /// A packet request emitted by a traffic model.

@@ -1,0 +1,536 @@
+//! Synthetic traffic-pattern catalog beyond uniform/transpose: tornado,
+//! bit-complement, bit-reversal, bursty (Markov-modulated on/off), and a
+//! phased mixer that switches patterns mid-run.
+//!
+//! All generators follow the event-heap discipline established by
+//! [`super::UniformTraffic`]: a min-heap of `(next fire cycle, core)`
+//! entries, one per core, so an idle cycle costs O(1) and a firing cycle
+//! O(log cores). Ties pop in ascending core order and every firing draws
+//! the shared RNG in a deterministic order, so each pattern's packet
+//! stream is a pure function of `(geometry, parameters, seed)` — the
+//! golden-trace battery in `tests/golden_traffic.rs` pins exactly that.
+//!
+//! Construct these through [`super::spec::TrafficSpec`] (config keys /
+//! CLI spec strings) rather than directly; the spec layer validates the
+//! pattern parameters and reports configuration errors loudly.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::ids::{Coord, Geometry, Node};
+use crate::sim::packet::{Cycle, MsgClass};
+use crate::util::rng::{Pcg32, SplitMix64};
+
+use super::{NewPacket, Traffic};
+
+/// Global-core-index → [`Node`] (shared by every index-addressed pattern).
+pub(crate) fn core_node(geo: &Geometry, idx: usize) -> Node {
+    let cpc = geo.cores_per_chiplet();
+    Node::Core {
+        chiplet: idx / cpc,
+        coord: geo.core_coord(idx % cpc),
+    }
+}
+
+/// The deterministic-destination permutation a [`PermutationTraffic`]
+/// applies to the global core index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PermKind {
+    /// `i → (i + N/2) mod N`: every core targets the core "half way
+    /// around" the system — the classic adversarial pattern for locality
+    /// heuristics (all traffic crosses the interposer midline).
+    Tornado,
+    /// Coordinate complement: chiplet `c → C−1−c`, core `(x,y) →
+    /// (X−1−x, Y−1−y)`. On power-of-two grids this equals the classic
+    /// bit-complement of the flattened index, and it stays a bijection on
+    /// any grid shape.
+    BitComplement,
+    /// `i → reverse of i within log2(N) bits`; requires a power-of-two
+    /// total core count (enforced at construction by the spec layer).
+    BitReversal,
+}
+
+impl PermKind {
+    fn name(&self) -> &'static str {
+        match self {
+            PermKind::Tornado => "tornado",
+            PermKind::BitComplement => "bitcomp",
+            PermKind::BitReversal => "bitrev",
+        }
+    }
+
+    /// RNG stream constant — one per pattern, so patterns with the same
+    /// seed still draw independent sequences.
+    fn stream(&self) -> u64 {
+        match self {
+            PermKind::Tornado => 0x70AD,
+            PermKind::BitComplement => 0xB17C,
+            PermKind::BitReversal => 0xB17E,
+        }
+    }
+
+    /// Destination core index for source index `i` (total `n` cores).
+    pub fn map(&self, geo: &Geometry, i: usize) -> usize {
+        let n = geo.total_cores();
+        match self {
+            PermKind::Tornado => (i + n / 2) % n,
+            PermKind::BitComplement => {
+                let cpc = geo.cores_per_chiplet();
+                let (cx, cy) = geo.core_dims();
+                let c = i / cpc;
+                let Coord { x, y } = geo.core_coord(i % cpc);
+                let dst = Coord::new(cx - 1 - x, cy - 1 - y);
+                (geo.chiplets - 1 - c) * cpc + geo.core_index(dst)
+            }
+            PermKind::BitReversal => {
+                debug_assert!(n.is_power_of_two(), "spec layer enforces power-of-two");
+                let bits = n.trailing_zeros();
+                if bits == 0 {
+                    return i;
+                }
+                ((i as u64).reverse_bits() >> (64 - bits)) as usize
+            }
+        }
+    }
+}
+
+/// A deterministic-destination pattern: each firing core sends to the
+/// fixed permutation image of its own index. Timing is the same geometric
+/// inter-arrival process as [`super::UniformTraffic`].
+pub struct PermutationTraffic {
+    geo: Geometry,
+    rate: f64,
+    kind: PermKind,
+    pending: BinaryHeap<Reverse<(Cycle, u32)>>,
+    rng: Pcg32,
+    name: String,
+}
+
+impl PermutationTraffic {
+    pub fn new(geo: Geometry, kind: PermKind, rate: f64, seed: u64) -> Self {
+        let n = geo.total_cores();
+        let mut rng = Pcg32::new(seed, kind.stream());
+        let mut pending = BinaryHeap::with_capacity(n);
+        if rate > 0.0 {
+            for i in 0..n {
+                pending.push(Reverse((rng.geometric(rate), i as u32)));
+            }
+        }
+        let name = format!("{}-{rate}", kind.name());
+        Self {
+            geo,
+            rate,
+            kind,
+            pending,
+            rng,
+            name,
+        }
+    }
+}
+
+impl Traffic for PermutationTraffic {
+    fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
+        while let Some(&Reverse((t, core))) = self.pending.peek() {
+            if t > now {
+                break;
+            }
+            self.pending.pop();
+            let i = core as usize;
+            let src = core_node(&self.geo, i);
+            let dst = core_node(&self.geo, self.kind.map(&self.geo, i));
+            if src != dst {
+                sink.push(NewPacket {
+                    src,
+                    dst,
+                    class: MsgClass::Request,
+                });
+            }
+            self.pending
+                .push(Reverse((now + self.rng.geometric(self.rate), core)));
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Bursty traffic: per-core Markov-modulated on/off process with uniform
+/// random destinations.
+///
+/// Each core alternates between ON dwells (mean `burst_on` cycles) and
+/// OFF dwells (mean `burst_off` cycles), both geometric. While ON it
+/// injects as a Bernoulli process at `rate_on = rate / duty` where
+/// `duty = on/(on+off)`, so the *long-run* offered rate matches `rate`
+/// while short windows see `1/duty`× overload — the load shape that makes
+/// the LGC/INC reconfiguration path actually work for a living.
+///
+/// Inter-arrival sampling walks the per-core dwell schedule: a geometric
+/// gap of ON-cycles is consumed across dwells, skipping OFF dwells
+/// entirely, so the event heap still holds exactly one entry per core.
+pub struct BurstyTraffic {
+    geo: Geometry,
+    rate_on: f64,
+    mean_on: f64,
+    mean_off: f64,
+    pending: BinaryHeap<Reverse<(Cycle, u32)>>,
+    /// Per-core end cycle of the current dwell.
+    dwell_end: Vec<Cycle>,
+    /// Per-core dwell state (true = ON).
+    on: Vec<bool>,
+    rng: Pcg32,
+    name: String,
+}
+
+impl BurstyTraffic {
+    /// `rate` is the long-run offered rate; the spec layer guarantees
+    /// `rate ≤ duty` so the ON-state rate stays a valid probability.
+    /// Dwell means below one cycle are clamped to 1 — the duty cycle is
+    /// computed from the clamped values so the long-run rate stays
+    /// conserved either way.
+    pub fn new(geo: Geometry, rate: f64, burst_on: f64, burst_off: f64, seed: u64) -> Self {
+        let n = geo.total_cores();
+        let (burst_on, burst_off) = (burst_on.max(1.0), burst_off.max(1.0));
+        let duty = burst_on / (burst_on + burst_off);
+        let rate_on = if rate > 0.0 { (rate / duty).min(1.0) } else { 0.0 };
+        let mut this = Self {
+            geo,
+            rate_on,
+            mean_on: burst_on,
+            mean_off: burst_off,
+            pending: BinaryHeap::with_capacity(n),
+            dwell_end: Vec::with_capacity(n),
+            on: Vec::with_capacity(n),
+            rng: Pcg32::new(seed, 0xB557),
+            name: format!("bursty-{rate}"),
+        };
+        if rate > 0.0 {
+            // One shared generator: per-core state init first, then the
+            // first-fire walks, in core order — a single deterministic
+            // draw order for the whole stream.
+            for _ in 0..n {
+                let starts_on = this.rng.gen_bool(duty);
+                let mean = if starts_on { this.mean_on } else { this.mean_off };
+                this.on.push(starts_on);
+                let dwell = this.rng.geometric(1.0 / mean);
+                this.dwell_end.push(dwell);
+            }
+            for i in 0..n {
+                let fire = this.next_fire(i, 0);
+                this.pending.push(Reverse((fire, i as u32)));
+            }
+        }
+        this
+    }
+
+    /// Consume a geometric gap of ON-cycles starting at `from`, walking
+    /// (and extending) the core's dwell schedule.
+    fn next_fire(&mut self, core: usize, from: Cycle) -> Cycle {
+        let mut remaining = self.rng.geometric(self.rate_on);
+        let mut cursor = from;
+        loop {
+            if self.on[core] {
+                let avail = self.dwell_end[core].saturating_sub(cursor);
+                if remaining <= avail {
+                    return cursor + remaining;
+                }
+                remaining -= avail;
+                cursor = self.dwell_end[core];
+                self.on[core] = false;
+                self.dwell_end[core] = cursor + self.rng.geometric(1.0 / self.mean_off);
+            } else {
+                cursor = self.dwell_end[core];
+                self.on[core] = true;
+                self.dwell_end[core] = cursor + self.rng.geometric(1.0 / self.mean_on);
+            }
+        }
+    }
+}
+
+impl Traffic for BurstyTraffic {
+    fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
+        let n = self.geo.total_cores();
+        while let Some(&Reverse((t, core))) = self.pending.peek() {
+            if t > now {
+                break;
+            }
+            self.pending.pop();
+            let i = core as usize;
+            let mut dst = self.rng.gen_range_usize(0, n - 1);
+            if dst >= i {
+                dst += 1;
+            }
+            sink.push(NewPacket {
+                src: core_node(&self.geo, i),
+                dst: core_node(&self.geo, dst),
+                class: MsgClass::Request,
+            });
+            let fire = self.next_fire(i, now);
+            // next_fire consumes a geometric gap ≥ 1, so a re-armed core
+            // cannot pop twice in one cycle.
+            self.pending.push(Reverse((fire, core)));
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Derive one sub-seed per phase from a phased generator's root seed.
+pub(crate) fn phase_seeds(seed: u64, phases: usize) -> Vec<u64> {
+    let mut sm = SplitMix64::new(seed ^ 0x0EA5_E0_u64);
+    (0..phases).map(|_| sm.next_u64()).collect()
+}
+
+/// Phased mixer: cycles through underlying patterns, switching every
+/// `phase_cycles` cycles — the workload shape that forces the
+/// reconfiguration control plane to track a *moving* traffic matrix.
+///
+/// Every underlying generator is advanced every cycle (so its event heap
+/// and RNG stream progress exactly as if it ran alone); only the active
+/// phase's packets reach the sink, the rest are discarded into a reused
+/// scratch buffer. Each phase therefore offers its own configured rate
+/// while active, and the switch is glitch-free: no spurious burst of
+/// stale events when a phase becomes active again.
+pub struct PhasedTraffic {
+    phases: Vec<Box<dyn Traffic>>,
+    phase_cycles: u64,
+    scratch: Vec<NewPacket>,
+    name: String,
+}
+
+impl PhasedTraffic {
+    /// `phases` must be non-empty and `phase_cycles ≥ 1` (the spec layer
+    /// validates both).
+    pub fn new(phases: Vec<Box<dyn Traffic>>, phase_cycles: u64, rate: f64) -> Self {
+        assert!(!phases.is_empty(), "phased traffic needs at least one phase");
+        assert!(phase_cycles >= 1, "phase length must be nonzero");
+        Self {
+            phases,
+            phase_cycles,
+            scratch: Vec::new(),
+            name: format!("phased-{rate}"),
+        }
+    }
+
+    /// Index of the phase active at cycle `now`.
+    pub fn active_phase(&self, now: Cycle) -> usize {
+        ((now / self.phase_cycles) as usize) % self.phases.len()
+    }
+}
+
+impl Traffic for PhasedTraffic {
+    fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
+        let active = self.active_phase(now);
+        for (k, phase) in self.phases.iter_mut().enumerate() {
+            if k == active {
+                phase.generate(now, sink);
+            } else {
+                self.scratch.clear();
+                phase.generate(now, &mut self.scratch);
+            }
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Architecture, Config};
+    use crate::traffic::UniformTraffic;
+
+    fn geo() -> Geometry {
+        Geometry::from_config(&Config::table1(Architecture::Resipi))
+    }
+
+    fn run(t: &mut dyn Traffic, cycles: u64) -> Vec<NewPacket> {
+        let mut out = Vec::new();
+        for now in 0..cycles {
+            t.generate(now, &mut out);
+        }
+        out
+    }
+
+    fn index_of(geo: &Geometry, node: Node) -> usize {
+        match node {
+            Node::Core { chiplet, coord } => {
+                chiplet * geo.cores_per_chiplet() + geo.core_index(coord)
+            }
+            other => panic!("synthetic patterns emit core nodes, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tornado_targets_opposite_half() {
+        let g = geo();
+        let n = g.total_cores();
+        let pkts = run(
+            &mut PermutationTraffic::new(g.clone(), PermKind::Tornado, 0.01, 9),
+            10_000,
+        );
+        assert!(!pkts.is_empty());
+        for p in &pkts {
+            let src = index_of(&g, p.src);
+            let dst = index_of(&g, p.dst);
+            assert_eq!(dst, (src + n / 2) % n);
+        }
+    }
+
+    #[test]
+    fn bit_complement_mirrors_coordinates() {
+        let g = geo();
+        let (cx, cy) = g.core_dims();
+        let pkts = run(
+            &mut PermutationTraffic::new(g.clone(), PermKind::BitComplement, 0.01, 9),
+            10_000,
+        );
+        assert!(!pkts.is_empty());
+        for p in &pkts {
+            let (Node::Core { chiplet: sc, coord: s }, Node::Core { chiplet: dc, coord: d }) =
+                (p.src, p.dst)
+            else {
+                panic!("core-core traffic expected");
+            };
+            assert_eq!(dc, g.chiplets - 1 - sc);
+            assert_eq!((d.x, d.y), (cx - 1 - s.x, cy - 1 - s.y));
+        }
+    }
+
+    #[test]
+    fn bit_reversal_is_an_involution() {
+        let g = geo();
+        let n = g.total_cores();
+        assert!(n.is_power_of_two(), "table1 core count is a power of two");
+        for i in 0..n {
+            let j = PermKind::BitReversal.map(&g, i);
+            assert!(j < n);
+            assert_eq!(PermKind::BitReversal.map(&g, j), i, "reverse twice = id");
+        }
+        let pkts = run(
+            &mut PermutationTraffic::new(g.clone(), PermKind::BitReversal, 0.01, 9),
+            10_000,
+        );
+        assert!(!pkts.is_empty());
+        for p in &pkts {
+            let src = index_of(&g, p.src);
+            assert_eq!(index_of(&g, p.dst), PermKind::BitReversal.map(&g, src));
+        }
+    }
+
+    #[test]
+    fn permutations_are_bijections() {
+        let g = geo();
+        let n = g.total_cores();
+        for kind in [PermKind::Tornado, PermKind::BitComplement, PermKind::BitReversal] {
+            let mut seen = vec![false; n];
+            for i in 0..n {
+                let j = kind.map(&g, i);
+                assert!(!seen[j], "{kind:?} maps two sources onto core {j}");
+                seen[j] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_conserves_long_run_rate_but_is_bursty() {
+        let g = geo();
+        let n = g.total_cores();
+        let rate = 0.01;
+        let cycles = 200_000u64;
+        let mut t = BurstyTraffic::new(g.clone(), rate, 200.0, 800.0, 5);
+        let mut per_window = Vec::new();
+        let window = 1_000u64;
+        let mut out = Vec::new();
+        let mut total = 0usize;
+        for w in 0..(cycles / window) {
+            out.clear();
+            for now in (w * window)..((w + 1) * window) {
+                t.generate(now, &mut out);
+            }
+            total += out.len();
+            per_window.push(out.len() as f64);
+            for p in &out {
+                assert_ne!(p.src, p.dst, "no self-addressed packets");
+            }
+        }
+        let expected = rate * cycles as f64 * n as f64;
+        let got = total as f64;
+        assert!(
+            (got - expected).abs() / expected < 0.10,
+            "long-run rate drifted: got {got}, expected ~{expected}"
+        );
+        // Burstiness: window counts must be overdispersed relative to the
+        // near-Poisson uniform process at the same long-run rate.
+        let mean = per_window.iter().sum::<f64>() / per_window.len() as f64;
+        let var = per_window.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / per_window.len() as f64;
+        let fano = var / mean.max(1e-9);
+        assert!(fano > 1.5, "expected overdispersion, Fano factor {fano:.2}");
+    }
+
+    #[test]
+    fn bursty_is_deterministic_per_seed() {
+        let g = geo();
+        let a = run(&mut BurstyTraffic::new(g.clone(), 0.01, 100.0, 300.0, 7), 20_000);
+        let b = run(&mut BurstyTraffic::new(g.clone(), 0.01, 100.0, 300.0, 7), 20_000);
+        let c = run(&mut BurstyTraffic::new(g, 0.01, 100.0, 300.0, 8), 20_000);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn phased_switches_patterns_at_boundaries() {
+        let g = geo();
+        let n = g.total_cores();
+        let phase_cycles = 5_000u64;
+        let phases: Vec<Box<dyn Traffic>> = vec![
+            Box::new(PermutationTraffic::new(g.clone(), PermKind::Tornado, 0.02, 3)),
+            Box::new(UniformTraffic::new(g.clone(), 0.02, 4)),
+        ];
+        let mut t = PhasedTraffic::new(phases, phase_cycles, 0.02);
+        // Phase 0 window: every packet obeys the tornado permutation.
+        let mut out = Vec::new();
+        for now in 0..phase_cycles {
+            t.generate(now, &mut out);
+        }
+        assert!(!out.is_empty());
+        for p in &out {
+            let src = index_of(&g, p.src);
+            assert_eq!(index_of(&g, p.dst), (src + n / 2) % n);
+        }
+        // Phase 1 window: uniform — destinations must NOT all obey the
+        // tornado map (overwhelmingly unlikely for hundreds of packets).
+        out.clear();
+        for now in phase_cycles..(2 * phase_cycles) {
+            t.generate(now, &mut out);
+        }
+        assert!(!out.is_empty());
+        let tornadoish = out
+            .iter()
+            .filter(|p| index_of(&g, p.dst) == (index_of(&g, p.src) + n / 2) % n)
+            .count();
+        assert!(
+            tornadoish < out.len() / 2,
+            "uniform phase looks like tornado: {tornadoish}/{}",
+            out.len()
+        );
+        // Phase 2 wraps back to phase 0.
+        assert_eq!(t.active_phase(2 * phase_cycles), 0);
+    }
+
+    #[test]
+    fn zero_rate_patterns_emit_nothing() {
+        let g = geo();
+        for kind in [PermKind::Tornado, PermKind::BitComplement, PermKind::BitReversal] {
+            let pkts = run(&mut PermutationTraffic::new(g.clone(), kind, 0.0, 1), 1_000);
+            assert!(pkts.is_empty());
+        }
+        let pkts = run(&mut BurstyTraffic::new(g, 0.0, 100.0, 300.0, 1), 1_000);
+        assert!(pkts.is_empty());
+    }
+}

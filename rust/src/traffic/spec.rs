@@ -1,0 +1,578 @@
+//! The traffic registry: every synthetic pattern as a first-class,
+//! config-constructible citizen.
+//!
+//! [`TrafficKind`] enumerates the catalog; [`TrafficSpec`] bundles a kind
+//! with its parameters and knows how to (a) parse itself from a compact
+//! CLI spec string (`resipi run --traffic hotspot:0.01:0.3`), (b) absorb
+//! `traffic.*` config-file keys (see [`crate::config::Config`]), and
+//! (c) validate + build the boxed [`Traffic`] generator. Everything the
+//! campaign engine sweeps over goes through this one chokepoint, so a
+//! scenario is reproducible from its spec string plus a seed.
+
+use crate::config::parser::{ConfigMap, Value};
+use crate::error::{Error, Result};
+use crate::sim::ids::{Geometry, Node};
+
+use super::patterns::{
+    core_node, phase_seeds, BurstyTraffic, PermKind, PermutationTraffic, PhasedTraffic,
+};
+use super::{HotspotTraffic, Traffic, TransposeTraffic, UniformTraffic};
+
+/// Every synthetic pattern in the catalog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TrafficKind {
+    /// Uniform-random destinations (the baseline load).
+    Uniform,
+    /// `(c, x, y) → (C−1−c, y, x)` — worst-case inter-chiplet stress.
+    Transpose,
+    /// Uniform plus a fraction of packets funneled onto one hot core.
+    Hotspot,
+    /// `i → (i + N/2) mod N` — everything crosses the midline.
+    Tornado,
+    /// Coordinate complement (classic bit-complement on 2^k grids).
+    BitComplement,
+    /// Bit-reversed index (requires a power-of-two core count).
+    BitReversal,
+    /// Markov-modulated on/off uniform traffic (long-run rate conserved).
+    Bursty,
+    /// Mid-run pattern switching — exercises the LGC/INC reconfiguration.
+    Phased,
+}
+
+impl TrafficKind {
+    /// Every kind (tests, catalog tables, campaign axes).
+    pub const ALL: [TrafficKind; 8] = [
+        TrafficKind::Uniform,
+        TrafficKind::Transpose,
+        TrafficKind::Hotspot,
+        TrafficKind::Tornado,
+        TrafficKind::BitComplement,
+        TrafficKind::BitReversal,
+        TrafficKind::Bursty,
+        TrafficKind::Phased,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficKind::Uniform => "uniform",
+            TrafficKind::Transpose => "transpose",
+            TrafficKind::Hotspot => "hotspot",
+            TrafficKind::Tornado => "tornado",
+            TrafficKind::BitComplement => "bitcomp",
+            TrafficKind::BitReversal => "bitrev",
+            TrafficKind::Bursty => "bursty",
+            TrafficKind::Phased => "phased",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "uniform" => Ok(TrafficKind::Uniform),
+            "transpose" => Ok(TrafficKind::Transpose),
+            "hotspot" => Ok(TrafficKind::Hotspot),
+            "tornado" => Ok(TrafficKind::Tornado),
+            "bitcomp" | "bit-complement" | "bit_complement" => Ok(TrafficKind::BitComplement),
+            "bitrev" | "bit-reversal" | "bit_reversal" => Ok(TrafficKind::BitReversal),
+            "bursty" => Ok(TrafficKind::Bursty),
+            "phased" => Ok(TrafficKind::Phased),
+            other => Err(Error::config(format!(
+                "unknown traffic kind {other:?} (expected uniform, transpose, hotspot, \
+                 tornado, bitcomp, bitrev, bursty, phased)"
+            ))),
+        }
+    }
+}
+
+/// A fully parameterized traffic configuration.
+///
+/// Fields irrelevant to `kind` are ignored (but kept, so an axis sweep can
+/// switch kinds without losing parameters). Defaults are chosen so every
+/// kind is constructible from `traffic.kind` alone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficSpec {
+    pub kind: TrafficKind,
+    /// Per-core long-run injection rate, packets/cycle.
+    pub rate: f64,
+    /// Hotspot: fraction of packets redirected to the hot core (`[0, 1]`).
+    pub hot_fraction: f64,
+    /// Hotspot: global core index of the hot core.
+    pub hot_core: usize,
+    /// Bursty: mean ON dwell, cycles (≥ 1).
+    pub burst_on: f64,
+    /// Bursty: mean OFF dwell, cycles (≥ 1).
+    pub burst_off: f64,
+    /// Phased: the underlying patterns, in activation order (non-phased).
+    pub phases: Vec<TrafficKind>,
+    /// Phased: cycles per phase before switching (≥ 1).
+    pub phase_cycles: u64,
+}
+
+impl Default for TrafficSpec {
+    fn default() -> Self {
+        Self {
+            kind: TrafficKind::Uniform,
+            rate: 0.005,
+            hot_fraction: 0.2,
+            hot_core: 0,
+            burst_on: 200.0,
+            burst_off: 800.0,
+            phases: vec![
+                TrafficKind::Uniform,
+                TrafficKind::Tornado,
+                TrafficKind::Transpose,
+            ],
+            phase_cycles: 20_000,
+        }
+    }
+}
+
+impl TrafficSpec {
+    /// A spec of the given kind at the given rate, other parameters at
+    /// their defaults.
+    pub fn new(kind: TrafficKind, rate: f64) -> Self {
+        Self {
+            kind,
+            rate,
+            ..Self::default()
+        }
+    }
+
+    /// Parse a compact CLI spec string. Grammar (fields after the kind are
+    /// optional, position-dependent):
+    ///
+    /// ```text
+    /// uniform | transpose | tornado | bitcomp | bitrev   [:rate]
+    /// hotspot  [:rate [:hot_fraction [:hot_core]]]
+    /// bursty   [:rate [:burst_on [:burst_off]]]
+    /// phased   [:rate [:kind+kind+... [:phase_cycles]]]
+    /// ```
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut parts = text.split(':');
+        let kind = TrafficKind::from_name(parts.next().unwrap_or_default())?;
+        let mut spec = Self::new(kind, Self::default().rate);
+        if let Some(rate) = parts.next() {
+            spec.rate = parse_num(rate, "rate")?;
+        }
+        match kind {
+            TrafficKind::Hotspot => {
+                if let Some(f) = parts.next() {
+                    spec.hot_fraction = parse_num(f, "hot_fraction")?;
+                }
+                if let Some(c) = parts.next() {
+                    spec.hot_core = c.parse().map_err(|_| {
+                        Error::config(format!("bad hot_core {c:?} in traffic spec {text:?}"))
+                    })?;
+                }
+            }
+            TrafficKind::Bursty => {
+                if let Some(on) = parts.next() {
+                    spec.burst_on = parse_num(on, "burst_on")?;
+                }
+                if let Some(off) = parts.next() {
+                    spec.burst_off = parse_num(off, "burst_off")?;
+                }
+            }
+            TrafficKind::Phased => {
+                if let Some(list) = parts.next() {
+                    spec.phases = list
+                        .split('+')
+                        .map(TrafficKind::from_name)
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                if let Some(pc) = parts.next() {
+                    spec.phase_cycles = pc.parse().map_err(|_| {
+                        Error::config(format!("bad phase_cycles {pc:?} in traffic spec {text:?}"))
+                    })?;
+                }
+            }
+            _ => {}
+        }
+        if let Some(extra) = parts.next() {
+            return Err(Error::config(format!(
+                "trailing field {extra:?} in traffic spec {text:?}"
+            )));
+        }
+        Ok(spec)
+    }
+
+    /// Canonical spec string: `parse(spec_string())` round-trips, and the
+    /// campaign engine uses it as the traffic component of scenario names.
+    pub fn spec_string(&self) -> String {
+        let base = format!("{}:{}", self.kind.name(), self.rate);
+        match self.kind {
+            TrafficKind::Hotspot => format!("{base}:{}:{}", self.hot_fraction, self.hot_core),
+            TrafficKind::Bursty => format!("{base}:{}:{}", self.burst_on, self.burst_off),
+            TrafficKind::Phased => {
+                let names: Vec<&str> = self.phases.iter().map(TrafficKind::name).collect();
+                format!("{base}:{}:{}", names.join("+"), self.phase_cycles)
+            }
+            _ => base,
+        }
+    }
+
+    /// Absorb one `traffic.*` config-file key (`key` is the part after the
+    /// `traffic.` prefix). Unknown keys are rejected so typos fail loudly.
+    pub(crate) fn apply_key(&mut self, key: &str, map: &ConfigMap, full_key: &str) -> Result<()> {
+        match key {
+            "kind" => {
+                let name = map
+                    .get_str(full_key)
+                    .ok_or_else(|| Error::config(format!("{full_key} must be a string")))?;
+                self.kind = TrafficKind::from_name(name)?;
+            }
+            "rate" => self.rate = req_f64(map, full_key)?,
+            "hot_fraction" => self.hot_fraction = req_f64(map, full_key)?,
+            "hot_core" => {
+                self.hot_core = map.get_usize(full_key).ok_or_else(|| {
+                    Error::config(format!("{full_key} must be a non-negative integer"))
+                })?
+            }
+            "burst_on" => self.burst_on = req_f64(map, full_key)?,
+            "burst_off" => self.burst_off = req_f64(map, full_key)?,
+            "phase_cycles" => {
+                self.phase_cycles = map.get_u64(full_key).ok_or_else(|| {
+                    Error::config(format!("{full_key} must be a non-negative integer"))
+                })?
+            }
+            "phases" => {
+                let Some(Value::Array(items)) = map.get(full_key) else {
+                    return Err(Error::config(format!(
+                        "{full_key} must be an array of kind names"
+                    )));
+                };
+                self.phases = items
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .ok_or_else(|| {
+                                Error::config(format!("{full_key} entries must be strings"))
+                            })
+                            .and_then(TrafficKind::from_name)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            other => {
+                return Err(Error::config(format!(
+                    "unknown config key \"traffic.{other}\""
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    /// Static validation against a system of `total_cores` cores. Called
+    /// by [`crate::config::Config::validate`] and again by [`Self::build`].
+    pub fn validate(&self, total_cores: usize) -> Result<()> {
+        if !(self.rate.is_finite() && (0.0..=1.0).contains(&self.rate)) {
+            return Err(Error::config(format!(
+                "traffic.rate {} must be a finite packets/cycle rate in [0, 1]",
+                self.rate
+            )));
+        }
+        if total_cores < 2 {
+            return Err(Error::config("traffic needs at least two cores"));
+        }
+        match self.kind {
+            TrafficKind::Hotspot => {
+                if !(self.hot_fraction.is_finite() && (0.0..=1.0).contains(&self.hot_fraction)) {
+                    return Err(Error::config(format!(
+                        "traffic.hot_fraction {} must be in [0, 1]",
+                        self.hot_fraction
+                    )));
+                }
+                if self.hot_core >= total_cores {
+                    return Err(Error::config(format!(
+                        "traffic.hot_core {} outside the {} cores",
+                        self.hot_core, total_cores
+                    )));
+                }
+            }
+            TrafficKind::BitReversal => {
+                if !total_cores.is_power_of_two() {
+                    return Err(Error::config(format!(
+                        "bitrev traffic needs a power-of-two core count, got {total_cores}"
+                    )));
+                }
+            }
+            TrafficKind::Bursty => {
+                if !(self.burst_on.is_finite() && self.burst_on >= 1.0)
+                    || !(self.burst_off.is_finite() && self.burst_off >= 1.0)
+                {
+                    return Err(Error::config(format!(
+                        "traffic.burst_on/burst_off ({}, {}) must be ≥ 1 cycle",
+                        self.burst_on, self.burst_off
+                    )));
+                }
+                let duty = self.burst_on / (self.burst_on + self.burst_off);
+                if self.rate > duty {
+                    return Err(Error::config(format!(
+                        "bursty rate {} exceeds the duty cycle {duty:.4}: the ON-state rate \
+                         would pass 1 packet/cycle and the long-run rate could not be conserved",
+                        self.rate
+                    )));
+                }
+            }
+            TrafficKind::Phased => {
+                if self.phases.is_empty() {
+                    return Err(Error::config("traffic.phases must name at least one kind"));
+                }
+                if self.phase_cycles == 0 {
+                    return Err(Error::config("traffic.phase_cycles must be nonzero"));
+                }
+                for p in &self.phases {
+                    if *p == TrafficKind::Phased {
+                        return Err(Error::config("phased traffic cannot nest itself"));
+                    }
+                    // Sub-phases inherit this spec's parameters; validate
+                    // each as if it were the top-level kind.
+                    let mut sub = self.clone();
+                    sub.kind = *p;
+                    sub.validate(total_cores)?;
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Validate and construct the generator. `seed` is the root seed the
+    /// pattern derives its streams from (per-kind stream constants keep
+    /// different kinds independent at equal seeds).
+    pub fn build(&self, geo: &Geometry, seed: u64) -> Result<Box<dyn Traffic>> {
+        self.validate(geo.total_cores())?;
+        Ok(match self.kind {
+            TrafficKind::Uniform => Box::new(UniformTraffic::new(geo.clone(), self.rate, seed)),
+            TrafficKind::Transpose => {
+                Box::new(TransposeTraffic::new(geo.clone(), self.rate, seed))
+            }
+            TrafficKind::Hotspot => {
+                let hot = self.hot_node(geo);
+                Box::new(HotspotTraffic::new(
+                    geo.clone(),
+                    self.rate,
+                    hot,
+                    self.hot_fraction,
+                    seed,
+                ))
+            }
+            TrafficKind::Tornado => Box::new(PermutationTraffic::new(
+                geo.clone(),
+                PermKind::Tornado,
+                self.rate,
+                seed,
+            )),
+            TrafficKind::BitComplement => Box::new(PermutationTraffic::new(
+                geo.clone(),
+                PermKind::BitComplement,
+                self.rate,
+                seed,
+            )),
+            TrafficKind::BitReversal => Box::new(PermutationTraffic::new(
+                geo.clone(),
+                PermKind::BitReversal,
+                self.rate,
+                seed,
+            )),
+            TrafficKind::Bursty => Box::new(BurstyTraffic::new(
+                geo.clone(),
+                self.rate,
+                self.burst_on,
+                self.burst_off,
+                seed,
+            )),
+            TrafficKind::Phased => {
+                let seeds = phase_seeds(seed, self.phases.len());
+                let mut built: Vec<Box<dyn Traffic>> = Vec::with_capacity(self.phases.len());
+                for (kind, s) in self.phases.iter().zip(seeds) {
+                    let mut sub = self.clone();
+                    sub.kind = *kind;
+                    built.push(sub.build(geo, s)?);
+                }
+                Box::new(PhasedTraffic::new(built, self.phase_cycles, self.rate))
+            }
+        })
+    }
+
+    /// The hotspot target as a [`Node`].
+    fn hot_node(&self, geo: &Geometry) -> Node {
+        core_node(geo, self.hot_core)
+    }
+}
+
+fn parse_num(text: &str, what: &str) -> Result<f64> {
+    text.parse()
+        .map_err(|_| Error::config(format!("bad {what} {text:?} in traffic spec")))
+}
+
+fn req_f64(map: &ConfigMap, key: &str) -> Result<f64> {
+    map.get_f64(key)
+        .ok_or_else(|| Error::config(format!("{key} must be a number")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Architecture, Config};
+
+    fn geo() -> Geometry {
+        Geometry::from_config(&Config::table1(Architecture::Resipi))
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for kind in TrafficKind::ALL {
+            assert_eq!(TrafficKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert!(TrafficKind::from_name("carousel").is_err());
+    }
+
+    #[test]
+    fn spec_strings_roundtrip() {
+        for kind in TrafficKind::ALL {
+            let spec = TrafficSpec::new(kind, 0.0125);
+            let parsed = TrafficSpec::parse(&spec.spec_string()).unwrap();
+            assert_eq!(parsed, spec, "kind {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn parse_accepts_compact_forms() {
+        let s = TrafficSpec::parse("uniform").unwrap();
+        assert_eq!(s.kind, TrafficKind::Uniform);
+        assert_eq!(s.rate, TrafficSpec::default().rate);
+
+        let s = TrafficSpec::parse("tornado:0.02").unwrap();
+        assert_eq!(s.kind, TrafficKind::Tornado);
+        assert_eq!(s.rate, 0.02);
+
+        let s = TrafficSpec::parse("hotspot:0.01:0.4:7").unwrap();
+        assert_eq!(s.hot_fraction, 0.4);
+        assert_eq!(s.hot_core, 7);
+
+        let s = TrafficSpec::parse("bursty:0.01:150:450").unwrap();
+        assert_eq!((s.burst_on, s.burst_off), (150.0, 450.0));
+
+        let s = TrafficSpec::parse("phased:0.01:uniform+bitcomp:5000").unwrap();
+        assert_eq!(
+            s.phases,
+            vec![TrafficKind::Uniform, TrafficKind::BitComplement]
+        );
+        assert_eq!(s.phase_cycles, 5_000);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "warp",
+            "uniform:fast",
+            "uniform:0.01:extra",
+            "hotspot:0.01:0.2:0:extra",
+            "phased:0.01:uniform+warp",
+            "bursty:0.01:on",
+        ] {
+            assert!(TrafficSpec::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn every_kind_builds_from_defaults() {
+        let g = geo();
+        for kind in TrafficKind::ALL {
+            let spec = TrafficSpec::new(kind, 0.01);
+            let mut t = spec.build(&g, 42).unwrap_or_else(|e| {
+                panic!("kind {} failed to build: {e}", kind.name())
+            });
+            let mut out = Vec::new();
+            for now in 0..5_000 {
+                t.generate(now, &mut out);
+            }
+            assert!(!out.is_empty(), "kind {} emitted nothing", kind.name());
+            assert!(
+                out.iter().all(|p| p.src != p.dst),
+                "kind {} emitted a self-addressed packet",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_hot_fraction_is_a_construction_error() {
+        let g = geo();
+        for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+            let mut spec = TrafficSpec::new(TrafficKind::Hotspot, 0.01);
+            spec.hot_fraction = bad;
+            let err = spec.build(&g, 1).unwrap_err();
+            assert!(
+                err.to_string().contains("hot_fraction"),
+                "hot_fraction {bad}: unexpected error {err}"
+            );
+        }
+        // Hot core outside the system is rejected too.
+        let mut spec = TrafficSpec::new(TrafficKind::Hotspot, 0.01);
+        spec.hot_core = 10_000;
+        assert!(spec.build(&g, 1).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        let g = geo();
+        // Rate outside [0, 1].
+        assert!(TrafficSpec::new(TrafficKind::Uniform, 1.5).build(&g, 1).is_err());
+        assert!(TrafficSpec::new(TrafficKind::Uniform, f64::NAN).build(&g, 1).is_err());
+        // Bursty: dwell under a cycle.
+        let mut s = TrafficSpec::new(TrafficKind::Bursty, 0.01);
+        s.burst_on = 0.5;
+        assert!(s.build(&g, 1).is_err());
+        // Bursty: rate unreachable at the configured duty cycle.
+        let mut s = TrafficSpec::new(TrafficKind::Bursty, 0.5);
+        s.burst_on = 100.0;
+        s.burst_off = 900.0;
+        assert!(s.build(&g, 1).is_err());
+        // Phased: empty phase list, zero-length phases, nesting.
+        let mut s = TrafficSpec::new(TrafficKind::Phased, 0.01);
+        s.phases.clear();
+        assert!(s.build(&g, 1).is_err());
+        let mut s = TrafficSpec::new(TrafficKind::Phased, 0.01);
+        s.phase_cycles = 0;
+        assert!(s.build(&g, 1).is_err());
+        let mut s = TrafficSpec::new(TrafficKind::Phased, 0.01);
+        s.phases = vec![TrafficKind::Phased];
+        assert!(s.build(&g, 1).is_err());
+    }
+
+    #[test]
+    fn bitrev_requires_power_of_two_cores() {
+        // 3 chiplets × 16 cores = 48: not a power of two.
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.topology.chiplets = 3;
+        cfg.validate().unwrap();
+        let g = Geometry::from_config(&cfg);
+        let err = TrafficSpec::new(TrafficKind::BitReversal, 0.01)
+            .build(&g, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("power-of-two"), "got: {err}");
+        // The default 64-core system is fine.
+        assert!(TrafficSpec::new(TrafficKind::BitReversal, 0.01)
+            .build(&geo(), 1)
+            .is_ok());
+    }
+
+    #[test]
+    fn builds_match_direct_constructors() {
+        // The registry path must produce the exact packet stream of the
+        // direct constructor (same seed discipline).
+        let g = geo();
+        let mut via_spec = TrafficSpec::new(TrafficKind::Uniform, 0.01)
+            .build(&g, 99)
+            .unwrap();
+        let mut direct = UniformTraffic::new(g.clone(), 0.01, 99);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for now in 0..10_000 {
+            via_spec.generate(now, &mut a);
+            direct.generate(now, &mut b);
+        }
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+    }
+}

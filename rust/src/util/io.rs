@@ -188,6 +188,20 @@ impl Json {
         out.push('"');
     }
 
+    /// Canonical number formatting shared by the pretty and compact
+    /// writers (and by CSV emitters that must match the JSON bytes).
+    pub fn format_num(x: f64, out: &mut String) {
+        if x.is_finite() {
+            if x == x.trunc() && x.abs() < 1e15 {
+                let _ = write!(out, "{}", x as i64);
+            } else {
+                let _ = write!(out, "{x}");
+            }
+        } else {
+            out.push_str("null"); // JSON has no NaN/Inf
+        }
+    }
+
     fn write_to(&self, out: &mut String, indent: usize) {
         let pad = "  ".repeat(indent);
         let pad_in = "  ".repeat(indent + 1);
@@ -196,17 +210,7 @@ impl Json {
             Json::Bool(b) => {
                 let _ = write!(out, "{b}");
             }
-            Json::Num(x) => {
-                if x.is_finite() {
-                    if *x == x.trunc() && x.abs() < 1e15 {
-                        let _ = write!(out, "{}", *x as i64);
-                    } else {
-                        let _ = write!(out, "{x}");
-                    }
-                } else {
-                    out.push_str("null"); // JSON has no NaN/Inf
-                }
-            }
+            Json::Num(x) => Self::format_num(*x, out),
             Json::Str(s) => Self::escape_str(s, out),
             Json::Arr(xs) => {
                 if xs.is_empty() {
@@ -251,6 +255,47 @@ impl Json {
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write_to(&mut out, 0);
+        out
+    }
+
+    fn write_compact_to(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(x) => Self::format_num(*x, out),
+            Json::Str(s) => Self::escape_str(s, out),
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write_compact_to(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Self::escape_str(k, out);
+                    out.push(':');
+                    v.write_compact_to(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Single-line serialization (no whitespace) — one JSONL record per
+    /// line for the campaign engine's streamed results.
+    pub fn to_compact_string(&self) -> String {
+        let mut out = String::new();
+        self.write_compact_to(&mut out);
         out
     }
 
@@ -559,6 +604,24 @@ mod tests {
     fn json_nan_becomes_null() {
         let j = Json::Num(f64::NAN);
         assert_eq!(j.to_string(), "null");
+    }
+
+    #[test]
+    fn json_compact_is_single_line_and_parses_back() {
+        let mut j = Json::obj();
+        j.set("name", "mesh/c4");
+        j.set("rate", 0.002);
+        j.set("count", 12u64);
+        j.set("ok", true);
+        j.set("series", vec![1.0, 2.5]);
+        let s = j.to_compact_string();
+        assert!(!s.contains('\n'));
+        assert!(!s.contains(": "));
+        assert_eq!(
+            s,
+            "{\"name\":\"mesh/c4\",\"rate\":0.002,\"count\":12,\"ok\":true,\"series\":[1,2.5]}"
+        );
+        assert_eq!(Json::parse(&s).unwrap(), j);
     }
 
     #[test]

@@ -10,6 +10,25 @@
 //! * [`Pcg32`] — PCG-XSH-RR 64/32, the workhorse generator on the hot path.
 //!   Small state (16 B), excellent statistical quality, trivially fast.
 
+/// FNV-1a 64-bit offset basis. Together with [`FNV_PRIME`] these are the
+/// determinism-digest constants shared by `Metrics::checksum`,
+/// `metrics::combine_checksums`, and the campaign seed derivation — keep
+/// them in one place so the digests stay mutually comparable.
+pub const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+/// FNV-1a 64-bit prime (see [`FNV_OFFSET`]).
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// One FNV-1a absorption step.
+#[inline]
+pub fn fnv1a_mix(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// FNV-1a digest of a byte string.
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    bytes.iter().fold(FNV_OFFSET, |h, &b| fnv1a_mix(h, b as u64))
+}
+
 /// SplitMix64: seed expander. Reference: Steele, Lea, Flood (2014).
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
@@ -159,6 +178,14 @@ impl Pcg32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a_bytes(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a_bytes(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a_bytes(b"foobar"), 0x8594_4171_F739_67E8);
+    }
 
     #[test]
     fn splitmix_reference_values() {

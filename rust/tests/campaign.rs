@@ -1,0 +1,152 @@
+//! Campaign-engine determinism and resume semantics (ISSUE 5 acceptance):
+//! the quick matrix (32 scenarios) must produce a byte-identical aggregate
+//! report at 1 vs 4 pool workers, and a run resumed from a torn ledger
+//! must reproduce the uninterrupted run's reports byte-for-byte without
+//! re-simulating completed scenarios.
+
+use std::path::PathBuf;
+
+use resipi::experiments::campaign::{run_campaign, CampaignSpec};
+
+/// The acceptance matrix at a test-friendly horizon (axes untouched:
+/// 2 archs × 2 topologies × 2 chiplet counts × 2 traffic kinds × 2 rates
+/// = 32 scenarios).
+fn quick_spec() -> CampaignSpec {
+    let mut spec = CampaignSpec::quick();
+    spec.cycles = 4_000;
+    spec.warmup_cycles = 400;
+    spec
+}
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let p = std::env::temp_dir().join(format!(
+            "resipi-campaign-test-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        Self(p)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn read(p: &std::path::Path) -> String {
+    std::fs::read_to_string(p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+#[test]
+fn aggregate_reports_are_identical_across_worker_counts_and_resume() {
+    let spec = quick_spec();
+    let total = spec.expand().len();
+    assert_eq!(total, 32);
+
+    // Uninterrupted baseline at 1 worker.
+    let dir1 = TempDir::new("t1");
+    let out1 = run_campaign(&spec, 1, &dir1.0).unwrap();
+    assert_eq!((out1.total, out1.ran, out1.skipped), (total, total, 0));
+    let report1 = read(&out1.report_path);
+    let csv1 = read(&out1.csv_path);
+    let ledger1 = read(&out1.jsonl_path);
+    assert_eq!(ledger1.lines().count(), total, "one JSONL record per scenario");
+
+    // Same matrix at 4 workers: scheduling may reorder the ledger but the
+    // aggregate report and CSV must match byte-for-byte.
+    let dir4 = TempDir::new("t4");
+    let out4 = run_campaign(&spec, 4, &dir4.0).unwrap();
+    assert_eq!(out4.ran, total);
+    assert_eq!(read(&out4.jsonl_path).lines().count(), total);
+    assert_eq!(report1, read(&out4.report_path), "report drifted across worker counts");
+    assert_eq!(csv1, read(&out4.csv_path), "csv drifted across worker counts");
+    assert_eq!(out1.campaign_checksum, out4.campaign_checksum);
+
+    // Re-running a complete campaign simulates nothing and changes nothing.
+    let again = run_campaign(&spec, 4, &dir1.0).unwrap();
+    assert_eq!((again.ran, again.skipped), (0, total));
+    assert_eq!(report1, read(&again.report_path));
+
+    // Simulate a mid-campaign kill: keep the first 10 ledger lines plus a
+    // torn partial record, drop the reports, and resume at 2 workers.
+    let dirr = TempDir::new("resume");
+    let kept: Vec<&str> = ledger1.lines().take(10).collect();
+    let torn = format!(
+        "{}\n{}",
+        kept.join("\n"),
+        "{\"schema_version\":1,\"name\":\"resipi/mesh/c4/unifo" // torn mid-write
+    );
+    std::fs::write(dirr.0.join("campaign.jsonl"), torn).unwrap();
+    let resumed = run_campaign(&spec, 2, &dirr.0).unwrap();
+    assert_eq!(resumed.skipped, 10, "completed scenarios must not re-simulate");
+    assert_eq!(resumed.ran, total - 10);
+    assert_eq!(resumed.ignored_lines, 1, "torn tail line is ignored, not fatal");
+    assert_eq!(
+        report1,
+        read(&resumed.report_path),
+        "resumed report differs from the uninterrupted run"
+    );
+    assert_eq!(csv1, read(&resumed.csv_path));
+    assert_eq!(out1.campaign_checksum, resumed.campaign_checksum);
+}
+
+#[test]
+fn stale_records_are_rerun_not_resumed() {
+    // A ledger from a different horizon (spec.cycles changed) must not
+    // satisfy the resume check: everything re-runs and the stale records
+    // are superseded in the aggregate by the fresh ones.
+    let mut short = quick_spec();
+    short.archs.truncate(1);
+    short.topologies.truncate(1);
+    short.chiplets.truncate(1);
+    short.traffics.truncate(1);
+    short.rates.truncate(1); // 1 scenario
+    assert_eq!(short.expand().len(), 1);
+
+    let dir = TempDir::new("stale");
+    let first = run_campaign(&short, 1, &dir.0).unwrap();
+    assert_eq!(first.ran, 1);
+
+    let mut longer = short.clone();
+    longer.cycles = 5_000;
+    let second = run_campaign(&longer, 1, &dir.0).unwrap();
+    assert_eq!((second.ran, second.skipped), (1, 0), "stale record must re-run");
+    // Ledger now holds both records; the aggregate must carry the fresh one.
+    assert_eq!(read(&second.jsonl_path).lines().count(), 2);
+    let report = read(&second.report_path);
+    assert!(report.contains("\"cycles\": 5000"), "aggregate kept the stale record");
+}
+
+#[test]
+fn campaign_seeds_differ_across_replicas_but_metrics_agree_per_seed() {
+    // Two replicas of one scenario: different derived seeds, different
+    // checksums (with overwhelming probability), but each deterministic.
+    let mut spec = quick_spec();
+    spec.archs.truncate(1);
+    spec.topologies.truncate(1);
+    spec.chiplets.truncate(1);
+    spec.traffics.truncate(1);
+    spec.rates.truncate(1);
+    spec.seeds = vec![0, 1];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 2);
+
+    let a0 = scenarios[0].run().unwrap();
+    let a1 = scenarios[1].run().unwrap();
+    let b0 = scenarios[0].run().unwrap();
+    assert_eq!(
+        a0.to_compact_string(),
+        b0.to_compact_string(),
+        "scenario record must be a pure function of the scenario"
+    );
+    assert_ne!(
+        a0.get("checksum").and_then(resipi::util::io::Json::as_str),
+        a1.get("checksum").and_then(resipi::util::io::Json::as_str),
+        "seed replicas should explore different stochastic paths"
+    );
+}

@@ -1,0 +1,153 @@
+//! Fuzz-style negative tests for the hand-rolled parsers: arbitrary byte
+//! soups, mutations of valid documents, and truncations must *return*
+//! `Err` (or a harmless `Ok`) — never panic, never hang. Runs under the
+//! tier-1 `cargo test` with case counts tuned by `RESIPI_PROPTEST_CASES`.
+
+use resipi::config::parser::ConfigMap;
+use resipi::util::io::Json;
+use resipi::util::proptest::PropConfig;
+use resipi::util::rng::Pcg32;
+
+/// Alphabet biased toward parser-relevant structure, with multi-byte
+/// UTF-8 thrown in to stress char-boundary handling.
+const ALPHABET: &[char] = &[
+    '{', '}', '[', ']', '"', ':', ',', '=', '#', '.', '-', '+', '_', '\\', '/', 'e', 'E', 'u',
+    't', 'r', 'f', 'a', 'l', 's', 'n', 'k', '0', '1', '9', ' ', '\t', '\n', '\r', 'é', '🦀',
+    '\u{0}',
+];
+
+fn soup(rng: &mut Pcg32, max_len: usize) -> String {
+    let len = rng.gen_range_usize(0, max_len + 1);
+    (0..len)
+        .map(|_| ALPHABET[rng.gen_range_usize(0, ALPHABET.len())])
+        .collect()
+}
+
+fn cases() -> u32 {
+    PropConfig::default().cases.max(64)
+}
+
+#[test]
+fn json_parse_survives_byte_soups() {
+    let mut rng = Pcg32::new(0xF022, 1);
+    for _ in 0..cases() * 4 {
+        let text = soup(&mut rng, 120);
+        // Must not panic; Ok is acceptable (e.g. the soup "1").
+        let _ = Json::parse(&text);
+    }
+}
+
+#[test]
+fn config_parse_survives_byte_soups() {
+    let mut rng = Pcg32::new(0xF023, 1);
+    for _ in 0..cases() * 4 {
+        let text = soup(&mut rng, 120);
+        let _ = ConfigMap::parse(&text);
+    }
+}
+
+/// A representative nested document exercising every JSON value shape.
+fn sample_json() -> Json {
+    let mut j = Json::obj();
+    j.set("name", "mesh/c4/uniform:0.01/e2000/s0");
+    j.set("checksum", "0x00ff00ff00ff00ff");
+    j.set("rate", 0.002);
+    j.set("count", 123_456u64);
+    j.set("neg", -1.5e-3);
+    j.set("ok", true);
+    j.set("missing", Json::Null);
+    j.set("esc", "a\"b\\c\nd\té");
+    j.set(
+        "scenarios",
+        vec![Json::Num(1.0), Json::Str("two".into()), Json::Bool(false)],
+    );
+    let mut nested = Json::obj();
+    nested.set("inner", vec![0.25, 0.5]);
+    j.set("nested", nested);
+    j
+}
+
+#[test]
+fn truncated_json_documents_always_err() {
+    // An object-rooted document is only balanced at full length: every
+    // strict prefix must be rejected (and must not panic while being
+    // rejected). Checked for the pretty and the compact serialization.
+    for text in [sample_json().to_string(), sample_json().to_compact_string()] {
+        assert!(Json::parse(&text).is_ok(), "the untruncated document parses");
+        for end in 0..text.len() {
+            if !text.is_char_boundary(end) {
+                continue;
+            }
+            let prefix = &text[..end];
+            assert!(
+                Json::parse(prefix).is_err(),
+                "truncated JSON parsed: {prefix:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mutated_json_documents_never_panic() {
+    let base = sample_json().to_compact_string();
+    let mut rng = Pcg32::new(0xF024, 7);
+    for _ in 0..cases() {
+        let mut chars: Vec<char> = base.chars().collect();
+        for _ in 0..1 + rng.gen_range_usize(0, 4) {
+            let i = rng.gen_range_usize(0, chars.len());
+            chars[i] = ALPHABET[rng.gen_range_usize(0, ALPHABET.len())];
+        }
+        let text: String = chars.iter().collect();
+        let _ = Json::parse(&text); // no panic; Err or mutated-Ok both fine
+    }
+}
+
+#[test]
+fn truncated_and_mutated_config_files_never_panic() {
+    let base = "# campaign axes\n\
+                [campaign]\n\
+                arch = [\"resipi\", \"awgr\"]\n\
+                rate = [0.002, 0.01]\n\
+                cycles = 6_000\n\
+                comment = \"a#b, c\"\n\
+                flag = true\n";
+    for end in 0..base.len() {
+        if base.is_char_boundary(end) {
+            let _ = ConfigMap::parse(&base[..end]); // line-based: Ok or Err, no panic
+        }
+    }
+    let mut rng = Pcg32::new(0xF025, 7);
+    for _ in 0..cases() {
+        let mut chars: Vec<char> = base.chars().collect();
+        for _ in 0..1 + rng.gen_range_usize(0, 4) {
+            let i = rng.gen_range_usize(0, chars.len());
+            chars[i] = ALPHABET[rng.gen_range_usize(0, ALPHABET.len())];
+        }
+        let text: String = chars.iter().collect();
+        let _ = ConfigMap::parse(&text);
+    }
+}
+
+#[test]
+fn malformed_documents_err_with_positions() {
+    // Spot checks that the fuzz surface actually produces Err (not Ok) on
+    // clearly-broken inputs, with positioned messages.
+    for bad in [
+        "{\"a\": }",
+        "[1, 2",
+        "\"\\uD800\"",
+        "{\"k\": 1,}",
+        "nul",
+        "0x10",
+        "{\"a\":1}{",
+    ] {
+        let err = Json::parse(bad).unwrap_err();
+        assert!(
+            err.to_string().contains("JSON"),
+            "unhelpful error for {bad:?}: {err}"
+        );
+    }
+    for bad in ["[unterminated\nk = 1", "novalue\n", "k = \"open\n", "k = [1, \"x\n"] {
+        assert!(ConfigMap::parse(bad).is_err(), "{bad:?} should fail");
+    }
+}

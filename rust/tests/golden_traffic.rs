@@ -1,0 +1,329 @@
+//! Golden-trace battery for the traffic catalog.
+//!
+//! Every [`TrafficKind`] is pinned three ways:
+//!
+//! 1. **Golden digests** — an FNV-1a digest of the first 256 packets at a
+//!    fixed seed is compared against `tests/golden/traffic_traces.json`.
+//!    While that file carries `"bootstrap": true` the comparison is
+//!    internal-consistency only (two independent constructions must agree
+//!    bit-for-bit); run with `RESIPI_BLESS=1` to record real digests and
+//!    commit the file with `bootstrap` set to `false`, after which any
+//!    drift in any pattern's packet stream fails this test.
+//! 2. **Structural references** — deterministic-destination kinds are
+//!    checked packet-by-packet against closed-form destination maps; the
+//!    stochastic kinds against distribution-shape properties.
+//! 3. **Statistical properties** — offered-rate conservation, destination
+//!    spread, and the no-self-addressed-packets invariant for every kind.
+
+use resipi::config::parser::ConfigMap;
+use resipi::config::{Architecture, Config};
+use resipi::sim::{Coord, Geometry, Node};
+use resipi::traffic::{NewPacket, Traffic, TrafficKind, TrafficSpec};
+use resipi::util::io::Json;
+
+const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/traffic_traces.json");
+const GOLDEN_SEED: u64 = 0x601D;
+const GOLDEN_RATE: f64 = 0.02;
+const GOLDEN_PACKETS: usize = 256;
+
+fn geo() -> Geometry {
+    Geometry::from_config(&Config::table1(Architecture::Resipi))
+}
+
+/// Build a kind through the config-file path (proves "constructible from
+/// config alone").
+fn build_from_config(kind: TrafficKind, rate: f64, seed: u64) -> Box<dyn Traffic> {
+    let mut cfg = Config::table1(Architecture::Resipi);
+    let text = format!("[traffic]\nkind = \"{}\"\nrate = {rate}\n", kind.name());
+    cfg.apply_overrides(&ConfigMap::parse(&text).unwrap()).unwrap();
+    cfg.validate().unwrap();
+    let spec = cfg.traffic.clone().expect("traffic configured");
+    spec.build(&Geometry::from_config(&cfg), seed).unwrap()
+}
+
+/// First `limit` packets (polled cycle-by-cycle, bounded horizon).
+fn trace(t: &mut dyn Traffic, limit: usize) -> Vec<NewPacket> {
+    let mut out = Vec::new();
+    let mut now = 0u64;
+    while out.len() < limit && now < 500_000 {
+        t.generate(now, &mut out);
+        now += 1;
+    }
+    out.truncate(limit);
+    assert_eq!(out.len(), limit, "{}: trace underflow", t.name());
+    out
+}
+
+fn global_index(geo: &Geometry, node: Node) -> usize {
+    match node {
+        Node::Core { chiplet, coord } => chiplet * geo.cores_per_chiplet() + geo.core_index(coord),
+        other => panic!("synthetic traffic emits core nodes, got {other:?}"),
+    }
+}
+
+/// FNV-1a digest of a packet trace (src index, dst index, class tag),
+/// using the crate's shared digest constants.
+fn trace_digest(geo: &Geometry, packets: &[NewPacket]) -> u64 {
+    use resipi::util::rng::{fnv1a_mix, FNV_OFFSET};
+    let mut h = FNV_OFFSET;
+    for p in packets {
+        h = fnv1a_mix(h, global_index(geo, p.src) as u64);
+        h = fnv1a_mix(h, global_index(geo, p.dst) as u64);
+        h = fnv1a_mix(h, p.class as u64);
+    }
+    h
+}
+
+fn golden_digest(kind: TrafficKind) -> u64 {
+    let g = geo();
+    let mut t = build_from_config(kind, GOLDEN_RATE, GOLDEN_SEED);
+    trace_digest(&g, &trace(t.as_mut(), GOLDEN_PACKETS))
+}
+
+#[test]
+fn golden_traces_match_the_committed_file() {
+    let text = std::fs::read_to_string(GOLDEN_PATH).expect("golden file present");
+    let golden = Json::parse(&text).expect("golden file parses");
+    let bootstrap = golden.get("bootstrap").and_then(Json::as_bool).unwrap_or(false);
+    assert_eq!(
+        golden.get("seed").and_then(Json::as_str),
+        Some(format!("{GOLDEN_SEED:#018x}").as_str()),
+        "golden file and test disagree on the pinned seed"
+    );
+
+    let mut computed = Json::obj();
+    for kind in TrafficKind::ALL {
+        let digest = golden_digest(kind);
+        // Internal consistency: an independent second construction (config
+        // path again, fresh Geometry) must reproduce the digest exactly.
+        assert_eq!(
+            digest,
+            golden_digest(kind),
+            "kind {} is not deterministic at fixed seed",
+            kind.name()
+        );
+        computed.set(kind.name(), format!("{digest:#018x}"));
+    }
+
+    if std::env::var("RESIPI_BLESS").is_ok() {
+        let mut fresh = Json::obj();
+        fresh.set("schema_version", 1u64);
+        fresh.set("bootstrap", false);
+        fresh.set(
+            "comment",
+            "Golden packet-trace digests (first 256 NewPackets at seed 0x601D, Table 1 \
+             ReSiPI geometry). Regenerate with RESIPI_BLESS=1 cargo test -q --test golden_traffic.",
+        );
+        fresh.set("geometry", "resipi/mesh/c4");
+        fresh.set("seed", format!("{GOLDEN_SEED:#018x}"));
+        fresh.set("rate", GOLDEN_RATE);
+        fresh.set("packets", GOLDEN_PACKETS);
+        fresh.set("traces", computed);
+        fresh.write(std::path::Path::new(GOLDEN_PATH)).unwrap();
+        eprintln!("blessed {GOLDEN_PATH}");
+        return;
+    }
+
+    if bootstrap {
+        eprintln!(
+            "golden file is a bootstrap placeholder; computed digests:\n{}",
+            computed.to_string()
+        );
+        return;
+    }
+    let traces = golden.get("traces").expect("recorded golden file has traces");
+    for kind in TrafficKind::ALL {
+        let want = traces
+            .get(kind.name())
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| panic!("golden file lacks kind {}", kind.name()));
+        let got = computed.get(kind.name()).and_then(Json::as_str).unwrap();
+        assert_eq!(
+            got,
+            want,
+            "kind {}: packet trace drifted from the committed golden digest \
+             (intentional? re-bless with RESIPI_BLESS=1)",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn deterministic_kinds_match_closed_form_references() {
+    let g = geo();
+    let n = g.total_cores();
+    let cpc = g.cores_per_chiplet();
+    let (cx, cy) = g.core_dims();
+    let bits = n.trailing_zeros();
+
+    for kind in [
+        TrafficKind::Transpose,
+        TrafficKind::Tornado,
+        TrafficKind::BitComplement,
+        TrafficKind::BitReversal,
+    ] {
+        let mut t = build_from_config(kind, GOLDEN_RATE, GOLDEN_SEED);
+        let pkts = trace(t.as_mut(), GOLDEN_PACKETS);
+        for p in &pkts {
+            let src = global_index(&g, p.src);
+            let dst = global_index(&g, p.dst);
+            let want = match kind {
+                TrafficKind::Tornado => (src + n / 2) % n,
+                TrafficKind::BitReversal => ((src as u64).reverse_bits() >> (64 - bits)) as usize,
+                TrafficKind::BitComplement => {
+                    let c = src / cpc;
+                    let Coord { x, y } = g.core_coord(src % cpc);
+                    (g.chiplets - 1 - c) * cpc
+                        + g.core_index(Coord::new(cx - 1 - x, cy - 1 - y))
+                }
+                TrafficKind::Transpose => {
+                    let c = src / cpc;
+                    let Coord { x, y } = g.core_coord(src % cpc);
+                    (g.chiplets - 1 - c) * cpc + g.core_index(Coord::new(y, x))
+                }
+                _ => unreachable!(),
+            };
+            assert_eq!(
+                dst,
+                want,
+                "kind {}: core {src} sent to {dst}, reference says {want}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_kind_conserves_offered_rate_and_never_self_addresses() {
+    let g = geo();
+    let n = g.total_cores();
+    let bits = n.trailing_zeros();
+    let rate = 0.01;
+    let cycles = 100_000u64;
+    for kind in TrafficKind::ALL {
+        let mut t = build_from_config(kind, rate, 11);
+        let mut out = Vec::new();
+        for now in 0..cycles {
+            t.generate(now, &mut out);
+        }
+        assert!(
+            out.iter().all(|p| p.src != p.dst),
+            "kind {} emitted a self-addressed packet",
+            kind.name()
+        );
+        // Deterministic permutations silently drop their fixed points
+        // (self-sends): on the 64-core Table 1 system only bitrev has any
+        // (the 2^(bits/2) = 8 palindromic indices). Scale the expectation
+        // by the surviving fraction; the stochastic kinds send to "another
+        // core" by construction and lose nothing.
+        let fixed_points = match kind {
+            TrafficKind::BitReversal => (0..n)
+                .filter(|&i| ((i as u64).reverse_bits() >> (64 - bits)) as usize == i)
+                .count(),
+            TrafficKind::Tornado => (0..n).filter(|&i| (i + n / 2) % n == i).count(),
+            _ => 0,
+        };
+        let expected = rate * cycles as f64 * (n - fixed_points) as f64;
+        let got = out.len() as f64;
+        // 10% covers geometric-sampling noise at this horizon.
+        assert!(
+            (got - expected).abs() / expected < 0.10,
+            "kind {}: offered rate drifted — got {got}, expected ~{expected}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn uniform_and_bursty_spread_destinations_roughly_evenly() {
+    let g = geo();
+    let n = g.total_cores();
+    for kind in [TrafficKind::Uniform, TrafficKind::Bursty] {
+        let mut t = build_from_config(kind, 0.02, 13);
+        let mut out = Vec::new();
+        for now in 0..100_000u64 {
+            t.generate(now, &mut out);
+        }
+        let mut counts = vec![0u64; n];
+        for p in &out {
+            counts[global_index(&g, p.dst)] += 1;
+        }
+        let per = out.len() as f64 / n as f64;
+        assert!(per > 50.0, "kind {}: too few samples per core", kind.name());
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > per * 0.5 && (c as f64) < per * 1.5,
+                "kind {}: core {i} got {c} packets, expected ~{per:.0}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn hotspot_concentrates_and_respects_hot_fraction() {
+    let g = geo();
+    let mut spec = TrafficSpec::new(TrafficKind::Hotspot, 0.02);
+    spec.hot_fraction = 0.3;
+    spec.hot_core = 9;
+    let mut t = spec.build(&g, 17).unwrap();
+    let mut out = Vec::new();
+    for now in 0..100_000u64 {
+        t.generate(now, &mut out);
+    }
+    let hot_count = out
+        .iter()
+        .filter(|p| global_index(&g, p.dst) == 9)
+        .count();
+    let frac = hot_count as f64 / out.len() as f64;
+    // ~hot_fraction of redirected traffic plus the uniform background.
+    assert!(
+        frac > 0.25 && frac < 0.40,
+        "hot core received fraction {frac:.3}, expected ≈0.3"
+    );
+}
+
+#[test]
+fn phased_trace_follows_the_phase_schedule() {
+    let g = geo();
+    let n = g.total_cores();
+    let mut spec = TrafficSpec::new(TrafficKind::Phased, 0.02);
+    spec.phases = vec![TrafficKind::Tornado, TrafficKind::Transpose];
+    spec.phase_cycles = 4_000;
+    let mut t = spec.build(&g, 23).unwrap();
+    let cpc = g.cores_per_chiplet();
+    for phase in 0..4u64 {
+        let mut out = Vec::new();
+        for now in (phase * 4_000)..((phase + 1) * 4_000) {
+            t.generate(now, &mut out);
+        }
+        assert!(!out.is_empty(), "phase {phase} emitted nothing");
+        for p in &out {
+            let src = global_index(&g, p.src);
+            let dst = global_index(&g, p.dst);
+            let want = if phase % 2 == 0 {
+                (src + n / 2) % n
+            } else {
+                let c = src / cpc;
+                let Coord { x, y } = g.core_coord(src % cpc);
+                (g.chiplets - 1 - c) * cpc + g.core_index(Coord::new(y, x))
+            };
+            assert_eq!(dst, want, "phase {phase}: wrong pattern active");
+        }
+    }
+}
+
+#[test]
+fn traces_are_seed_sensitive() {
+    let g = geo();
+    // Stochastic kinds must produce different traces under different
+    // seeds (deterministic-destination kinds share destinations but not
+    // timing, so their digests differ too).
+    for kind in TrafficKind::ALL {
+        let mut a = build_from_config(kind, GOLDEN_RATE, GOLDEN_SEED);
+        let mut b = build_from_config(kind, GOLDEN_RATE, GOLDEN_SEED + 1);
+        let da = trace_digest(&g, &trace(a.as_mut(), GOLDEN_PACKETS));
+        let db = trace_digest(&g, &trace(b.as_mut(), GOLDEN_PACKETS));
+        assert_ne!(da, db, "kind {}: seed does not reach the stream", kind.name());
+    }
+}
