@@ -22,15 +22,17 @@ use crate::sim::ids::{ChipletId, Coord, GatewayId, Geometry};
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct VicinityMap {
     pub chiplet: ChipletId,
-    /// Local gateway slot for every router.
-    assignment: Vec<usize>,
+    /// Local gateway slot for every router. u16 keeps the per-chiplet maps
+    /// compact at production scale (a slot index is bounded by the router
+    /// grid, far below `u16::MAX`); accessors widen back to `usize`.
+    assignment: Vec<u16>,
     /// Second-choice slot per router (the next-nearest *other* active
     /// gateway; equals `assignment` when only one is active). §3.4 weighs
     /// both hop count *and* gateway load for the destination-side
     /// selection — the source gateway alternates between the two nearest
     /// candidates so a hot destination router cannot pin all of its
     /// traffic onto a single reader.
-    alt: Vec<usize>,
+    alt: Vec<u16>,
 }
 
 impl VicinityMap {
@@ -71,20 +73,20 @@ impl VicinityMap {
         }
         pairs.sort_unstable();
 
-        let mut assignment = vec![usize::MAX; r];
+        let mut assignment = vec![u16::MAX; r];
         let mut assigned = 0;
         for &(_, i, router) in &pairs {
             if assigned == r {
                 break;
             }
-            if assignment[router] != usize::MAX || quota[i] == 0 {
+            if assignment[router] != u16::MAX || quota[i] == 0 {
                 continue;
             }
-            assignment[router] = actives[i];
+            assignment[router] = actives[i] as u16;
             quota[i] -= 1;
             assigned += 1;
         }
-        debug_assert!(assignment.iter().all(|&a| a != usize::MAX));
+        debug_assert!(assignment.iter().all(|&a| a != u16::MAX));
         let alt = Self::build_alt(geo, &actives, &assignment);
         Self {
             chiplet,
@@ -94,7 +96,7 @@ impl VicinityMap {
     }
 
     /// Second-nearest *different* active gateway per router (no quota).
-    fn build_alt(geo: &Geometry, actives: &[usize], assignment: &[usize]) -> Vec<usize> {
+    fn build_alt(geo: &Geometry, actives: &[usize], assignment: &[u16]) -> Vec<u16> {
         assignment
             .iter()
             .enumerate()
@@ -103,8 +105,9 @@ impl VicinityMap {
                 actives
                     .iter()
                     .copied()
-                    .filter(|&slot| slot != primary)
+                    .filter(|&slot| slot != primary as usize)
                     .min_by_key(|&slot| (geo.hops(rc, geo.gw_positions[slot]), slot))
+                    .map(|slot| slot as u16)
                     .unwrap_or(primary)
             })
             .collect()
@@ -120,7 +123,7 @@ impl VicinityMap {
             .collect();
         assert!(!actives.is_empty());
         let r = geo.routers_per_chiplet();
-        let assignment: Vec<usize> = (0..r).map(|i| actives[i % actives.len()]).collect();
+        let assignment: Vec<u16> = (0..r).map(|i| actives[i % actives.len()] as u16).collect();
         let alt = Self::build_alt(geo, &actives, &assignment);
         Self {
             chiplet,
@@ -131,7 +134,7 @@ impl VicinityMap {
 
     /// The gateway slot assigned to a local router coordinate.
     pub fn slot_for(&self, geo: &Geometry, coord: Coord) -> usize {
-        self.assignment[coord.y * geo.mesh_x + coord.x]
+        self.assignment[coord.y * geo.mesh_x + coord.x] as usize
     }
 
     /// The global gateway id assigned to a local router coordinate.
@@ -141,7 +144,7 @@ impl VicinityMap {
 
     /// The second-choice slot for a router (destination-side balancing).
     pub fn alt_slot_for(&self, geo: &Geometry, coord: Coord) -> usize {
-        self.alt[coord.y * geo.mesh_x + coord.x]
+        self.alt[coord.y * geo.mesh_x + coord.x] as usize
     }
 
     /// The second-choice gateway id for a router.
@@ -153,7 +156,7 @@ impl VicinityMap {
     pub fn share_counts(&self, geo: &Geometry) -> Vec<usize> {
         let mut counts = vec![0usize; geo.gw_per_chiplet];
         for &slot in &self.assignment {
-            counts[slot] += 1;
+            counts[slot as usize] += 1;
         }
         counts
     }

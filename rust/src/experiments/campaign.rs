@@ -117,6 +117,27 @@ impl CampaignSpec {
         }
     }
 
+    /// The production-scale preset (the HexaMesh/PlaceIT direction): mesh
+    /// fabrics at 64/128/256 chiplets under light uniform load, short
+    /// horizon. Exists so one flag (`resipi campaign --scale`, and the CI
+    /// `scale` smoke job via `resipi scale`) exercises construction and
+    /// simulation at the scale the O(channels) deadlock certificate and
+    /// packed route tables were built for.
+    pub fn scale() -> Self {
+        Self {
+            archs: vec![Architecture::Resipi, Architecture::Prowaves],
+            topologies: vec![TopologyKind::Mesh],
+            chiplets: vec![64, 128, 256],
+            traffics: vec![TrafficSpec::new(TrafficKind::Uniform, 0.0)],
+            rates: vec![0.002],
+            epoch_cycles: vec![10_000],
+            seeds: vec![0],
+            cycles: 2_000,
+            warmup_cycles: 200,
+            root_seed: 0xCA4A,
+        }
+    }
+
     /// Load a campaign file (TOML subset, `campaign.*` namespace) over the
     /// quick preset. Scalar values are accepted where a single-element
     /// axis is meant. Unknown keys are rejected so typos fail loudly.
@@ -398,10 +419,24 @@ pub fn run_campaign(
     threads: usize,
     out_dir: &Path,
 ) -> Result<CampaignOutcome> {
+    run_campaign_named(spec, threads, out_dir, "campaign")
+}
+
+/// [`run_campaign`] with an explicit file stem: the ledger is written to
+/// `<stem>.jsonl` and the aggregate reports to `<stem>_report.{json,csv}`.
+/// Other experiments (the scaling sweep) reuse the campaign machinery —
+/// resume, sharding, byte-stable reports — under their own file names so
+/// they can share an output directory with a real campaign.
+pub fn run_campaign_named(
+    spec: &CampaignSpec,
+    threads: usize,
+    out_dir: &Path,
+    stem: &str,
+) -> Result<CampaignOutcome> {
     std::fs::create_dir_all(out_dir)?;
-    let jsonl_path = out_dir.join("campaign.jsonl");
-    let report_path = out_dir.join("campaign_report.json");
-    let csv_path = out_dir.join("campaign_report.csv");
+    let jsonl_path = out_dir.join(format!("{stem}.jsonl"));
+    let report_path = out_dir.join(format!("{stem}_report.json"));
+    let csv_path = out_dir.join(format!("{stem}_report.csv"));
 
     let scenarios = spec.expand();
     if scenarios.is_empty() {
@@ -647,6 +682,23 @@ mod tests {
         for sc in &scenarios {
             sc.config().unwrap_or_else(|e| {
                 panic!("quick scenario {} has invalid config: {e}", sc.name())
+            });
+        }
+    }
+
+    #[test]
+    fn scale_matrix_configs_validate_up_to_256_chiplets() {
+        let spec = CampaignSpec::scale();
+        let scenarios = spec.expand();
+        // 2 archs × 1 topology × 3 chiplet counts.
+        assert_eq!(scenarios.len(), 6);
+        assert!(
+            scenarios.iter().any(|sc| sc.chiplets == 256),
+            "scale preset must reach 256 chiplets"
+        );
+        for sc in &scenarios {
+            sc.config().unwrap_or_else(|e| {
+                panic!("scale scenario {} has invalid config: {e}", sc.name())
             });
         }
     }

@@ -115,6 +115,18 @@ pub fn matrix(quick: bool) -> Vec<Scenario> {
         chiplets: 8,
         cycles,
     });
+    // Large-fabric scaling points (64/128/256 chiplets — the 16×16 mesh
+    // the deadlock certificate and packed route tables target). Light
+    // load, shorter horizon: these score construction + steady-state
+    // cost per router, not saturation behavior.
+    for chiplets in [64, 128, 256] {
+        out.push(Scenario {
+            topology: TopologyKind::Mesh,
+            injection: 0.002,
+            chiplets,
+            cycles: cycles / 4,
+        });
+    }
     out
 }
 
@@ -531,12 +543,16 @@ mod tests {
     #[test]
     fn matrix_covers_topologies_and_loads() {
         let m = matrix(true);
-        assert_eq!(m.len(), 7);
+        assert_eq!(m.len(), 10);
         for kind in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh] {
             assert!(m.iter().any(|s| s.topology == kind));
         }
         assert!(m.iter().any(|s| s.injection >= 0.05), "needs a saturating point");
         assert!(m.iter().any(|s| s.chiplets == 8), "needs a scaling point");
+        assert!(
+            m.iter().any(|s| s.chiplets == 256),
+            "needs the 256-chiplet (16×16 mesh) point"
+        );
         // Names are unique (baseline matching key).
         let mut names: Vec<String> = m.iter().map(Scenario::name).collect();
         names.sort();

@@ -1,115 +1,118 @@
-//! Scalability extension (paper §1–2 motivation: "the interposer network
-//! can suffer from traffic congestion especially when the system scales
-//! up"): sweep the chiplet count × intra-chiplet topology kind at fixed
-//! per-core load and compare how ReSiPI's distributed gateways and
-//! PROWAVES's single-gateway-per-chiplet design scale in latency and
-//! power — and how much a torus's wraparound links or a concentrated
-//! mesh's shallower grid buy at each scale.
+//! Scalability sweep (paper §1–2 motivation: "the interposer network can
+//! suffer from traffic congestion especially when the system scales up"):
+//! chiplet count × intra-chiplet topology kind at fixed per-core load,
+//! comparing how ReSiPI's distributed gateways and PROWAVES's
+//! single-gateway-per-chiplet design scale — now up to the 64/128/256
+//! chiplet counts the HexaMesh/PlaceIT line of work targets.
 //!
 //! Not a paper figure — an extension experiment DESIGN.md §6 lists (the
-//! paper defers scale-out to future work); the topology dimension follows
-//! the HexaMesh/PlaceIT observation that chiplet-count scaling is where
-//! 2.5D interposer networks are actually stressed.
+//! paper defers scale-out to future work).
+//!
+//! ## Ledger-backed, byte-stable outputs
+//!
+//! The sweep is a thin preset over the campaign engine
+//! ([`campaign::run_campaign_named`]): every point streams one JSONL
+//! record to `scaling.jsonl`, and `scaling_report.{json,csv}` are rebuilt
+//! from the ledger — so an interrupted sweep resumes past completed
+//! points, re-running a finished sweep rewrites byte-identical reports,
+//! and results diff cleanly across machines and worker counts. (The
+//! earlier ad-hoc implementation printed format!-rounded CSV cells and
+//! could not resume.) The traffic axis is the registry's `uniform` model
+//! rather than the parsec traces, because resume matching requires a
+//! [`TrafficSpec`] the ledger can name; the load level matches the bench
+//! scaling scenarios (0.002 packets/cycle/core).
 
-use crate::config::{Architecture, Config};
-use crate::sim::{Geometry, Network, Summary};
+use std::path::Path;
+
+use crate::config::Architecture;
+use crate::experiments::campaign::{self, CampaignOutcome, CampaignSpec};
 use crate::topology::TopologyKind;
-use crate::traffic::parsec::{app_by_name, ParsecTraffic};
-use crate::util::io::Csv;
-use crate::util::pool::par_map_auto;
+use crate::traffic::{TrafficKind, TrafficSpec};
+use crate::util::io::Json;
 use crate::Result;
 
-/// One sweep point.
+/// One sweep point, extracted from the ledger-built report.
 #[derive(Debug, Clone)]
 pub struct ScalePoint {
     pub chiplets: usize,
-    pub topology: &'static str,
-    pub summary: Summary,
+    pub topology: String,
+    pub arch: String,
+    pub avg_latency_cycles: f64,
+    pub avg_power_mw: f64,
+    pub avg_active_gateways: f64,
+    pub delivery_ratio: f64,
 }
 
-/// Run the sweep over chiplet counts × topology kinds for both
-/// architectures on the median workload (dedup).
-pub fn run(chiplet_counts: &[usize], cycles: u64, seed: u64) -> Result<Vec<ScalePoint>> {
-    let jobs: Vec<(usize, TopologyKind, Architecture)> = chiplet_counts
-        .iter()
-        .flat_map(|&c| {
-            TopologyKind::ALL.iter().flat_map(move |&kind| {
-                [Architecture::Resipi, Architecture::Prowaves]
-                    .into_iter()
-                    .map(move |a| (c, kind, a))
-            })
-        })
-        .collect();
-    par_map_auto(jobs, |&(chiplets, kind, arch)| -> Result<ScalePoint> {
-        let mut cfg = Config::table1(arch);
-        cfg.set_topology(kind);
-        cfg.topology.chiplets = chiplets;
-        // Memory controllers scale with the system (one per two chiplets,
-        // minimum two — mirrors Table 1's 2-per-4).
-        cfg.gateways.memory_gateways = (chiplets / 2).max(2);
-        cfg.sim.cycles = cycles;
-        // Mesh keeps the seed's per-point seeds (the kind term is 0).
-        cfg.sim.seed = seed
-            ^ ((chiplets as u64) << 24)
-            ^ ((kind as u64) << 16)
-            ^ arch.name().len() as u64;
-        cfg.controller.epoch_cycles = (cycles / 20).max(10_000);
-        cfg.validate()?;
-        let geo = Geometry::from_config(&cfg);
-        let app = app_by_name("dedup").unwrap();
-        let traffic = Box::new(ParsecTraffic::new(geo, app, cfg.sim.seed ^ 0x5CA1E));
-        let mut net = Network::new(cfg, traffic)?;
-        net.run()?;
-        Ok(ScalePoint {
-            chiplets,
-            topology: kind.name(),
-            summary: net.summary(),
-        })
-    })
-    .into_iter()
-    .collect()
-}
-
-pub fn to_csv(points: &[ScalePoint]) -> Csv {
-    let mut csv = Csv::new(vec![
-        "chiplets",
-        "topology",
-        "arch",
-        "avg_latency_cycles",
-        "avg_power_mw",
-        "energy_metric_pj",
-        "avg_active_gateways",
-        "delivery_ratio",
-    ]);
-    for p in points {
-        csv.row(vec![
-            p.chiplets.to_string(),
-            p.topology.to_string(),
-            p.summary.arch.clone(),
-            format!("{:.3}", p.summary.avg_latency_cycles),
-            format!("{:.1}", p.summary.avg_power_mw),
-            format!("{:.1}", p.summary.energy_metric_pj),
-            format!("{:.2}", p.summary.avg_active_gateways),
-            format!("{:.4}", p.summary.delivery_ratio),
-        ]);
+/// The sweep's campaign spec: chiplet counts × every topology kind ×
+/// {ReSiPI, PROWAVES} at light uniform load.
+pub fn spec(chiplet_counts: &[usize], cycles: u64, seed: u64) -> CampaignSpec {
+    CampaignSpec {
+        archs: vec![Architecture::Resipi, Architecture::Prowaves],
+        topologies: TopologyKind::ALL.to_vec(),
+        chiplets: chiplet_counts.to_vec(),
+        traffics: vec![TrafficSpec::new(TrafficKind::Uniform, 0.0)],
+        rates: vec![0.002],
+        epoch_cycles: vec![(cycles / 20).max(10_000)],
+        seeds: vec![0],
+        cycles,
+        warmup_cycles: (cycles / 10).min(5_000),
+        root_seed: seed,
     }
-    csv
+}
+
+/// Run (or resume) the sweep through the campaign ledger in `out_dir`
+/// (`scaling.jsonl` + `scaling_report.{json,csv}`), returning the engine
+/// outcome plus the parsed sweep points in canonical matrix order.
+pub fn run_sweep(
+    chiplet_counts: &[usize],
+    cycles: u64,
+    seed: u64,
+    threads: usize,
+    out_dir: &Path,
+) -> Result<(CampaignOutcome, Vec<ScalePoint>)> {
+    let spec = spec(chiplet_counts, cycles, seed);
+    let outcome = campaign::run_campaign_named(&spec, threads, out_dir, "scaling")?;
+    let points = read_points(&outcome.report_path)?;
+    Ok((outcome, points))
+}
+
+/// Parse sweep points back out of a ledger-built aggregate report.
+pub fn read_points(report_path: &Path) -> Result<Vec<ScalePoint>> {
+    let text = std::fs::read_to_string(report_path)?;
+    let json = Json::parse(&text)?;
+    let scenarios = json.get("scenarios").and_then(Json::as_arr).unwrap_or_default();
+    let num = |r: &Json, key: &str| r.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let txt = |r: &Json, key: &str| {
+        r.get(key).and_then(Json::as_str).unwrap_or("").to_string()
+    };
+    Ok(scenarios
+        .iter()
+        .map(|r| ScalePoint {
+            chiplets: num(r, "chiplets") as usize,
+            topology: txt(r, "topology"),
+            arch: txt(r, "arch"),
+            avg_latency_cycles: num(r, "avg_latency_cycles"),
+            avg_power_mw: num(r, "avg_power_mw"),
+            avg_active_gateways: num(r, "avg_active_gateways"),
+            delivery_ratio: num(r, "delivery_ratio"),
+        })
+        .collect())
 }
 
 pub fn report(points: &[ScalePoint]) -> String {
     let mut out = String::new();
-    out.push_str("Scalability sweep (dedup, fixed per-core load)\n\n");
+    out.push_str("Scalability sweep (uniform, fixed per-core load)\n\n");
     out.push_str("chiplets  topology  arch       latency    power(mW)  gateways  delivery\n");
     for p in points {
         out.push_str(&format!(
             "{:<9} {:<9} {:<10} {:<10.2} {:<10.0} {:<9.2} {:<8.4}\n",
             p.chiplets,
             p.topology,
-            p.summary.arch,
-            p.summary.avg_latency_cycles,
-            p.summary.avg_power_mw,
-            p.summary.avg_active_gateways,
-            p.summary.delivery_ratio
+            p.arch,
+            p.avg_latency_cycles,
+            p.avg_power_mw,
+            p.avg_active_gateways,
+            p.delivery_ratio
         ));
     }
     out.push_str(
@@ -127,39 +130,43 @@ mod tests {
     use super::*;
 
     #[test]
-    fn sweep_runs_and_scales() {
-        let pts = run(&[2, 6], 120_000, 0x5CA).unwrap();
+    fn sweep_runs_resumes_and_stays_byte_stable() {
+        let dir = std::env::temp_dir().join(format!(
+            "resipi_scaling_test_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let (outcome, pts) = run_sweep(&[2, 6], 20_000, 0x5CA, 2, &dir).unwrap();
         // 2 counts × 3 topologies × 2 architectures.
+        assert_eq!(outcome.total, 12);
+        assert_eq!(outcome.ran, 12);
         assert_eq!(pts.len(), 12);
         for p in &pts {
             assert!(
-                p.summary.delivery_ratio > 0.8,
+                p.delivery_ratio > 0.8,
                 "{}/{} @ {} chiplets: {}",
-                p.summary.arch,
+                p.arch,
                 p.topology,
                 p.chiplets,
-                p.summary.delivery_ratio
+                p.delivery_ratio
             );
         }
-        // ReSiPI at 6 chiplets must beat PROWAVES at 6 chiplets on latency
-        // (on the baseline mesh — the seed's original scaling claim).
-        let rs6 = pts
-            .iter()
-            .find(|p| p.chiplets == 6 && p.topology == "mesh" && p.summary.arch == "resipi")
-            .unwrap();
-        let pw6 = pts
-            .iter()
-            .find(|p| p.chiplets == 6 && p.topology == "mesh" && p.summary.arch == "prowaves")
-            .unwrap();
-        assert!(
-            rs6.summary.avg_latency_cycles < pw6.summary.avg_latency_cycles,
-            "resipi {} vs prowaves {}",
-            rs6.summary.avg_latency_cycles,
-            pw6.summary.avg_latency_cycles
-        );
-        let csv = to_csv(&pts);
-        assert_eq!(csv.len(), 12);
-        assert!(report(&pts).contains("Scalability"));
-        assert!(report(&pts).contains("torus"));
+        let report_bytes = std::fs::read(&outcome.report_path).unwrap();
+        let csv_bytes = std::fs::read(&outcome.csv_path).unwrap();
+
+        // Resume: a second invocation (different worker count) re-runs
+        // nothing and rewrites byte-identical reports from the ledger.
+        let (again, pts2) = run_sweep(&[2, 6], 20_000, 0x5CA, 1, &dir).unwrap();
+        assert_eq!(again.ran, 0);
+        assert_eq!(again.skipped, 12);
+        assert_eq!(std::fs::read(&again.report_path).unwrap(), report_bytes);
+        assert_eq!(std::fs::read(&again.csv_path).unwrap(), csv_bytes);
+        assert_eq!(pts2.len(), pts.len());
+
+        let text = report(&pts);
+        assert!(text.contains("Scalability"));
+        assert!(text.contains("torus"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

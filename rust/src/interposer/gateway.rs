@@ -82,6 +82,10 @@ impl Gateway {
             // Pre-sized so queue growth cannot allocate inside the cycle
             // loop except under sustained saturation (where it amortizes):
             // the reader is hard-bounded by its flit reservation anyway.
+            // Deliberately constant-sized, NOT scaled by gateway or chiplet
+            // count: per-gateway state must stay O(1) so the 256-chiplet
+            // fabrics build in O(gateways) total memory (the scaling audit
+            // that flattened `Photonic::writer_busy_until`).
             writer_queue: VecDeque::with_capacity(16),
             reader_reserved: 0,
             reader_queue: VecDeque::with_capacity(8),

@@ -51,8 +51,13 @@ impl PartialOrd for InFlight {
 /// destination, [8]).
 #[derive(Debug)]
 pub struct Photonic {
-    /// Per-writer, per-channel cycle at which that serializer lane frees.
-    writer_busy_until: Vec<Vec<Cycle>>,
+    /// Per-writer, per-channel cycle at which that serializer lane frees —
+    /// one flat `writers × channels` matrix (row stride `channels`), not a
+    /// Vec-of-Vecs: AWGR sizes channels as N−1, and nested rows cost O(N)
+    /// separate allocations and O(N²) scattered memory at 256 chiplets.
+    writer_busy_until: Vec<Cycle>,
+    /// Serializer lanes per writer (`writer_busy_until` row stride).
+    channels: usize,
     /// Per-writer stall deadline imposed by PCMC reconfiguration (§4.3:
     /// 100 cycles): a writer may not *start* a new transmission while its
     /// laser feed is being retuned.
@@ -79,7 +84,8 @@ impl Photonic {
         assert!(bits_per_cycle_per_lambda > 0.0);
         assert!(channels >= 1);
         Self {
-            writer_busy_until: vec![vec![0; channels]; gateways],
+            writer_busy_until: vec![0; gateways * channels],
+            channels,
             writer_stall_until: vec![0; gateways],
             // A lane serializes one packet at a time and arrival trails the
             // serializer by at most head-time + propagation, so concurrent
@@ -99,10 +105,15 @@ impl Photonic {
         (bits as f64 / per_cycle).ceil() as u64
     }
 
+    /// This writer's serializer-lane row in the flat occupancy matrix.
+    #[inline]
+    fn lanes(&self, w: GatewayId) -> &[Cycle] {
+        &self.writer_busy_until[w.0 * self.channels..(w.0 + 1) * self.channels]
+    }
+
     /// Does this writer have a free serializer lane at `now`?
     pub fn writer_free(&self, w: GatewayId, now: Cycle) -> bool {
-        now >= self.writer_stall_until[w.0]
-            && self.writer_busy_until[w.0].iter().any(|&b| now >= b)
+        now >= self.writer_stall_until[w.0] && self.lanes(w).iter().any(|&b| now >= b)
     }
 
     /// Stall a writer until `until` (PCMC retune in progress on its feed).
@@ -135,11 +146,12 @@ impl Photonic {
         debug_assert_ne!(writer, dst, "SWMR writer cannot address itself");
         let ser = self.serialization_cycles(bits, lambdas);
         let done = now + ser;
-        let lane = self.writer_busy_until[writer.0]
+        let lane = self
+            .lanes(writer)
             .iter()
             .position(|&b| now >= b)
             .expect("writer_free checked");
-        self.writer_busy_until[writer.0][lane] = done;
+        self.writer_busy_until[writer.0 * self.channels + lane] = done;
         let deliver_after = if ser <= flits as u64 {
             ser.div_ceil(flits as u64) // head flit's serialization time
         } else {

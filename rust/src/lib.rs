@@ -21,11 +21,13 @@
 //! Select one via `Config::set_topology`, the `topology.kind` config key,
 //! or `resipi run --topology <mesh|torus|cmesh>`. Every instance is
 //! *proved* total and deadlock-free at `Network` construction
-//! ([`topology::validate_routing`] builds the full channel-dependency
-//! graph), and the simulator flattens the routing function into a
-//! per-router lookup table (`routing::RouteTable`) so the per-cycle hot
-//! loop pays no dynamic dispatch. See the `topology` module docs for how
-//! to add a new fabric.
+//! ([`topology::validate_routing`] builds an O(channels) deadlock
+//! certificate from the routing function's port-transition relation,
+//! cross-checked by an all-pairs oracle on small instances), and the
+//! simulator flattens the routing function into a packed per-router
+//! lookup table (`routing::RouteTable`) so the per-cycle hot loop pays
+//! no dynamic dispatch. See the `topology` module docs for how to add a
+//! new fabric.
 //!
 //! ## Performance
 //!

@@ -10,9 +10,9 @@
 //! resipi fig13   [--cycles N]          # residency heat maps
 //! resipi table2                        # controller overhead
 //! resipi ablate  <thresholds|gwsel|epoch> [--cycles N]
-//! resipi scale   [--cycles N]          # chiplets × topology sweep
+//! resipi scale   [--chiplets LIST] [--cycles N]   # ledger-backed scaling sweep
 //! resipi sweep                         # batched HLO power-model sweep
-//! resipi campaign [--quick|--full|--config F] [axis flags]   # scenario matrix
+//! resipi campaign [--quick|--full|--scale|--config F] [axis flags]   # scenario matrix
 //! resipi all     [--cycles N]          # every artifact, written to results/
 //! ```
 //!
@@ -175,8 +175,31 @@ const COMMANDS: &[Cmd] = &[
     Cmd {
         name: "scale",
         args: "",
-        summary: "scalability sweep: chiplet count x topology kind",
-        flags: &[CYCLES, SEED],
+        summary: "scalability sweep: chiplet count x topology kind, via the campaign ledger",
+        flags: &[
+            Flag {
+                name: "chiplets",
+                value: Some("LIST"),
+                help: "comma-separated chiplet counts (default 2,4,8,64,128,256)",
+            },
+            CYCLES,
+            SEED,
+            Flag {
+                name: "threads",
+                value: Some("N"),
+                help: "pool workers (default RESIPI_THREADS/auto); results are identical",
+            },
+            Flag {
+                name: "out",
+                value: Some("DIR"),
+                help: "output directory for scaling.jsonl + reports (default results/scale)",
+            },
+            Flag {
+                name: "fresh",
+                value: None,
+                help: "discard an existing scaling ledger instead of resuming from it",
+            },
+        ],
     },
     Cmd {
         name: "sweep",
@@ -231,6 +254,11 @@ const COMMANDS: &[Cmd] = &[
                 name: "full",
                 value: None,
                 help: "full catalog matrix (every arch/topology/traffic kind)",
+            },
+            Flag {
+                name: "scale",
+                value: None,
+                help: "64/128/256-chiplet scaling preset (the CI scale smoke job)",
             },
             Flag {
                 name: "config",
@@ -689,12 +717,41 @@ fn cmd_ablate(args: &Args) -> Result<()> {
 }
 
 fn cmd_scale(args: &Args) -> Result<()> {
-    let cycles = args.get_u64("cycles", 400_000).map_err(resipi::Error::config)?;
+    let cycles = args.get_u64("cycles", 20_000).map_err(resipi::Error::config)?;
     let seed = args.get_u64("seed", 0x5CA).map_err(resipi::Error::config)?;
-    let points = scaling::run(&[2, 4, 6, 8], cycles, seed)?;
-    scaling::to_csv(&points).write(&out_path("scaling.csv"))?;
+    let threads = args
+        .get_u64("threads", resipi::util::pool::default_threads() as u64)
+        .map_err(resipi::Error::config)? as usize;
+    let counts = args
+        .get_str("chiplets", "2,4,8,64,128,256")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| resipi::Error::config(format!("bad chiplet count {s:?}")))
+        })
+        .collect::<Result<Vec<usize>>>()?;
+    let out_dir = match args.flags.get("out") {
+        Some(dir) => PathBuf::from(dir),
+        None => output_dir().join("scale"),
+    };
+    if args.flags.contains_key("fresh") {
+        for name in ["scaling.jsonl", "scaling_report.json", "scaling_report.csv"] {
+            let p = out_dir.join(name);
+            if p.exists() {
+                std::fs::remove_file(&p)?;
+            }
+        }
+    }
+    println!(
+        "== resipi scale: {} chiplet count(s) x {} topologies x 2 archs across {} worker(s) ==",
+        counts.len(),
+        TopologyKind::ALL.len(),
+        threads.max(1)
+    );
+    let (outcome, points) = scaling::run_sweep(&counts, cycles, seed, threads, &out_dir)?;
     print!("{}", scaling::report(&points));
-    println!("wrote {}", out_path("scaling.csv").display());
+    print!("{}", outcome.report());
     Ok(())
 }
 
@@ -789,19 +846,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_campaign(args: &Args) -> Result<()> {
-    if args.flags.contains_key("quick") && args.flags.contains_key("full") {
-        return Err(resipi::Error::config("--quick and --full are mutually exclusive"));
+    let presets: Vec<&str> = ["quick", "full", "scale"]
+        .into_iter()
+        .filter(|k| args.flags.contains_key(*k))
+        .collect();
+    if presets.len() > 1 {
+        return Err(resipi::Error::config(
+            "--quick, --full and --scale are mutually exclusive",
+        ));
     }
     let mut spec = if let Some(path) = args.flags.get("config") {
-        if args.flags.contains_key("quick") || args.flags.contains_key("full") {
+        if !presets.is_empty() {
             return Err(resipi::Error::config(
-                "--config replaces the preset matrix; drop --quick/--full",
+                "--config replaces the preset matrix; drop --quick/--full/--scale",
             ));
         }
         let text = std::fs::read_to_string(std::path::Path::new(path))?;
         CampaignSpec::from_config(&resipi::config::parser::ConfigMap::parse(&text)?)?
     } else if args.flags.contains_key("full") {
         CampaignSpec::full()
+    } else if args.flags.contains_key("scale") {
+        CampaignSpec::scale()
     } else {
         CampaignSpec::quick()
     };

@@ -84,8 +84,14 @@ pub fn route_at(geo: &Geometry, pkt: &Packet, c: ChipletId, here: Coord) -> Port
 pub struct RouteTable {
     routers: usize,
     core_x: usize,
-    /// `routers × routers` next-hop ports (`Local` on the diagonal).
-    steps: Vec<u8>,
+    /// Router → id of its packed row in `rows`. Routers whose off-diagonal
+    /// next-hop rows are identical share one row.
+    row_of: Vec<u16>,
+    /// Distinct next-hop rows, `routers` u8 port indices each. The
+    /// diagonal entry is canonicalized to `Local` (0) — [`RouteTable::step`]
+    /// answers `here == dst` without consulting the row, which is what
+    /// makes row-sharing sound.
+    rows: Vec<u8>,
     /// Chiplet-local core index → chiplet-local host-router index.
     core_router: Vec<u16>,
     /// Gateway slot → chiplet-local host-router index.
@@ -97,12 +103,34 @@ impl RouteTable {
         let topo = geo.topology();
         let n = topo.routers();
         debug_assert!(n < u16::MAX as usize, "router grid too large for u16 LUT");
-        let mut steps = vec![0u8; n * n];
+        // Dedup rows as they are produced: scratch holds router s's row
+        // (diagonal canonicalized to Local); identical rows map to one id.
+        // Sharing is opportunistic — dimension-ordered XY gives every
+        // router a distinct row, so the guaranteed wins here are the u8
+        // port entries, u16 ids, and exact pre-sizing, with the indirection
+        // ready for routing functions that do repeat rows.
+        let mut row_of: Vec<u16> = Vec::with_capacity(n);
+        let mut rows: Vec<u8> = Vec::new();
+        let mut seen: std::collections::HashMap<Vec<u8>, u16> = std::collections::HashMap::new();
+        let mut scratch = vec![0u8; n];
         for s in 0..n {
             for d in 0..n {
-                steps[s * n + d] =
-                    topo.route_step(topo.coord_of(s), topo.coord_of(d)).index() as u8;
+                scratch[d] = if s == d {
+                    Port::Local.index() as u8
+                } else {
+                    topo.route_step(topo.coord_of(s), topo.coord_of(d)).index() as u8
+                };
             }
+            let id = match seen.get(scratch.as_slice()) {
+                Some(&id) => id,
+                None => {
+                    let id = u16::try_from(seen.len()).expect("row ids fit u16 when n does");
+                    rows.extend_from_slice(&scratch);
+                    seen.insert(scratch.clone(), id);
+                    id
+                }
+            };
+            row_of.push(id);
         }
         let (core_x, core_y) = topo.core_dims();
         let core_router = (0..core_x * core_y)
@@ -116,7 +144,8 @@ impl RouteTable {
         Self {
             routers: n,
             core_x,
-            steps,
+            row_of,
+            rows,
             core_router,
             gw_router,
         }
@@ -126,7 +155,20 @@ impl RouteTable {
     /// `dst_local` (`Port::Local` on arrival).
     #[inline]
     pub fn step(&self, here_local: usize, dst_local: usize) -> Port {
-        Port::from_index(self.steps[here_local * self.routers + dst_local] as usize)
+        if here_local == dst_local {
+            return Port::Local;
+        }
+        let row = self.row_of[here_local] as usize;
+        Port::from_index(self.rows[row * self.routers + dst_local] as usize)
+    }
+
+    /// Number of distinct packed rows (≤ routers; diagnostics/tests).
+    pub fn distinct_rows(&self) -> usize {
+        if self.routers == 0 {
+            0
+        } else {
+            self.rows.len() / self.routers
+        }
     }
 
     /// Chiplet-local host-router index of a core coord.
@@ -427,6 +469,11 @@ mod tests {
                     );
                 }
             }
+            assert!(
+                lut.distinct_rows() >= 1 && lut.distinct_rows() <= n,
+                "{kind:?}: {} packed rows for {n} routers",
+                lut.distinct_rows()
+            );
         }
     }
 

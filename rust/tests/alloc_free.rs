@@ -1,30 +1,31 @@
-//! Counting-allocator proof that the simulator's steady-state cycle loop —
+//! Counting-allocator proofs: the simulator's steady-state cycle loop —
 //! including epoch boundaries on a static control plane — performs zero
-//! heap allocations (the `sim::network` module-doc invariant 3).
+//! heap allocations (the `sim::network` module-doc invariant 3), and
+//! `Network` construction stays within an O(routers) allocation budget
+//! even at the 16×16-mesh scale the deadlock certificate targets.
 //!
 //! The binary installs a `#[global_allocator]` that counts allocation
-//! events made by threads that opted in (a thread-local flag), so the
-//! libtest harness threads cannot pollute the measurement. This file
-//! intentionally contains a single `#[test]`: everything measured runs
-//! sequentially under one tracked thread.
+//! events made by threads that opted in (a thread-local flag). Both the
+//! flag and the counter are thread-local, so each `#[test]` measures only
+//! its own thread: libtest may run the tests here in parallel without the
+//! counts cross-polluting.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use resipi::config::{Architecture, Config};
 use resipi::sim::{Geometry, Network};
 use resipi::topology::TopologyKind;
 use resipi::traffic::UniformTraffic;
 
-static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
-
 thread_local! {
     static TRACKING: Cell<bool> = const { Cell::new(false) };
+    /// Allocation events observed on *this* thread while it was tracking.
+    static ALLOC_EVENTS: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Counts alloc/realloc/alloc_zeroed events from tracked threads; defers
-/// the actual work to the system allocator. The thread-local read uses
+/// the actual work to the system allocator. The thread-local accesses use
 /// `try_with` so TLS teardown can never recurse into the allocator.
 struct CountingAlloc;
 
@@ -33,7 +34,7 @@ impl CountingAlloc {
     fn record(&self) {
         let tracked = TRACKING.try_with(|t| t.get()).unwrap_or(false);
         if tracked {
-            ALLOC_EVENTS.fetch_add(1, Ordering::SeqCst);
+            let _ = ALLOC_EVENTS.try_with(|c| c.set(c.get() + 1));
         }
     }
 }
@@ -62,9 +63,9 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 /// Run `f` with allocation tracking on; return its allocation-event count.
 fn allocations_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
     TRACKING.with(|t| t.set(true));
-    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    let before = ALLOC_EVENTS.with(Cell::get);
     let r = f();
-    let after = ALLOC_EVENTS.load(Ordering::SeqCst);
+    let after = ALLOC_EVENTS.with(Cell::get);
     TRACKING.with(|t| t.set(false));
     (after - before, r)
 }
@@ -129,4 +130,40 @@ fn steady_state_cycle_loop_is_allocation_free() {
         allocs, 0,
         "epoch-crossing window performed {allocs} heap allocation(s)"
     );
+}
+
+#[test]
+fn large_mesh_construction_stays_within_allocation_budget() {
+    // Construction-cost regression gate for the 256-chiplet scaling work:
+    // building a Network over 16×16 intra-chiplet meshes (1 024 routers
+    // total) must stay O(routers) in allocation count. The budget of 48
+    // events per router is deliberately loose — it absorbs per-router
+    // buffers, the packed route table, and container growth — but any
+    // O(routers²) structure (an all-pairs map, nested per-router rows)
+    // blows through it by an order of magnitude at this size.
+    let mut cfg = Config::table1(Architecture::Resipi);
+    cfg.set_topology(TopologyKind::Mesh);
+    cfg.topology.mesh_x = 16;
+    cfg.topology.mesh_y = 16;
+    cfg.sim.cycles = 10_000;
+    cfg.sim.warmup_cycles = 1_000;
+    cfg.validate().unwrap();
+    let geo = Geometry::from_config(&cfg);
+    let n_routers = (cfg.topology.chiplets * geo.routers_per_chiplet()) as u64;
+    assert!(n_routers >= 1_024, "scale point lost its size: {n_routers}");
+
+    // Traffic model construction is not under test; build it untracked.
+    let traffic = Box::new(UniformTraffic::new(geo, 0.002, 42));
+    let (allocs, net) = allocations_during(|| Network::new(cfg, traffic).unwrap());
+    let budget = 48 * n_routers;
+    assert!(
+        allocs > 0,
+        "tracking failed: construction cannot be literally allocation-free"
+    );
+    assert!(
+        allocs < budget,
+        "constructing a {n_routers}-router network took {allocs} allocations \
+         (budget {budget} = 48/router) — something scales super-linearly"
+    );
+    drop(net);
 }
