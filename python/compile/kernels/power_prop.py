@@ -13,7 +13,7 @@ The controller sweep evaluates thousands of candidate configurations, so
 the kernel is batched over B and the whole (B, N, N) max-reduction runs as
 one dense block.
 
-TPU mapping (DESIGN.md §4 Hardware-Adaptation): the batch dimension tiles
+TPU mapping: the batch dimension tiles
 to VMEM via BlockSpec (BLOCK_B rows per program instance); the |i-j|
 distance matrix is a small (N, N) constant living in VMEM; the inner
 max-reduction is a dense batched contraction that the MXU/VPU executes in

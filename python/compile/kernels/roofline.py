@@ -1,4 +1,4 @@
-"""Static VMEM/roofline estimator for the L1 Pallas kernel (DESIGN.md §4).
+"""Static VMEM/roofline estimator for the L1 Pallas kernel.
 
 interpret=True gives CPU-numpy timings that are *not* a TPU proxy, so the
 per-layer perf deliverable for L1 is structural: given the kernel's

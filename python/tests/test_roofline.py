@@ -1,5 +1,5 @@
-"""Structural checks on the L1 roofline estimator (the DESIGN.md §4
-hardware-adaptation contract: the kernel must fit VMEM comfortably)."""
+"""Structural checks on the L1 roofline estimator (the hardware-adaptation
+contract: the kernel must fit VMEM comfortably)."""
 
 from compile.kernels import power_prop
 from compile.kernels.roofline import estimate, VMEM_BYTES

@@ -1,5 +1,6 @@
 //! End-to-end regeneration benches: one per paper table/figure
-//! (DESIGN.md §6). Each bench runs the corresponding experiment harness at
+//! (Table 2, Figs. 10-13, plus the ablation suite). Each bench runs the
+//! corresponding experiment harness at
 //! CI scale, times it, and prints the headline values so a `cargo bench`
 //! log doubles as a regression record of the reproduction itself.
 //!

@@ -1,4 +1,4 @@
-//! **End-to-end driver** (DESIGN.md §End-to-end validation): runs the full
+//! **End-to-end driver**: runs the full
 //! three-layer system — rust cycle-accurate simulator + ReSiPI control
 //! plane + the AOT-compiled JAX/Pallas power model executed via PJRT — on
 //! the paper's adaptivity workload (blackscholes → facesim → dedup,

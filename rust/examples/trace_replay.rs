@@ -1,7 +1,9 @@
 //! Trace capture + replay: generate a bursty workload, capture it in the
 //! gem5-style text trace format, then replay the identical trace through
 //! two architectures for an apples-to-apples comparison — the workflow a
-//! user with real gem5 PARSEC traces would follow (DESIGN.md §3).
+//! user with real gem5 PARSEC traces would follow. (For large traces,
+//! `resipi trace convert` re-encodes the same records into the streaming
+//! binary format in `traffic::tracebin`; `open_trace` replays either.)
 //!
 //! ```text
 //! cargo run --release --example trace_replay

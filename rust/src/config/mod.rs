@@ -804,6 +804,64 @@ mod tests {
     }
 
     #[test]
+    fn trace_parsec_and_composed_traffic_config_keys() {
+        use crate::traffic::{Tenant, TrafficKind};
+
+        // Trace replay from a config file (the path's existence is checked
+        // at build time; validate only requires it to be set).
+        let mut c = Config::table1(Architecture::Resipi);
+        let map =
+            ConfigMap::parse("[traffic]\nkind = \"trace\"\ntrace_path = \"traces/app.rtb\"\n")
+                .unwrap();
+        c.apply_overrides(&map).unwrap();
+        let spec = c.traffic.as_ref().unwrap();
+        assert_eq!(spec.kind, TrafficKind::Trace);
+        assert_eq!(spec.trace_path, "traces/app.rtb");
+        c.validate().unwrap();
+
+        // A missing trace_path is a validation error.
+        let mut c = Config::table1(Architecture::Resipi);
+        let map = ConfigMap::parse("[traffic]\nkind = \"trace\"\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert!(c.validate().is_err());
+
+        // PARSEC app selection through the registry.
+        let mut c = Config::table1(Architecture::Resipi);
+        let map =
+            ConfigMap::parse("[traffic]\nkind = \"parsec\"\nrate = 0.008\napp = \"canneal\"\n")
+                .unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert_eq!(c.traffic.as_ref().unwrap().app, "canneal");
+        c.validate().unwrap();
+
+        // Multi-tenant composition with per-tenant shares and offsets.
+        let mut c = Config::table1(Architecture::Resipi);
+        let map = ConfigMap::parse(
+            "[traffic]\nkind = \"composed\"\nrate = 0.01\n\
+             tenants = [\"uniform@0.75\", \"bursty@0.25@1000\"]\n",
+        )
+        .unwrap();
+        c.apply_overrides(&map).unwrap();
+        let spec = c.traffic.as_ref().unwrap();
+        assert_eq!(
+            spec.tenants,
+            vec![
+                Tenant {
+                    kind: TrafficKind::Uniform,
+                    scale: 0.75,
+                    offset: 0,
+                },
+                Tenant {
+                    kind: TrafficKind::Bursty,
+                    scale: 0.25,
+                    offset: 1000,
+                },
+            ]
+        );
+        c.validate().unwrap();
+    }
+
+    #[test]
     fn set_traffic_roundtrips_through_validate() {
         use crate::traffic::{TrafficKind, TrafficSpec};
         let mut c = Config::table1(Architecture::Resipi);

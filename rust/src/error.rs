@@ -1,7 +1,7 @@
 //! Library-wide error type.
 //!
 //! Hand-rolled `Display`/`Error` impls instead of `thiserror` — the offline
-//! image ships no external crates (see DESIGN.md §3).
+//! image ships no external crates.
 
 use std::fmt;
 

@@ -1,4 +1,4 @@
-//! Ablation studies for the design choices DESIGN.md calls out:
+//! Ablation studies for the paper's load-bearing design choices:
 //!
 //! * **thresholds** — Eq. 7's hysteresis vs a naive `T_N = L_m` policy:
 //!   counts reconfiguration churn (PCMC switches) and its latency cost;

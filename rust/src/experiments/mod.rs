@@ -1,4 +1,5 @@
-//! Experiment harness: one module per paper artifact (DESIGN.md §6).
+//! Experiment harness: one module per paper artifact (Table 2, Figs. 10-13)
+//! plus the extension studies (ablations, scaling, campaigns, benchmarks).
 
 pub mod ablations;
 pub mod campaign;

@@ -11,6 +11,14 @@
 //! (aggregate throughput), cross-checking that thread scheduling never
 //! changes simulation results.
 //!
+//! Two scenarios are **decode benches** rather than network simulations:
+//! they capture a uniform trace fixture once, then score the text parser
+//! and the streaming binary decoder on the same records
+//! ([`Workload::TraceText`] / [`Workload::TraceBin`]; the score is
+//! records per wall-second and the checksum is an FNV digest over the
+//! decoded records, so both formats must agree bit-for-bit). The report
+//! footer prints the binary-over-text speedup.
+//!
 //! ## Determinism checksum
 //!
 //! Every scenario records [`crate::metrics::Metrics::checksum`] — a digest
@@ -34,15 +42,19 @@
 //! the first recorded run (see README "Benchmarking & performance gates"
 //! for the refresh procedure).
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::config::{Architecture, Config};
 use crate::error::{Error, Result};
 use crate::sim::{Geometry, Network};
 use crate::topology::TopologyKind;
-use crate::traffic::UniformTraffic;
+use crate::traffic::trace::{TraceReader, TraceRecord, TraceWriter};
+use crate::traffic::tracebin::{self, BinTraceReader, BinTraceWriter};
+use crate::traffic::{Traffic, TrafficKind, TrafficSpec, UniformTraffic};
 use crate::util::io::Json;
 use crate::util::pool;
+use crate::util::rng::{fnv1a_mix, FNV_OFFSET};
 use crate::util::stats;
 
 /// Results-file schema version (`schema_version` in the JSON).
@@ -52,26 +64,58 @@ pub const SCHEMA_VERSION: u64 = 1;
 /// than this fraction below the baseline.
 pub const REGRESSION_TOLERANCE: f64 = 0.15;
 
-/// One benchmark point: a full simulation at a fixed configuration.
+/// Injection rate used to synthesize the decode-bench fixture (heavy
+/// load, so the record count rather than the cycle loop dominates).
+pub const DECODE_RATE: f64 = 0.2;
+
+/// What a [`Scenario`] drives: a network simulation under a workload, or
+/// a pure trace-decode measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// Uniform-random synthetic injection (the historical default).
+    Uniform,
+    /// Decode bench: parse a captured text trace end to end.
+    TraceText,
+    /// Decode bench: stream the binary form of the same fixture.
+    TraceBin,
+    /// Two-tenant composed overlay through the full network datapath.
+    Composed,
+}
+
+/// One benchmark point: a full simulation at a fixed configuration (or,
+/// for the trace workloads, one decode pass over a captured fixture).
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    pub workload: Workload,
     pub topology: TopologyKind,
-    /// Per-core uniform injection rate, packets/cycle.
+    /// Per-core injection rate, packets/cycle (fixture capture rate for
+    /// the decode workloads).
     pub injection: f64,
     pub chiplets: usize,
-    /// Simulated horizon per iteration.
+    /// Simulated horizon per iteration (fixture capture horizon for the
+    /// decode workloads).
     pub cycles: u64,
 }
 
 impl Scenario {
     /// Stable identifier — baselines are matched by this name.
     pub fn name(&self) -> String {
-        format!(
-            "{}/c{}/inj{}",
-            self.topology.name(),
-            self.chiplets,
-            self.injection
-        )
+        match self.workload {
+            Workload::Uniform => format!(
+                "{}/c{}/inj{}",
+                self.topology.name(),
+                self.chiplets,
+                self.injection
+            ),
+            Workload::Composed => format!(
+                "{}/c{}/composed{}",
+                self.topology.name(),
+                self.chiplets,
+                self.injection
+            ),
+            Workload::TraceText => "trace-decode/text".to_string(),
+            Workload::TraceBin => "trace-decode/bin".to_string(),
+        }
     }
 
     /// The scenario's simulator configuration (ReSiPI architecture,
@@ -100,6 +144,7 @@ pub fn matrix(quick: bool) -> Vec<Scenario> {
         // datapath (most routers busy every cycle).
         for injection in [0.002, 0.05] {
             out.push(Scenario {
+                workload: Workload::Uniform,
                 topology: kind,
                 injection,
                 chiplets: 4,
@@ -110,6 +155,7 @@ pub fn matrix(quick: bool) -> Vec<Scenario> {
     // Scaling point toward the HexaMesh/PlaceIT sweeps: double the
     // chiplet count at light load.
     out.push(Scenario {
+        workload: Workload::Uniform,
         topology: TopologyKind::Mesh,
         injection: 0.002,
         chiplets: 8,
@@ -121,12 +167,34 @@ pub fn matrix(quick: bool) -> Vec<Scenario> {
     // cost per router, not saturation behavior.
     for chiplets in [64, 128, 256] {
         out.push(Scenario {
+            workload: Workload::Uniform,
             topology: TopologyKind::Mesh,
             injection: 0.002,
             chiplets,
             cycles: cycles / 4,
         });
     }
+    // Decode benches: same fixture records in both formats, so the gate
+    // scores the decode hot path and the report can state the speedup.
+    // The full matrix's fixture crosses the 1M-record mark (64 cores ×
+    // 0.2 pkt/cycle × 120k cycles ≈ 1.5M records).
+    for workload in [Workload::TraceText, Workload::TraceBin] {
+        out.push(Scenario {
+            workload,
+            topology: TopologyKind::Mesh,
+            injection: DECODE_RATE,
+            chiplets: 4,
+            cycles,
+        });
+    }
+    // Two-tenant composed overlay through the full network datapath.
+    out.push(Scenario {
+        workload: Workload::Composed,
+        topology: TopologyKind::Mesh,
+        injection: 0.01,
+        chiplets: 4,
+        cycles,
+    });
     out
 }
 
@@ -152,12 +220,24 @@ pub struct ScenarioResult {
 /// checksum — the simulator must be deterministic in its seed.
 pub fn run_scenario(s: &Scenario, iters: usize, seed: u64) -> Result<ScenarioResult> {
     assert!(iters >= 1, "need at least one iteration");
+    match s.workload {
+        Workload::TraceText | Workload::TraceBin => run_decode_scenario(s, iters, seed),
+        Workload::Uniform | Workload::Composed => run_network_scenario(s, iters, seed),
+    }
+}
+
+fn run_network_scenario(s: &Scenario, iters: usize, seed: u64) -> Result<ScenarioResult> {
     let mut cps = Vec::with_capacity(iters);
     let mut out: Option<ScenarioResult> = None;
     for _ in 0..iters {
         let cfg = s.config(seed)?;
         let geo = Geometry::from_config(&cfg);
-        let traffic = Box::new(UniformTraffic::new(geo, s.injection, seed));
+        let traffic: Box<dyn Traffic> = match s.workload {
+            Workload::Composed => {
+                TrafficSpec::new(TrafficKind::Composed, s.injection).build(&geo, seed)?
+            }
+            _ => Box::new(UniformTraffic::new(geo, s.injection, seed)),
+        };
         let mut net = Network::new(cfg, traffic)?;
         let t0 = Instant::now();
         net.run()?;
@@ -189,6 +269,128 @@ pub fn run_scenario(s: &Scenario, iters: usize, seed: u64) -> Result<ScenarioRes
     r.mean_cps = stats::mean(&cps);
     r.median_cps = stats::median(&mut cps);
     Ok(r)
+}
+
+/// Capture the decode fixture: uniform traffic at the scenario's rate on
+/// the Table 1 geometry over `cycles`, written in both formats. Returns
+/// the two paths and the record count. Generation is untimed setup.
+fn capture_decode_fixture(s: &Scenario, seed: u64, tag: &str) -> Result<(PathBuf, PathBuf, u64)> {
+    let cfg = Config::table1(Architecture::Resipi);
+    let geo = Geometry::from_config(&cfg);
+    let mut traffic = UniformTraffic::new(geo, s.injection, seed);
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let text_path = dir.join(format!("resipi-bench-{pid}-{tag}.trace"));
+    let bin_path = dir.join(format!("resipi-bench-{pid}-{tag}.rtb"));
+    let mut text = TraceWriter::new(std::io::BufWriter::new(std::fs::File::create(&text_path)?))?;
+    let mut bin = BinTraceWriter::new(std::io::BufWriter::new(std::fs::File::create(&bin_path)?))?;
+    let mut sink = Vec::new();
+    let mut records = 0u64;
+    for now in 0..s.cycles {
+        sink.clear();
+        traffic.generate(now, &mut sink);
+        for p in &sink {
+            text.record(now, p)?;
+            bin.record(now, p)?;
+            records += 1;
+        }
+    }
+    use std::io::Write as _;
+    text.finish().flush()?;
+    bin.finish()?;
+    Ok((text_path, bin_path, records))
+}
+
+/// Fold one decoded record into the FNV digest. Both decode benches hash
+/// the packed endpoint words, so text and binary runs over the same
+/// fixture must produce identical checksums.
+fn record_digest(h: u64, rec: &TraceRecord) -> Result<u64> {
+    let h = fnv1a_mix(h, rec.cycle);
+    let h = fnv1a_mix(h, tracebin::encode_node(rec.src)?);
+    Ok(fnv1a_mix(h, tracebin::encode_node(rec.dst)?))
+}
+
+/// The decode bench: score the text parser or the streaming binary
+/// decoder on the captured fixture, in decoded records per wall-second.
+fn run_decode_scenario(s: &Scenario, iters: usize, seed: u64) -> Result<ScenarioResult> {
+    let tag = if s.workload == Workload::TraceText {
+        "text"
+    } else {
+        "bin"
+    };
+    let (text_path, bin_path, records) = capture_decode_fixture(s, seed, tag)?;
+    let mut rps = Vec::with_capacity(iters);
+    let mut out: Option<ScenarioResult> = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let (count, checksum) = match s.workload {
+            Workload::TraceText => {
+                let reader = TraceReader::from_file(&text_path)?;
+                let mut h = FNV_OFFSET;
+                for rec in reader.records() {
+                    h = record_digest(h, rec)?;
+                }
+                (reader.len() as u64, h)
+            }
+            _ => {
+                let mut reader = BinTraceReader::new(std::fs::File::open(&bin_path)?, "bench")?;
+                let mut h = FNV_OFFSET;
+                let mut count = 0u64;
+                while let Some(rec) = reader.next_record()? {
+                    h = record_digest(h, &rec)?;
+                    count += 1;
+                }
+                (count, h)
+            }
+        };
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        if count != records {
+            return Err(Error::invariant(format!(
+                "decode bench {}: decoded {count} of {records} records",
+                s.name()
+            )));
+        }
+        rps.push(count as f64 / dt);
+        let r = ScenarioResult {
+            name: s.name(),
+            cycles: s.cycles,
+            iters,
+            median_cps: 0.0,
+            mean_cps: 0.0,
+            checksum,
+            created: records,
+            delivered: records,
+            avg_latency_cycles: 0.0,
+            total_energy_uj: 0.0,
+        };
+        if let Some(prev) = &out {
+            if prev.checksum != r.checksum {
+                return Err(Error::invariant(format!(
+                    "decode bench {} is nondeterministic: checksum {:#018x} vs {:#018x}",
+                    r.name, prev.checksum, r.checksum
+                )));
+            }
+        }
+        out = Some(r);
+    }
+    let _ = std::fs::remove_file(&text_path);
+    let _ = std::fs::remove_file(&bin_path);
+    let mut r = out.expect("iters >= 1 produced a result");
+    r.mean_cps = stats::mean(&rps);
+    r.median_cps = stats::median(&mut rps);
+    Ok(r)
+}
+
+/// Binary-over-text decode throughput ratio, when the report contains
+/// both decode scenarios.
+pub fn decode_speedup(r: &BenchReport) -> Option<f64> {
+    let text = r.scenarios.iter().find(|s| s.name == "trace-decode/text")?;
+    let bin = r.scenarios.iter().find(|s| s.name == "trace-decode/bin")?;
+    if text.median_cps > 0.0 {
+        Some(bin.median_cps / text.median_cps)
+    } else {
+        None
+    }
 }
 
 /// Aggregate result of replaying the matrix through the thread pool.
@@ -319,6 +521,12 @@ pub fn report_table(r: &BenchReport) -> String {
             s.delivered,
             s.avg_latency_cycles,
             s.checksum
+        );
+    }
+    if let Some(ratio) = decode_speedup(r) {
+        let _ = writeln!(
+            out,
+            "binary trace decode: {ratio:.1}x the text parser's records/s on the same fixture"
         );
     }
     for m in &r.mt {
@@ -496,10 +704,23 @@ mod tests {
 
     fn tiny() -> Scenario {
         Scenario {
+            workload: Workload::Uniform,
             topology: TopologyKind::Mesh,
             injection: 0.002,
             chiplets: 4,
             cycles: 8_000,
+        }
+    }
+
+    // 4 000 cycles: long enough for the composed default's second tenant
+    // (offset 2 500) to activate mid-run.
+    fn tiny_with(workload: Workload, injection: f64) -> Scenario {
+        Scenario {
+            workload,
+            topology: TopologyKind::Mesh,
+            injection,
+            chiplets: 4,
+            cycles: 4_000,
         }
     }
 
@@ -543,7 +764,7 @@ mod tests {
     #[test]
     fn matrix_covers_topologies_and_loads() {
         let m = matrix(true);
-        assert_eq!(m.len(), 10);
+        assert_eq!(m.len(), 13);
         for kind in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh] {
             assert!(m.iter().any(|s| s.topology == kind));
         }
@@ -553,6 +774,14 @@ mod tests {
             m.iter().any(|s| s.chiplets == 256),
             "needs the 256-chiplet (16×16 mesh) point"
         );
+        // The decode benches and the composed overlay ride in the quick
+        // matrix so the CI gate covers the trace hot path.
+        for workload in [Workload::TraceText, Workload::TraceBin, Workload::Composed] {
+            assert!(
+                m.iter().any(|s| s.workload == workload),
+                "matrix lacks workload {workload:?}"
+            );
+        }
         // Names are unique (baseline matching key).
         let mut names: Vec<String> = m.iter().map(Scenario::name).collect();
         names.sort();
@@ -578,6 +807,29 @@ mod tests {
         let r2 = run_scenario(&tiny(), 1, 42).unwrap();
         assert_eq!(r.checksum, r2.checksum);
         assert_eq!(r.delivered, r2.delivered);
+    }
+
+    #[test]
+    fn decode_benches_agree_on_the_record_digest() {
+        // Same capture seed and horizon → same records in both formats,
+        // so the two decode paths must hash to the same checksum.
+        let text = run_scenario(&tiny_with(Workload::TraceText, DECODE_RATE), 1, 9).unwrap();
+        let bin = run_scenario(&tiny_with(Workload::TraceBin, DECODE_RATE), 1, 9).unwrap();
+        assert!(text.created > 0);
+        assert_eq!(text.created, bin.created);
+        assert_eq!(text.checksum, bin.checksum);
+        assert!(text.median_cps > 0.0 && bin.median_cps > 0.0);
+        // And the speedup footer has both scenarios to work with.
+        let report = report_with(vec![text, bin]);
+        assert!(decode_speedup(&report).is_some());
+    }
+
+    #[test]
+    fn composed_scenario_runs_and_is_deterministic() {
+        let r = run_scenario(&tiny_with(Workload::Composed, 0.01), 2, 42).unwrap();
+        assert!(r.delivered > 0, "composed overlay must carry traffic");
+        let r2 = run_scenario(&tiny_with(Workload::Composed, 0.01), 1, 42).unwrap();
+        assert_eq!(r.checksum, r2.checksum);
     }
 
     #[test]

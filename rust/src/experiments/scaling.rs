@@ -5,8 +5,8 @@
 //! single-gateway-per-chiplet design scale — now up to the 64/128/256
 //! chiplet counts the HexaMesh/PlaceIT line of work targets.
 //!
-//! Not a paper figure — an extension experiment DESIGN.md §6 lists (the
-//! paper defers scale-out to future work).
+//! Not a paper figure — an extension experiment beyond the paper's 2×3
+//! system (the paper defers scale-out to future work).
 //!
 //! ## Ledger-backed, byte-stable outputs
 //!

@@ -1,8 +1,9 @@
 //! Table 2 — ReSiPI controller overhead (area, power) at 45 nm / 1 GHz.
 //!
 //! Reproduced with the transparent gate-inventory model in
-//! `power::controller_area` (the paper used Cadence Genus; see DESIGN.md §3
-//! for the substitution argument). The table's *conclusion* — the
+//! `power::controller_area` (the paper used Cadence Genus, which is not
+//! available here; the module docs argue the substitution). The table's
+//! *conclusion* — the
 //! controller is negligible against a 53.83 mm² chiplet — is what the
 //! reproduction checks.
 

@@ -43,7 +43,10 @@
 //! Synthetic traffic is a first-class subsystem: the
 //! [`traffic::TrafficKind`] registry catalogs uniform, transpose,
 //! hotspot, tornado, bit-complement, bit-reversal, bursty, and phased
-//! patterns, each constructible from config alone
+//! patterns plus calibrated PARSEC-like workloads (`parsec`), recorded
+//! trace replay (`trace:<path>`, text or streaming binary via
+//! [`traffic::tracebin`]), and the multi-tenant `composed` overlay
+//! ([`traffic::ComposedTraffic`]) — each constructible from config alone
 //! ([`traffic::TrafficSpec`], the `traffic.*` config keys, or
 //! `resipi run --traffic`). The [`experiments::campaign`] engine expands
 //! a declarative scenario matrix over architecture × topology × chiplets
@@ -95,7 +98,8 @@ pub mod prelude {
     pub use crate::sim::{Coord, Cycle, Geometry, Network, Node, Summary};
     pub use crate::topology::{Topology, TopologyKind};
     pub use crate::traffic::{
-        AppProfile, NewPacket, ParsecTraffic, Traffic, TraceReader, TrafficKind, TrafficSpec,
-        UniformTraffic, PARSEC_APPS,
+        open_trace, AppProfile, BinTraceReader, BinTraceWriter, ComposedTraffic, NewPacket,
+        ParsecTraffic, Tenant, Traffic, TraceReader, TrafficKind, TrafficSpec, UniformTraffic,
+        PARSEC_APPS,
     };
 }

@@ -1,6 +1,6 @@
 //! `resipi` — command-line driver for the ReSiPI reproduction.
 //!
-//! Subcommands map one-to-one onto the paper's artifacts (DESIGN.md §6):
+//! Subcommands map one-to-one onto the paper's artifacts:
 //!
 //! ```text
 //! resipi run     --arch resipi --app dedup [--topology torus] [--cycles N]
@@ -13,13 +13,14 @@
 //! resipi scale   [--chiplets LIST] [--cycles N]   # ledger-backed scaling sweep
 //! resipi sweep                         # batched HLO power-model sweep
 //! resipi campaign [--quick|--full|--scale|--config F] [axis flags]   # scenario matrix
+//! resipi trace   convert --in F --out F   # text <-> binary trace conversion
 //! resipi all     [--cycles N]          # every artifact, written to results/
 //! ```
 //!
 //! Outputs land in `results/` (override with `RESIPI_RESULTS`). The
-//! hand-rolled flag parser exists because the offline build lacks `clap`
-//! (DESIGN.md §3); it is spec-driven per subcommand, so unknown flags and
-//! typos (`--cycels`) are rejected instead of silently ignored, and every
+//! hand-rolled flag parser exists because the offline build lacks `clap`;
+//! it is spec-driven per subcommand, so unknown flags and typos
+//! (`--cycels`) are rejected instead of silently ignored, and every
 //! subcommand answers `--help`.
 
 use std::collections::HashMap;
@@ -34,7 +35,7 @@ use resipi::runtime::{best_power_model, BatchPowerModel, ARTIFACT_GATEWAYS};
 use resipi::sim::{Geometry, Network};
 use resipi::topology::TopologyKind;
 use resipi::traffic::parsec::{app_by_name, ParsecTraffic};
-use resipi::traffic::{TraceReader, TrafficSpec, UniformTraffic};
+use resipi::traffic::{open_trace, tracebin, TrafficSpec, UniformTraffic};
 use resipi::util::io::Json;
 use resipi::Result;
 
@@ -325,6 +326,23 @@ const COMMANDS: &[Cmd] = &[
         ],
     },
     Cmd {
+        name: "trace",
+        args: "convert",
+        summary: "trace utilities: convert between the text and binary formats",
+        flags: &[
+            Flag {
+                name: "in",
+                value: Some("FILE"),
+                help: "input trace; its format is sniffed from the binary magic",
+            },
+            Flag {
+                name: "out",
+                value: Some("FILE"),
+                help: "output trace (text input -> binary output, and vice versa)",
+            },
+        ],
+    },
+    Cmd {
         name: "all",
         args: "",
         summary: "regenerate every artifact under results/",
@@ -514,6 +532,7 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(),
         "bench" => cmd_bench(&args),
         "campaign" => cmd_campaign(&args),
+        "trace" => cmd_trace(&args),
         "all" => cmd_all(&args),
         _ => unreachable!("command table covers every dispatch arm"),
     };
@@ -582,7 +601,8 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .map_err(|_| resipi::Error::config(format!("bad uniform rate {rate:?}")))?;
             Box::new(UniformTraffic::new(geo.clone(), rate, cfg.sim.seed))
         } else if let Some(path) = app_spec.strip_prefix("trace:") {
-            Box::new(TraceReader::from_file(std::path::Path::new(path))?)
+            // Sniffs the binary magic: text and binary traces replay alike.
+            open_trace(std::path::Path::new(path))?
         } else {
             let app = app_by_name(&app_spec)
                 .ok_or_else(|| resipi::Error::config(format!("unknown app {app_spec:?}")))?;
@@ -954,6 +974,32 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     );
     let outcome = campaign::run_campaign(&spec, threads, &out_dir)?;
     print!("{}", outcome.report());
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let action = args.positional.first().map(String::as_str).unwrap_or("");
+    if action != "convert" {
+        return Err(resipi::Error::config(format!(
+            "unknown trace action {action:?} (expected `resipi trace convert --in F --out F`)"
+        )));
+    }
+    let input = args
+        .flags
+        .get("in")
+        .ok_or_else(|| resipi::Error::config("--in <FILE> is required"))?;
+    let output = args
+        .flags
+        .get("out")
+        .ok_or_else(|| resipi::Error::config("--out <FILE> is required"))?;
+    let (input, output) = (std::path::Path::new(input), std::path::Path::new(output));
+    if tracebin::is_binary_trace(input)? {
+        let n = tracebin::binary_to_text(input, output)?;
+        println!("converted {n} binary record(s) -> text {}", output.display());
+    } else {
+        let n = tracebin::text_to_binary(input, output)?;
+        println!("converted {n} text record(s) -> binary {}", output.display());
+    }
     Ok(())
 }
 

@@ -1,7 +1,7 @@
 //! Analytical 45 nm area/power estimate of the ReSiPI controller (Table 2).
 //!
 //! The paper synthesized its HDL controller with Cadence Genus (45 nm,
-//! 1 GHz). We cannot run Genus here, so — per DESIGN.md §3 — we reproduce
+//! 1 GHz). We cannot run Genus here, so we reproduce
 //! Table 2 with a transparent gate-inventory model priced in NAND2
 //! equivalents (GE). The datapath inventory below is derived from *our own*
 //! controller implementation (`coordinator::{lgc, inc}`), so the estimate

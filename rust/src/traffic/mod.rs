@@ -1,19 +1,22 @@
 //! Traffic generation: synthetic patterns (this module plus the
-//! [`patterns`] catalog), PARSEC-like application models ([`parsec`]), and
-//! gem5-style trace file replay ([`trace`]).
+//! [`patterns`] catalog), PARSEC-like application models ([`parsec`]),
+//! trace file replay ([`trace`] text format, [`tracebin`] streaming
+//! binary format), and multi-tenant composition ([`compose`]).
 //!
 //! A [`Traffic`] implementation is polled once per simulated cycle and
 //! pushes the packets created that cycle. Generators are seeded from the
 //! experiment's root seed and are fully deterministic.
 //!
-//! Synthetic patterns are registered in [`spec::TrafficKind`]; construct
-//! them from config keys or CLI spec strings via [`spec::TrafficSpec`] —
-//! that is the path `resipi run --traffic` and the campaign engine use.
+//! Every workload is registered in [`spec::TrafficKind`]; construct them
+//! from config keys or CLI spec strings via [`spec::TrafficSpec`] — that
+//! is the path `resipi run --traffic` and the campaign engine use.
 
+pub mod compose;
 pub mod parsec;
 pub mod patterns;
 pub mod spec;
 pub mod trace;
+pub mod tracebin;
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -22,10 +25,12 @@ use crate::sim::ids::{Coord, Geometry, Node};
 use crate::sim::packet::{Cycle, MsgClass};
 use crate::util::rng::Pcg32;
 
+pub use compose::ComposedTraffic;
 pub use parsec::{AppProfile, ParsecTraffic, PARSEC_APPS};
 pub use patterns::{BurstyTraffic, PermKind, PermutationTraffic, PhasedTraffic};
-pub use spec::{TrafficKind, TrafficSpec};
+pub use spec::{Tenant, TrafficKind, TrafficSpec};
 pub use trace::{format_node, parse_node, TraceReader, TraceRecord, TraceWriter};
+pub use tracebin::{open_trace, BinTraceReader, BinTraceWriter};
 
 /// A packet request emitted by a traffic model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -9,13 +9,18 @@
 //! campaign engine sweeps over goes through this one chokepoint, so a
 //! scenario is reproducible from its spec string plus a seed.
 
+use std::path::Path;
+
 use crate::config::parser::{ConfigMap, Value};
 use crate::error::{Error, Result};
 use crate::sim::ids::{Geometry, Node};
 
+use super::compose::{tenant_seeds, ComposedTraffic};
+use super::parsec::{app_by_name, ParsecTraffic};
 use super::patterns::{
     core_node, phase_seeds, BurstyTraffic, PermKind, PermutationTraffic, PhasedTraffic,
 };
+use super::tracebin::open_trace;
 use super::{HotspotTraffic, Traffic, TransposeTraffic, UniformTraffic};
 
 /// Every synthetic pattern in the catalog.
@@ -37,11 +42,21 @@ pub enum TrafficKind {
     Bursty,
     /// Mid-run pattern switching — exercises the LGC/INC reconfiguration.
     Phased,
+    /// Trace-file replay (text or binary, sniffed by magic; see
+    /// [`super::tracebin`]).
+    Trace,
+    /// Calibrated PARSEC-like application model (see [`super::parsec`]).
+    Parsec,
+    /// Multi-tenant overlay of child workloads with per-tenant rate
+    /// shares and start offsets (see [`super::compose`]).
+    Composed,
 }
 
 impl TrafficKind {
-    /// Every kind (tests, catalog tables, campaign axes).
-    pub const ALL: [TrafficKind; 8] = [
+    /// Every kind constructible from defaults alone (tests, catalog
+    /// tables, campaign axes). [`TrafficKind::Trace`] is registered but
+    /// excluded: it needs a trace file path.
+    pub const ALL: [TrafficKind; 10] = [
         TrafficKind::Uniform,
         TrafficKind::Transpose,
         TrafficKind::Hotspot,
@@ -50,6 +65,8 @@ impl TrafficKind {
         TrafficKind::BitReversal,
         TrafficKind::Bursty,
         TrafficKind::Phased,
+        TrafficKind::Parsec,
+        TrafficKind::Composed,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -62,6 +79,9 @@ impl TrafficKind {
             TrafficKind::BitReversal => "bitrev",
             TrafficKind::Bursty => "bursty",
             TrafficKind::Phased => "phased",
+            TrafficKind::Trace => "trace",
+            TrafficKind::Parsec => "parsec",
+            TrafficKind::Composed => "composed",
         }
     }
 
@@ -75,11 +95,64 @@ impl TrafficKind {
             "bitrev" | "bit-reversal" | "bit_reversal" => Ok(TrafficKind::BitReversal),
             "bursty" => Ok(TrafficKind::Bursty),
             "phased" => Ok(TrafficKind::Phased),
+            "trace" => Ok(TrafficKind::Trace),
+            "parsec" => Ok(TrafficKind::Parsec),
+            "composed" => Ok(TrafficKind::Composed),
             other => Err(Error::config(format!(
                 "unknown traffic kind {other:?} (expected uniform, transpose, hotspot, \
-                 tornado, bitcomp, bitrev, bursty, phased)"
+                 tornado, bitcomp, bitrev, bursty, phased, trace, parsec, composed)"
             ))),
         }
+    }
+}
+
+/// One tenant of a [`TrafficKind::Composed`] workload.
+///
+/// A tenant is a child kind plus its share of the composed rate and a
+/// start offset: the tenant's stream is the child's stream at rate
+/// `composed_rate × scale`, shifted `offset` cycles into the future.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tenant {
+    /// The child workload (any kind except `composed` itself).
+    pub kind: TrafficKind,
+    /// Multiplier applied to the composed spec's rate for this tenant.
+    pub scale: f64,
+    /// Cycles before the tenant's stream starts (phase offset).
+    pub offset: u64,
+}
+
+impl Tenant {
+    /// Parse a `kind[@scale[@offset]]` token (scale defaults to 1,
+    /// offset to 0).
+    pub fn parse(token: &str) -> Result<Self> {
+        let mut parts = token.split('@');
+        let kind = TrafficKind::from_name(parts.next().unwrap_or_default())?;
+        let scale = match parts.next() {
+            Some(s) => parse_num(s, "tenant scale")?,
+            None => 1.0,
+        };
+        let offset = match parts.next() {
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::config(format!("bad tenant offset {s:?}")))?,
+            None => 0,
+        };
+        if let Some(extra) = parts.next() {
+            return Err(Error::config(format!(
+                "trailing field {extra:?} in tenant {token:?}"
+            )));
+        }
+        Ok(Self {
+            kind,
+            scale,
+            offset,
+        })
+    }
+}
+
+impl std::fmt::Display for Tenant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@{}@{}", self.kind.name(), self.scale, self.offset)
     }
 }
 
@@ -87,7 +160,8 @@ impl TrafficKind {
 ///
 /// Fields irrelevant to `kind` are ignored (but kept, so an axis sweep can
 /// switch kinds without losing parameters). Defaults are chosen so every
-/// kind is constructible from `traffic.kind` alone.
+/// kind except `trace` (which needs a file path) is constructible from
+/// `traffic.kind` alone.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrafficSpec {
     pub kind: TrafficKind,
@@ -105,6 +179,12 @@ pub struct TrafficSpec {
     pub phases: Vec<TrafficKind>,
     /// Phased: cycles per phase before switching (≥ 1).
     pub phase_cycles: u64,
+    /// Trace: path to the trace file (text or binary, sniffed by magic).
+    pub trace_path: String,
+    /// Parsec: application name (see [`super::parsec::PARSEC_APPS`]).
+    pub app: String,
+    /// Composed: the tenant overlay (non-empty; `composed` cannot nest).
+    pub tenants: Vec<Tenant>,
 }
 
 impl Default for TrafficSpec {
@@ -122,6 +202,23 @@ impl Default for TrafficSpec {
                 TrafficKind::Transpose,
             ],
             phase_cycles: 20_000,
+            trace_path: String::new(),
+            app: "dedup".into(),
+            // Two tenants sharing the rate equally, the second arriving
+            // 2 500 cycles late — the smallest interesting overlay, and
+            // one that conserves the aggregate rate.
+            tenants: vec![
+                Tenant {
+                    kind: TrafficKind::Uniform,
+                    scale: 0.5,
+                    offset: 0,
+                },
+                Tenant {
+                    kind: TrafficKind::Tornado,
+                    scale: 0.5,
+                    offset: 2500,
+                },
+            ],
         }
     }
 }
@@ -145,11 +242,23 @@ impl TrafficSpec {
     /// hotspot  [:rate [:hot_fraction [:hot_core]]]
     /// bursty   [:rate [:burst_on [:burst_off]]]
     /// phased   [:rate [:kind+kind+... [:phase_cycles]]]
+    /// parsec   [:rate [:app]]
+    /// composed [:rate [:kind[@scale[@offset]]+...]]
+    /// trace    [:path]
     /// ```
     pub fn parse(text: &str) -> Result<Self> {
         let mut parts = text.split(':');
         let kind = TrafficKind::from_name(parts.next().unwrap_or_default())?;
         let mut spec = Self::new(kind, Self::default().rate);
+        if kind == TrafficKind::Trace {
+            // Everything after `trace:` is the path — it may itself
+            // contain colons, and replay ignores the rate field.
+            let rest: Vec<&str> = parts.collect();
+            if !rest.is_empty() {
+                spec.trace_path = rest.join(":");
+            }
+            return Ok(spec);
+        }
         if let Some(rate) = parts.next() {
             spec.rate = parse_num(rate, "rate")?;
         }
@@ -185,6 +294,19 @@ impl TrafficSpec {
                     })?;
                 }
             }
+            TrafficKind::Parsec => {
+                if let Some(app) = parts.next() {
+                    spec.app = app.to_string();
+                }
+            }
+            TrafficKind::Composed => {
+                if let Some(list) = parts.next() {
+                    spec.tenants = list
+                        .split('+')
+                        .map(Tenant::parse)
+                        .collect::<Result<Vec<_>>>()?;
+                }
+            }
             _ => {}
         }
         if let Some(extra) = parts.next() {
@@ -198,6 +320,10 @@ impl TrafficSpec {
     /// Canonical spec string: `parse(spec_string())` round-trips, and the
     /// campaign engine uses it as the traffic component of scenario names.
     pub fn spec_string(&self) -> String {
+        if self.kind == TrafficKind::Trace {
+            // No rate: replay follows the file, and paths may contain ':'.
+            return format!("trace:{}", self.trace_path);
+        }
         let base = format!("{}:{}", self.kind.name(), self.rate);
         match self.kind {
             TrafficKind::Hotspot => format!("{base}:{}:{}", self.hot_fraction, self.hot_core),
@@ -205,6 +331,11 @@ impl TrafficSpec {
             TrafficKind::Phased => {
                 let names: Vec<&str> = self.phases.iter().map(TrafficKind::name).collect();
                 format!("{base}:{}:{}", names.join("+"), self.phase_cycles)
+            }
+            TrafficKind::Parsec => format!("{base}:{}", self.app),
+            TrafficKind::Composed => {
+                let tenants: Vec<String> = self.tenants.iter().map(|t| t.to_string()).collect();
+                format!("{base}:{}", tenants.join("+"))
             }
             _ => base,
         }
@@ -248,6 +379,35 @@ impl TrafficSpec {
                                 Error::config(format!("{full_key} entries must be strings"))
                             })
                             .and_then(TrafficKind::from_name)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            "trace_path" => {
+                self.trace_path = map
+                    .get_str(full_key)
+                    .ok_or_else(|| Error::config(format!("{full_key} must be a string")))?
+                    .to_string();
+            }
+            "app" => {
+                self.app = map
+                    .get_str(full_key)
+                    .ok_or_else(|| Error::config(format!("{full_key} must be a string")))?
+                    .to_string();
+            }
+            "tenants" => {
+                let Some(Value::Array(items)) = map.get(full_key) else {
+                    return Err(Error::config(format!(
+                        "{full_key} must be an array of kind[@scale[@offset]] tenant strings"
+                    )));
+                };
+                self.tenants = items
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .ok_or_else(|| {
+                                Error::config(format!("{full_key} entries must be strings"))
+                            })
+                            .and_then(Tenant::parse)
                     })
                     .collect::<Result<Vec<_>>>()?;
             }
@@ -320,13 +480,61 @@ impl TrafficSpec {
                     return Err(Error::config("traffic.phase_cycles must be nonzero"));
                 }
                 for p in &self.phases {
-                    if *p == TrafficKind::Phased {
-                        return Err(Error::config("phased traffic cannot nest itself"));
+                    if matches!(*p, TrafficKind::Phased | TrafficKind::Composed) {
+                        return Err(Error::config(
+                            "phased traffic cannot nest phased or composed kinds",
+                        ));
                     }
                     // Sub-phases inherit this spec's parameters; validate
                     // each as if it were the top-level kind.
                     let mut sub = self.clone();
                     sub.kind = *p;
+                    sub.validate(total_cores)?;
+                }
+            }
+            TrafficKind::Trace => {
+                if self.trace_path.is_empty() {
+                    return Err(Error::config(
+                        "traffic.trace_path must name a trace file for trace replay",
+                    ));
+                }
+            }
+            TrafficKind::Parsec => {
+                let Some(profile) = app_by_name(&self.app) else {
+                    return Err(Error::config(format!(
+                        "unknown PARSEC app {:?} in traffic.app",
+                        self.app
+                    )));
+                };
+                if self.rate >= profile.duty {
+                    return Err(Error::config(format!(
+                        "parsec rate {} exceeds app {:?} duty cycle {}: the ON-state rate \
+                         would pass 1 packet/cycle",
+                        self.rate, self.app, profile.duty
+                    )));
+                }
+            }
+            TrafficKind::Composed => {
+                if self.tenants.is_empty() {
+                    return Err(Error::config(
+                        "traffic.tenants must list at least one tenant",
+                    ));
+                }
+                for t in &self.tenants {
+                    if t.kind == TrafficKind::Composed {
+                        return Err(Error::config("composed traffic cannot nest itself"));
+                    }
+                    if !(t.scale.is_finite() && t.scale >= 0.0) {
+                        return Err(Error::config(format!(
+                            "tenant scale {} must be a finite non-negative rate share",
+                            t.scale
+                        )));
+                    }
+                    // Each tenant runs as its own sub-spec at its rate
+                    // share; validate it as if it were the top level.
+                    let mut sub = self.clone();
+                    sub.kind = t.kind;
+                    sub.rate = self.rate * t.scale;
                     sub.validate(total_cores)?;
                 }
             }
@@ -390,6 +598,25 @@ impl TrafficSpec {
                 }
                 Box::new(PhasedTraffic::new(built, self.phase_cycles, self.rate))
             }
+            TrafficKind::Trace => open_trace(Path::new(&self.trace_path))?,
+            TrafficKind::Parsec => {
+                let mut profile =
+                    app_by_name(&self.app).expect("validate() accepted the app name");
+                profile.rate = self.rate;
+                Box::new(ParsecTraffic::new(geo.clone(), profile, seed))
+            }
+            TrafficKind::Composed => {
+                let seeds = tenant_seeds(seed, self.tenants.len());
+                let mut built: Vec<(Box<dyn Traffic>, u64)> =
+                    Vec::with_capacity(self.tenants.len());
+                for (t, s) in self.tenants.iter().zip(seeds) {
+                    let mut sub = self.clone();
+                    sub.kind = t.kind;
+                    sub.rate = self.rate * t.scale;
+                    built.push((sub.build(geo, s)?, t.offset));
+                }
+                Box::new(ComposedTraffic::new(built, self.rate))
+            }
         })
     }
 
@@ -423,6 +650,11 @@ mod tests {
         for kind in TrafficKind::ALL {
             assert_eq!(TrafficKind::from_name(kind.name()).unwrap(), kind);
         }
+        // Trace is registered but excluded from ALL (needs a file path).
+        assert_eq!(
+            TrafficKind::from_name("trace").unwrap(),
+            TrafficKind::Trace
+        );
         assert!(TrafficKind::from_name("carousel").is_err());
     }
 
@@ -433,6 +665,11 @@ mod tests {
             let parsed = TrafficSpec::parse(&spec.spec_string()).unwrap();
             assert_eq!(parsed, spec, "kind {}", kind.name());
         }
+        // Trace specs round-trip too, including paths containing ':'.
+        let mut spec = TrafficSpec::new(TrafficKind::Trace, TrafficSpec::default().rate);
+        spec.trace_path = "dir:with:colons/trace.rtb".into();
+        assert_eq!(spec.spec_string(), "trace:dir:with:colons/trace.rtb");
+        assert_eq!(TrafficSpec::parse(&spec.spec_string()).unwrap(), spec);
     }
 
     #[test]
@@ -458,6 +695,32 @@ mod tests {
             vec![TrafficKind::Uniform, TrafficKind::BitComplement]
         );
         assert_eq!(s.phase_cycles, 5_000);
+
+        let s = TrafficSpec::parse("parsec:0.008:canneal").unwrap();
+        assert_eq!(s.kind, TrafficKind::Parsec);
+        assert_eq!((s.rate, s.app.as_str()), (0.008, "canneal"));
+
+        let s = TrafficSpec::parse("composed:0.02:uniform@0.75+bursty@0.25@1000").unwrap();
+        assert_eq!(s.kind, TrafficKind::Composed);
+        assert_eq!(
+            s.tenants,
+            vec![
+                Tenant {
+                    kind: TrafficKind::Uniform,
+                    scale: 0.75,
+                    offset: 0,
+                },
+                Tenant {
+                    kind: TrafficKind::Bursty,
+                    scale: 0.25,
+                    offset: 1000,
+                },
+            ]
+        );
+
+        let s = TrafficSpec::parse("trace:fixtures/a.trace").unwrap();
+        assert_eq!(s.kind, TrafficKind::Trace);
+        assert_eq!(s.trace_path, "fixtures/a.trace");
     }
 
     #[test]
@@ -470,6 +733,10 @@ mod tests {
             "hotspot:0.01:0.2:0:extra",
             "phased:0.01:uniform+warp",
             "bursty:0.01:on",
+            "parsec:0.01:dedup:x",
+            "composed:0.01:warp@0.5",
+            "composed:0.01:uniform@0.5@0@9",
+            "composed:0.01:uniform@wide",
         ] {
             assert!(TrafficSpec::parse(bad).is_err(), "{bad:?} should fail");
         }
@@ -538,6 +805,27 @@ mod tests {
         assert!(s.build(&g, 1).is_err());
         let mut s = TrafficSpec::new(TrafficKind::Phased, 0.01);
         s.phases = vec![TrafficKind::Phased];
+        assert!(s.build(&g, 1).is_err());
+        let mut s = TrafficSpec::new(TrafficKind::Phased, 0.01);
+        s.phases = vec![TrafficKind::Composed];
+        assert!(s.build(&g, 1).is_err());
+        // Trace: missing path.
+        assert!(TrafficSpec::new(TrafficKind::Trace, 0.01).build(&g, 1).is_err());
+        // Parsec: unknown app, and a rate past the app's duty cycle.
+        let mut s = TrafficSpec::new(TrafficKind::Parsec, 0.01);
+        s.app = "quake".into();
+        assert!(s.build(&g, 1).is_err());
+        let s = TrafficSpec::new(TrafficKind::Parsec, 0.5);
+        assert!(s.build(&g, 1).is_err());
+        // Composed: empty tenant list, self-nesting, bad scale.
+        let mut s = TrafficSpec::new(TrafficKind::Composed, 0.01);
+        s.tenants.clear();
+        assert!(s.build(&g, 1).is_err());
+        let mut s = TrafficSpec::new(TrafficKind::Composed, 0.01);
+        s.tenants[0].kind = TrafficKind::Composed;
+        assert!(s.build(&g, 1).is_err());
+        let mut s = TrafficSpec::new(TrafficKind::Composed, 0.01);
+        s.tenants[0].scale = f64::NAN;
         assert!(s.build(&g, 1).is_err());
     }
 

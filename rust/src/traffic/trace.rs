@@ -9,9 +9,11 @@
 //! where an endpoint is `c<chiplet>:<x>:<y>` for a core or `mem:<index>`
 //! for a memory controller, e.g. `1234 c0:1:2 mem:1`. Lines starting with
 //! `#` and blank lines are ignored. Records must be sorted by cycle.
-//! This is the adapter for users who *do* have gem5/Noxim-style traces
-//! (DESIGN.md §3); the test-suite also uses it to round-trip captured
-//! synthetic traffic.
+//! This is the adapter for users who *do* have gem5/Noxim-style traces;
+//! the test-suite also uses it to round-trip captured synthetic traffic.
+//! For production-scale replays, convert to the streaming binary format
+//! in [`super::tracebin`] (`resipi trace convert`) — this reader holds
+//! the whole trace in memory.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
@@ -140,6 +142,11 @@ impl TraceReader {
     /// Total span of the trace in cycles.
     pub fn span(&self) -> Cycle {
         self.records.last().map(|r| r.cycle + 1).unwrap_or(0)
+    }
+
+    /// The parsed records, in cycle order (used by the binary converters).
+    pub fn records(&self) -> &[TraceRecord] {
+        &self.records
     }
 }
 

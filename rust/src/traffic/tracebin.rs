@@ -1,0 +1,619 @@
+//! Compact binary trace format with a bounded-memory streaming reader.
+//!
+//! The text format in [`crate::traffic::trace`] is convenient to author and
+//! diff, but parsing one line per packet caps replay speed and
+//! [`TraceReader`] holds the whole trace in memory. This module adds the
+//! production path: fixed-width little-endian records behind a magic +
+//! version header, decoded through a single reusable chunk buffer so a
+//! million-packet trace replays at full speed with O(1) memory.
+//!
+//! Layout (all fields little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "RSPT"
+//! 4       4     format version (u32, currently 1)
+//! 8       24×N  records: cycle u64, src u64, dst u64
+//! ```
+//!
+//! Endpoint words pack [`Node`] values: bit 63 clear means a core
+//! (chiplet in bits 62..32, x in bits 31..16, y in bits 15..0); bit 63 set
+//! means a memory controller (index in bits 31..0, bits 62..32 reserved
+//! zero). Records must be sorted by cycle — the contract is validated
+//! while streaming, with record-numbered errors, mirroring the text
+//! parser's line-numbered ones.
+//!
+//! The format is self-delimiting only to record granularity: a file
+//! truncated exactly at a record boundary reads as a shorter valid trace,
+//! while any other truncation is a decode error.
+
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::sim::ids::{Coord, Node};
+use crate::sim::packet::{Cycle, MsgClass};
+use crate::traffic::trace::{TraceReader, TraceRecord, TraceWriter};
+use crate::traffic::{NewPacket, Traffic};
+
+/// File magic, first four bytes of every binary trace.
+pub const MAGIC: [u8; 4] = *b"RSPT";
+
+/// Format version this build reads and writes.
+pub const VERSION: u32 = 1;
+
+/// Header size in bytes (magic + version).
+pub const HEADER_BYTES: usize = 8;
+
+/// Fixed record size in bytes (cycle + src + dst, each u64).
+pub const RECORD_BYTES: usize = 24;
+
+/// Streaming chunk size. The reader's entire steady-state footprint.
+const CHUNK_BYTES: usize = 64 * 1024;
+
+/// Memory-controller tag bit in an endpoint word.
+const MEM_TAG: u64 = 1 << 63;
+
+/// Pack a [`Node`] into an endpoint word.
+pub fn encode_node(n: Node) -> Result<u64> {
+    match n {
+        Node::Core { chiplet, coord } => {
+            if (chiplet as u64) >= (1 << 31) {
+                return Err(Error::trace(format!("chiplet {chiplet} too large to encode")));
+            }
+            if coord.x >= (1 << 16) || coord.y >= (1 << 16) {
+                return Err(Error::trace(format!(
+                    "coordinate ({}, {}) too large to encode",
+                    coord.x, coord.y
+                )));
+            }
+            Ok(((chiplet as u64) << 32) | ((coord.x as u64) << 16) | coord.y as u64)
+        }
+        Node::Memory { index } => {
+            if (index as u64) > u64::from(u32::MAX) {
+                return Err(Error::trace(format!("memory index {index} too large to encode")));
+            }
+            Ok(MEM_TAG | index as u64)
+        }
+    }
+}
+
+/// Unpack an endpoint word (inverse of [`encode_node`]).
+///
+/// `index` is the 1-based record number and `which` the field name, used
+/// only for error messages.
+fn decode_node(word: u64, index: u64, which: &str) -> Result<Node> {
+    if word & MEM_TAG != 0 {
+        if word & !MEM_TAG & !0xFFFF_FFFF != 0 {
+            return Err(Error::trace(format!(
+                "record {index}: corrupt {which} endpoint word {word:#018x}"
+            )));
+        }
+        Ok(Node::Memory {
+            index: (word & 0xFFFF_FFFF) as usize,
+        })
+    } else {
+        Ok(Node::Core {
+            chiplet: (word >> 32) as usize,
+            coord: Coord::new(((word >> 16) & 0xFFFF) as usize, (word & 0xFFFF) as usize),
+        })
+    }
+}
+
+fn decode_record(buf: &[u8], index: u64) -> Result<TraceRecord> {
+    let cycle = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+    let src = decode_node(u64::from_le_bytes(buf[8..16].try_into().unwrap()), index, "src")?;
+    let dst = decode_node(
+        u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+        index,
+        "dst",
+    )?;
+    Ok(TraceRecord { cycle, src, dst })
+}
+
+/// Read until `buf` is full or EOF; returns the byte count actually read.
+fn read_fully<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        let n = r.read(&mut buf[got..])?;
+        if n == 0 {
+            break;
+        }
+        got += n;
+    }
+    Ok(got)
+}
+
+/// Streaming binary-trace decoder and bounded-memory [`Traffic`] source.
+///
+/// Two construction paths:
+///
+/// - [`BinTraceReader::new`] checks only the header and then streams
+///   records through [`next_record`](Self::next_record), surfacing decode
+///   errors as they are reached — the single-pass path for converters,
+///   fuzzers, and decode benchmarks.
+/// - [`BinTraceReader::validated`] / [`BinTraceReader::from_file`] first
+///   stream the whole payload once to prove it well-formed (sortedness,
+///   alignment, endpoint encoding), then rewind for replay. Only these
+///   forms should be used as a [`Traffic`] source: `generate` cannot
+///   return errors, so it relies on the open-time proof.
+///
+/// Steady-state replay allocates nothing: records decode through one
+/// chunk buffer allocated at construction.
+pub struct BinTraceReader<R: Read + Seek> {
+    source: R,
+    name: String,
+    /// Reusable chunk buffer — the reader's only allocation.
+    buf: Vec<u8>,
+    filled: usize,
+    pos: usize,
+    /// Records decoded so far by `next_record` (errors are 1-based).
+    decoded: u64,
+    last_cycle: Cycle,
+    /// Next record due for replay; primed by `validated`.
+    pending: Option<TraceRecord>,
+    /// Totals from the validation pass (`validated` constructors only).
+    records: u64,
+    span: Cycle,
+    validated: bool,
+}
+
+impl<R: Read + Seek> BinTraceReader<R> {
+    /// Open a single-pass streaming decoder. Checks the header eagerly;
+    /// everything else is validated record by record in
+    /// [`next_record`](Self::next_record).
+    pub fn new(mut source: R, name: impl Into<String>) -> Result<Self> {
+        source.seek(SeekFrom::Start(0))?;
+        let mut header = [0u8; HEADER_BYTES];
+        let got = read_fully(&mut source, &mut header)?;
+        if got < HEADER_BYTES {
+            return Err(Error::trace(format!(
+                "binary trace header truncated ({got} of {HEADER_BYTES} bytes)"
+            )));
+        }
+        if header[0..4] != MAGIC {
+            return Err(Error::trace(format!(
+                "bad magic {:02x?} (want {:02x?})",
+                &header[0..4],
+                MAGIC
+            )));
+        }
+        let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(Error::trace(format!(
+                "unsupported binary trace version {version} (this build reads v{VERSION})"
+            )));
+        }
+        Ok(Self {
+            source,
+            name: name.into(),
+            buf: vec![0u8; CHUNK_BYTES],
+            filled: 0,
+            pos: 0,
+            decoded: 0,
+            last_cycle: 0,
+            pending: None,
+            records: 0,
+            span: 0,
+            validated: false,
+        })
+    }
+
+    /// Open for replay: stream the whole payload once to validate it,
+    /// then rewind and prime the first record. After this the [`Traffic`]
+    /// implementation cannot hit a decode error.
+    pub fn validated(source: R, name: impl Into<String>) -> Result<Self> {
+        let mut reader = Self::new(source, name)?;
+        let mut span = 0;
+        while let Some(rec) = reader.next_record()? {
+            span = rec.cycle + 1;
+        }
+        let records = reader.decoded;
+        reader.source.seek(SeekFrom::Start(HEADER_BYTES as u64))?;
+        reader.filled = 0;
+        reader.pos = 0;
+        reader.decoded = 0;
+        reader.last_cycle = 0;
+        reader.records = records;
+        reader.span = span;
+        reader.validated = true;
+        reader.pending = reader.next_record()?;
+        Ok(reader)
+    }
+
+    /// Slide the unconsumed tail to the front and fill the chunk buffer.
+    fn refill(&mut self) -> std::io::Result<()> {
+        self.buf.copy_within(self.pos..self.filled, 0);
+        self.filled -= self.pos;
+        self.pos = 0;
+        while self.filled < self.buf.len() {
+            let n = self.source.read(&mut self.buf[self.filled..])?;
+            if n == 0 {
+                break;
+            }
+            self.filled += n;
+        }
+        Ok(())
+    }
+
+    /// Decode the next record, refilling the chunk buffer as needed.
+    /// Returns `Ok(None)` at a clean end of trace.
+    pub fn next_record(&mut self) -> Result<Option<TraceRecord>> {
+        if self.filled - self.pos < RECORD_BYTES {
+            self.refill()?;
+            let avail = self.filled - self.pos;
+            if avail == 0 {
+                return Ok(None);
+            }
+            if avail < RECORD_BYTES {
+                return Err(Error::trace(format!(
+                    "record {}: truncated ({avail} trailing bytes; records are {RECORD_BYTES} bytes)",
+                    self.decoded + 1
+                )));
+            }
+        }
+        let rec = decode_record(&self.buf[self.pos..self.pos + RECORD_BYTES], self.decoded + 1)?;
+        self.pos += RECORD_BYTES;
+        if rec.cycle < self.last_cycle {
+            return Err(Error::trace(format!(
+                "record {}: trace not sorted by cycle ({} after {})",
+                self.decoded + 1,
+                rec.cycle,
+                self.last_cycle
+            )));
+        }
+        self.last_cycle = rec.cycle;
+        self.decoded += 1;
+        Ok(Some(rec))
+    }
+
+    /// Total records, as counted by the validation pass (zero for
+    /// single-pass readers).
+    pub fn len(&self) -> u64 {
+        self.records
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records == 0
+    }
+
+    /// Total span of the trace in cycles (validation pass only).
+    pub fn span(&self) -> Cycle {
+        self.span
+    }
+}
+
+impl BinTraceReader<std::fs::File> {
+    /// Open and validate a binary trace file for replay.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "trace".into());
+        Self::validated(f, name)
+    }
+}
+
+impl<R: Read + Seek> Traffic for BinTraceReader<R> {
+    fn generate(&mut self, now: Cycle, sink: &mut Vec<NewPacket>) {
+        debug_assert!(
+            self.validated,
+            "replay requires BinTraceReader::validated/from_file"
+        );
+        while let Some(rec) = self.pending {
+            if rec.cycle > now {
+                break;
+            }
+            if rec.cycle == now {
+                sink.push(NewPacket {
+                    src: rec.src,
+                    dst: rec.dst,
+                    class: MsgClass::Request,
+                });
+            }
+            self.pending = self
+                .next_record()
+                .expect("binary trace was validated at open; decode failed mid-replay");
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Captures generated traffic to the binary format (counterpart of
+/// [`TraceWriter`]). Enforces the sorted-by-cycle contract at write time.
+pub struct BinTraceWriter<W: Write> {
+    out: W,
+    written: u64,
+    last_cycle: Cycle,
+}
+
+impl<W: Write> BinTraceWriter<W> {
+    pub fn new(mut out: W) -> Result<Self> {
+        out.write_all(&MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        Ok(Self {
+            out,
+            written: 0,
+            last_cycle: 0,
+        })
+    }
+
+    pub fn record(&mut self, cycle: Cycle, p: &NewPacket) -> Result<()> {
+        if cycle < self.last_cycle {
+            return Err(Error::trace(format!(
+                "record {}: trace not sorted by cycle ({cycle} after {})",
+                self.written + 1,
+                self.last_cycle
+            )));
+        }
+        self.last_cycle = cycle;
+        let mut buf = [0u8; RECORD_BYTES];
+        buf[0..8].copy_from_slice(&cycle.to_le_bytes());
+        buf[8..16].copy_from_slice(&encode_node(p.src)?.to_le_bytes());
+        buf[16..24].copy_from_slice(&encode_node(p.dst)?.to_le_bytes());
+        self.out.write_all(&buf)?;
+        self.written += 1;
+        Ok(())
+    }
+
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Flush and hand back the underlying writer.
+    pub fn finish(mut self) -> Result<W> {
+        self.out.flush()?;
+        Ok(self.out)
+    }
+}
+
+/// True if `path` starts with the binary-trace magic.
+pub fn is_binary_trace(path: &Path) -> Result<bool> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 4];
+    let got = read_fully(&mut f, &mut magic)?;
+    Ok(got == magic.len() && magic == MAGIC)
+}
+
+/// Open a trace file as a replayable [`Traffic`] source, sniffing the
+/// binary magic to pick the decoder (anything else goes to the text
+/// parser).
+pub fn open_trace(path: &Path) -> Result<Box<dyn Traffic>> {
+    if is_binary_trace(path)? {
+        Ok(Box::new(BinTraceReader::from_file(path)?))
+    } else {
+        Ok(Box::new(TraceReader::from_file(path)?))
+    }
+}
+
+/// Convert a text trace file to binary. Returns the record count.
+pub fn text_to_binary(input: &Path, output: &Path) -> Result<u64> {
+    let reader = TraceReader::from_file(input)?;
+    let out = std::fs::File::create(output)?;
+    let mut writer = BinTraceWriter::new(std::io::BufWriter::new(out))?;
+    for rec in reader.records() {
+        writer.record(
+            rec.cycle,
+            &NewPacket {
+                src: rec.src,
+                dst: rec.dst,
+                class: MsgClass::Request,
+            },
+        )?;
+    }
+    let written = writer.written();
+    writer.finish()?;
+    Ok(written)
+}
+
+/// Convert a binary trace file to text, streaming record by record.
+/// Returns the record count.
+pub fn binary_to_text(input: &Path, output: &Path) -> Result<u64> {
+    let mut reader = BinTraceReader::new(std::fs::File::open(input)?, "convert")?;
+    let out = std::fs::File::create(output)?;
+    let mut writer = TraceWriter::new(std::io::BufWriter::new(out))?;
+    while let Some(rec) = reader.next_record()? {
+        writer.record(
+            rec.cycle,
+            &NewPacket {
+                src: rec.src,
+                dst: rec.dst,
+                class: MsgClass::Request,
+            },
+        )?;
+    }
+    let written = writer.written() as u64;
+    let mut inner = writer.finish();
+    inner.flush()?;
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn core(chiplet: usize, x: usize, y: usize) -> Node {
+        Node::Core {
+            chiplet,
+            coord: Coord::new(x, y),
+        }
+    }
+
+    fn pkt(src: Node, dst: Node) -> NewPacket {
+        NewPacket {
+            src,
+            dst,
+            class: MsgClass::Request,
+        }
+    }
+
+    fn sample_bytes() -> Vec<u8> {
+        let mut w = BinTraceWriter::new(Vec::new()).unwrap();
+        w.record(3, &pkt(core(0, 1, 2), Node::Memory { index: 1 }))
+            .unwrap();
+        w.record(3, &pkt(core(1, 0, 0), core(2, 3, 3))).unwrap();
+        w.record(9, &pkt(core(3, 2, 1), core(0, 0, 0))).unwrap();
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn node_words_roundtrip() {
+        for n in [
+            core(0, 0, 0),
+            core(255, 15, 3),
+            core((1 << 31) - 1, (1 << 16) - 1, (1 << 16) - 1),
+            Node::Memory { index: 0 },
+            Node::Memory {
+                index: u32::MAX as usize,
+            },
+        ] {
+            let word = encode_node(n).unwrap();
+            assert_eq!(decode_node(word, 1, "src").unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn encode_rejects_out_of_range_endpoints() {
+        assert!(encode_node(core(1 << 31, 0, 0)).is_err());
+        assert!(encode_node(core(0, 1 << 16, 0)).is_err());
+        assert!(encode_node(core(0, 0, 1 << 16)).is_err());
+        let oversized = Node::Memory {
+            index: (u32::MAX as usize) + 1,
+        };
+        assert!(encode_node(oversized).is_err());
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_with_replay() {
+        let bytes = sample_bytes();
+        assert_eq!(bytes.len(), HEADER_BYTES + 3 * RECORD_BYTES);
+        let mut r = BinTraceReader::validated(Cursor::new(bytes), "rt").unwrap();
+        assert_eq!(r.len(), 3);
+        assert!(!r.is_empty());
+        assert_eq!(r.span(), 10);
+        let mut out = Vec::new();
+        for now in 0..12 {
+            let before = out.len();
+            r.generate(now, &mut out);
+            match now {
+                3 => assert_eq!(out.len() - before, 2),
+                9 => assert_eq!(out.len() - before, 1),
+                _ => assert_eq!(out.len(), before),
+            }
+        }
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].dst, Node::Memory { index: 1 });
+        assert_eq!(out[2].src, core(3, 2, 1));
+    }
+
+    #[test]
+    fn streaming_decode_crosses_chunk_boundaries() {
+        // Enough records that the payload spans several chunk refills.
+        let total = 3 * (CHUNK_BYTES / RECORD_BYTES) + 7;
+        let mut w = BinTraceWriter::new(Vec::new()).unwrap();
+        for i in 0..total {
+            w.record((i / 4) as Cycle, &pkt(core(i % 7, i % 4, i % 3), core(0, 0, 0)))
+                .unwrap();
+        }
+        let bytes = w.finish().unwrap();
+        let mut r = BinTraceReader::new(Cursor::new(bytes), "chunks").unwrap();
+        let mut count = 0usize;
+        let mut last = None;
+        while let Some(rec) = r.next_record().unwrap() {
+            count += 1;
+            last = Some(rec);
+        }
+        assert_eq!(count, total);
+        assert_eq!(last.unwrap().cycle, ((total - 1) / 4) as Cycle);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let mut bytes = sample_bytes();
+        bytes[0] ^= 0xFF;
+        let err = BinTraceReader::new(Cursor::new(bytes), "bad").unwrap_err();
+        assert!(err.to_string().contains("bad magic"));
+
+        let mut bytes = sample_bytes();
+        bytes[4] = 99;
+        let err = BinTraceReader::new(Cursor::new(bytes), "bad").unwrap_err();
+        assert!(err.to_string().contains("version"));
+    }
+
+    #[test]
+    fn rejects_misaligned_truncation_and_keeps_aligned_prefixes() {
+        let bytes = sample_bytes();
+        for end in 0..bytes.len() {
+            let prefix = bytes[..end].to_vec();
+            if end < HEADER_BYTES {
+                assert!(BinTraceReader::new(Cursor::new(prefix), "t").is_err());
+            } else if (end - HEADER_BYTES) % RECORD_BYTES == 0 {
+                // Record-aligned prefixes are shorter valid traces.
+                let r = BinTraceReader::validated(Cursor::new(prefix), "t").unwrap();
+                assert_eq!(r.len() as usize, (end - HEADER_BYTES) / RECORD_BYTES);
+            } else {
+                let err = BinTraceReader::validated(Cursor::new(prefix), "t").unwrap_err();
+                assert!(err.to_string().contains("truncated"), "end={end}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_unsorted_records_with_record_number() {
+        let mut w = BinTraceWriter::new(Vec::new()).unwrap();
+        w.record(9, &pkt(core(0, 0, 0), core(1, 0, 0))).unwrap();
+        let err = w.record(5, &pkt(core(0, 0, 0), core(1, 0, 0))).unwrap_err();
+        assert!(err.to_string().contains("not sorted"));
+
+        // Hand-craft an unsorted payload to exercise the reader's check.
+        let mut bytes = BinTraceWriter::new(Vec::new()).unwrap().finish().unwrap();
+        for cycle in [9u64, 5u64] {
+            bytes.extend_from_slice(&cycle.to_le_bytes());
+            bytes.extend_from_slice(&encode_node(core(0, 0, 0)).unwrap().to_le_bytes());
+            bytes.extend_from_slice(&encode_node(core(1, 0, 0)).unwrap().to_le_bytes());
+        }
+        let err = BinTraceReader::validated(Cursor::new(bytes), "bad").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("record 2") && msg.contains("not sorted"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_corrupt_memory_endpoint_words() {
+        let mut bytes = BinTraceWriter::new(Vec::new()).unwrap().finish().unwrap();
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        // Memory tag with reserved bits set.
+        bytes.extend_from_slice(&(MEM_TAG | (1 << 40)).to_le_bytes());
+        bytes.extend_from_slice(&encode_node(core(0, 0, 0)).unwrap().to_le_bytes());
+        let err = BinTraceReader::validated(Cursor::new(bytes), "bad").unwrap_err();
+        assert!(err.to_string().contains("corrupt src endpoint"));
+    }
+
+    #[test]
+    fn file_converters_roundtrip() {
+        let dir = std::env::temp_dir();
+        let tag = std::process::id();
+        let text_in = dir.join(format!("resipi-tracebin-{tag}-in.trace"));
+        let bin = dir.join(format!("resipi-tracebin-{tag}.rtb"));
+        let text_out = dir.join(format!("resipi-tracebin-{tag}-out.trace"));
+
+        std::fs::write(&text_in, "# header\n5 c0:1:2 mem:1\n5 c1:0:0 c2:3:3\n9 c3:2:1 c0:0:0\n")
+            .unwrap();
+        assert_eq!(text_to_binary(&text_in, &bin).unwrap(), 3);
+        assert!(is_binary_trace(&bin).unwrap());
+        assert!(!is_binary_trace(&text_in).unwrap());
+        assert_eq!(binary_to_text(&bin, &text_out).unwrap(), 3);
+
+        let a = TraceReader::from_file(&text_in).unwrap();
+        let b = TraceReader::from_file(&text_out).unwrap();
+        assert_eq!(a.records(), b.records());
+
+        for p in [&text_in, &bin, &text_out] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}

@@ -2,8 +2,8 @@
 //! CSV/JSON writers, and an in-house property-testing driver.
 //!
 //! These exist because the offline build environment only vendors the `xla`
-//! crate's dependency tree (no `rand`, `rayon`, `serde`, `proptest`); see
-//! DESIGN.md §3 for the substitution table.
+//! crate's dependency tree (no `rand`, `rayon`, `serde`, `proptest`), so
+//! each module is a small in-house substitute for the usual crate.
 
 pub mod bench;
 pub mod io;

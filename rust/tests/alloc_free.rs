@@ -1,8 +1,10 @@
 //! Counting-allocator proofs: the simulator's steady-state cycle loop —
 //! including epoch boundaries on a static control plane — performs zero
-//! heap allocations (the `sim::network` module-doc invariant 3), and
+//! heap allocations (the `sim::network` module-doc invariant 3),
 //! `Network` construction stays within an O(routers) allocation budget
-//! even at the 16×16-mesh scale the deadlock certificate targets.
+//! even at the 16×16-mesh scale the deadlock certificate targets, and the
+//! binary trace reader replays a million-record file through its single
+//! chunk buffer without allocating once past warm-up.
 //!
 //! The binary installs a `#[global_allocator]` that counts allocation
 //! events made by threads that opted in (a thread-local flag). Both the
@@ -16,7 +18,7 @@ use std::cell::Cell;
 use resipi::config::{Architecture, Config};
 use resipi::sim::{Geometry, Network};
 use resipi::topology::TopologyKind;
-use resipi::traffic::UniformTraffic;
+use resipi::traffic::{BinTraceReader, BinTraceWriter, Traffic, UniformTraffic};
 
 thread_local! {
     static TRACKING: Cell<bool> = const { Cell::new(false) };
@@ -130,6 +132,61 @@ fn steady_state_cycle_loop_is_allocation_free() {
         allocs, 0,
         "epoch-crossing window performed {allocs} heap allocation(s)"
     );
+}
+
+#[test]
+fn binary_trace_streaming_replay_is_allocation_free() {
+    // Gate for the streaming binary trace engine: a >=1M-record trace
+    // must replay with zero steady-state heap allocations. The reader
+    // streams the file through one chunk buffer allocated at open, so a
+    // zero count here also pins the bounded-memory claim — the resident
+    // footprint is independent of trace length.
+    let mut cfg = Config::table1(Architecture::Resipi);
+    cfg.set_topology(TopologyKind::Mesh);
+    cfg.validate().unwrap();
+    let geo = Geometry::from_config(&cfg);
+
+    let path = std::env::temp_dir().join(format!("resipi-allocfree-{}.rtb", std::process::id()));
+    let cycles: u64 = 33_000;
+    let mut synth = UniformTraffic::new(geo, 0.5, 11);
+    let file = std::fs::File::create(&path).unwrap();
+    let mut w = BinTraceWriter::new(std::io::BufWriter::new(file)).unwrap();
+    let mut sink = Vec::new();
+    for now in 0..cycles {
+        sink.clear();
+        synth.generate(now, &mut sink);
+        for p in &sink {
+            w.record(now, p).unwrap();
+        }
+    }
+    let written = w.written();
+    w.finish().unwrap();
+    assert!(written >= 1_000_000, "fixture too small: {written} records");
+
+    let mut r = BinTraceReader::from_file(&path).unwrap();
+    assert_eq!(r.len(), written);
+
+    // Warm-up: let the sink reach its high-water mark and the reader
+    // cross its first chunk refills before the counter arms.
+    let mut replayed = 0u64;
+    for now in 0..1_000 {
+        sink.clear();
+        r.generate(now, &mut sink);
+        replayed += sink.len() as u64;
+    }
+    let (allocs, _) = allocations_during(|| {
+        for now in 1_000..cycles {
+            sink.clear();
+            r.generate(now, &mut sink);
+            replayed += sink.len() as u64;
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "replaying {written} binary records performed {allocs} heap allocation(s)"
+    );
+    assert_eq!(replayed, written, "replay must cover the whole trace");
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

@@ -7,6 +7,7 @@
 use std::path::PathBuf;
 
 use resipi::experiments::campaign::{run_campaign, CampaignSpec};
+use resipi::traffic::TrafficSpec;
 
 /// The acceptance matrix at a test-friendly horizon (axes untouched:
 /// 2 archs × 2 topologies × 2 chiplet counts × 2 traffic kinds × 2 rates
@@ -92,6 +93,48 @@ fn aggregate_reports_are_identical_across_worker_counts_and_resume() {
         "resumed report differs from the uninterrupted run"
     );
     assert_eq!(csv1, read(&resumed.csv_path));
+    assert_eq!(out1.campaign_checksum, resumed.campaign_checksum);
+}
+
+#[test]
+fn composed_traffic_campaigns_are_pool_invariant_and_resumable() {
+    // A 2-tenant composed axis through the campaign engine: identical
+    // reports at 1 vs 4 workers, and a torn-ledger resume reproduces the
+    // uninterrupted reports byte-for-byte.
+    let mut spec = quick_spec();
+    spec.archs.truncate(1);
+    spec.topologies.truncate(1);
+    spec.chiplets = vec![4];
+    spec.traffics =
+        vec![TrafficSpec::parse("composed:0:uniform@0.5@0+tornado@0.5@1000").unwrap()];
+    spec.rates = vec![0.002, 0.01];
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 2);
+    let name = scenarios[0].name();
+    assert!(name.contains("composed"), "axis lost the composer: {name}");
+
+    let dir1 = TempDir::new("composed-t1");
+    let out1 = run_campaign(&spec, 1, &dir1.0).unwrap();
+    assert_eq!(out1.ran, 2);
+    let report1 = read(&out1.report_path);
+    let csv1 = read(&out1.csv_path);
+
+    let dir4 = TempDir::new("composed-t4");
+    let out4 = run_campaign(&spec, 4, &dir4.0).unwrap();
+    assert_eq!(report1, read(&out4.report_path), "report drifted across worker counts");
+    assert_eq!(csv1, read(&out4.csv_path), "csv drifted across worker counts");
+    assert_eq!(out1.campaign_checksum, out4.campaign_checksum);
+
+    // Kill-then-resume: keep one completed record plus a torn tail.
+    let ledger1 = read(&out1.jsonl_path);
+    let dirr = TempDir::new("composed-resume");
+    let first = ledger1.lines().next().unwrap();
+    let torn = format!("{first}\n{{\"schema_version\":1,\"name\":\"resi");
+    std::fs::write(dirr.0.join("campaign.jsonl"), torn).unwrap();
+    let resumed = run_campaign(&spec, 2, &dirr.0).unwrap();
+    assert_eq!((resumed.ran, resumed.skipped), (1, 1));
+    assert_eq!(resumed.ignored_lines, 1, "torn tail line is ignored, not fatal");
+    assert_eq!(report1, read(&resumed.report_path), "resumed report drifted");
     assert_eq!(out1.campaign_checksum, resumed.campaign_checksum);
 }
 

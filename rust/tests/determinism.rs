@@ -4,20 +4,31 @@
 //! scheduling inside the engine and the scheduling of the experiment
 //! thread pool must never leak into simulation results.
 
-use resipi::experiments::perf::{self, Scenario, ScenarioResult};
+use resipi::experiments::perf::{self, Scenario, ScenarioResult, Workload};
 use resipi::topology::TopologyKind;
 use resipi::util::pool;
 
 fn scenarios() -> Vec<Scenario> {
-    [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh]
+    let mut out: Vec<Scenario> = [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh]
         .into_iter()
         .map(|kind| Scenario {
+            workload: Workload::Uniform,
             topology: kind,
             injection: 0.002,
             chiplets: 4,
             cycles: 25_000,
         })
-        .collect()
+        .collect();
+    // Composed multi-tenant overlay: both tenants active well before the
+    // horizon, so the thread-width invariance covers the merge path.
+    out.push(Scenario {
+        workload: Workload::Composed,
+        topology: TopologyKind::Mesh,
+        injection: 0.01,
+        chiplets: 4,
+        cycles: 25_000,
+    });
+    out
 }
 
 fn assert_identical(a: &ScenarioResult, b: &ScenarioResult, what: &str) {

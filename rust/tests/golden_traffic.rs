@@ -54,10 +54,12 @@ fn trace(t: &mut dyn Traffic, limit: usize) -> Vec<NewPacket> {
     out
 }
 
+/// Flatten a node to a digest index: cores first, then memory controllers
+/// (parsec sends a share of its packets to `Node::Memory`).
 fn global_index(geo: &Geometry, node: Node) -> usize {
     match node {
         Node::Core { chiplet, coord } => chiplet * geo.cores_per_chiplet() + geo.core_index(coord),
-        other => panic!("synthetic traffic emits core nodes, got {other:?}"),
+        Node::Memory { index } => geo.total_cores() + index,
     }
 }
 
@@ -225,9 +227,16 @@ fn every_kind_conserves_offered_rate_and_never_self_addresses() {
         };
         let expected = rate * cycles as f64 * (n - fixed_points) as f64;
         let got = out.len() as f64;
-        // 10% covers geometric-sampling noise at this horizon.
+        // 10% covers geometric-sampling noise at this horizon; parsec's
+        // MMPP sees only ~90 on/off periods in 100k cycles, so its duty
+        // estimate is far noisier.
+        let tol = if kind == TrafficKind::Parsec {
+            0.35
+        } else {
+            0.10
+        };
         assert!(
-            (got - expected).abs() / expected < 0.10,
+            (got - expected).abs() / expected < tol,
             "kind {}: offered rate drifted — got {got}, expected ~{expected}",
             kind.name()
         );

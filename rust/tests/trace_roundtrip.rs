@@ -1,0 +1,121 @@
+//! Capture → convert → replay round-trips: a synthetic workload captured
+//! to the text and the binary trace format must replay to bit-identical
+//! `Metrics::checksum` values — live generator vs text vs binary, across
+//! `resipi trace convert` round-trips, and across experiment-pool thread
+//! widths (the trace engine must be invariant to scheduling).
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use resipi::config::{Architecture, Config};
+use resipi::sim::{Geometry, Network};
+use resipi::topology::TopologyKind;
+use resipi::traffic::trace::TraceWriter;
+use resipi::traffic::tracebin::{binary_to_text, text_to_binary, BinTraceWriter};
+use resipi::traffic::{open_trace, Traffic, UniformTraffic};
+use resipi::util::pool;
+
+const CYCLES: u64 = 20_000;
+const RATE: f64 = 0.01;
+const SEED: u64 = 23;
+
+fn config() -> Config {
+    let mut cfg = Config::table1(Architecture::Resipi);
+    cfg.set_topology(TopologyKind::Mesh);
+    cfg.sim.cycles = CYCLES;
+    cfg.sim.warmup_cycles = (CYCLES / 10).min(5_000);
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Capture the synthetic workload to both formats; returns (text, binary)
+/// paths. The loop mirrors `Network::step`, which calls `generate` once
+/// per cycle from 0, so a fresh generator with the same seed replays the
+/// exact stream the captured networks will see.
+fn capture(tag: &str) -> (PathBuf, PathBuf) {
+    let cfg = config();
+    let geo = Geometry::from_config(&cfg);
+    let mut synth = UniformTraffic::new(geo, RATE, SEED);
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let text_path = dir.join(format!("resipi-roundtrip-{pid}-{tag}.trace"));
+    let bin_path = dir.join(format!("resipi-roundtrip-{pid}-{tag}.rtb"));
+    let text_file = std::io::BufWriter::new(std::fs::File::create(&text_path).unwrap());
+    let bin_file = std::io::BufWriter::new(std::fs::File::create(&bin_path).unwrap());
+    let mut text = TraceWriter::new(text_file).unwrap();
+    let mut bin = BinTraceWriter::new(bin_file).unwrap();
+    let mut sink = Vec::new();
+    for now in 0..CYCLES {
+        sink.clear();
+        synth.generate(now, &mut sink);
+        for p in &sink {
+            text.record(now, p).unwrap();
+            bin.record(now, p).unwrap();
+        }
+    }
+    assert!(bin.written() > 0, "capture produced an empty trace");
+    text.finish().flush().unwrap();
+    bin.finish().unwrap();
+    (text_path, bin_path)
+}
+
+/// Run a full simulation over `traffic` and digest its metrics.
+fn checksum_of(traffic: Box<dyn Traffic>) -> u64 {
+    let mut net = Network::new(config(), traffic).unwrap();
+    net.run().unwrap();
+    assert!(net.metrics().delivered > 0, "run must carry traffic");
+    net.metrics().checksum()
+}
+
+#[test]
+fn generator_text_and_binary_replays_are_bit_identical() {
+    let (text_path, bin_path) = capture("direct");
+    let geo = Geometry::from_config(&config());
+    let live = checksum_of(Box::new(UniformTraffic::new(geo, RATE, SEED)));
+    let text = checksum_of(open_trace(&text_path).unwrap());
+    let bin = checksum_of(open_trace(&bin_path).unwrap());
+    assert_eq!(live, text, "text replay drifted from the live generator");
+    assert_eq!(text, bin, "binary replay drifted from the text replay");
+    for p in [&text_path, &bin_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn converter_round_trips_preserve_replay_checksums() {
+    let (text_path, bin_path) = capture("convert");
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let bin2 = dir.join(format!("resipi-roundtrip-{pid}-convert2.rtb"));
+    let text2 = dir.join(format!("resipi-roundtrip-{pid}-convert2.trace"));
+    let n = text_to_binary(&text_path, &bin2).unwrap();
+    assert!(n > 0, "conversion saw no records");
+    assert_eq!(binary_to_text(&bin_path, &text2).unwrap(), n);
+
+    let direct = checksum_of(open_trace(&bin_path).unwrap());
+    let via_bin = checksum_of(open_trace(&bin2).unwrap());
+    let via_text = checksum_of(open_trace(&text2).unwrap());
+    assert_eq!(via_bin, direct, "text->binary conversion drifted");
+    assert_eq!(via_text, direct, "binary->text conversion drifted");
+    for p in [&text_path, &bin_path, &bin2, &text2] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn trace_replay_is_invariant_across_pool_widths() {
+    let (text_path, bin_path) = capture("pool");
+    let jobs = vec![
+        text_path.clone(),
+        bin_path.clone(),
+        text_path.clone(),
+        bin_path.clone(),
+    ];
+    let one = pool::par_map(1, jobs.clone(), |p| checksum_of(open_trace(p).unwrap()));
+    let four = pool::par_map(4, jobs, |p| checksum_of(open_trace(p).unwrap()));
+    assert_eq!(one, four, "pool width changed trace-replay checksums");
+    assert_eq!(one[0], one[1], "text and binary replays disagree");
+    for p in [&text_path, &bin_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
