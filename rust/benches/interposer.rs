@@ -89,7 +89,7 @@ fn bench_routing_hot_path(b: &mut Bench) {
         let mut cfg = Config::table1(Architecture::Resipi);
         cfg.set_topology(kind);
         let geo = Geometry::from_config(&cfg);
-        let lut = RouteTable::build(&geo);
+        let lut = RouteTable::build(&geo).expect("route table builds");
         let n = geo.routers_per_chiplet();
         let pairs = (n * n * SWEEPS) as f64;
 

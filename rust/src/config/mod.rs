@@ -501,7 +501,7 @@ impl Config {
                 self.gateways.positions.len()
             )));
         }
-        for &(x, y) in &self.gateways.positions[..self.gateways.per_chiplet] {
+        for &(x, y) in self.gateways.positions.iter().take(self.gateways.per_chiplet) {
             if x >= t.mesh_x || y >= t.mesh_y {
                 return Err(Error::config(format!(
                     "gateway position ({x},{y}) outside the {}x{} core grid",
@@ -513,9 +513,11 @@ impl Config {
         // share a router, so distinctness must hold after mapping onto the
         // router grid (identity for mesh/torus).
         let (cx, cy) = t.concentration_factors()?;
-        let mut uniq: Vec<(usize, usize)> = self.gateways.positions
-            [..self.gateways.per_chiplet]
+        let mut uniq: Vec<(usize, usize)> = self
+            .gateways
+            .positions
             .iter()
+            .take(self.gateways.per_chiplet)
             .map(|&(x, y)| (x / cx, y / cy))
             .collect();
         uniq.sort_unstable();

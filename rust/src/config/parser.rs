@@ -74,11 +74,11 @@ impl ConfigMap {
                 section = name.to_string();
                 continue;
             }
-            let eq = line
-                .find('=')
+            let (rawkey, rawval) = line
+                .split_once('=')
                 .ok_or_else(|| Error::config(format!("line {}: expected `key = value`", lineno + 1)))?;
-            let key = line[..eq].trim();
-            let valtext = line[eq + 1..].trim();
+            let key = rawkey.trim();
+            let valtext = rawval.trim();
             if key.is_empty() {
                 return Err(Error::config(format!("line {}: empty key", lineno + 1)));
             }

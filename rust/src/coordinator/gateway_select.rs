@@ -16,6 +16,22 @@
 //!   the destination router, refreshed every reconfiguration interval).
 
 use crate::sim::ids::{ChipletId, Coord, GatewayId, Geometry};
+use crate::{Error, Result};
+
+/// Checked narrowing for gateway slot indices: the u16 assignment encoding
+/// reserves `u16::MAX` as the "unassigned" sentinel, so a slot index must
+/// stay strictly below it. An interposer configured past that bound fails
+/// loudly at map construction instead of silently aliasing gateways.
+fn slot_u16(slot: usize) -> Result<u16> {
+    match u16::try_from(slot) {
+        Ok(s) if s != u16::MAX => Ok(s),
+        _ => Err(Error::config(format!(
+            "vicinity map: gateway slot {slot} exceeds the u16 assignment \
+             encoding (max {})",
+            u16::MAX - 1
+        ))),
+    }
+}
 
 /// Router→gateway assignment for one chiplet (indexed by local router id
 /// `y * mesh_x + x`).
@@ -44,7 +60,7 @@ impl VicinityMap {
     /// index — fully deterministic); each router takes its closest gateway
     /// that still has quota. Quotas are `ceil(R / g)` with the remainder
     /// spread over the earliest slots, so shares differ by at most one.
-    pub fn build(geo: &Geometry, chiplet: ChipletId, active_slots: &[bool]) -> Self {
+    pub fn build(geo: &Geometry, chiplet: ChipletId, active_slots: &[bool]) -> Result<Self> {
         assert_eq!(active_slots.len(), geo.gw_per_chiplet);
         let actives: Vec<usize> = (0..geo.gw_per_chiplet)
             .filter(|&k| active_slots[k])
@@ -82,21 +98,21 @@ impl VicinityMap {
             if assignment[router] != u16::MAX || quota[i] == 0 {
                 continue;
             }
-            assignment[router] = actives[i] as u16;
+            assignment[router] = slot_u16(actives[i])?;
             quota[i] -= 1;
             assigned += 1;
         }
         debug_assert!(assignment.iter().all(|&a| a != u16::MAX));
-        let alt = Self::build_alt(geo, &actives, &assignment);
-        Self {
+        let alt = Self::build_alt(geo, &actives, &assignment)?;
+        Ok(Self {
             chiplet,
             assignment,
             alt,
-        }
+        })
     }
 
     /// Second-nearest *different* active gateway per router (no quota).
-    fn build_alt(geo: &Geometry, actives: &[usize], assignment: &[u16]) -> Vec<u16> {
+    fn build_alt(geo: &Geometry, actives: &[usize], assignment: &[u16]) -> Result<Vec<u16>> {
         assignment
             .iter()
             .enumerate()
@@ -105,10 +121,10 @@ impl VicinityMap {
                 actives
                     .iter()
                     .copied()
-                    .filter(|&slot| slot != primary as usize)
+                    .filter(|&slot| slot != usize::from(primary))
                     .min_by_key(|&slot| (geo.hops(rc, geo.gw_positions[slot]), slot))
-                    .map(|slot| slot as u16)
-                    .unwrap_or(primary)
+                    .map(slot_u16)
+                    .unwrap_or(Ok(primary))
             })
             .collect()
     }
@@ -116,20 +132,22 @@ impl VicinityMap {
     /// Ablation baseline: round-robin assignment ignoring hop distance
     /// (used by `resipi ablate gwsel` to quantify what the Fig. 8 vicinity
     /// construction buys).
-    pub fn build_naive(geo: &Geometry, chiplet: ChipletId, active_slots: &[bool]) -> Self {
+    pub fn build_naive(geo: &Geometry, chiplet: ChipletId, active_slots: &[bool]) -> Result<Self> {
         assert_eq!(active_slots.len(), geo.gw_per_chiplet);
         let actives: Vec<usize> = (0..geo.gw_per_chiplet)
             .filter(|&k| active_slots[k])
             .collect();
         assert!(!actives.is_empty());
         let r = geo.routers_per_chiplet();
-        let assignment: Vec<u16> = (0..r).map(|i| actives[i % actives.len()] as u16).collect();
-        let alt = Self::build_alt(geo, &actives, &assignment);
-        Self {
+        let assignment: Vec<u16> = (0..r)
+            .map(|i| slot_u16(actives[i % actives.len()]))
+            .collect::<Result<Vec<u16>>>()?;
+        let alt = Self::build_alt(geo, &actives, &assignment)?;
+        Ok(Self {
             chiplet,
             assignment,
             alt,
-        }
+        })
     }
 
     /// The gateway slot assigned to a local router coordinate.
@@ -175,7 +193,7 @@ mod tests {
     #[test]
     fn one_gateway_takes_all_routers_fig8a() {
         let g = geo();
-        let m = VicinityMap::build(&g, 0, &[true, false, false, false]);
+        let m = VicinityMap::build(&g, 0, &[true, false, false, false]).unwrap();
         let counts = m.share_counts(&g);
         assert_eq!(counts, vec![16, 0, 0, 0]);
     }
@@ -183,7 +201,7 @@ mod tests {
     #[test]
     fn two_gateways_split_evenly_fig8b() {
         let g = geo();
-        let m = VicinityMap::build(&g, 0, &[true, true, false, false]);
+        let m = VicinityMap::build(&g, 0, &[true, true, false, false]).unwrap();
         let counts = m.share_counts(&g);
         assert_eq!(counts[0], 8);
         assert_eq!(counts[1], 8);
@@ -195,7 +213,7 @@ mod tests {
     #[test]
     fn four_gateways_split_evenly_fig8d() {
         let g = geo();
-        let m = VicinityMap::build(&g, 0, &[true; 4]);
+        let m = VicinityMap::build(&g, 0, &[true; 4]).unwrap();
         let counts = m.share_counts(&g);
         assert_eq!(counts, vec![4, 4, 4, 4]);
         // Every gateway's host router belongs to that gateway.
@@ -207,7 +225,7 @@ mod tests {
     #[test]
     fn three_gateways_shares_differ_by_at_most_one() {
         let g = geo();
-        let m = VicinityMap::build(&g, 0, &[true, true, true, false]);
+        let m = VicinityMap::build(&g, 0, &[true, true, true, false]).unwrap();
         let counts = m.share_counts(&g);
         let active: Vec<usize> = counts.iter().copied().filter(|&c| c > 0).collect();
         assert_eq!(active.iter().sum::<usize>(), 16);
@@ -223,7 +241,7 @@ mod tests {
     #[test]
     fn alt_map_differs_when_multiple_active() {
         let g = geo();
-        let m = VicinityMap::build(&g, 0, &[true, true, true, true]);
+        let m = VicinityMap::build(&g, 0, &[true, true, true, true]).unwrap();
         for y in 0..4 {
             for x in 0..4 {
                 let c = Coord::new(x, y);
@@ -235,7 +253,7 @@ mod tests {
             }
         }
         // Single active gateway: alt falls back to primary.
-        let m1 = VicinityMap::build(&g, 0, &[true, false, false, false]);
+        let m1 = VicinityMap::build(&g, 0, &[true, false, false, false]).unwrap();
         let c = Coord::new(2, 2);
         assert_eq!(m1.slot_for(&g, c), m1.alt_slot_for(&g, c));
     }
@@ -248,7 +266,7 @@ mod tests {
             cfg.set_topology(kind);
             cfg.validate().unwrap();
             let g = Geometry::from_config(&cfg);
-            let m = VicinityMap::build(&g, 0, &[true; 4]);
+            let m = VicinityMap::build(&g, 0, &[true; 4]).unwrap();
             let counts = m.share_counts(&g);
             let r = g.routers_per_chiplet();
             assert_eq!(counts.iter().sum::<usize>(), r, "{kind:?} total");
@@ -266,8 +284,8 @@ mod tests {
     #[test]
     fn deterministic_rebuild() {
         let g = geo();
-        let a = VicinityMap::build(&g, 2, &[true, true, false, true]);
-        let b = VicinityMap::build(&g, 2, &[true, true, false, true]);
+        let a = VicinityMap::build(&g, 2, &[true, true, false, true]).unwrap();
+        let b = VicinityMap::build(&g, 2, &[true, true, false, true]).unwrap();
         assert_eq!(a, b);
     }
 
@@ -288,7 +306,7 @@ mod tests {
                 }
             },
             |pat| {
-                let m = VicinityMap::build(&g, 1, pat);
+                let m = VicinityMap::build(&g, 1, pat).map_err(|e| e.to_string())?;
                 let counts = m.share_counts(&g);
                 for (k, &c) in counts.iter().enumerate() {
                     if !pat[k] && c > 0 {
@@ -331,7 +349,7 @@ mod tests {
                 }
             },
             |pat| {
-                let m = VicinityMap::build(&g, 0, pat);
+                let m = VicinityMap::build(&g, 0, pat).map_err(|e| e.to_string())?;
                 let first_active = pat.iter().position(|&a| a).unwrap();
                 let mut ours = 0usize;
                 let mut naive = 0usize;

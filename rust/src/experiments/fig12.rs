@@ -31,6 +31,21 @@ pub struct Fig12 {
     pub settling: (u64, u64),
 }
 
+/// Most frequent value of the iterator; ties break toward the *smallest*
+/// value. Counting goes through a `BTreeMap` so the result is a pure
+/// function of the multiset — a `HashMap` here would make tie resolution
+/// depend on iteration order and the settling metric nondeterministic.
+fn modal_value(values: impl Iterator<Item = usize>) -> Option<usize> {
+    let mut counts = std::collections::BTreeMap::new();
+    for v in values {
+        *counts.entry(v).or_insert(0usize) += 1;
+    }
+    counts
+        .into_iter()
+        .max_by_key(|&(v, c)| (c, std::cmp::Reverse(v)))
+        .map(|(v, _)| v)
+}
+
 /// Run the sequence with `epochs_per_app` intervals per application and
 /// `epoch_cycles` per interval (paper: 100 × 1 M).
 pub fn run(epochs_per_app: u64, epoch_cycles: u64, seed: u64) -> Result<Fig12> {
@@ -75,15 +90,9 @@ pub fn run(epochs_per_app: u64, epoch_cycles: u64, seed: u64) -> Result<Fig12> {
         }
         // Modal knob value over the last half of the segment.
         let tail = &seg[seg.len() / 2..];
-        let mut counts = std::collections::HashMap::new();
-        for e in tail {
-            *counts.entry(knob(e)).or_insert(0usize) += 1;
-        }
-        let mode = counts
-            .into_iter()
-            .max_by_key(|&(v, c)| (c, std::cmp::Reverse(v)))
-            .map(|(v, _)| v)
-            .unwrap();
+        let Some(mode) = modal_value(tail.iter().map(knob)) else {
+            return 0;
+        };
         seg.iter()
             .position(|e| knob(e) == mode)
             .unwrap_or(seg.len()) as u64
@@ -159,6 +168,18 @@ pub fn report(fig: &Fig12) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The settling metric's mode must be a pure function of the knob
+    /// multiset: deterministic under permutation, ties to the smallest
+    /// value, empty input well-defined.
+    #[test]
+    fn modal_value_is_deterministic() {
+        assert_eq!(modal_value([3, 1, 3, 1, 2].into_iter()), Some(1));
+        assert_eq!(modal_value([2, 1, 3, 1, 3].into_iter()), Some(1));
+        assert_eq!(modal_value([3, 3, 1, 2, 1, 3].into_iter()), Some(3));
+        assert_eq!(modal_value([7].into_iter()), Some(7));
+        assert_eq!(modal_value(std::iter::empty()), None);
+    }
 
     #[test]
     fn adaptivity_series_shape() {

@@ -179,6 +179,8 @@ impl Photonic {
                 break;
             }
             let Reverse(f) = self.in_flight.pop().unwrap();
+            // allow(resipi::hot-path-no-alloc): caller-owned scratch
+            // buffer, reused every cycle (tests/alloc_free.rs).
             out.push((f.packet, f.dst));
         }
     }

@@ -23,7 +23,7 @@
 //! (`--cycels`) are rejected instead of silently ignored, and every
 //! subcommand answers `--help`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
@@ -400,20 +400,20 @@ fn global_usage() -> String {
 /// Parsed `--flag value` arguments, validated against a [`Cmd`] spec.
 struct Args {
     positional: Vec<String>,
-    flags: HashMap<String, String>,
+    flags: BTreeMap<String, String>,
 }
 
 impl Args {
     fn empty() -> Self {
         Self {
             positional: Vec::new(),
-            flags: HashMap::new(),
+            flags: BTreeMap::new(),
         }
     }
 
     fn parse(argv: &[String], cmd: &Cmd) -> std::result::Result<Self, String> {
         let mut positional = Vec::new();
-        let mut flags = HashMap::new();
+        let mut flags = BTreeMap::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];

@@ -36,6 +36,7 @@
 use crate::sim::ids::{ChipletId, Coord, Geometry, Node, RouterId};
 use crate::sim::packet::Packet;
 use crate::sim::router::Port;
+use crate::{Error, Result};
 
 /// Where a packet at `router` should go next.
 ///
@@ -98,33 +99,58 @@ pub struct RouteTable {
     gw_router: Vec<u16>,
 }
 
+/// Checked narrowing for the packed tables: a chiplet-local router index
+/// must fit the u16 encoding, and a fabric that exceeds it is a
+/// configuration error at construction — not a silently aliased route.
+fn local_u16(i: usize, what: &str) -> Result<u16> {
+    u16::try_from(i).map_err(|_| {
+        Error::config(format!(
+            "route table: {what} index {i} exceeds the u16 packed-row encoding \
+             (max {})",
+            u16::MAX
+        ))
+    })
+}
+
+/// Checked narrowing for packed port entries (ports are 0..=6 by
+/// construction; a wider port set indicates a topology bug).
+fn port_u8(p: Port) -> Result<u8> {
+    u8::try_from(p.index()).map_err(|_| {
+        Error::invariant(format!(
+            "route table: port index {} exceeds the u8 row encoding",
+            p.index()
+        ))
+    })
+}
+
 impl RouteTable {
-    pub fn build(geo: &Geometry) -> Self {
+    pub fn build(geo: &Geometry) -> Result<Self> {
         let topo = geo.topology();
         let n = topo.routers();
-        debug_assert!(n < u16::MAX as usize, "router grid too large for u16 LUT");
+        local_u16(n, "router-count")?;
         // Dedup rows as they are produced: scratch holds router s's row
         // (diagonal canonicalized to Local); identical rows map to one id.
         // Sharing is opportunistic — dimension-ordered XY gives every
         // router a distinct row, so the guaranteed wins here are the u8
         // port entries, u16 ids, and exact pre-sizing, with the indirection
-        // ready for routing functions that do repeat rows.
+        // ready for routing functions that do repeat rows. BTreeMap keeps
+        // the dedup structure deterministic (no hash-iteration order).
         let mut row_of: Vec<u16> = Vec::with_capacity(n);
         let mut rows: Vec<u8> = Vec::new();
-        let mut seen: std::collections::HashMap<Vec<u8>, u16> = std::collections::HashMap::new();
+        let mut seen: std::collections::BTreeMap<Vec<u8>, u16> = std::collections::BTreeMap::new();
         let mut scratch = vec![0u8; n];
         for s in 0..n {
             for d in 0..n {
                 scratch[d] = if s == d {
-                    Port::Local.index() as u8
+                    port_u8(Port::Local)?
                 } else {
-                    topo.route_step(topo.coord_of(s), topo.coord_of(d)).index() as u8
+                    port_u8(topo.route_step(topo.coord_of(s), topo.coord_of(d)))?
                 };
             }
             let id = match seen.get(scratch.as_slice()) {
                 Some(&id) => id,
                 None => {
-                    let id = u16::try_from(seen.len()).expect("row ids fit u16 when n does");
+                    let id = local_u16(seen.len(), "row-id")?;
                     rows.extend_from_slice(&scratch);
                     seen.insert(scratch.clone(), id);
                     id
@@ -134,21 +160,26 @@ impl RouteTable {
         }
         let (core_x, core_y) = topo.core_dims();
         let core_router = (0..core_x * core_y)
-            .map(|i| topo.local_of(topo.core_router(Coord::new(i % core_x, i / core_x))) as u16)
-            .collect();
+            .map(|i| {
+                local_u16(
+                    topo.local_of(topo.core_router(Coord::new(i % core_x, i / core_x))),
+                    "core-host-router",
+                )
+            })
+            .collect::<Result<Vec<u16>>>()?;
         let gw_router = geo
             .gw_positions
             .iter()
-            .map(|&p| topo.local_of(p) as u16)
-            .collect();
-        Self {
+            .map(|&p| local_u16(topo.local_of(p), "gateway-host-router"))
+            .collect::<Result<Vec<u16>>>()?;
+        Ok(Self {
             routers: n,
             core_x,
             row_of,
             rows,
             core_router,
             gw_router,
-        }
+        })
     }
 
     /// Next hop from local router `here_local` toward local router
@@ -427,7 +458,7 @@ mod tests {
     #[test]
     fn mesh_route_table_reproduces_seed_xy() {
         let g = geo();
-        let lut = RouteTable::build(&g);
+        let lut = RouteTable::build(&g).unwrap();
         let topo = g.topology();
         let n = topo.routers();
         for s in 0..n {
@@ -446,7 +477,7 @@ mod tests {
     fn route_table_matches_topology_for_all_kinds() {
         for kind in TopologyKind::ALL {
             let g = geo_for(kind);
-            let lut = RouteTable::build(&g);
+            let lut = RouteTable::build(&g).unwrap();
             let topo = g.topology();
             let n = topo.routers();
             for s in 0..n {
@@ -525,7 +556,7 @@ mod tests {
     fn route_packet_matches_route_at_for_all_packet_shapes() {
         for kind in TopologyKind::ALL {
             let g = geo_for(kind);
-            let lut = RouteTable::build(&g);
+            let lut = RouteTable::build(&g).unwrap();
             let (cx, cy) = g.core_dims();
             let chiplet = 1usize;
             // Representative packets: intra-chiplet core, inter-chiplet

@@ -281,7 +281,7 @@ impl Network {
                  (Local=0..Gateway=5) requires exactly {NUM_PORTS}"
             )));
         }
-        let route_lut = RouteTable::build(&geo);
+        let route_lut = RouteTable::build(&geo)?;
         let mode = Mode::from_arch(cfg.arch, &cfg);
         let n_routers = geo.total_routers();
         let n_gateways = geo.total_gateways();
@@ -376,7 +376,7 @@ impl Network {
                     VicinityMap::build(&geo, c, &slots)
                 }
             })
-            .collect();
+            .collect::<Result<Vec<VicinityMap>>>()?;
 
         let phy = Photonic::with_channels(
             n_gateways,
@@ -576,23 +576,31 @@ impl Network {
 
     /// Rebuild a chiplet's vicinity map from its currently *assignable*
     /// slots (active and not draining).
-    fn rebuild_vicinity(&mut self, chiplet: usize) {
+    fn rebuild_vicinity(&mut self, chiplet: usize) -> Result<()> {
         let mut slots = std::mem::take(&mut self.slots_buf);
         slots.clear();
         slots.extend((0..self.geo.gw_per_chiplet).map(|k| {
             self.gateways[self.geo.chiplet_gateway(chiplet, k).0].accepts_new_packets()
         }));
-        if slots.iter().any(|&s| s) {
-            self.vicinity[chiplet] = if self.cfg.controller.gwsel_naive {
+        // Build before restoring the scratch buffer so an error cannot
+        // leak `slots_buf` (mem::take left it empty).
+        let rebuilt = if slots.iter().any(|&s| s) {
+            Some(if self.cfg.controller.gwsel_naive {
                 VicinityMap::build_naive(&self.geo, chiplet, &slots)
             } else {
                 VicinityMap::build(&self.geo, chiplet, &slots)
-            };
-        }
+            })
+        } else {
+            None
+        };
         self.slots_buf = slots;
+        if let Some(map) = rebuilt {
+            self.vicinity[chiplet] = map?;
+        }
+        Ok(())
     }
 
-    fn epoch_boundary(&mut self, now: Cycle) {
+    fn epoch_boundary(&mut self, now: Cycle) -> Result<()> {
         let epoch_cycles = now - self.epoch_start;
         // Gather per-slot packet counts and close the epoch record first
         // (it describes the interval that just ended). The collections are
@@ -602,6 +610,9 @@ impl Network {
         let mut load_sum = 0.0;
         for c in 0..self.geo.chiplets {
             counts.clear();
+            // allow(resipi::hot-path-no-alloc): persistent scratch buffer,
+            // capacity reaches gw_per_chiplet once and is then reused
+            // (proven allocation-free by tests/alloc_free.rs).
             counts.extend(
                 (0..self.geo.gw_per_chiplet)
                     .filter(|&k| self.gateways[self.geo.chiplet_gateway(c, k).0].is_active())
@@ -638,6 +649,8 @@ impl Network {
         if self.mode.dynamic_gateways {
             for c in 0..self.geo.chiplets {
                 packets.clear();
+                // allow(resipi::hot-path-no-alloc): persistent scratch
+                // buffer, bounded by gw_per_chiplet (tests/alloc_free.rs).
                 packets.extend((0..self.geo.gw_per_chiplet).map(|k| {
                     self.gateways[self.geo.chiplet_gateway(c, k).0].epoch_packets() as usize
                 }));
@@ -647,14 +660,14 @@ impl Network {
                         // gateway starts accepting traffic.
                         let gid = self.geo.chiplet_gateway(c, slot);
                         self.gateways[gid.0].activate();
-                        self.rebuild_vicinity(c);
+                        self.rebuild_vicinity(c)?;
                         need_reconfig = true;
                     }
                     LgcAction::Drain(slot) => {
                         let gid = self.geo.chiplet_gateway(c, slot);
                         self.gateways[gid.0].begin_drain();
                         // Stop assigning new packets immediately.
-                        self.rebuild_vicinity(c);
+                        self.rebuild_vicinity(c)?;
                         // Laser steps down when the drain completes.
                     }
                     LgcAction::Hold => {}
@@ -664,6 +677,8 @@ impl Network {
 
         if let Some(ctrl) = &mut self.prowaves {
             packets.clear();
+            // allow(resipi::hot-path-no-alloc): persistent scratch buffer,
+            // bounded by the gateway count (tests/alloc_free.rs).
             packets.extend(self.gateways.iter().map(|g| g.epoch_packets() as usize));
             if ctrl.epoch_update(&packets, epoch_cycles) {
                 self.lambdas.copy_from_slice(ctrl.lambdas());
@@ -679,6 +694,7 @@ impl Network {
         for g in &mut self.gateways {
             g.reset_epoch();
         }
+        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -1038,7 +1054,7 @@ impl Network {
     pub fn step(&mut self) -> Result<()> {
         let now = self.now;
         if now > 0 && now % self.cfg.controller.epoch_cycles == 0 {
-            self.epoch_boundary(now);
+            self.epoch_boundary(now)?;
         }
 
         self.traffic_buf.clear();
@@ -1087,12 +1103,11 @@ impl Network {
         while self.now < end {
             self.step()?;
         }
-        self.finish();
-        Ok(())
+        self.finish()
     }
 
     /// Integrate the trailing power segment and close the last epoch.
-    pub fn finish(&mut self) {
+    pub fn finish(&mut self) -> Result<()> {
         let power = self.inc.current_power();
         self.metrics.integrate_power(
             &power,
@@ -1101,9 +1116,10 @@ impl Network {
         );
         self.last_power_change = self.now;
         if self.now > self.epoch_start {
-            self.epoch_boundary(self.now);
+            self.epoch_boundary(self.now)?;
         }
         self.metrics.finalize();
+        Ok(())
     }
 
     /// One-line summary of the run.

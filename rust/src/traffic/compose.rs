@@ -86,6 +86,8 @@ impl Traffic for ComposedTraffic {
                 break;
             }
             self.dormant.pop();
+            // allow(resipi::hot-path-no-alloc): bounded by the tenant
+            // count; each tenant moves dormant->active at most once.
             self.active.push(idx);
         }
         for &idx in &self.active {

@@ -110,6 +110,8 @@ impl Traffic for UniformTraffic {
             if dst >= i {
                 dst += 1;
             }
+            // allow(resipi::hot-path-no-alloc): caller-owned sink reused
+            // across cycles; capacity amortizes (tests/alloc_free.rs).
             sink.push(NewPacket {
                 src: self.core_node(i),
                 dst: self.core_node(dst),
@@ -117,6 +119,8 @@ impl Traffic for UniformTraffic {
             });
             // `geometric` returns ≥ 1, so a re-armed core cannot pop twice
             // in one cycle.
+            // allow(resipi::hot-path-no-alloc): heap re-arm pops then
+            // pushes, so capacity never grows past the core count.
             self.pending.push(Reverse((now + self.rng.geometric(self.rate), core)));
         }
     }
@@ -178,12 +182,16 @@ impl Traffic for TransposeTraffic {
                 coord: Coord::new(y, x),
             };
             if src != dst {
+                // allow(resipi::hot-path-no-alloc): caller-owned sink
+                // reused across cycles (tests/alloc_free.rs).
                 sink.push(NewPacket {
                     src,
                     dst,
                     class: MsgClass::Request,
                 });
             }
+            // allow(resipi::hot-path-no-alloc): heap re-arm pops then
+            // pushes, so capacity never grows past the core count.
             self.pending.push(Reverse((now + self.rng.geometric(self.rate), core)));
         }
     }

@@ -600,8 +600,9 @@ impl TrafficSpec {
             }
             TrafficKind::Trace => open_trace(Path::new(&self.trace_path))?,
             TrafficKind::Parsec => {
-                let mut profile =
-                    app_by_name(&self.app).expect("validate() accepted the app name");
+                let mut profile = app_by_name(&self.app).ok_or_else(|| {
+                    Error::config(format!("unknown PARSEC application {:?}", self.app))
+                })?;
                 profile.rate = self.rate;
                 Box::new(ParsecTraffic::new(geo.clone(), profile, seed))
             }

@@ -100,14 +100,23 @@ fn decode_node(word: u64, index: u64, which: &str) -> Result<Node> {
     }
 }
 
+/// Little-endian u64 at `buf[at..at + 8]`, as an `Err` (never a panic) when
+/// the slice is short — decode paths must stay panic-free on any input.
+fn le_u64(buf: &[u8], at: usize, index: u64) -> Result<u64> {
+    buf.get(at..at + 8)
+        .and_then(|s| <[u8; 8]>::try_from(s).ok())
+        .map(u64::from_le_bytes)
+        .ok_or_else(|| {
+            Error::trace(format!(
+                "record {index}: truncated field at byte offset {at}"
+            ))
+        })
+}
+
 fn decode_record(buf: &[u8], index: u64) -> Result<TraceRecord> {
-    let cycle = u64::from_le_bytes(buf[0..8].try_into().unwrap());
-    let src = decode_node(u64::from_le_bytes(buf[8..16].try_into().unwrap()), index, "src")?;
-    let dst = decode_node(
-        u64::from_le_bytes(buf[16..24].try_into().unwrap()),
-        index,
-        "dst",
-    )?;
+    let cycle = le_u64(buf, 0, index)?;
+    let src = decode_node(le_u64(buf, 8, index)?, index, "src")?;
+    let dst = decode_node(le_u64(buf, 16, index)?, index, "dst")?;
     Ok(TraceRecord { cycle, src, dst })
 }
 
@@ -171,14 +180,17 @@ impl<R: Read + Seek> BinTraceReader<R> {
                 "binary trace header truncated ({got} of {HEADER_BYTES} bytes)"
             )));
         }
-        if header[0..4] != MAGIC {
+        let (magic, rest) = header.split_at(4);
+        if magic != MAGIC {
             return Err(Error::trace(format!(
-                "bad magic {:02x?} (want {:02x?})",
-                &header[0..4],
-                MAGIC
+                "bad magic {magic:02x?} (want {MAGIC:02x?})"
             )));
         }
-        let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        let version = rest
+            .get(..4)
+            .and_then(|s| <[u8; 4]>::try_from(s).ok())
+            .map(u32::from_le_bytes)
+            .ok_or_else(|| Error::trace("binary trace header shorter than 8 bytes"))?;
         if version != VERSION {
             return Err(Error::trace(format!(
                 "unsupported binary trace version {version} (this build reads v{VERSION})"
@@ -246,6 +258,8 @@ impl<R: Read + Seek> BinTraceReader<R> {
                 return Ok(None);
             }
             if avail < RECORD_BYTES {
+                // allow(resipi::hot-path-no-alloc): cold error path — a
+                // truncated trace aborts the run, it never replays.
                 return Err(Error::trace(format!(
                     "record {}: truncated ({avail} trailing bytes; records are {RECORD_BYTES} bytes)",
                     self.decoded + 1
@@ -255,6 +269,8 @@ impl<R: Read + Seek> BinTraceReader<R> {
         let rec = decode_record(&self.buf[self.pos..self.pos + RECORD_BYTES], self.decoded + 1)?;
         self.pos += RECORD_BYTES;
         if rec.cycle < self.last_cycle {
+            // allow(resipi::hot-path-no-alloc): cold error path — an
+            // unsorted trace aborts the run, it never replays.
             return Err(Error::trace(format!(
                 "record {}: trace not sorted by cycle ({} after {})",
                 self.decoded + 1,
@@ -306,6 +322,9 @@ impl<R: Read + Seek> Traffic for BinTraceReader<R> {
                 break;
             }
             if rec.cycle == now {
+                // allow(resipi::hot-path-no-alloc): caller-owned sink; the
+                // simulator reuses one buffer, so capacity amortizes to
+                // zero steady-state allocations (tests/alloc_free.rs).
                 sink.push(NewPacket {
                     src: rec.src,
                     dst: rec.dst,
@@ -314,6 +333,9 @@ impl<R: Read + Seek> Traffic for BinTraceReader<R> {
             }
             self.pending = self
                 .next_record()
+                // allow(resipi::no-panic-in-parsers): replay path, not a
+                // decode path — `validated` proved the whole payload
+                // well-formed at open, so a failure here is a bug.
                 .expect("binary trace was validated at open; decode failed mid-replay");
         }
     }

@@ -108,6 +108,9 @@ impl Json {
                     pairs.push((key, value));
                 }
             }
+            // allow(resipi::no-panic-in-parsers): builder API, not a
+            // decode path — calling set() on a non-object is a programmer
+            // error by contract, never reachable from parsed input.
             _ => panic!("Json::set on non-object"),
         }
         self
@@ -328,7 +331,7 @@ impl JsonParser<'_> {
         self.bytes.get(self.pos).copied()
     }
 
-    fn expect(&mut self, b: u8) -> Result<()> {
+    fn expect_byte(&mut self, b: u8) -> Result<()> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
@@ -378,14 +381,14 @@ impl JsonParser<'_> {
             }
         }
         let s = std::str::from_utf8(&self.bytes[start..self.pos])
-            .expect("number bytes are ASCII");
+            .map_err(|_| Error::config(format!("JSON: non-ASCII number at byte {start}")))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| Error::config(format!("JSON: bad number {s:?} at byte {start}")))
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         // Build as bytes: raw multi-byte UTF-8 passes through untouched
         // (the input is a &str, so boundaries are already valid).
         let mut out: Vec<u8> = Vec::new();
@@ -396,7 +399,9 @@ impl JsonParser<'_> {
             self.pos += 1;
             match b {
                 b'"' => {
-                    return Ok(String::from_utf8(out).expect("escapes produce valid UTF-8"))
+                    return String::from_utf8(out).map_err(|_| {
+                        Error::config("JSON: string decodes to invalid UTF-8")
+                    })
                 }
                 b'\\' => {
                     let Some(e) = self.peek() else {
@@ -444,7 +449,7 @@ impl JsonParser<'_> {
     }
 
     fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut xs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -472,7 +477,7 @@ impl JsonParser<'_> {
     }
 
     fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut pairs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -483,7 +488,7 @@ impl JsonParser<'_> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let val = self.value()?;
             pairs.push((key, val));

@@ -1,0 +1,223 @@
+//! The grandfathered-violation baseline (`lint-baseline.json` at the repo
+//! root). Entries are keyed by (rule, file, trimmed source snippet) with a
+//! count, deliberately **not** by line number, so unrelated edits that
+//! shift lines do not invalidate the baseline.
+//!
+//! New violations (not suppressed, not covered by a baseline allowance)
+//! fail the lint. Baseline entries that no longer match anything are
+//! *stale*: a warning nudging a re-bless (`RESIPI_BLESS=1` or `--bless`),
+//! never an error, so fixing old sites is always safe.
+
+use std::collections::BTreeMap;
+
+use crate::json::{self, Value};
+use crate::lint::Violation;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub file: String,
+    pub snippet: String,
+    pub count: u64,
+}
+
+pub fn parse_baseline(text: &str) -> Result<Vec<BaselineEntry>, String> {
+    let root = json::parse(text)?;
+    let version = root
+        .get("version")
+        .and_then(Value::as_u64)
+        .ok_or("baseline: missing integer `version`")?;
+    if version != 1 {
+        return Err(format!("baseline: unsupported version {version}"));
+    }
+    let entries = root
+        .get("entries")
+        .and_then(Value::as_arr)
+        .ok_or("baseline: missing `entries` array")?;
+    let mut out = Vec::new();
+    for (i, e) in entries.iter().enumerate() {
+        let field = |k: &str| {
+            e.get(k)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("baseline: entry {i} missing string `{k}`"))
+        };
+        out.push(BaselineEntry {
+            rule: field("rule")?,
+            file: field("file")?,
+            snippet: field("snippet")?,
+            count: e
+                .get("count")
+                .and_then(Value::as_u64)
+                .ok_or_else(|| format!("baseline: entry {i} missing integer `count`"))?,
+        });
+    }
+    Ok(out)
+}
+
+/// Per-violation status after baseline matching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Suppressed,
+    Baselined,
+    New,
+}
+
+impl Status {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Status::Suppressed => "suppressed",
+            Status::Baselined => "baselined",
+            Status::New => "new",
+        }
+    }
+}
+
+pub struct Classified {
+    /// Parallel to the input violation slice.
+    pub statuses: Vec<Status>,
+    pub new_count: usize,
+    /// Baseline entries (or remainders of them) that matched nothing.
+    pub stale: Vec<BaselineEntry>,
+}
+
+pub fn classify(viols: &[Violation], baseline: &[BaselineEntry]) -> Classified {
+    let mut allowance: BTreeMap<(&str, &str, &str), u64> = BTreeMap::new();
+    for e in baseline {
+        *allowance
+            .entry((e.rule.as_str(), e.file.as_str(), e.snippet.as_str()))
+            .or_insert(0) += e.count;
+    }
+    let mut statuses = Vec::with_capacity(viols.len());
+    let mut new_count = 0usize;
+    for v in viols {
+        if v.suppressed {
+            statuses.push(Status::Suppressed);
+            continue;
+        }
+        let key = (v.rule, v.file.as_str(), v.snippet.as_str());
+        match allowance.get_mut(&key) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                statuses.push(Status::Baselined);
+            }
+            _ => {
+                new_count += 1;
+                statuses.push(Status::New);
+            }
+        }
+    }
+    let stale = allowance
+        .into_iter()
+        .filter(|&(_, n)| n > 0)
+        .map(|((rule, file, snippet), count)| BaselineEntry {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            snippet: snippet.to_string(),
+            count,
+        })
+        .collect();
+    Classified {
+        statuses,
+        new_count,
+        stale,
+    }
+}
+
+/// Serialize the *current* unsuppressed violations as a fresh baseline
+/// (what `--bless` writes).
+pub fn serialize(viols: &[Violation]) -> String {
+    let mut counts: BTreeMap<(&str, &str, &str), u64> = BTreeMap::new();
+    for v in viols.iter().filter(|v| !v.suppressed) {
+        *counts
+            .entry((v.rule, v.file.as_str(), v.snippet.as_str()))
+            .or_insert(0) += 1;
+    }
+    let mut out = String::new();
+    out.push_str("{\n  \"version\": 1,\n  \"note\": ");
+    json::write_str(
+        &mut out,
+        "Grandfathered lint violations; new violations fail `cargo xtask lint`. \
+         Shrink by fixing sites and re-blessing with RESIPI_BLESS=1.",
+    );
+    out.push_str(",\n  \"entries\": [");
+    let mut first = true;
+    for ((rule, file, snippet), count) in &counts {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str("\n    {\"rule\": ");
+        json::write_str(&mut out, rule);
+        out.push_str(", \"file\": ");
+        json::write_str(&mut out, file);
+        out.push_str(", \"snippet\": ");
+        json::write_str(&mut out, snippet);
+        out.push_str(&format!(", \"count\": {count}}}"));
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(rule: &'static str, file: &str, snippet: &str, suppressed: bool) -> Violation {
+        Violation {
+            rule,
+            file: file.to_string(),
+            line: 1,
+            col: 1,
+            snippet: snippet.to_string(),
+            suppressed,
+        }
+    }
+
+    #[test]
+    fn baselined_new_and_stale_are_distinguished() {
+        let viols = vec![
+            v("no-random-state", "a.rs", "let m = HashMap::new();", false),
+            v("no-random-state", "a.rs", "let n = HashMap::new();", false),
+            v("no-wall-clock", "b.rs", "Instant::now()", true),
+        ];
+        let baseline = vec![
+            BaselineEntry {
+                rule: "no-random-state".to_string(),
+                file: "a.rs".to_string(),
+                snippet: "let m = HashMap::new();".to_string(),
+                count: 1,
+            },
+            BaselineEntry {
+                rule: "checked-narrowing".to_string(),
+                file: "gone.rs".to_string(),
+                snippet: "x as u8".to_string(),
+                count: 1,
+            },
+        ];
+        let c = classify(&viols, &baseline);
+        assert_eq!(
+            c.statuses,
+            vec![Status::Baselined, Status::New, Status::Suppressed]
+        );
+        assert_eq!(c.new_count, 1);
+        assert_eq!(c.stale.len(), 1);
+        assert_eq!(c.stale[0].file, "gone.rs");
+    }
+
+    #[test]
+    fn serialize_then_parse_round_trips() {
+        let viols = vec![
+            v("no-random-state", "a.rs", "let m = HashMap::new();", false),
+            v("no-random-state", "a.rs", "let m = HashMap::new();", false),
+            v("no-wall-clock", "b.rs", "Instant::now()", true),
+        ];
+        let text = serialize(&viols);
+        let parsed = parse_baseline(&text).unwrap();
+        assert_eq!(parsed.len(), 1, "suppressed sites are not baselined");
+        assert_eq!(parsed[0].count, 2);
+        let c = classify(&viols, &parsed);
+        assert_eq!(c.new_count, 0);
+        assert!(c.stale.is_empty());
+    }
+}

@@ -1,0 +1,365 @@
+//! Minimal Rust lexer for the lint passes.
+//!
+//! Token-level, not a full grammar: enough structure (identifiers,
+//! punctuation with `::` fused, string/char/lifetime literals skipped as
+//! opaque units, comments captured per line) for reliable outline parsing
+//! and rule matching. Positions are 1-based byte offsets.
+//!
+//! The Python bootstrap mirror (`tools/gen_baseline.py`) re-implements this
+//! algorithm; this Rust implementation is the authoritative one.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Id,
+    Num,
+    Str,
+    Char,
+    Life,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// Lex output: the token stream plus per-line comment text (block comments
+/// are recorded at their start line), used by the suppression lookup.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: BTreeMap<u32, String>,
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor<'_> {
+    fn adv(&mut self, k: usize) {
+        for _ in 0..k {
+            if self.i < self.b.len() && self.b[self.i] == b'\n' {
+                self.line += 1;
+                self.col = 1;
+            } else {
+                self.col += 1;
+            }
+            self.i += 1;
+        }
+    }
+
+    fn at(&self, off: usize) -> u8 {
+        self.b.get(self.i + off).copied().unwrap_or(0)
+    }
+
+    /// Past the opening quote: consume until the unescaped closer.
+    fn string_body(&mut self, quote: u8) {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            if c == b'\\' {
+                self.adv(2);
+            } else if c == quote {
+                self.adv(1);
+                return;
+            } else {
+                self.adv(1);
+            }
+        }
+    }
+
+    /// At the `r` of `r#*"..."#*`: consume the whole raw string.
+    fn raw_string(&mut self) {
+        self.adv(1); // r
+        let mut hashes = 0usize;
+        while self.at(0) == b'#' {
+            hashes += 1;
+            self.adv(1);
+        }
+        if self.at(0) == b'"' {
+            self.adv(1);
+            while self.i < self.b.len() {
+                if self.b[self.i] == b'"' && (1..=hashes).all(|k| self.at(k) == b'#') {
+                    self.adv(1 + hashes);
+                    return;
+                }
+                self.adv(1);
+            }
+        }
+    }
+}
+
+/// At a `#` following `r` / `br`: raw string only if `#*` then `"`.
+fn raw_ahead(b: &[u8], mut j: usize) -> bool {
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+fn is_id_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_id_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn note_comment(map: &mut BTreeMap<u32, String>, line: u32, s: &str) {
+    let e = map.entry(line).or_default();
+    e.push(' ');
+    e.push_str(s);
+}
+
+pub fn lex(text: &str) -> Lexed {
+    let b = text.as_bytes();
+    let mut cur = Cursor {
+        b,
+        i: 0,
+        line: 1,
+        col: 1,
+    };
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: BTreeMap<u32, String> = BTreeMap::new();
+
+    while cur.i < b.len() {
+        let c = b[cur.i];
+        if c == b' ' || c == b'\t' || c == b'\r' || c == b'\n' {
+            cur.adv(1);
+            continue;
+        }
+        if c == b'/' && cur.at(1) == b'/' {
+            let start_line = cur.line;
+            let start = cur.i;
+            while cur.i < b.len() && b[cur.i] != b'\n' {
+                cur.adv(1);
+            }
+            note_comment(&mut comments, start_line, &text[start..cur.i]);
+            continue;
+        }
+        if c == b'/' && cur.at(1) == b'*' {
+            let start_line = cur.line;
+            let start = cur.i;
+            let mut depth = 0i32;
+            while cur.i < b.len() {
+                if cur.at(0) == b'/' && cur.at(1) == b'*' {
+                    depth += 1;
+                    cur.adv(2);
+                } else if cur.at(0) == b'*' && cur.at(1) == b'/' {
+                    depth -= 1;
+                    cur.adv(2);
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    cur.adv(1);
+                }
+            }
+            note_comment(&mut comments, start_line, &text[start..cur.i]);
+            continue;
+        }
+        let (tl, tc) = (cur.line, cur.col);
+        if c == b'r' && (cur.at(1) == b'"' || (cur.at(1) == b'#' && raw_ahead(b, cur.i + 1))) {
+            cur.raw_string();
+            toks.push(Tok {
+                kind: Kind::Str,
+                text: String::new(),
+                line: tl,
+                col: tc,
+            });
+            continue;
+        }
+        if c == b'b' && cur.at(1) == b'"' {
+            cur.adv(2);
+            cur.string_body(b'"');
+            toks.push(Tok {
+                kind: Kind::Str,
+                text: String::new(),
+                line: tl,
+                col: tc,
+            });
+            continue;
+        }
+        if c == b'b' && cur.at(1) == b'\'' {
+            cur.adv(2);
+            cur.string_body(b'\'');
+            toks.push(Tok {
+                kind: Kind::Char,
+                text: String::new(),
+                line: tl,
+                col: tc,
+            });
+            continue;
+        }
+        if c == b'b'
+            && cur.at(1) == b'r'
+            && (cur.at(2) == b'"' || (cur.at(2) == b'#' && raw_ahead(b, cur.i + 2)))
+        {
+            cur.adv(1); // b
+            cur.raw_string();
+            toks.push(Tok {
+                kind: Kind::Str,
+                text: String::new(),
+                line: tl,
+                col: tc,
+            });
+            continue;
+        }
+        if c == b'"' {
+            cur.adv(1);
+            cur.string_body(b'"');
+            toks.push(Tok {
+                kind: Kind::Str,
+                text: String::new(),
+                line: tl,
+                col: tc,
+            });
+            continue;
+        }
+        if c == b'\'' {
+            // Lifetime unless it closes as a char literal ('a' vs 'a).
+            let nxt = cur.at(1);
+            if is_id_start(nxt) && cur.at(2) != b'\'' {
+                cur.adv(1);
+                let start = cur.i;
+                while cur.i < b.len() && is_id_continue(b[cur.i]) {
+                    cur.adv(1);
+                }
+                toks.push(Tok {
+                    kind: Kind::Life,
+                    text: text[start..cur.i].to_string(),
+                    line: tl,
+                    col: tc,
+                });
+            } else {
+                cur.adv(1);
+                cur.string_body(b'\'');
+                toks.push(Tok {
+                    kind: Kind::Char,
+                    text: String::new(),
+                    line: tl,
+                    col: tc,
+                });
+            }
+            continue;
+        }
+        if is_id_start(c) {
+            let start = cur.i;
+            while cur.i < b.len() && is_id_continue(b[cur.i]) {
+                cur.adv(1);
+            }
+            toks.push(Tok {
+                kind: Kind::Id,
+                text: text[start..cur.i].to_string(),
+                line: tl,
+                col: tc,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = cur.i;
+            while cur.i < b.len() {
+                let ch = b[cur.i];
+                if is_id_continue(ch) {
+                    cur.adv(1);
+                } else if ch == b'.' && cur.at(1).is_ascii_digit() {
+                    cur.adv(1);
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok {
+                kind: Kind::Num,
+                text: text[start..cur.i].to_string(),
+                line: tl,
+                col: tc,
+            });
+            continue;
+        }
+        if c == b':' && cur.at(1) == b':' {
+            toks.push(Tok {
+                kind: Kind::Punct,
+                text: "::".to_string(),
+                line: tl,
+                col: tc,
+            });
+            cur.adv(2);
+            continue;
+        }
+        toks.push(Tok {
+            kind: Kind::Punct,
+            text: (c as char).to_string(),
+            line: tl,
+            col: tc,
+        });
+        cur.adv(1);
+    }
+    Lexed { toks, comments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src)
+            .toks
+            .into_iter()
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn fuses_path_separator() {
+        let toks = kinds("a::b");
+        assert_eq!(toks.len(), 3);
+        assert_eq!(toks[1], (Kind::Punct, "::".to_string()));
+    }
+
+    #[test]
+    fn skips_strings_chars_and_lifetimes() {
+        let toks = kinds(r#"let s = "x[0].unwrap()"; let c = 'a'; fn f<'b>() {}"#);
+        // The string and char bodies must not leak tokens.
+        assert!(toks
+            .iter()
+            .all(|(_, t)| t != "unwrap" && t != "x" && t != "a"));
+        assert!(toks.iter().any(|(k, t)| *k == Kind::Life && t == "b"));
+    }
+
+    #[test]
+    fn raw_strings_are_opaque() {
+        let toks = kinds(r###"let s = r#"panic!("no")"#; s"###);
+        let panics = toks.iter().filter(|(_, t)| t == "panic").count();
+        assert_eq!(panics, 0);
+    }
+
+    #[test]
+    fn comments_are_recorded_per_line() {
+        let lexed = lex("let a = 1; // allow(resipi::all): x\nlet b = 2;\n");
+        assert!(lexed.comments.get(&1).is_some());
+        assert!(lexed.comments.get(&2).is_none());
+        assert!(lexed.comments[&1].contains("allow(resipi::all)"));
+    }
+
+    #[test]
+    fn positions_are_one_based() {
+        let lexed = lex("ab cd\n  ef");
+        let t = &lexed.toks;
+        assert_eq!((t[0].line, t[0].col), (1, 1));
+        assert_eq!((t[1].line, t[1].col), (1, 4));
+        assert_eq!((t[2].line, t[2].col), (2, 3));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lexed = lex("/* a /* b */ c */ x");
+        assert_eq!(lexed.toks.len(), 1);
+        assert_eq!(lexed.toks[0].text, "x");
+    }
+}

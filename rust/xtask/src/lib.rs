@@ -1,0 +1,21 @@
+//! Repo tooling for the ReSiPI simulator. The one subcommand today is
+//! `cargo xtask lint`: a dependency-free AST-level linter enforcing the
+//! crate's determinism, zero-alloc, panic-freedom, and checked-narrowing
+//! contracts (see README "Static analysis & invariants").
+//!
+//! Library layout:
+//! - [`lexer`]: tokenizer with comment capture
+//! - [`outline`]: `#[cfg(test)]` masking + impl/fn outline
+//! - [`lint`]: the five rules and the tree driver
+//! - [`manifest`]: `lint-hotpaths.toml` reader
+//! - [`baseline`]: grandfathered-violation matching and blessing
+//! - [`report`]: stable JSON report
+//! - [`json`]: hand-rolled JSON reader/writer
+
+pub mod baseline;
+pub mod json;
+pub mod lexer;
+pub mod lint;
+pub mod manifest;
+pub mod outline;
+pub mod report;

@@ -1,0 +1,456 @@
+//! The five invariant rules and the per-file / per-tree lint drivers.
+//!
+//! | id                    | contract                                          |
+//! |-----------------------|---------------------------------------------------|
+//! | `no-random-state`     | no `HashMap`/`HashSet` outside the allowlist      |
+//! | `no-wall-clock`       | no `Instant`/`SystemTime` outside the allowlist   |
+//! | `hot-path-no-alloc`   | manifest-registered fns may not allocate          |
+//! | `no-panic-in-parsers` | decode paths: no unwrap/expect/panic!/`x[i]`      |
+//! | `checked-narrowing`   | packed-table files: no bare `as u8/u16/u32`       |
+//!
+//! Suppression: a comment `// allow(resipi::<rule>): reason` on the
+//! violation line, directly above it, or anywhere in the contiguous block
+//! of comment lines above it. `resipi::all` suppresses every rule.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::lexer::{lex, Kind, Tok};
+use crate::outline::{cfg_test_skips, outline};
+
+pub const R1_NO_RANDOM_STATE: &str = "no-random-state";
+pub const R2_NO_WALL_CLOCK: &str = "no-wall-clock";
+pub const R3_HOT_PATH_NO_ALLOC: &str = "hot-path-no-alloc";
+pub const R4_NO_PANIC_IN_PARSERS: &str = "no-panic-in-parsers";
+pub const R5_CHECKED_NARROWING: &str = "checked-narrowing";
+
+pub const RULES: [&str; 5] = [
+    R1_NO_RANDOM_STATE,
+    R2_NO_WALL_CLOCK,
+    R3_HOT_PATH_NO_ALLOC,
+    R4_NO_PANIC_IN_PARSERS,
+    R5_CHECKED_NARROWING,
+];
+
+/// One-line rationale shown with each diagnostic.
+pub fn rule_help(rule: &str) -> &'static str {
+    match rule {
+        R1_NO_RANDOM_STATE => {
+            "HashMap/HashSet iteration order is nondeterministic; use BTreeMap/BTreeSet \
+             or a sorted Vec"
+        }
+        R2_NO_WALL_CLOCK => {
+            "wall-clock time must not reach simulation state; timing belongs in \
+             util/bench.rs or experiments/perf.rs"
+        }
+        R3_HOT_PATH_NO_ALLOC => {
+            "this function is registered in lint-hotpaths.toml and must not allocate; \
+             use a pre-sized scratch buffer"
+        }
+        R4_NO_PANIC_IN_PARSERS => {
+            "parser/decode paths must return Err, never panic: no unwrap/expect/panic! \
+             or bare slice indexing"
+        }
+        R5_CHECKED_NARROWING => {
+            "bare narrowing casts can silently alias packed indices; use try_from with \
+             a construction-time error"
+        }
+        _ => "unknown rule",
+    }
+}
+
+/// Methods whose receiver-side call allocates (or may allocate).
+const DENY_METHODS: [&str; 19] = [
+    "push",
+    "push_back",
+    "push_front",
+    "insert",
+    "collect",
+    "to_vec",
+    "to_owned",
+    "to_string",
+    "clone",
+    "extend",
+    "extend_from_slice",
+    "append",
+    "reserve",
+    "reserve_exact",
+    "resize",
+    "split_off",
+    "join",
+    "repeat",
+    "concat",
+];
+
+/// Allocating associated-function paths (`Type::func`).
+const PATH_DENY: [(&str, &str); 5] = [
+    ("Box", "new"),
+    ("String", "from"),
+    ("Vec", "with_capacity"),
+    ("String", "with_capacity"),
+    ("Vec", "from"),
+];
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+/// Keywords that may legitimately precede `[` without forming an index
+/// expression (`let [a, b] = …`, `if let [x] = …`, `for [k, v] in …`).
+const KEYWORDS: [&str; 43] = [
+    "let",
+    "in",
+    "as",
+    "mut",
+    "ref",
+    "move",
+    "return",
+    "if",
+    "else",
+    "match",
+    "const",
+    "static",
+    "break",
+    "continue",
+    "where",
+    "for",
+    "while",
+    "loop",
+    "impl",
+    "fn",
+    "pub",
+    "use",
+    "mod",
+    "struct",
+    "enum",
+    "trait",
+    "type",
+    "dyn",
+    "unsafe",
+    "crate",
+    "super",
+    "self",
+    "Self",
+    "box",
+    "yield",
+    "async",
+    "await",
+    "become",
+    "do",
+    "macro",
+    "union",
+    "true",
+    "false",
+];
+
+/// Rule scoping, loaded from `lint-hotpaths.toml` (see
+/// [`crate::manifest`]). File paths are relative to the linted root with
+/// `/` separators.
+#[derive(Debug, Default, Clone)]
+pub struct LintConfig {
+    /// `Type::method` / free-fn names whose bodies must not allocate (R3).
+    pub hotpaths: BTreeSet<String>,
+    /// Files where HashMap/HashSet are tolerated (R1).
+    pub r1_allow: BTreeSet<String>,
+    /// Files where Instant/SystemTime are tolerated (R2).
+    pub r2_allow: BTreeSet<String>,
+    /// Parser/decode files held to panic-freedom (R4).
+    pub r4_files: BTreeSet<String>,
+    /// Packed-encoding files held to checked narrowing (R5).
+    pub r5_files: BTreeSet<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub snippet: String,
+    pub suppressed: bool,
+}
+
+fn has_allow_marker(text: &str, rule: &str) -> bool {
+    let mut rest = text;
+    while let Some(at) = rest.find("allow(resipi::") {
+        let after = &rest[at..];
+        let Some(end) = after.find(')') else {
+            return false;
+        };
+        let inner = &after["allow(".len()..end];
+        for part in inner.split(',') {
+            let slug = part.trim().replace("resipi::", "").replace('_', "-");
+            if slug == rule || slug == "all" {
+                return true;
+            }
+        }
+        rest = &after[end + 1..];
+    }
+    false
+}
+
+/// A marker suppresses on its own line, on the line directly below it, or
+/// from anywhere inside the contiguous block of comment-only lines above
+/// the violation (multi-line justifications are encouraged).
+fn suppressed(comments: &BTreeMap<u32, String>, lines: &[&str], rule: &str, line: u32) -> bool {
+    if comments
+        .get(&line)
+        .is_some_and(|t| has_allow_marker(t, rule))
+    {
+        return true;
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        let Some(text) = comments.get(&l) else {
+            break;
+        };
+        if has_allow_marker(text, rule) {
+            return true;
+        }
+        let src = lines.get(l as usize - 1).map_or("", |s| s.trim());
+        if !(src.starts_with("//") || src.starts_with("/*") || src.starts_with('*')) {
+            break;
+        }
+        l -= 1;
+    }
+    false
+}
+
+/// Lint one file's source text. `rel` is the root-relative path used for
+/// scoping and reporting.
+pub fn lint_file(text: &str, rel: &str, cfg: &LintConfig) -> Vec<Violation> {
+    let lines: Vec<&str> = text.split('\n').collect();
+    let lexed = lex(text);
+    let toks = &lexed.toks;
+    let comments = &lexed.comments;
+    let skipped = cfg_test_skips(toks);
+    let fns = outline(toks, &skipped);
+    let mut viols: Vec<Violation> = Vec::new();
+
+    let empty = Tok {
+        kind: Kind::Punct,
+        text: String::new(),
+        line: 0,
+        col: 0,
+    };
+    fn tok_at<'a>(toks: &'a [Tok], empty: &'a Tok, idx: usize) -> &'a Tok {
+        toks.get(idx).unwrap_or(empty)
+    }
+
+    let mut emit = |rule: &'static str, t: &Tok| {
+        let snippet = lines
+            .get(t.line as usize - 1)
+            .map_or_else(String::new, |s| s.trim().to_string());
+        viols.push(Violation {
+            rule,
+            file: rel.to_string(),
+            line: t.line,
+            col: t.col,
+            snippet,
+            suppressed: suppressed(comments, &lines, rule, t.line),
+        });
+    };
+
+    let r4 = cfg.r4_files.contains(rel);
+    let r5 = cfg.r5_files.contains(rel);
+    for idx in 0..toks.len() {
+        if skipped[idx] {
+            continue;
+        }
+        let t = &toks[idx];
+        let nxt = tok_at(toks, &empty, idx + 1);
+        let nx2 = tok_at(toks, &empty, idx + 2);
+        if t.kind == Kind::Id
+            && (t.text == "HashMap" || t.text == "HashSet")
+            && !cfg.r1_allow.contains(rel)
+        {
+            emit(R1_NO_RANDOM_STATE, t);
+        }
+        if t.kind == Kind::Id
+            && (t.text == "Instant" || t.text == "SystemTime")
+            && !cfg.r2_allow.contains(rel)
+        {
+            emit(R2_NO_WALL_CLOCK, t);
+        }
+        if r5
+            && t.kind == Kind::Id
+            && t.text == "as"
+            && nxt.kind == Kind::Id
+            && matches!(nxt.text.as_str(), "u8" | "u16" | "u32")
+        {
+            emit(R5_CHECKED_NARROWING, t);
+        }
+        if r4 {
+            if t.kind == Kind::Punct
+                && t.text == "."
+                && nxt.kind == Kind::Id
+                && (nxt.text == "unwrap" || nxt.text == "expect")
+                && nx2.text == "("
+            {
+                emit(R4_NO_PANIC_IN_PARSERS, nxt);
+            }
+            if t.kind == Kind::Id
+                && PANIC_MACROS.contains(&t.text.as_str())
+                && nxt.kind == Kind::Punct
+                && nxt.text == "!"
+            {
+                emit(R4_NO_PANIC_IN_PARSERS, t);
+            }
+            if t.kind == Kind::Punct && t.text == "[" && idx > 0 {
+                // `x[i]` / `f()[i]` / `x?[i]` index and can panic;
+                // `let [a, b] = …` and `#[attr]` / `vec![…]` do not.
+                let prev = &toks[idx - 1];
+                let postfix = (prev.kind == Kind::Punct
+                    && matches!(prev.text.as_str(), ")" | "]" | "?"))
+                    || (prev.kind == Kind::Id && !KEYWORDS.contains(&prev.text.as_str()));
+                if postfix {
+                    emit(R4_NO_PANIC_IN_PARSERS, t);
+                }
+            }
+        }
+    }
+
+    for f in &fns {
+        if !cfg.hotpaths.contains(&f.qual) {
+            continue;
+        }
+        for idx in f.body_start..=f.body_end {
+            if idx >= toks.len() || skipped[idx] {
+                continue;
+            }
+            let t = &toks[idx];
+            let nxt = tok_at(toks, &empty, idx + 1);
+            let nx2 = tok_at(toks, &empty, idx + 2);
+            let nx3 = tok_at(toks, &empty, idx + 3);
+            if t.kind == Kind::Punct
+                && t.text == "."
+                && nxt.kind == Kind::Id
+                && DENY_METHODS.contains(&nxt.text.as_str())
+                && nx2.text == "("
+            {
+                emit(R3_HOT_PATH_NO_ALLOC, nxt);
+            }
+            if t.kind == Kind::Id
+                && (t.text == "format" || t.text == "vec")
+                && nxt.kind == Kind::Punct
+                && nxt.text == "!"
+            {
+                emit(R3_HOT_PATH_NO_ALLOC, t);
+            }
+            if t.kind == Kind::Id
+                && nxt.text == "::"
+                && nx2.kind == Kind::Id
+                && PATH_DENY
+                    .iter()
+                    .any(|&(a, b)| a == t.text && b == nx2.text)
+                && nx3.text == "("
+            {
+                emit(R3_HOT_PATH_NO_ALLOC, t);
+            }
+        }
+    }
+
+    viols
+}
+
+/// Lint every `.rs` file under `root` (recursively), sorted by
+/// (file, line, col, rule) for a stable report.
+pub fn lint_tree(root: &Path, cfg: &LintConfig) -> io::Result<Vec<Violation>> {
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    collect_rs(root, root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for (rel, full) in &files {
+        let text = fs::read_to_string(full)?;
+        out.extend(lint_file(&text, rel, cfg));
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.col, a.rule).cmp(&(b.file.as_str(), b.line, b.col, b.rule))
+    });
+    Ok(out)
+}
+
+fn collect_rs(base: &Path, dir: &Path, out: &mut Vec<(String, PathBuf)>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(base, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(base)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_all(rel: &str) -> LintConfig {
+        let mut c = LintConfig::default();
+        c.r4_files.insert(rel.to_string());
+        c.r5_files.insert(rel.to_string());
+        c
+    }
+
+    #[test]
+    fn array_literals_and_attributes_are_not_indexing() {
+        let src = "pub fn f() -> [u8; 2] {\n\
+                   \x20   let [a, b] = [1u8, 2u8];\n\
+                   \x20   [a, b]\n\
+                   }\n\
+                   #[derive(Debug)]\n\
+                   pub struct S;\n";
+        let v = lint_file(src, "p.rs", &cfg_all("p.rs"));
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn postfix_indexing_is_flagged() {
+        let src = "pub fn f(x: &[u8]) -> u8 { x[0] }\n";
+        let v = lint_file(src, "p.rs", &cfg_all("p.rs"));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, R4_NO_PANIC_IN_PARSERS);
+    }
+
+    #[test]
+    fn strings_do_not_trigger_rules() {
+        let src = "pub fn f() -> &'static str { \"HashMap Instant .unwrap() x[0]\" }\n";
+        let mut c = cfg_all("p.rs");
+        c.hotpaths.insert("f".to_string());
+        let v = lint_file(src, "p.rs", &c);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn cfg_test_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n";
+        let v = lint_file(src, "p.rs", &LintConfig::default());
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn suppression_scans_comment_blocks() {
+        let src = "fn f() {\n\
+                   \x20   // allow(resipi::no-random-state): fixture reason\n\
+                   \x20   // spanning two lines.\n\
+                   \x20   let m = std::collections::HashMap::<u8, u8>::new();\n\
+                   \x20   drop(m);\n\
+                   }\n";
+        let v = lint_file(src, "p.rs", &LintConfig::default());
+        assert_eq!(v.len(), 1);
+        assert!(v[0].suppressed);
+    }
+
+    #[test]
+    fn rule_scoping_is_per_file() {
+        let src = "pub fn f(x: usize) -> u16 { x as u16 }\n";
+        assert_eq!(lint_file(src, "in.rs", &cfg_all("in.rs")).len(), 1);
+        assert!(lint_file(src, "out.rs", &cfg_all("in.rs")).is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! `cargo xtask lint [--bless] [--json PATH]`
+//!
+//! Exit codes: 0 clean (baselined/suppressed findings allowed), 2 new
+//! violations, 1 internal error (bad manifest, unreadable tree, ...).
+//! `--bless` (or env `RESIPI_BLESS=1`) rewrites `lint-baseline.json` from
+//! the current findings instead of failing; use it to ratchet the baseline
+//! *down* after fixing grandfathered sites.
+
+use std::env;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use xtask::baseline::{classify, parse_baseline, Status};
+use xtask::lint::{lint_tree, rule_help};
+use xtask::{baseline, manifest, report};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = env::args().skip(1).collect();
+    match run(&args) {
+        Ok(code) => ExitCode::from(code),
+        Err(msg) => {
+            eprintln!("xtask: error: {msg}");
+            ExitCode::from(1)
+        }
+    }
+}
+
+fn usage() -> String {
+    "usage: cargo xtask lint [--bless] [--json PATH]\n\
+     \n\
+     Lints rust/src against the five repo invariants (no-random-state,\n\
+     no-wall-clock, hot-path-no-alloc, no-panic-in-parsers,\n\
+     checked-narrowing). Scoping lives in rust/lint-hotpaths.toml;\n\
+     grandfathered sites in lint-baseline.json. New violations exit 2.\n\
+     --bless (or RESIPI_BLESS=1) rewrites the baseline instead."
+        .to_string()
+}
+
+fn run(args: &[String]) -> Result<u8, String> {
+    let Some(cmd) = args.first() else {
+        return Err(usage());
+    };
+    if cmd == "--help" || cmd == "-h" || cmd == "help" {
+        println!("{}", usage());
+        return Ok(0);
+    }
+    if cmd != "lint" {
+        return Err(format!("unknown subcommand {cmd:?}\n{}", usage()));
+    }
+
+    let mut bless = env::var("RESIPI_BLESS").map(|v| v == "1").unwrap_or(false);
+    let mut json_out: Option<PathBuf> = None;
+    let mut it = args.iter().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--bless" => bless = true,
+            "--json" => {
+                let p = it.next().ok_or("--json requires a path argument")?;
+                json_out = Some(PathBuf::from(p));
+            }
+            other => return Err(format!("unknown flag {other:?}\n{}", usage())),
+        }
+    }
+
+    // xtask lives at <repo>/rust/xtask, so the repo root is two levels up.
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let src_root = repo.join("rust/src");
+    let manifest_path = repo.join("rust/lint-hotpaths.toml");
+    let baseline_path = repo.join("lint-baseline.json");
+
+    let manifest_text = fs::read_to_string(&manifest_path)
+        .map_err(|e| format!("cannot read {}: {e}", manifest_path.display()))?;
+    let cfg = manifest::from_manifest(&manifest_text)?;
+
+    let viols = lint_tree(&src_root, &cfg)
+        .map_err(|e| format!("cannot lint {}: {e}", src_root.display()))?;
+
+    if bless {
+        let text = baseline::serialize(&viols);
+        fs::write(&baseline_path, &text)
+            .map_err(|e| format!("cannot write {}: {e}", baseline_path.display()))?;
+        let n = viols.iter().filter(|v| !v.suppressed).count();
+        println!(
+            "xtask lint: blessed {} violation(s) into {}",
+            n,
+            baseline_path.display()
+        );
+        return Ok(0);
+    }
+
+    let baseline_entries = match fs::read_to_string(&baseline_path) {
+        Ok(text) => parse_baseline(&text)?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(format!("cannot read {}: {e}", baseline_path.display())),
+    };
+    let classified = classify(&viols, &baseline_entries);
+
+    let report_text = report::render("rust/src", &viols, &classified);
+    let out_path = json_out.unwrap_or_else(|| repo.join("rust/target/lint-report.json"));
+    if let Some(dir) = out_path.parent() {
+        fs::create_dir_all(dir)
+            .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+    }
+    fs::write(&out_path, &report_text)
+        .map_err(|e| format!("cannot write {}: {e}", out_path.display()))?;
+
+    // Human diagnostics: new violations in full, with the rule rationale;
+    // grandfathered/suppressed sites only in the summary counts.
+    let mut shown_help: Vec<&str> = Vec::new();
+    for (v, status) in viols.iter().zip(&classified.statuses) {
+        if *status != Status::New {
+            continue;
+        }
+        println!("rust/src/{}:{}:{}: [{}] {}", v.file, v.line, v.col, v.rule, v.snippet);
+        if !shown_help.contains(&v.rule) {
+            shown_help.push(v.rule);
+            println!("    = help: {}", rule_help(v.rule));
+            println!(
+                "    = note: suppress with `// allow(resipi::{}): <justification>`",
+                v.rule
+            );
+        }
+    }
+    for e in &classified.stale {
+        println!(
+            "warning: stale baseline entry ({} in {}, count {}) — fixed? re-bless with \
+             RESIPI_BLESS=1 to shrink the baseline",
+            e.rule, e.file, e.count
+        );
+    }
+    let suppressed = classified
+        .statuses
+        .iter()
+        .filter(|s| **s == Status::Suppressed)
+        .count();
+    let baselined = classified
+        .statuses
+        .iter()
+        .filter(|s| **s == Status::Baselined)
+        .count();
+    println!(
+        "xtask lint: {} new, {} baselined, {} suppressed, {} stale baseline entr{} \
+         (report: {})",
+        classified.new_count,
+        baselined,
+        suppressed,
+        classified.stale.len(),
+        if classified.stale.len() == 1 { "y" } else { "ies" },
+        out_path.display()
+    );
+    if classified.new_count > 0 {
+        println!("xtask lint: FAILED — fix the sites above, suppress with a justification, or");
+        println!("  (for pre-existing debt only) re-bless: RESIPI_BLESS=1 cargo xtask lint");
+        return Ok(2);
+    }
+    println!("xtask lint: OK");
+    Ok(0)
+}

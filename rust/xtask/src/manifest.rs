@@ -1,0 +1,168 @@
+//! Reader for `rust/lint-hotpaths.toml`, the rule-scoping manifest.
+//!
+//! Hand-rolled TOML subset (the image ships no `toml` crate): `[section]`
+//! headers, `key = [ "quoted", "strings" ]` arrays (multi-line allowed),
+//! `#` comments. That is the entire grammar the manifest needs; anything
+//! else is a hard error so typos cannot silently widen a rule's scope.
+
+use crate::lint::LintConfig;
+
+pub fn from_manifest(text: &str) -> Result<LintConfig, String> {
+    let mut cfg = LintConfig::default();
+    let mut section = String::new();
+    let mut pending: Option<(String, String)> = None; // (key, accumulated value)
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw);
+        let line = line.trim();
+        if let Some((key, acc)) = pending.take() {
+            let acc = format!("{acc} {line}");
+            if balanced(&acc) {
+                apply(&mut cfg, &section, &key, &acc, lineno + 1)?;
+            } else {
+                pending = Some((key, acc));
+            }
+            continue;
+        }
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(format!("lint-hotpaths.toml:{}: expected `key = [...]`", lineno + 1));
+        };
+        let key = key.trim().to_string();
+        let value = value.trim().to_string();
+        if balanced(&value) {
+            apply(&mut cfg, &section, &key, &value, lineno + 1)?;
+        } else {
+            pending = Some((key, value));
+        }
+    }
+    if let Some((key, _)) = pending {
+        return Err(format!("lint-hotpaths.toml: unterminated array for key {key:?}"));
+    }
+    Ok(cfg)
+}
+
+/// Strip a `#` comment, honouring quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// True when brackets and quotes close: the value is complete.
+fn balanced(value: &str) -> bool {
+    let mut in_str = false;
+    let mut depth = 0i32;
+    for c in value.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+    }
+    !in_str && depth == 0
+}
+
+fn parse_string_array(value: &str, lineno: usize) -> Result<Vec<String>, String> {
+    let inner = value
+        .trim()
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| format!("lint-hotpaths.toml:{lineno}: value must be an array of strings"))?;
+    let mut out = Vec::new();
+    for piece in inner.split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue; // trailing comma / empty array
+        }
+        let s = piece
+            .strip_prefix('"')
+            .and_then(|p| p.strip_suffix('"'))
+            .ok_or_else(|| {
+                format!("lint-hotpaths.toml:{lineno}: array items must be double-quoted")
+            })?;
+        out.push(s.to_string());
+    }
+    Ok(out)
+}
+
+fn apply(
+    cfg: &mut LintConfig,
+    section: &str,
+    key: &str,
+    value: &str,
+    lineno: usize,
+) -> Result<(), String> {
+    let items = parse_string_array(value, lineno)?;
+    let target = match (section, key) {
+        ("hot-path-no-alloc", "functions") => &mut cfg.hotpaths,
+        ("no-random-state", "allow-files") => &mut cfg.r1_allow,
+        ("no-wall-clock", "allow-files") => &mut cfg.r2_allow,
+        ("no-panic-in-parsers", "files") => &mut cfg.r4_files,
+        ("checked-narrowing", "files") => &mut cfg.r5_files,
+        _ => {
+            return Err(format!(
+                "lint-hotpaths.toml:{lineno}: unknown setting `{key}` in section `[{section}]`"
+            ))
+        }
+    };
+    target.extend(items);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_arrays_and_comments() {
+        let cfg = from_manifest(
+            "# manifest\n\
+             [hot-path-no-alloc]\n\
+             functions = [\n\
+                 \"Network::step\", # the main loop\n\
+                 \"RouteTable::route_packet\",\n\
+             ]\n\
+             [no-wall-clock]\n\
+             allow-files = [\"util/bench.rs\"]\n\
+             [no-random-state]\n\
+             allow-files = []\n",
+        )
+        .unwrap();
+        assert!(cfg.hotpaths.contains("Network::step"));
+        assert!(cfg.hotpaths.contains("RouteTable::route_packet"));
+        assert!(cfg.r2_allow.contains("util/bench.rs"));
+        assert!(cfg.r1_allow.is_empty());
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        let err = from_manifest("[hot-path-no-alloc]\nfuncs = [\"A::b\"]\n").unwrap_err();
+        assert!(err.contains("unknown setting"), "{err}");
+    }
+
+    #[test]
+    fn unterminated_arrays_are_rejected() {
+        let err = from_manifest("[checked-narrowing]\nfiles = [\"a.rs\",\n").unwrap_err();
+        assert!(err.contains("unterminated"), "{err}");
+    }
+
+    #[test]
+    fn hash_inside_quotes_is_not_a_comment() {
+        let cfg = from_manifest("[no-panic-in-parsers]\nfiles = [\"a#b.rs\"]\n").unwrap();
+        assert!(cfg.r4_files.contains("a#b.rs"));
+    }
+}

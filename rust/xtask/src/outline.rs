@@ -1,0 +1,284 @@
+//! Structural pass over the token stream: `#[cfg(test)]` item skipping and
+//! an outline of `impl` blocks / `fn` bodies, so rules can be scoped to
+//! qualified function names (`Type::method`) without a full parse.
+
+use crate::lexer::{Kind, Tok};
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == Kind::Punct && t.text == s
+}
+
+fn is_id(t: &Tok, s: &str) -> bool {
+    t.kind == Kind::Id && t.text == s
+}
+
+/// `k` indexes a `{`; returns the index of its matching `}` (or the last
+/// token of a truncated stream).
+pub fn match_brace(toks: &[Tok], k: usize) -> usize {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(k) {
+        if is_punct(t, "{") {
+            depth += 1;
+        } else if is_punct(t, "}") {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// `k` indexes a `<`; returns the index just past the matching `>`.
+/// A `>` preceded by `-` or `=` is an arrow (`->`, `=>`), not a closer.
+pub fn skip_angles(toks: &[Tok], k: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = k;
+    while j < toks.len() {
+        let t = &toks[j];
+        if is_punct(t, "<") {
+            depth += 1;
+        } else if is_punct(t, ">") {
+            let arrow = j > 0 && {
+                let p = &toks[j - 1];
+                is_punct(p, "-") || is_punct(p, "=")
+            };
+            if !arrow {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Boolean mask: tokens inside `#[cfg(test)]` items, including the
+/// attribute itself and any stacked attributes, through the item's whole
+/// balanced `{…}` block (or to its terminating `;`).
+pub fn cfg_test_skips(toks: &[Tok]) -> Vec<bool> {
+    let mut skipped = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !is_cfg_test_attr(toks, i) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = i + 7;
+        // Skip any further stacked attributes.
+        while j + 1 < toks.len() && is_punct(&toks[j], "#") && toks[j + 1].text == "[" {
+            let mut depth = 0i32;
+            j += 1;
+            while j < toks.len() {
+                if toks[j].text == "[" {
+                    depth += 1;
+                } else if toks[j].text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        // First `{` or `;` at ()/[] nesting 0 ends the item header.
+        let mut nest = 0i32;
+        let mut end: Option<usize> = None;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.kind == Kind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" => nest += 1,
+                    ")" | "]" => nest -= 1,
+                    "{" if nest == 0 => {
+                        end = Some(match_brace(toks, j));
+                        break;
+                    }
+                    ";" if nest == 0 => {
+                        end = Some(j);
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        let end = end.unwrap_or_else(|| toks.len().saturating_sub(1));
+        for s in skipped.iter_mut().take(end + 1).skip(start) {
+            *s = true;
+        }
+        i = end + 1;
+    }
+    skipped
+}
+
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    if i + 7 > toks.len() {
+        return false;
+    }
+    is_punct(&toks[i], "#")
+        && is_punct(&toks[i + 1], "[")
+        && is_id(&toks[i + 2], "cfg")
+        && is_punct(&toks[i + 3], "(")
+        && is_id(&toks[i + 4], "test")
+        && is_punct(&toks[i + 5], ")")
+        && is_punct(&toks[i + 6], "]")
+}
+
+/// A function body located in the token stream.
+pub struct FnSpan {
+    /// `Type::name` inside an impl block, bare `name` at module level.
+    pub qual: String,
+    /// Inclusive token range of the body, from `{` to `}`.
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// Outline all non-test `fn` bodies with impl-qualified names. The impl
+/// type is the last path segment before the block opens (`impl<T> Trait
+/// for Type<T>` → `Type`), which is exactly the granularity the hot-path
+/// manifest uses.
+pub fn outline(toks: &[Tok], skipped: &[bool]) -> Vec<FnSpan> {
+    let mut fns: Vec<FnSpan> = Vec::new();
+    let mut impl_stack: Vec<(String, i32)> = Vec::new();
+    let mut depth = 0i32;
+    let mut i = 0usize;
+    while i < toks.len() {
+        if skipped[i] {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        if is_punct(t, "{") {
+            depth += 1;
+        } else if is_punct(t, "}") {
+            depth -= 1;
+            while impl_stack.last().is_some_and(|top| top.1 >= depth) {
+                impl_stack.pop();
+            }
+        } else if is_id(t, "impl") {
+            let mut j = i + 1;
+            if j < toks.len() && is_punct(&toks[j], "<") {
+                j = skip_angles(toks, j);
+            }
+            let mut cur: Vec<String> = Vec::new();
+            while j < toks.len() {
+                let tj = &toks[j];
+                if is_punct(tj, "{") || is_punct(tj, ";") {
+                    break;
+                }
+                if is_id(tj, "for") {
+                    cur.clear();
+                } else if is_id(tj, "where") {
+                    break;
+                } else if is_punct(tj, "<") {
+                    j = skip_angles(toks, j);
+                    continue;
+                } else if tj.kind == Kind::Id {
+                    cur.push(tj.text.clone());
+                }
+                j += 1;
+            }
+            while j < toks.len() && !(is_punct(&toks[j], "{") || is_punct(&toks[j], ";")) {
+                j += 1;
+            }
+            if j < toks.len() && toks[j].text == "{" {
+                if let Some(last) = cur.last() {
+                    impl_stack.push((last.clone(), depth));
+                }
+            }
+            i = j;
+            continue;
+        } else if is_id(t, "fn") {
+            if i + 1 < toks.len() && toks[i + 1].kind == Kind::Id {
+                let name = &toks[i + 1].text;
+                let qual = match impl_stack.last() {
+                    Some((ty, _)) => format!("{ty}::{name}"),
+                    None => name.clone(),
+                };
+                let mut k = i + 2;
+                let mut nest = 0i32;
+                while k < toks.len() {
+                    let tk = &toks[k];
+                    if tk.kind == Kind::Punct {
+                        match tk.text.as_str() {
+                            "(" | "[" => nest += 1,
+                            ")" | "]" => nest -= 1,
+                            "{" if nest == 0 => break,
+                            ";" if nest == 0 => break,
+                            _ => {}
+                        }
+                    }
+                    k += 1;
+                }
+                if k < toks.len() && toks[k].text == "{" {
+                    fns.push(FnSpan {
+                        qual,
+                        body_start: k,
+                        body_end: match_brace(toks, k),
+                    });
+                }
+            }
+        }
+        i += 1;
+    }
+    fns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn outline_of(src: &str) -> Vec<String> {
+        let lexed = lex(src);
+        let skipped = cfg_test_skips(&lexed.toks);
+        outline(&lexed.toks, &skipped)
+            .into_iter()
+            .map(|f| f.qual)
+            .collect()
+    }
+
+    #[test]
+    fn qualifies_impl_methods() {
+        let names = outline_of(
+            "impl Foo { fn a(&self) {} }\n\
+             impl<T: Clone> Bar<T> { fn b() {} }\n\
+             impl Iterator for Baz { fn next(&mut self) -> Option<u8> { None } }\n\
+             fn free() {}",
+        );
+        assert_eq!(names, vec!["Foo::a", "Bar::b", "Baz::next", "free"]);
+    }
+
+    #[test]
+    fn generic_return_arrows_do_not_confuse_angles() {
+        let names = outline_of(
+            "impl Map { fn get(&self) -> Option<Vec<u8>> { None } fn put(&mut self) {} }",
+        );
+        assert_eq!(names, vec!["Map::get", "Map::put"]);
+    }
+
+    #[test]
+    fn cfg_test_modules_are_skipped() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn dead() {}\n}\nfn live2() {}";
+        assert_eq!(outline_of(src), vec!["live", "live2"]);
+    }
+
+    #[test]
+    fn nested_impls_pop_with_braces() {
+        let names = outline_of(
+            "impl A { fn fa(&self) { } }\nimpl B { fn fb(&self) { let _ = |x: u8| x; } }",
+        );
+        assert_eq!(names, vec!["A::fa", "B::fb"]);
+    }
+
+    #[test]
+    fn where_clause_does_not_leak_into_type_name() {
+        let names = outline_of("impl<T> Wrap<T> where T: Clone { fn w() {} }");
+        assert_eq!(names, vec!["Wrap::w"]);
+    }
+}

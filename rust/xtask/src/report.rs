@@ -1,0 +1,107 @@
+//! Stable machine-readable lint report. Key order, array order (file,
+//! line, col, rule), and formatting are all deterministic so CI artifacts
+//! diff cleanly between runs.
+
+use crate::baseline::{BaselineEntry, Classified};
+use crate::json::write_str;
+use crate::lint::Violation;
+
+pub fn render(root: &str, viols: &[Violation], classified: &Classified) -> String {
+    let suppressed = classified
+        .statuses
+        .iter()
+        .filter(|s| **s == crate::baseline::Status::Suppressed)
+        .count();
+    let baselined = classified
+        .statuses
+        .iter()
+        .filter(|s| **s == crate::baseline::Status::Baselined)
+        .count();
+
+    let mut out = String::new();
+    out.push_str("{\n  \"version\": 1,\n  \"root\": ");
+    write_str(&mut out, root);
+    out.push_str(&format!(
+        ",\n  \"summary\": {{\"total\": {}, \"new\": {}, \"baselined\": {}, \
+         \"suppressed\": {}, \"stale_baseline\": {}}},\n  \"violations\": [",
+        viols.len(),
+        classified.new_count,
+        baselined,
+        suppressed,
+        classified.stale.len(),
+    ));
+    let mut first = true;
+    for (v, status) in viols.iter().zip(&classified.statuses) {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str("\n    {\"rule\": ");
+        write_str(&mut out, v.rule);
+        out.push_str(", \"file\": ");
+        write_str(&mut out, &v.file);
+        out.push_str(&format!(", \"line\": {}, \"col\": {}, \"snippet\": ", v.line, v.col));
+        write_str(&mut out, &v.snippet);
+        out.push_str(", \"status\": ");
+        write_str(&mut out, status.as_str());
+        out.push('}');
+    }
+    out.push_str("\n  ],\n  \"stale_baseline\": [");
+    let mut first = true;
+    for e in &classified.stale {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str("\n    ");
+        out.push_str(&render_stale(e));
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+fn render_stale(e: &BaselineEntry) -> String {
+    let mut s = String::new();
+    s.push_str("{\"rule\": ");
+    write_str(&mut s, &e.rule);
+    s.push_str(", \"file\": ");
+    write_str(&mut s, &e.file);
+    s.push_str(", \"snippet\": ");
+    write_str(&mut s, &e.snippet);
+    s.push_str(&format!(", \"count\": {}}}", e.count));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::classify;
+    use crate::json;
+
+    #[test]
+    fn report_is_valid_json_with_stable_keys() {
+        let viols = vec![Violation {
+            rule: crate::lint::R1_NO_RANDOM_STATE,
+            file: "a.rs".to_string(),
+            line: 3,
+            col: 9,
+            snippet: "let m: HashMap<u8, u8> = \"x\\n\".into();".to_string(),
+            suppressed: false,
+        }];
+        let classified = classify(&viols, &[]);
+        let text = render("rust/src", &viols, &classified);
+        let v = json::parse(&text).expect("report parses");
+        assert_eq!(
+            v.get("summary")
+                .and_then(|s| s.get("new"))
+                .and_then(json::Value::as_u64),
+            Some(1)
+        );
+        let arr = v.get("violations").and_then(json::Value::as_arr).unwrap();
+        assert_eq!(arr[0].get("line").and_then(json::Value::as_u64), Some(3));
+        assert_eq!(
+            arr[0].get("status").and_then(json::Value::as_str),
+            Some("new")
+        );
+    }
+}

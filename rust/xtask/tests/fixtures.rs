@@ -1,0 +1,183 @@
+//! Each rule demonstrated on a known-bad fixture plus a suppressed
+//! variant, asserting exact rule IDs, line/col spans, and statuses. The
+//! expected spans were cross-checked against the bootstrap mirror
+//! (`tools/gen_baseline.py`) — if these fail after touching the lexer or
+//! outline, the two implementations have diverged.
+
+use std::fs;
+use std::path::Path;
+
+use xtask::baseline::classify;
+use xtask::lint::{lint_file, LintConfig, Violation};
+use xtask::{json, report};
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+fn cfg() -> LintConfig {
+    let mut c = LintConfig::default();
+    c.hotpaths.insert("Hot::step".to_string());
+    for f in ["r4_bad.rs", "r4_suppressed.rs"] {
+        c.r4_files.insert(f.to_string());
+    }
+    for f in ["r5_bad.rs", "r5_suppressed.rs"] {
+        c.r5_files.insert(f.to_string());
+    }
+    c
+}
+
+fn spans(name: &str) -> Vec<(String, u32, u32, bool)> {
+    lint_file(&fixture(name), name, &cfg())
+        .into_iter()
+        .map(|v| (v.rule.to_string(), v.line, v.col, v.suppressed))
+        .collect()
+}
+
+fn s(rule: &str, line: u32, col: u32, suppressed: bool) -> (String, u32, u32, bool) {
+    (rule.to_string(), line, col, suppressed)
+}
+
+#[test]
+fn r1_no_random_state() {
+    assert_eq!(
+        spans("r1_bad.rs"),
+        vec![
+            s("no-random-state", 1, 23, false),
+            s("no-random-state", 4, 20, false),
+        ]
+    );
+    assert_eq!(
+        spans("r1_suppressed.rs"),
+        vec![
+            s("no-random-state", 3, 23, true),
+            s("no-random-state", 7, 20, true),
+        ]
+    );
+}
+
+#[test]
+fn r2_no_wall_clock() {
+    assert_eq!(
+        spans("r2_bad.rs"),
+        vec![
+            s("no-wall-clock", 1, 16, false),
+            s("no-wall-clock", 3, 19, false),
+            s("no-wall-clock", 4, 5, false),
+        ]
+    );
+    assert_eq!(
+        spans("r2_suppressed.rs"),
+        vec![
+            s("no-wall-clock", 3, 16, true),
+            s("no-wall-clock", 6, 19, true),
+            s("no-wall-clock", 8, 5, true),
+        ]
+    );
+}
+
+#[test]
+fn r3_hot_path_no_alloc() {
+    // Only `Hot::step` is registered: the identical push in `Hot::cold`
+    // must NOT be flagged.
+    assert_eq!(
+        spans("r3_bad.rs"),
+        vec![
+            s("hot-path-no-alloc", 7, 18, false),
+            s("hot-path-no-alloc", 8, 22, false),
+        ]
+    );
+    assert_eq!(
+        spans("r3_suppressed.rs"),
+        vec![s("hot-path-no-alloc", 9, 18, true)]
+    );
+}
+
+#[test]
+fn r4_no_panic_in_parsers() {
+    assert_eq!(
+        spans("r4_bad.rs"),
+        vec![
+            s("no-panic-in-parsers", 2, 17, false),
+            s("no-panic-in-parsers", 3, 35, false),
+        ]
+    );
+    // Same-line and block-above markers both work.
+    assert_eq!(
+        spans("r4_suppressed.rs"),
+        vec![
+            s("no-panic-in-parsers", 4, 17, true),
+            s("no-panic-in-parsers", 5, 35, true),
+        ]
+    );
+    // R4 is scoped: the same source under a non-parser filename is clean.
+    assert!(lint_file(&fixture("r4_bad.rs"), "elsewhere.rs", &cfg()).is_empty());
+}
+
+#[test]
+fn r5_checked_narrowing() {
+    assert_eq!(
+        spans("r5_bad.rs"),
+        vec![s("checked-narrowing", 2, 9, false)]
+    );
+    assert_eq!(
+        spans("r5_suppressed.rs"),
+        vec![s("checked-narrowing", 4, 9, true)]
+    );
+    assert!(lint_file(&fixture("r5_bad.rs"), "elsewhere.rs", &cfg()).is_empty());
+}
+
+#[test]
+fn json_report_carries_rule_ids_and_spans() {
+    let mut viols: Vec<Violation> = Vec::new();
+    for name in [
+        "r1_bad.rs",
+        "r2_bad.rs",
+        "r3_bad.rs",
+        "r4_bad.rs",
+        "r5_bad.rs",
+        "r1_suppressed.rs",
+    ] {
+        viols.extend(lint_file(&fixture(name), name, &cfg()));
+    }
+    let classified = classify(&viols, &[]);
+    let text = report::render("tests/fixtures", &viols, &classified);
+    let parsed = json::parse(&text).expect("report is valid JSON");
+
+    let summary = parsed.get("summary").expect("summary");
+    assert_eq!(summary.get("new").and_then(json::Value::as_u64), Some(10));
+    assert_eq!(
+        summary.get("suppressed").and_then(json::Value::as_u64),
+        Some(2)
+    );
+
+    let arr = parsed
+        .get("violations")
+        .and_then(json::Value::as_arr)
+        .expect("violations array");
+    assert_eq!(arr.len(), viols.len());
+    let find = |rule: &str, file: &str| {
+        arr.iter()
+            .find(|v| {
+                v.get("rule").and_then(json::Value::as_str) == Some(rule)
+                    && v.get("file").and_then(json::Value::as_str) == Some(file)
+            })
+            .unwrap_or_else(|| panic!("no {rule} in {file}"))
+    };
+    let r5 = find("checked-narrowing", "r5_bad.rs");
+    assert_eq!(r5.get("line").and_then(json::Value::as_u64), Some(2));
+    assert_eq!(r5.get("col").and_then(json::Value::as_u64), Some(9));
+    assert_eq!(
+        r5.get("snippet").and_then(json::Value::as_str),
+        Some("idx as u16")
+    );
+    assert_eq!(r5.get("status").and_then(json::Value::as_str), Some("new"));
+    let sup = find("no-random-state", "r1_suppressed.rs");
+    assert_eq!(
+        sup.get("status").and_then(json::Value::as_str),
+        Some("suppressed")
+    );
+}

@@ -1,0 +1,12 @@
+// allow(resipi::no-random-state): fixture demonstrating suppression; the
+// map is drained into a sorted Vec before any iteration order can leak.
+use std::collections::HashMap;
+
+pub fn tally(xs: &[u8]) -> usize {
+    // allow(resipi::no-random-state): same justification as the import.
+    let mut seen = HashMap::new();
+    for &x in xs {
+        seen.insert(x, ());
+    }
+    seen.len()
+}

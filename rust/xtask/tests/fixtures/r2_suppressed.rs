@@ -1,0 +1,9 @@
+// allow(resipi::no-wall-clock): fixture; this helper feeds a progress bar
+// only and never reaches simulation state.
+use std::time::Instant;
+
+// allow(resipi::no-wall-clock): fixture; the return type names the clock.
+pub fn stamp() -> Instant {
+    // allow(resipi::no_wall_clock): underscore spelling also accepted.
+    Instant::now()
+}

@@ -1,0 +1,14 @@
+pub struct Hot {
+    buf: Vec<u8>,
+}
+
+impl Hot {
+    pub fn step(&mut self, x: u8) {
+        self.buf.push(x);
+        let _label = format!("x={x}");
+    }
+
+    pub fn cold(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+}

@@ -1,0 +1,11 @@
+pub struct Hot {
+    buf: Vec<u8>,
+}
+
+impl Hot {
+    pub fn step(&mut self, x: u8) {
+        // allow(resipi::hot-path-no-alloc): fixture; capacity is reserved
+        // once at construction, so this push never reallocates.
+        self.buf.push(x);
+    }
+}

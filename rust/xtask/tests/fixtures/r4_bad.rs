@@ -1,0 +1,5 @@
+pub fn decode(buf: &[u8]) -> u8 {
+    let hi = buf[0];
+    let lo = buf.first().copied().unwrap();
+    hi.wrapping_add(lo)
+}

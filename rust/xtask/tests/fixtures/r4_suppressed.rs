@@ -1,0 +1,7 @@
+pub fn decode(buf: &[u8]) -> u8 {
+    // allow(resipi::no-panic-in-parsers): fixture; the caller checked
+    // `buf.len() >= 2` at the validated-open boundary.
+    let hi = buf[0];
+    let lo = buf.first().copied().unwrap(); // allow(resipi::no-panic-in-parsers): fixture
+    hi.wrapping_add(lo)
+}

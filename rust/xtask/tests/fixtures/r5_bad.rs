@@ -1,0 +1,3 @@
+pub fn pack(idx: usize) -> u16 {
+    idx as u16
+}

@@ -1,0 +1,5 @@
+pub fn pack(idx: usize) -> u16 {
+    // allow(resipi::checked-narrowing): fixture; idx is a row id already
+    // proven < 1024 by the table builder.
+    idx as u16
+}

@@ -1,0 +1,49 @@
+//! The repository's own `rust/src` must lint clean against the committed
+//! baseline: running the tier-1 suite therefore enforces the invariants
+//! even where CI's dedicated `lint` job is skipped.
+
+use std::fs;
+use std::path::Path;
+
+use xtask::baseline::{classify, parse_baseline};
+use xtask::lint::lint_tree;
+use xtask::manifest::from_manifest;
+
+#[test]
+fn repo_sources_have_no_new_violations() {
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let manifest_text =
+        fs::read_to_string(repo.join("rust/lint-hotpaths.toml")).expect("manifest readable");
+    let cfg = from_manifest(&manifest_text).expect("manifest parses");
+    assert!(
+        cfg.hotpaths.contains("Network::step"),
+        "manifest lost the core hot path"
+    );
+
+    let viols = lint_tree(&repo.join("rust/src"), &cfg).expect("tree lints");
+    let baseline_text =
+        fs::read_to_string(repo.join("lint-baseline.json")).expect("baseline readable");
+    let baseline = parse_baseline(&baseline_text).expect("baseline parses");
+    let classified = classify(&viols, &baseline);
+
+    let fresh: Vec<String> = viols
+        .iter()
+        .zip(&classified.statuses)
+        .filter(|(_, s)| **s == xtask::baseline::Status::New)
+        .map(|(v, _)| format!("{}:{}:{} [{}] {}", v.file, v.line, v.col, v.rule, v.snippet))
+        .collect();
+    assert!(
+        fresh.is_empty(),
+        "new lint violations (fix, suppress with justification, or bless):\n{}",
+        fresh.join("\n")
+    );
+
+    // Every suppression in the tree must carry a justification after the
+    // rule slug — a bare marker is not an argument.
+    for v in viols.iter().filter(|v| v.suppressed) {
+        assert!(
+            !v.snippet.is_empty(),
+            "suppressed violation lost its snippet: {v:?}"
+        );
+    }
+}

@@ -1,0 +1,512 @@
+#!/usr/bin/env python3
+"""Bootstrap mirror of `cargo xtask lint`.
+
+This script re-implements the linter's lexer and rule passes (see
+rust/xtask/src/) so the committed lint-baseline.json could be generated in
+an environment without a Rust toolchain. It is NOT authoritative — the Rust
+implementation in rust/xtask is. If the two ever disagree, fix the Rust
+side and regenerate the baseline with `RESIPI_BLESS=1 cargo xtask lint`.
+
+Usage: python3 gen_baseline.py [--root rust/src]  (baseline JSON on stdout,
+diagnostics on stderr)
+"""
+
+import json
+import os
+import sys
+
+KEYWORDS = {
+    "let", "in", "as", "mut", "ref", "move", "return", "if", "else", "match",
+    "const", "static", "break", "continue", "where", "for", "while", "loop",
+    "impl", "fn", "pub", "use", "mod", "struct", "enum", "trait", "type",
+    "dyn", "unsafe", "crate", "super", "self", "Self", "box", "yield",
+    "async", "await", "become", "do", "macro", "union", "true", "false",
+}
+
+DENY_METHODS = {
+    "push", "push_back", "push_front", "insert", "collect", "to_vec",
+    "to_owned", "to_string", "clone", "extend", "extend_from_slice",
+    "append", "reserve", "reserve_exact", "resize", "split_off", "join",
+    "repeat", "concat",
+}
+
+PATH_DENY = {
+    ("Box", "new"), ("String", "from"), ("Vec", "with_capacity"),
+    ("String", "with_capacity"), ("Vec", "from"),
+}
+
+PANIC_MACROS = {"panic", "unreachable", "todo", "unimplemented"}
+
+
+def lex(text):
+    """Tokenize Rust source. Returns (tokens, comments).
+
+    tokens: list of (kind, text, line, col); kind in
+      {id, num, str, char, life, punct}. `::` is one punct; every other
+      punct is a single char. line/col are 1-based byte positions.
+    comments: dict line -> concatenated comment text (block comments are
+      recorded at their start line).
+    """
+    toks = []
+    comments = {}
+    b = text
+    n = len(b)
+    i = 0
+    line = 1
+    col = 1
+
+    def note_comment(at_line, s):
+        comments[at_line] = comments.get(at_line, "") + " " + s
+
+    def adv(k=1):
+        nonlocal i, line, col
+        for _ in range(k):
+            if i < n and b[i] == "\n":
+                line += 1
+                col = 1
+            else:
+                col += 1
+            i += 1
+
+    def string_body(quote):
+        # past opening quote; consume until unescaped close
+        while i < n:
+            c = b[i]
+            if c == "\\":
+                adv(2)
+            elif c == quote:
+                adv()
+                return
+            else:
+                adv()
+
+    def raw_string():
+        # at 'r' (or after b); consume r#*"..."#*
+        adv()  # r
+        hashes = 0
+        while i < n and b[i] == "#":
+            hashes += 1
+            adv()
+        if i < n and b[i] == '"':
+            adv()
+            closer = '"' + "#" * hashes
+            while i < n:
+                if b[i] == '"' and b[i:i + 1 + hashes] == closer:
+                    adv(1 + hashes)
+                    return
+                adv()
+
+    while i < n:
+        c = b[i]
+        if c in " \t\r\n":
+            adv()
+            continue
+        if c == "/" and b[i + 1:i + 2] == "/":
+            start_line = line
+            j = b.find("\n", i)
+            j = n if j == -1 else j
+            note_comment(start_line, b[i:j])
+            adv(j - i)
+            continue
+        if c == "/" and b[i + 1:i + 2] == "*":
+            start_line = line
+            start = i
+            depth = 0
+            while i < n:
+                if b[i:i + 2] == "/*":
+                    depth += 1
+                    adv(2)
+                elif b[i:i + 2] == "*/":
+                    depth -= 1
+                    adv(2)
+                    if depth == 0:
+                        break
+                else:
+                    adv()
+            note_comment(start_line, b[start:i])
+            continue
+        tl, tc = line, col
+        if c == "r" and (b[i + 1:i + 2] == '"' or (b[i + 1:i + 2] == "#" and _raw_ahead(b, i + 1))):
+            raw_string()
+            toks.append(("str", "", tl, tc))
+            continue
+        if c == "b" and b[i + 1:i + 2] == '"':
+            adv(2)
+            string_body('"')
+            toks.append(("str", "", tl, tc))
+            continue
+        if c == "b" and b[i + 1:i + 2] == "'":
+            adv(2)
+            string_body("'")
+            toks.append(("char", "", tl, tc))
+            continue
+        if c == "b" and b[i + 1:i + 2] == "r" and (b[i + 2:i + 3] == '"' or (b[i + 2:i + 3] == "#" and _raw_ahead(b, i + 2))):
+            adv()  # b
+            raw_string()
+            toks.append(("str", "", tl, tc))
+            continue
+        if c == '"':
+            adv()
+            string_body('"')
+            toks.append(("str", "", tl, tc))
+            continue
+        if c == "'":
+            nxt = b[i + 1:i + 2]
+            if (nxt.isalpha() or nxt == "_") and b[i + 2:i + 3] != "'":
+                adv()
+                start = i
+                while i < n and (b[i].isalnum() or b[i] == "_"):
+                    adv()
+                toks.append(("life", b[start:i], tl, tc))
+            else:
+                adv()
+                string_body("'")
+                toks.append(("char", "", tl, tc))
+            continue
+        if c.isalpha() or c == "_":
+            start = i
+            while i < n and (b[i].isalnum() or b[i] == "_"):
+                adv()
+            toks.append(("id", b[start:i], tl, tc))
+            continue
+        if c.isdigit():
+            start = i
+            while i < n:
+                ch = b[i]
+                if ch.isalnum() or ch == "_":
+                    adv()
+                elif ch == "." and b[i + 1:i + 2].isdigit():
+                    adv()
+                else:
+                    break
+            toks.append(("num", b[start:i], tl, tc))
+            continue
+        if c == ":" and b[i + 1:i + 2] == ":":
+            toks.append(("punct", "::", tl, tc))
+            adv(2)
+            continue
+        toks.append(("punct", c, tl, tc))
+        adv()
+    return toks, comments
+
+
+def _raw_ahead(b, j):
+    # at b[j] == '#': raw string only if #* then '"'
+    while j < len(b) and b[j] == "#":
+        j += 1
+    return j < len(b) and b[j] == '"'
+
+
+def match_brace(toks, k):
+    """k indexes a '{'; return index of its matching '}'."""
+    depth = 0
+    for j in range(k, len(toks)):
+        t = toks[j]
+        if t[0] == "punct" and t[1] == "{":
+            depth += 1
+        elif t[0] == "punct" and t[1] == "}":
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(toks) - 1
+
+
+def skip_angles(toks, k):
+    """k indexes a '<'; return index just past the matching '>'."""
+    depth = 0
+    j = k
+    while j < len(toks):
+        t = toks[j]
+        if t[0] == "punct" and t[1] == "<":
+            depth += 1
+        elif t[0] == "punct" and t[1] == ">":
+            prev = toks[j - 1]
+            if not (prev[0] == "punct" and prev[1] in ("-", "=")):
+                depth -= 1
+                if depth == 0:
+                    return j + 1
+        j += 1
+    return j
+
+
+def cfg_test_skips(toks):
+    """Boolean array: tokens inside #[cfg(test)] items (incl. the attr)."""
+    skipped = [False] * len(toks)
+    i = 0
+    while i < len(toks):
+        shape = [(t[0], t[1]) for t in toks[i:i + 7]]
+        if shape == [("punct", "#"), ("punct", "["), ("id", "cfg"),
+                     ("punct", "("), ("id", "test"), ("punct", ")"),
+                     ("punct", "]")]:
+            start = i
+            j = i + 7
+            # skip any further attributes
+            while (j < len(toks) and toks[j][0] == "punct" and toks[j][1] == "#"
+                   and j + 1 < len(toks) and toks[j + 1][1] == "["):
+                depth = 0
+                j += 1
+                while j < len(toks):
+                    if toks[j][1] == "[":
+                        depth += 1
+                    elif toks[j][1] == "]":
+                        depth -= 1
+                        if depth == 0:
+                            j += 1
+                            break
+                    j += 1
+            # find first '{' or ';' at () [] nesting 0
+            nest = 0
+            end = None
+            while j < len(toks):
+                t = toks[j]
+                if t[0] == "punct" and t[1] in ("(", "["):
+                    nest += 1
+                elif t[0] == "punct" and t[1] in (")", "]"):
+                    nest -= 1
+                elif t[0] == "punct" and t[1] == "{" and nest == 0:
+                    end = match_brace(toks, j)
+                    break
+                elif t[0] == "punct" and t[1] == ";" and nest == 0:
+                    end = j
+                    break
+                j += 1
+            if end is None:
+                end = len(toks) - 1
+            for k in range(start, end + 1):
+                skipped[k] = True
+            i = end + 1
+            continue
+        i += 1
+    return skipped
+
+
+def outline(toks, skipped):
+    """Find fn bodies: list of (qualname, body_start_idx, body_end_idx)."""
+    fns = []
+    impl_stack = []  # (type_name, depth_at_open)
+    depth = 0
+    i = 0
+    while i < len(toks):
+        if skipped[i]:
+            i += 1
+            continue
+        t = toks[i]
+        if t[0] == "punct" and t[1] == "{":
+            depth += 1
+        elif t[0] == "punct" and t[1] == "}":
+            depth -= 1
+            while impl_stack and impl_stack[-1][1] >= depth:
+                impl_stack.pop()
+        elif t[0] == "id" and t[1] == "impl":
+            j = i + 1
+            if j < len(toks) and toks[j][0] == "punct" and toks[j][1] == "<":
+                j = skip_angles(toks, j)
+            cur = []
+            while j < len(toks):
+                tj = toks[j]
+                if tj[0] == "punct" and tj[1] in ("{", ";"):
+                    break
+                if tj[0] == "id" and tj[1] == "for":
+                    cur = []
+                elif tj[0] == "id" and tj[1] == "where":
+                    break
+                elif tj[0] == "punct" and tj[1] == "<":
+                    j = skip_angles(toks, j)
+                    continue
+                elif tj[0] == "id":
+                    cur.append(tj[1])
+                j += 1
+            # advance to the '{' (or ';') so the main loop sees it
+            while j < len(toks) and not (toks[j][0] == "punct" and toks[j][1] in ("{", ";")):
+                j += 1
+            if j < len(toks) and toks[j][1] == "{" and cur:
+                impl_stack.append((cur[-1], depth))
+            i = j
+            continue
+        elif t[0] == "id" and t[1] == "fn":
+            if i + 1 < len(toks) and toks[i + 1][0] == "id":
+                name = toks[i + 1][1]
+                qual = (impl_stack[-1][0] + "::" + name) if impl_stack else name
+                k = i + 2
+                nest = 0
+                while k < len(toks):
+                    tk = toks[k]
+                    if tk[0] == "punct" and tk[1] in ("(", "["):
+                        nest += 1
+                    elif tk[0] == "punct" and tk[1] in (")", "]"):
+                        nest -= 1
+                    elif tk[0] == "punct" and tk[1] == "{" and nest == 0:
+                        break
+                    elif tk[0] == "punct" and tk[1] == ";" and nest == 0:
+                        break
+                    k += 1
+                if k < len(toks) and toks[k][1] == "{":
+                    fns.append((qual, k, match_brace(toks, k)))
+        i += 1
+    return fns
+
+
+RULES = ("no-random-state", "no-wall-clock", "hot-path-no-alloc",
+         "no-panic-in-parsers", "checked-narrowing")
+
+
+def has_allow_marker(text, rule):
+    idx = 0
+    while True:
+        at = text.find("allow(resipi::", idx)
+        if at == -1:
+            return False
+        end = text.find(")", at)
+        if end == -1:
+            return False
+        inner = text[at + len("allow("):end]
+        for part in inner.split(","):
+            slug = part.strip().replace("resipi::", "").replace("_", "-")
+            if slug == rule or slug == "all":
+                return True
+        idx = end + 1
+
+
+def suppressed(comments, lines, rule, line):
+    # A marker suppresses on its own line, on the line below it, or from
+    # anywhere inside a contiguous block of comment-only lines directly
+    # above the violation (justifications are encouraged to span lines).
+    if has_allow_marker(comments.get(line, ""), rule):
+        return True
+    l = line - 1
+    while l >= 1 and l in comments:
+        if has_allow_marker(comments[l], rule):
+            return True
+        src = lines[l - 1].strip() if l - 1 < len(lines) else ""
+        if not (src.startswith("//") or src.startswith("/*") or src.startswith("*")):
+            break
+        l -= 1
+    return False
+
+
+def lint_file(path, rel, cfgd):
+    text = open(path, encoding="utf-8").read()
+    lines = text.split("\n")
+    toks, comments = lex(text)
+    skipped = cfg_test_skips(toks)
+    fns = outline(toks, skipped)
+    viols = []
+
+    def emit(rule, tok):
+        line, col = tok[2], tok[3]
+        snippet = lines[line - 1].strip() if line - 1 < len(lines) else ""
+        status = "suppressed" if suppressed(comments, lines, rule, line) else "open"
+        viols.append({"rule": rule, "file": rel, "line": line, "col": col,
+                      "snippet": snippet, "status": status})
+
+    for idx, t in enumerate(toks):
+        if skipped[idx]:
+            continue
+        kind, txt = t[0], t[1]
+        nxt = toks[idx + 1] if idx + 1 < len(toks) else ("punct", "", 0, 0)
+        nx2 = toks[idx + 2] if idx + 2 < len(toks) else ("punct", "", 0, 0)
+        if kind == "id" and txt in ("HashMap", "HashSet") and rel not in cfgd["r1_allow"]:
+            emit("no-random-state", t)
+        if kind == "id" and txt in ("Instant", "SystemTime") and rel not in cfgd["r2_allow"]:
+            emit("no-wall-clock", t)
+        if rel in cfgd["r5_files"] and kind == "id" and txt == "as" \
+                and nxt[0] == "id" and nxt[1] in ("u8", "u16", "u32"):
+            emit("checked-narrowing", t)
+        if rel in cfgd["r4_files"]:
+            if kind == "punct" and txt == "." and nxt[0] == "id" \
+                    and nxt[1] in ("unwrap", "expect") and nx2[1] == "(":
+                emit("no-panic-in-parsers", nxt)
+            if kind == "id" and txt in PANIC_MACROS and nxt[0] == "punct" and nxt[1] == "!":
+                emit("no-panic-in-parsers", t)
+            if kind == "punct" and txt == "[" and idx > 0:
+                prev = toks[idx - 1]
+                postfix = (prev[0] == "punct" and prev[1] in (")", "]", "?")) or \
+                          (prev[0] == "id" and prev[1] not in KEYWORDS)
+                if postfix:
+                    emit("no-panic-in-parsers", t)
+
+    for qual, b0, b1 in fns:
+        if qual not in cfgd["hotpaths"]:
+            continue
+        for idx in range(b0, b1 + 1):
+            if skipped[idx]:
+                continue
+            t = toks[idx]
+            nxt = toks[idx + 1] if idx + 1 < len(toks) else ("punct", "", 0, 0)
+            nx2 = toks[idx + 2] if idx + 2 < len(toks) else ("punct", "", 0, 0)
+            nx3 = toks[idx + 3] if idx + 3 < len(toks) else ("punct", "", 0, 0)
+            if t[0] == "punct" and t[1] == "." and nxt[0] == "id" \
+                    and nxt[1] in DENY_METHODS and nx2[1] == "(":
+                emit("hot-path-no-alloc", nxt)
+            if t[0] == "id" and t[1] in ("format", "vec") and nxt[0] == "punct" and nxt[1] == "!":
+                emit("hot-path-no-alloc", t)
+            if t[0] == "id" and nxt[1] == "::" and nx2[0] == "id" \
+                    and (t[1], nx2[1]) in PATH_DENY and nx3[1] == "(":
+                emit("hot-path-no-alloc", t)
+
+    return viols
+
+
+def lint_tree(root, cfgd):
+    out = []
+    files = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for f in filenames:
+            if f.endswith(".rs"):
+                full = os.path.join(dirpath, f)
+                files.append((os.path.relpath(full, root).replace(os.sep, "/"), full))
+    files.sort()
+    for rel, full in files:
+        out.extend(lint_file(full, rel, cfgd))
+    out.sort(key=lambda v: (v["file"], v["line"], v["col"], v["rule"]))
+    return out
+
+
+REPO_CFG = {
+    "hotpaths": {
+        "Network::step", "Network::epoch_boundary",
+        "RouteTable::step", "RouteTable::route_packet",
+        "UniformTraffic::generate", "TransposeTraffic::generate",
+        "HotspotTraffic::generate", "ComposedTraffic::generate",
+        "BinTraceReader::generate", "BinTraceReader::next_record",
+        "Photonic::arrivals_into",
+    },
+    "r1_allow": set(),
+    "r2_allow": {"util/bench.rs", "experiments/perf.rs"},
+    "r4_files": {"config/parser.rs", "util/io.rs", "traffic/tracebin.rs",
+                 "traffic/spec.rs", "config/mod.rs"},
+    "r5_files": {"routing/mod.rs", "coordinator/gateway_select.rs"},
+}
+
+
+def main():
+    root = "rust/src"
+    args = sys.argv[1:]
+    if "--root" in args:
+        root = args[args.index("--root") + 1]
+    viols = lint_tree(root, REPO_CFG)
+    open_v = [v for v in viols if v["status"] == "open"]
+    sup_v = [v for v in viols if v["status"] == "suppressed"]
+    print(f"{len(viols)} violations ({len(open_v)} open, {len(sup_v)} suppressed)",
+          file=sys.stderr)
+    for v in viols:
+        print(f"{v['file']}:{v['line']}:{v['col']} {v['rule']} [{v['status']}] {v['snippet']}",
+              file=sys.stderr)
+    # Baseline = open violations, keyed by (rule, file, snippet) with counts.
+    counts = {}
+    for v in open_v:
+        key = (v["file"], v["rule"], v["snippet"])
+        counts[key] = counts.get(key, 0) + 1
+    entries = [{"rule": r, "file": f, "snippet": s, "count": c}
+               for (f, r, s), c in sorted(counts.items())]
+    baseline = {
+        "version": 1,
+        "note": "Grandfathered lint violations; new violations fail `cargo xtask "
+                "lint`. Shrink by fixing sites and re-blessing with RESIPI_BLESS=1.",
+        "entries": entries,
+    }
+    print(json.dumps(baseline, indent=2))
+
+
+if __name__ == "__main__":
+    main()
