@@ -7,6 +7,7 @@
 
 pub mod parser;
 
+use crate::coordinator::policy::{PolicyKind, PolicySpec};
 use crate::error::{Error, Result};
 use crate::topology::TopologyKind;
 use crate::traffic::TrafficSpec;
@@ -232,6 +233,13 @@ pub struct Config {
     /// `traffic.*` config key — makes the run use
     /// [`TrafficSpec::build`].
     pub traffic: Option<TrafficSpec>,
+    /// Reconfiguration-policy selection (the policy registry). `None`
+    /// means the architecture keeps its historical default control plane
+    /// (Resipi → `threshold`, Prowaves → `prowaves`, everything else →
+    /// `static`); `Some` — set by [`Config::set_policy`], `--policy`, or
+    /// any `policy.*` config key — makes the network consult
+    /// [`PolicySpec::build`]'s boxed policy instead.
+    pub policy: Option<PolicySpec>,
 }
 
 impl Config {
@@ -311,6 +319,7 @@ impl Config {
                 seed: 0xC0FFEE,
             },
             traffic: None,
+            policy: None,
         }
     }
 
@@ -345,6 +354,12 @@ impl Config {
         self.traffic = Some(spec);
     }
 
+    /// Select the reconfiguration policy (see [`PolicySpec`]). Follow with
+    /// [`Config::validate`], which checks the spec's parameters.
+    pub fn set_policy(&mut self, spec: PolicySpec) {
+        self.policy = Some(spec);
+    }
+
     /// Apply overrides from a parsed config file. Unknown keys are rejected
     /// so typos fail loudly.
     pub fn apply_overrides(&mut self, map: &ConfigMap) -> Result<()> {
@@ -353,6 +368,13 @@ impl Config {
                 // Any traffic.* key activates the traffic registry; fields
                 // not set keep their TrafficSpec defaults.
                 let spec = self.traffic.get_or_insert_with(TrafficSpec::default);
+                spec.apply_key(rest, map, key)?;
+                continue;
+            }
+            if let Some(rest) = key.strip_prefix("policy.") {
+                // Any policy.* key activates the policy registry; fields
+                // not set keep their PolicySpec defaults.
+                let spec = self.policy.get_or_insert_with(PolicySpec::default);
                 spec.apply_key(rest, map, key)?;
                 continue;
             }
@@ -417,6 +439,37 @@ impl Config {
                     self.controller.no_hysteresis = map
                         .get_bool(key)
                         .ok_or_else(|| Error::config(format!("{key} must be a bool")))?
+                }
+                // Deprecated: the raw mode.* booleans predate the policy
+                // registry and are kept as back-compat aliases mapping onto
+                // policy kinds (see `resipi run --help` for the note).
+                // Prefer `policy.kind`.
+                "mode.dynamic_gateways" => {
+                    let on = map
+                        .get_bool(key)
+                        .ok_or_else(|| Error::config(format!("{key} must be a bool")))?;
+                    let spec = self
+                        .policy
+                        .get_or_insert_with(|| PolicySpec::new(PolicyKind::Static));
+                    if on {
+                        spec.kind = PolicyKind::Threshold;
+                    } else if matches!(spec.kind, PolicyKind::Threshold | PolicyKind::Predictive)
+                    {
+                        spec.kind = PolicyKind::Static;
+                    }
+                }
+                "mode.dynamic_lambda" => {
+                    let on = map
+                        .get_bool(key)
+                        .ok_or_else(|| Error::config(format!("{key} must be a bool")))?;
+                    let spec = self
+                        .policy
+                        .get_or_insert_with(|| PolicySpec::new(PolicyKind::Static));
+                    if on {
+                        spec.kind = PolicyKind::Prowaves;
+                    } else if spec.kind == PolicyKind::Prowaves {
+                        spec.kind = PolicyKind::Static;
+                    }
                 }
                 "power.laser_mw_per_wavelength" => {
                     self.power.laser_mw_per_wavelength = req_f64(map, key)?
@@ -566,6 +619,9 @@ impl Config {
         }
         if let Some(spec) = &self.traffic {
             spec.validate(t.total_cores())?;
+        }
+        if let Some(spec) = &self.policy {
+            spec.validate()?;
         }
         Ok(())
     }
@@ -874,6 +930,78 @@ mod tests {
         c.topology.chiplets = 3;
         c.set_traffic(TrafficSpec::new(TrafficKind::BitReversal, 0.01));
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn policy_overrides_from_file_text() {
+        // Any policy.* key activates the registry with defaults filled in.
+        let mut c = Config::table1(Architecture::Resipi);
+        assert!(c.policy.is_none());
+        let map =
+            ConfigMap::parse("[policy]\nkind = \"predictive\"\newma_alpha = 0.6\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        let spec = c.policy.as_ref().expect("policy configured");
+        assert_eq!(spec.kind, PolicyKind::Predictive);
+        assert_eq!(spec.ewma_alpha, 0.6);
+        c.validate().unwrap();
+
+        // Typos under policy.* fail loudly.
+        let mut c = Config::table1(Architecture::Resipi);
+        let bad = ConfigMap::parse("[policy]\nkinds = \"static\"\n").unwrap();
+        let err = c.apply_overrides(&bad).unwrap_err();
+        assert!(err.to_string().contains("policy.kinds"), "got: {err}");
+
+        // Invalid parameters are caught by validate().
+        let mut c = Config::table1(Architecture::Resipi);
+        let map = ConfigMap::parse("[policy]\newma_alpha = 1.5\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn set_policy_roundtrips_through_validate() {
+        let mut c = Config::table1(Architecture::Resipi);
+        c.set_policy(PolicySpec::parse("predictive:0.5:2").unwrap());
+        c.validate().unwrap();
+        assert_eq!(c.policy.as_ref().unwrap().trend_gain, 2.0);
+
+        let mut c = Config::table1(Architecture::Resipi);
+        let mut spec = PolicySpec::new(PolicyKind::Predictive);
+        spec.trend_gain = -1.0;
+        c.set_policy(spec);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn deprecated_mode_flags_alias_policy_kinds() {
+        // mode.dynamic_gateways = true maps onto the threshold policy.
+        let mut c = Config::table1(Architecture::ResipiAllOn);
+        let map = ConfigMap::parse("[mode]\ndynamic_gateways = true\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert_eq!(c.policy.as_ref().unwrap().kind, PolicyKind::Threshold);
+
+        // ... and = false forces the gateway-scaling policies off.
+        let mut c = Config::table1(Architecture::Resipi);
+        c.set_policy(PolicySpec::new(PolicyKind::Predictive));
+        let map = ConfigMap::parse("[mode]\ndynamic_gateways = false\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert_eq!(c.policy.as_ref().unwrap().kind, PolicyKind::Static);
+
+        // mode.dynamic_lambda maps onto prowaves, and back off to static.
+        let mut c = Config::table1(Architecture::Prowaves);
+        let map = ConfigMap::parse("[mode]\ndynamic_lambda = true\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert_eq!(c.policy.as_ref().unwrap().kind, PolicyKind::Prowaves);
+        let map = ConfigMap::parse("[mode]\ndynamic_lambda = false\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert_eq!(c.policy.as_ref().unwrap().kind, PolicyKind::Static);
+
+        // dynamic_lambda = false leaves a threshold selection alone.
+        let mut c = Config::table1(Architecture::Resipi);
+        c.set_policy(PolicySpec::new(PolicyKind::Threshold));
+        let map = ConfigMap::parse("[mode]\ndynamic_lambda = false\n").unwrap();
+        c.apply_overrides(&map).unwrap();
+        assert_eq!(c.policy.as_ref().unwrap().kind, PolicyKind::Threshold);
     }
 
     #[test]

@@ -7,16 +7,24 @@
 //! * [`gateway_select`] — the Fig. 8 / §3.4 adaptive router→gateway
 //!   vicinity maps used for both source- and destination-side selection;
 //! * [`prowaves`] — the PROWAVES [16] wavelength-adaptation baseline
-//!   controller used throughout the evaluation.
+//!   controller used throughout the evaluation;
+//! * [`policy`] — the pluggable [`policy::ReconfigPolicy`] trait the
+//!   simulator consults at every epoch boundary, plus the built-in
+//!   `static`/`threshold`/`prowaves`/`predictive` implementations.
 
 pub mod gateway_select;
 pub mod inc;
 pub mod lgc;
+pub mod policy;
 pub mod prowaves;
 pub mod thresholds;
 
 pub use gateway_select::VicinityMap;
 pub use inc::{Inc, Reconfig};
 pub use lgc::{Lgc, LgcAction};
+pub use policy::{
+    EpochObservation, GatewayOp, PolicyContext, PolicyDecision, PolicyKind, PolicySpec,
+    ReconfigPolicy,
+};
 pub use prowaves::ProwavesCtrl;
 pub use thresholds::{average_load, decide, t_n, t_p, Decision};

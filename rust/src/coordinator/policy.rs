@@ -1,0 +1,847 @@
+//! Pluggable epoch-boundary reconfiguration policies.
+//!
+//! [`ReconfigPolicy`] lifts the control plane that used to be inlined in
+//! `Network::epoch_boundary` into a trait: at every epoch boundary the
+//! simulator hands the policy one [`EpochObservation`] — per-gateway
+//! packet counts, per-chiplet Eq. 5 loads, and the epoch length, all
+//! borrowed from the network's zero-alloc scratch buffers — and applies
+//! the returned [`PolicyDecision`] (gateway activate/drain ops plus
+//! per-gateway λ targets). Every decision is charged through the existing
+//! `Inc`/`Pcmc` reconfiguration path, so PCM retune latency and energy
+//! stay honest no matter which policy made the call.
+//!
+//! [`PolicyKind`] enumerates the catalog and [`PolicySpec`] mirrors
+//! [`crate::traffic::TrafficSpec`]: it parses a compact CLI spec string
+//! (`resipi run --policy predictive:0.45`), absorbs `policy.*` config
+//! keys, validates, and builds the boxed policy. The implementations:
+//!
+//! | kind         | behavior                                              |
+//! |--------------|-------------------------------------------------------|
+//! | `static`     | no reconfiguration (the legacy `dynamic_*=false` path)|
+//! | `threshold`  | paper baseline: per-chiplet LGC hysteresis (Eq. 5–7)  |
+//! | `prowaves`   | PROWAVES per-gateway wavelength scaling               |
+//! | `predictive` | D3NOC-style EWMA/linear-trend forecast of next-epoch  |
+//! |              | load, acting one epoch early (arXiv 1708.06721)       |
+
+use crate::config::parser::ConfigMap;
+use crate::error::{Error, Result};
+
+use super::lgc::{Lgc, LgcAction};
+use super::prowaves::ProwavesCtrl;
+use super::thresholds::{decide, Decision};
+
+/// Per-epoch snapshot handed to [`ReconfigPolicy::on_epoch`].
+///
+/// The two slices are borrowed from the network's persistent scratch
+/// buffers, so observing an epoch allocates nothing.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochObservation<'a> {
+    /// Packets injected this epoch per gateway slot, chiplet-major
+    /// (`chiplet * gw_per_chiplet + slot`) with memory gateways at the
+    /// tail. Every slot is reported — including a slot that is still
+    /// draining — because gateway-scaling automatons keep a draining slot
+    /// in their own active mask until its drain is confirmed.
+    pub gateway_packets: &'a [usize],
+    /// Per-chiplet Eq. 5 average load over the chiplet's *fully active*
+    /// gateways (a draining gateway no longer accepts packets, so its
+    /// residual count is excluded from the load metric).
+    pub chiplet_loads: &'a [f64],
+    /// Cycles in the epoch being closed.
+    pub epoch_cycles: u64,
+    /// Gateway slots per chiplet (the LGC's `g_max`).
+    pub gw_per_chiplet: usize,
+}
+
+/// One gateway state change requested by a policy, applied by the
+/// simulator in decision order (Fig. 7: an activation raises the laser
+/// via `Inc` before traffic lands; a drain stops new assignments
+/// immediately and steps the laser down once the drain completes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatewayOp {
+    /// Bring the chiplet-local `slot` up.
+    Activate { chiplet: usize, slot: usize },
+    /// Begin draining the chiplet-local `slot`.
+    Drain { chiplet: usize, slot: usize },
+}
+
+/// What a policy wants changed going into the next epoch. Slices borrow
+/// the policy's pre-sized internal buffers (zero-alloc contract).
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyDecision<'a> {
+    /// Gateway activations/drains, in application order.
+    pub gateway_ops: &'a [GatewayOp],
+    /// New per-gateway wavelength targets (every slot), or `None` to
+    /// leave λ provisioning untouched.
+    pub lambda_targets: Option<&'a [usize]>,
+}
+
+impl<'a> PolicyDecision<'a> {
+    /// The empty decision: change nothing this epoch.
+    pub fn hold() -> Self {
+        Self {
+            gateway_ops: &[],
+            lambda_targets: None,
+        }
+    }
+}
+
+/// Compact label for what a boundary decision did (epoch telemetry; see
+/// `Metrics::close_epoch`).
+pub fn decision_label(activations: usize, drains: usize, retuned: bool) -> &'static str {
+    match (activations > 0, drains > 0, retuned) {
+        (false, false, false) => "hold",
+        (true, false, false) => "activate",
+        (false, true, false) => "drain",
+        (false, false, true) => "retune",
+        _ => "mixed",
+    }
+}
+
+/// The epoch-boundary control plane as a trait.
+///
+/// The simulator consults exactly one boxed policy: [`Self::on_epoch`] at
+/// every epoch boundary, and the drain-tracking pair
+/// ([`Self::draining_slot`] / [`Self::confirm_inactive`]) every cycle
+/// while a drain is in flight. Implementations must not allocate in
+/// `on_epoch` (enforced for the built-in policies by `cargo xtask lint`).
+pub trait ReconfigPolicy {
+    /// Which catalog entry this is (reports, telemetry).
+    fn kind(&self) -> PolicyKind;
+
+    /// True if the policy ever activates or drains gateways. The
+    /// per-cycle drain scan short-circuits when this is false.
+    fn reconfigures_gateways(&self) -> bool {
+        false
+    }
+
+    /// Per-gateway wavelength provision at construction, if the policy
+    /// owns λ (PROWAVES starts every gateway at the ceiling). `None`
+    /// keeps the config's static `photonics.wavelengths`.
+    fn initial_lambdas(&self) -> Option<&[usize]> {
+        None
+    }
+
+    /// The epoch-boundary contract: observe the closing epoch, decide
+    /// what changes going into the next one. The simulator applies the
+    /// returned ops in order and charges them through `Inc`.
+    fn on_epoch(&mut self, obs: &EpochObservation<'_>) -> PolicyDecision<'_>;
+
+    /// The slot currently draining on `chiplet`, if any. The simulator
+    /// polls this every cycle and calls [`Self::confirm_inactive`] once
+    /// the gateway empties (Fig. 7: laser power drops *after* the drain).
+    fn draining_slot(&self, _chiplet: usize) -> Option<usize> {
+        None
+    }
+
+    /// The drain on `(chiplet, slot)` completed; retire the slot.
+    fn confirm_inactive(&mut self, _chiplet: usize, _slot: usize) {}
+}
+
+/// Every reconfiguration policy in the catalog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// No run-time reconfiguration (the legacy `dynamic_*=false` path).
+    Static,
+    /// Paper baseline: per-chiplet LGC threshold hysteresis (Eq. 5–7).
+    Threshold,
+    /// PROWAVES per-gateway wavelength scaling.
+    Prowaves,
+    /// EWMA/linear-trend load forecast acting one epoch early.
+    Predictive,
+}
+
+impl PolicyKind {
+    /// Every kind, all constructible from defaults alone (tests, catalog
+    /// tables, campaign axes).
+    pub const ALL: [PolicyKind; 4] = [
+        PolicyKind::Static,
+        PolicyKind::Threshold,
+        PolicyKind::Prowaves,
+        PolicyKind::Predictive,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Static => "static",
+            PolicyKind::Threshold => "threshold",
+            PolicyKind::Prowaves => "prowaves",
+            PolicyKind::Predictive => "predictive",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "static" | "none" => Ok(PolicyKind::Static),
+            "threshold" | "lgc" => Ok(PolicyKind::Threshold),
+            "prowaves" => Ok(PolicyKind::Prowaves),
+            "predictive" | "ewma" => Ok(PolicyKind::Predictive),
+            other => Err(Error::config(format!(
+                "unknown policy kind {other:?} (expected static, threshold, prowaves, \
+                 predictive)"
+            ))),
+        }
+    }
+}
+
+/// A fully parameterized policy configuration.
+///
+/// Fields irrelevant to `kind` are ignored (but kept, so an axis sweep
+/// can switch kinds without losing parameters). Every kind is
+/// constructible from `policy.kind` alone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    pub kind: PolicyKind,
+    /// Predictive: EWMA smoothing factor α in `(0, 1]` (1 = no memory).
+    pub ewma_alpha: f64,
+    /// Predictive: gain on the linear trend term (0 = pure EWMA).
+    pub trend_gain: f64,
+}
+
+impl Default for PolicySpec {
+    fn default() -> Self {
+        Self {
+            // The paper's headline mechanism (and the Resipi arch
+            // default). Architectures without dynamic gateways default to
+            // `static` at the network layer instead.
+            kind: PolicyKind::Threshold,
+            ewma_alpha: 0.45,
+            trend_gain: 1.0,
+        }
+    }
+}
+
+impl PolicySpec {
+    /// A spec of the given kind, other parameters at their defaults.
+    pub fn new(kind: PolicyKind) -> Self {
+        Self {
+            kind,
+            ..Self::default()
+        }
+    }
+
+    /// Parse a compact CLI spec string. Grammar (fields after the kind
+    /// are optional, position-dependent, mirroring `--traffic`):
+    ///
+    /// ```text
+    /// static | threshold | prowaves
+    /// predictive [:ewma_alpha [:trend_gain]]
+    /// ```
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut parts = text.split(':');
+        let kind = PolicyKind::from_name(parts.next().unwrap_or_default())?;
+        let mut spec = Self::new(kind);
+        if kind == PolicyKind::Predictive {
+            if let Some(a) = parts.next() {
+                spec.ewma_alpha = parse_num(a, "ewma_alpha")?;
+            }
+            if let Some(g) = parts.next() {
+                spec.trend_gain = parse_num(g, "trend_gain")?;
+            }
+        }
+        if let Some(extra) = parts.next() {
+            return Err(Error::config(format!(
+                "trailing field {extra:?} in policy spec {text:?}"
+            )));
+        }
+        Ok(spec)
+    }
+
+    /// Canonical spec string: `parse(spec_string())` round-trips, and the
+    /// campaign engine uses it as the policy component of scenario names.
+    pub fn spec_string(&self) -> String {
+        match self.kind {
+            PolicyKind::Predictive => {
+                format!("{}:{}:{}", self.kind.name(), self.ewma_alpha, self.trend_gain)
+            }
+            _ => self.kind.name().to_string(),
+        }
+    }
+
+    /// Absorb one `policy.*` config-file key (`key` is the part after the
+    /// `policy.` prefix). Unknown keys are rejected so typos fail loudly.
+    pub(crate) fn apply_key(&mut self, key: &str, map: &ConfigMap, full_key: &str) -> Result<()> {
+        match key {
+            "kind" => {
+                let name = map
+                    .get_str(full_key)
+                    .ok_or_else(|| Error::config(format!("{full_key} must be a string")))?;
+                self.kind = PolicyKind::from_name(name)?;
+            }
+            "ewma_alpha" => self.ewma_alpha = req_f64(map, full_key)?,
+            "trend_gain" => self.trend_gain = req_f64(map, full_key)?,
+            other => {
+                return Err(Error::config(format!(
+                    "unknown config key \"policy.{other}\""
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    /// Static validation. Called by `Config::validate` and again by
+    /// [`Self::build`].
+    pub fn validate(&self) -> Result<()> {
+        if !(self.ewma_alpha.is_finite() && self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            return Err(Error::config(format!(
+                "policy.ewma_alpha {} must be a finite smoothing factor in (0, 1]",
+                self.ewma_alpha
+            )));
+        }
+        if !(self.trend_gain.is_finite() && (0.0..=4.0).contains(&self.trend_gain)) {
+            return Err(Error::config(format!(
+                "policy.trend_gain {} must be a finite trend gain in [0, 4]",
+                self.trend_gain
+            )));
+        }
+        Ok(())
+    }
+
+    /// Validate and construct the boxed policy for a network described by
+    /// `ctx`.
+    pub fn build(&self, ctx: &PolicyContext) -> Result<Box<dyn ReconfigPolicy>> {
+        self.validate()?;
+        if ctx.gw_per_chiplet == 0 || ctx.initial_g == 0 || ctx.initial_g > ctx.gw_per_chiplet {
+            return Err(Error::config(format!(
+                "policy context wants {} of {} gateway slots initially active",
+                ctx.initial_g, ctx.gw_per_chiplet
+            )));
+        }
+        Ok(match self.kind {
+            PolicyKind::Static => Box::new(StaticPolicy),
+            PolicyKind::Threshold => Box::new(ThresholdPolicy::new(ctx)),
+            PolicyKind::Prowaves => {
+                if ctx.max_wavelengths == 0 {
+                    return Err(Error::config(
+                        "prowaves policy needs photonics.max_wavelengths >= 1",
+                    ));
+                }
+                if !(ctx.prowaves_lambda_load.is_finite() && ctx.prowaves_lambda_load > 0.0) {
+                    return Err(Error::config(format!(
+                        "prowaves policy needs a positive controller.prowaves_lambda_load, \
+                         got {}",
+                        ctx.prowaves_lambda_load
+                    )));
+                }
+                Box::new(ProwavesPolicy::new(ctx))
+            }
+            PolicyKind::Predictive => Box::new(PredictivePolicy::new(ctx, self)),
+        })
+    }
+}
+
+/// Construction-time facts [`PolicySpec::build`] needs from the network
+/// (geometry plus the controller parameters the legacy coordinator read
+/// straight from the config).
+#[derive(Debug, Clone)]
+pub struct PolicyContext {
+    /// Chiplet count.
+    pub chiplets: usize,
+    /// Gateway slots per chiplet (the LGC's `g_max`).
+    pub gw_per_chiplet: usize,
+    /// Total gateway count, memory gateways included.
+    pub gateways: usize,
+    /// Gateways initially active per chiplet.
+    pub initial_g: usize,
+    /// Eq. 5–7 threshold parameter `L_M` (packets/gateway/cycle).
+    pub l_m: f64,
+    /// Disable LGC hysteresis (debug knob; threshold policy only).
+    pub no_hysteresis: bool,
+    /// PROWAVES: per-gateway wavelength ceiling.
+    pub max_wavelengths: usize,
+    /// PROWAVES: per-wavelength load set-point ρ.
+    pub prowaves_lambda_load: f64,
+}
+
+/// `static`: never reconfigures anything.
+pub struct StaticPolicy;
+
+impl ReconfigPolicy for StaticPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Static
+    }
+
+    fn on_epoch(&mut self, _obs: &EpochObservation<'_>) -> PolicyDecision<'_> {
+        PolicyDecision::hold()
+    }
+}
+
+/// `threshold`: the paper's LGC baseline — one [`Lgc`] automaton per
+/// chiplet, each seeing its own raw per-slot packet counts and applying
+/// the Eq. 5–7 hysteresis internally.
+pub struct ThresholdPolicy {
+    lgcs: Vec<Lgc>,
+    gw_per_chiplet: usize,
+    ops: Vec<GatewayOp>,
+}
+
+impl ThresholdPolicy {
+    fn new(ctx: &PolicyContext) -> Self {
+        let lgcs = (0..ctx.chiplets)
+            .map(|c| {
+                let lgc = Lgc::new(c, ctx.gw_per_chiplet, ctx.l_m, ctx.initial_g);
+                if ctx.no_hysteresis {
+                    lgc.with_no_hysteresis()
+                } else {
+                    lgc
+                }
+            })
+            .collect();
+        Self {
+            lgcs,
+            gw_per_chiplet: ctx.gw_per_chiplet,
+            ops: Vec::with_capacity(ctx.chiplets),
+        }
+    }
+}
+
+impl ReconfigPolicy for ThresholdPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Threshold
+    }
+
+    fn reconfigures_gateways(&self) -> bool {
+        true
+    }
+
+    fn on_epoch(&mut self, obs: &EpochObservation<'_>) -> PolicyDecision<'_> {
+        self.ops.clear();
+        for (c, lgc) in self.lgcs.iter_mut().enumerate() {
+            let lo = c * self.gw_per_chiplet;
+            let Some(slots) = obs.gateway_packets.get(lo..lo + self.gw_per_chiplet) else {
+                continue;
+            };
+            match lgc.epoch_update(slots, obs.epoch_cycles) {
+                LgcAction::Activate(slot) => {
+                    // allow(resipi::hot-path-no-alloc): `ops` capacity is
+                    // reserved to one op per chiplet at construction and
+                    // each LGC emits at most one action per epoch.
+                    self.ops.push(GatewayOp::Activate { chiplet: c, slot });
+                }
+                LgcAction::Drain(slot) => {
+                    // allow(resipi::hot-path-no-alloc): see above — `ops`
+                    // never outgrows its construction-time capacity.
+                    self.ops.push(GatewayOp::Drain { chiplet: c, slot });
+                }
+                LgcAction::Hold => {}
+            }
+        }
+        PolicyDecision {
+            gateway_ops: &self.ops,
+            lambda_targets: None,
+        }
+    }
+
+    fn draining_slot(&self, chiplet: usize) -> Option<usize> {
+        self.lgcs.get(chiplet).and_then(Lgc::draining_slot)
+    }
+
+    fn confirm_inactive(&mut self, chiplet: usize, slot: usize) {
+        if let Some(lgc) = self.lgcs.get_mut(chiplet) {
+            lgc.confirm_inactive(slot);
+        }
+    }
+}
+
+/// `prowaves`: wavelength scaling via [`ProwavesCtrl`]; gateways stay
+/// fixed, λ provisioning follows the measured per-gateway load.
+pub struct ProwavesPolicy {
+    ctrl: ProwavesCtrl,
+}
+
+impl ProwavesPolicy {
+    fn new(ctx: &PolicyContext) -> Self {
+        Self {
+            ctrl: ProwavesCtrl::new(ctx.gateways, ctx.max_wavelengths, ctx.prowaves_lambda_load),
+        }
+    }
+}
+
+impl ReconfigPolicy for ProwavesPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Prowaves
+    }
+
+    fn initial_lambdas(&self) -> Option<&[usize]> {
+        Some(self.ctrl.lambdas())
+    }
+
+    fn on_epoch(&mut self, obs: &EpochObservation<'_>) -> PolicyDecision<'_> {
+        if self.ctrl.epoch_update(obs.gateway_packets, obs.epoch_cycles) {
+            PolicyDecision {
+                gateway_ops: &[],
+                lambda_targets: Some(self.ctrl.lambdas()),
+            }
+        } else {
+            PolicyDecision::hold()
+        }
+    }
+}
+
+/// Per-chiplet forecasting state of the predictive policy.
+struct PredictCell {
+    /// The policy's own target mask — a draining slot stays `true` until
+    /// its drain is confirmed, mirroring the LGC's semantics.
+    active: Vec<bool>,
+    draining: Option<usize>,
+    ewma: f64,
+    prev_ewma: f64,
+    primed: bool,
+}
+
+/// `predictive`: D3NOC-style data-driven gateway scaling. Each chiplet
+/// keeps an EWMA of its Eq. 5 load, extrapolates one epoch ahead with a
+/// linear trend term, and feeds the *forecast* into the same `T_P`/`T_N`
+/// hysteresis the LGC uses — so a rising load activates a gateway one
+/// epoch before the threshold baseline reacts.
+pub struct PredictivePolicy {
+    l_m: f64,
+    alpha: f64,
+    trend_gain: f64,
+    g_max: usize,
+    cells: Vec<PredictCell>,
+    ops: Vec<GatewayOp>,
+}
+
+impl PredictivePolicy {
+    fn new(ctx: &PolicyContext, spec: &PolicySpec) -> Self {
+        let cells = (0..ctx.chiplets)
+            .map(|_| PredictCell {
+                active: (0..ctx.gw_per_chiplet).map(|k| k < ctx.initial_g).collect(),
+                draining: None,
+                ewma: 0.0,
+                prev_ewma: 0.0,
+                primed: false,
+            })
+            .collect();
+        Self {
+            l_m: ctx.l_m,
+            alpha: spec.ewma_alpha,
+            trend_gain: spec.trend_gain,
+            g_max: ctx.gw_per_chiplet,
+            cells,
+            ops: Vec::with_capacity(ctx.chiplets),
+        }
+    }
+}
+
+impl ReconfigPolicy for PredictivePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Predictive
+    }
+
+    fn reconfigures_gateways(&self) -> bool {
+        true
+    }
+
+    fn on_epoch(&mut self, obs: &EpochObservation<'_>) -> PolicyDecision<'_> {
+        self.ops.clear();
+        for (c, cell) in self.cells.iter_mut().enumerate() {
+            let load = obs.chiplet_loads.get(c).copied().unwrap_or(0.0);
+            // The forecast keeps learning even while a drain is in
+            // flight; only the activate/drain decision pauses.
+            if cell.primed {
+                cell.prev_ewma = cell.ewma;
+                cell.ewma = self.alpha * load + (1.0 - self.alpha) * cell.ewma;
+            } else {
+                cell.ewma = load;
+                cell.prev_ewma = load;
+                cell.primed = true;
+            }
+            let trend = cell.ewma - cell.prev_ewma;
+            let forecast = (cell.ewma + self.trend_gain * trend).max(0.0);
+            if cell.draining.is_some() {
+                continue; // at most one reconfiguration in flight per chiplet
+            }
+            let g = cell.active.iter().filter(|&&a| a).count();
+            match decide(forecast, g, self.g_max, self.l_m) {
+                Decision::Increase => {
+                    if let Some((slot, a)) =
+                        cell.active.iter_mut().enumerate().find(|(_, a)| !**a)
+                    {
+                        *a = true;
+                        // allow(resipi::hot-path-no-alloc): `ops` capacity
+                        // is reserved to one op per chiplet at
+                        // construction; each cell emits at most one op.
+                        self.ops.push(GatewayOp::Activate { chiplet: c, slot });
+                    }
+                }
+                Decision::Decrease => {
+                    if let Some(slot) = cell.active.iter().rposition(|&a| a) {
+                        cell.draining = Some(slot);
+                        // allow(resipi::hot-path-no-alloc): see above —
+                        // `ops` never outgrows its reserved capacity.
+                        self.ops.push(GatewayOp::Drain { chiplet: c, slot });
+                    }
+                }
+                Decision::Hold => {}
+            }
+        }
+        PolicyDecision {
+            gateway_ops: &self.ops,
+            lambda_targets: None,
+        }
+    }
+
+    fn draining_slot(&self, chiplet: usize) -> Option<usize> {
+        self.cells.get(chiplet).and_then(|cell| cell.draining)
+    }
+
+    fn confirm_inactive(&mut self, chiplet: usize, slot: usize) {
+        if let Some(cell) = self.cells.get_mut(chiplet) {
+            if cell.draining == Some(slot) {
+                cell.draining = None;
+                if let Some(a) = cell.active.get_mut(slot) {
+                    *a = false;
+                }
+            }
+        }
+    }
+}
+
+fn parse_num(text: &str, what: &str) -> Result<f64> {
+    text.parse()
+        .map_err(|_| Error::config(format!("bad {what} {text:?} in policy spec")))
+}
+
+fn req_f64(map: &ConfigMap, key: &str) -> Result<f64> {
+    map.get_f64(key)
+        .ok_or_else(|| Error::config(format!("{key} must be a number")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> PolicyContext {
+        PolicyContext {
+            chiplets: 2,
+            gw_per_chiplet: 3,
+            gateways: 8, // 2 × 3 chiplet slots + 2 memory gateways
+            initial_g: 3,
+            l_m: 0.01,
+            no_hysteresis: false,
+            max_wavelengths: 4,
+            prowaves_lambda_load: 0.005,
+        }
+    }
+
+    fn obs<'a>(
+        packets: &'a [usize],
+        loads: &'a [f64],
+        epoch_cycles: u64,
+    ) -> EpochObservation<'a> {
+        EpochObservation {
+            gateway_packets: packets,
+            chiplet_loads: loads,
+            epoch_cycles,
+            gw_per_chiplet: 3,
+        }
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for kind in PolicyKind::ALL {
+            assert_eq!(PolicyKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(PolicyKind::from_name("lgc").unwrap(), PolicyKind::Threshold);
+        assert_eq!(PolicyKind::from_name("none").unwrap(), PolicyKind::Static);
+        assert!(PolicyKind::from_name("oracle").is_err());
+    }
+
+    #[test]
+    fn spec_strings_roundtrip() {
+        for kind in PolicyKind::ALL {
+            let spec = PolicySpec::new(kind);
+            let parsed = PolicySpec::parse(&spec.spec_string()).unwrap();
+            assert_eq!(parsed, spec, "kind {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn parse_accepts_compact_forms() {
+        let s = PolicySpec::parse("threshold").unwrap();
+        assert_eq!(s.kind, PolicyKind::Threshold);
+
+        let s = PolicySpec::parse("predictive").unwrap();
+        assert_eq!(s.kind, PolicyKind::Predictive);
+        assert_eq!(s.ewma_alpha, PolicySpec::default().ewma_alpha);
+
+        let s = PolicySpec::parse("predictive:0.6").unwrap();
+        assert_eq!(s.ewma_alpha, 0.6);
+        assert_eq!(s.trend_gain, PolicySpec::default().trend_gain);
+
+        let s = PolicySpec::parse("predictive:0.5:2").unwrap();
+        assert_eq!((s.ewma_alpha, s.trend_gain), (0.5, 2.0));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "oracle",
+            "static:0.5",
+            "threshold:extra",
+            "prowaves:4",
+            "predictive:fast",
+            "predictive:0.5:1:9",
+        ] {
+            assert!(PolicySpec::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn every_kind_builds_from_defaults() {
+        let packets = [4usize; 8];
+        let loads = [0.001f64; 2];
+        for kind in PolicyKind::ALL {
+            let spec = PolicySpec::new(kind);
+            let mut p = spec
+                .build(&ctx())
+                .unwrap_or_else(|e| panic!("kind {} failed to build: {e}", kind.name()));
+            assert_eq!(p.kind(), kind);
+            // One observation must be digestible without panicking.
+            let d = p.on_epoch(&obs(&packets, &loads, 1_000));
+            if kind == PolicyKind::Static {
+                assert!(d.gateway_ops.is_empty() && d.lambda_targets.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        for bad in [0.0, -0.2, 1.5, f64::NAN, f64::INFINITY] {
+            let mut s = PolicySpec::new(PolicyKind::Predictive);
+            s.ewma_alpha = bad;
+            assert!(s.build(&ctx()).is_err(), "alpha {bad} should fail");
+        }
+        let mut s = PolicySpec::new(PolicyKind::Predictive);
+        s.trend_gain = -1.0;
+        assert!(s.build(&ctx()).is_err());
+        // Degenerate contexts are construction errors, not panics.
+        let mut c = ctx();
+        c.initial_g = 0;
+        assert!(PolicySpec::new(PolicyKind::Threshold).build(&c).is_err());
+        let mut c = ctx();
+        c.prowaves_lambda_load = 0.0;
+        assert!(PolicySpec::new(PolicyKind::Prowaves).build(&c).is_err());
+    }
+
+    #[test]
+    fn threshold_policy_matches_direct_lgc() {
+        // The trait path must replay the exact per-chiplet LGC sequence
+        // the network used to run inline.
+        let mut policy = PolicySpec::new(PolicyKind::Threshold).build(&ctx()).unwrap();
+        let mut lgc0 = Lgc::new(0, 3, 0.01, 3);
+        let mut lgc1 = Lgc::new(1, 3, 0.01, 3);
+        // Chiplet 0 under light load (drain expected), chiplet 1 busy.
+        let packets = [1usize, 1, 1, 90, 90, 90, 5, 5];
+        let loads = [0.001f64, 0.03];
+        let d = policy.on_epoch(&obs(&packets, &loads, 1_000));
+        let a0 = lgc0.epoch_update(&[1, 1, 1], 1_000);
+        let a1 = lgc1.epoch_update(&[90, 90, 90], 1_000);
+        assert_eq!(a0, LgcAction::Drain(2));
+        assert_eq!(a1, LgcAction::Hold);
+        assert_eq!(
+            d.gateway_ops,
+            &[GatewayOp::Drain {
+                chiplet: 0,
+                slot: 2
+            }]
+        );
+        assert!(d.lambda_targets.is_none());
+        // Drain tracking mirrors the LGC's.
+        assert_eq!(policy.draining_slot(0), Some(2));
+        assert_eq!(policy.draining_slot(1), None);
+        policy.confirm_inactive(0, 2);
+        assert_eq!(policy.draining_slot(0), None);
+    }
+
+    #[test]
+    fn prowaves_policy_matches_direct_ctrl() {
+        let mut policy = PolicySpec::new(PolicyKind::Prowaves).build(&ctx()).unwrap();
+        let mut ctrl = ProwavesCtrl::new(8, 4, 0.005);
+        assert_eq!(policy.initial_lambdas(), Some(ctrl.lambdas()));
+        let packets = [2usize, 2, 2, 2, 2, 2, 2, 2];
+        let loads = [0.000_666f64; 2];
+        let changed = ctrl.epoch_update(&packets, 1_000);
+        let d = policy.on_epoch(&obs(&packets, &loads, 1_000));
+        assert!(changed, "light load must step λ down");
+        assert_eq!(d.lambda_targets, Some(ctrl.lambdas()));
+        assert!(d.gateway_ops.is_empty());
+        assert!(!policy.reconfigures_gateways());
+    }
+
+    #[test]
+    fn predictive_acts_one_epoch_early() {
+        // α = 1, trend gain 1: forecast = 2·load − prev_load. A load ramp
+        // that is still below T_P must trigger an activation as soon as
+        // the *extrapolated* load crosses it, before `decide` on the raw
+        // load would.
+        let mut c = ctx();
+        c.initial_g = 1;
+        let mut spec = PolicySpec::new(PolicyKind::Predictive);
+        spec.ewma_alpha = 1.0;
+        spec.trend_gain = 1.0;
+        let mut policy = spec.build(&c).unwrap();
+        let packets = [0usize; 8];
+
+        // Priming epoch: forecast == load == 0.008 < T_P = 0.01 → hold.
+        let d = policy.on_epoch(&obs(&packets, &[0.008, 0.0], 1_000));
+        assert!(d.gateway_ops.is_empty());
+
+        // Ramp to 0.0095: raw load still under T_P (threshold would
+        // hold), forecast 2·0.0095 − 0.008 = 0.011 > T_P → activate.
+        assert_eq!(decide(0.0095, 1, 3, 0.01), Decision::Hold);
+        let d = policy.on_epoch(&obs(&packets, &[0.0095, 0.0], 1_000));
+        assert_eq!(
+            d.gateway_ops,
+            &[GatewayOp::Activate {
+                chiplet: 0,
+                slot: 1
+            }]
+        );
+    }
+
+    #[test]
+    fn predictive_drains_and_confirms_like_the_lgc() {
+        let mut spec = PolicySpec::new(PolicyKind::Predictive);
+        spec.ewma_alpha = 1.0;
+        spec.trend_gain = 0.0;
+        let mut policy = spec.build(&ctx()).unwrap();
+        let packets = [0usize; 8];
+        // Dead chiplet 0: forecast 0 < T_N → drain the highest slot.
+        let d = policy.on_epoch(&obs(&packets, &[0.0, 0.02], 1_000));
+        assert_eq!(
+            d.gateway_ops,
+            &[GatewayOp::Drain {
+                chiplet: 0,
+                slot: 2
+            }]
+        );
+        assert_eq!(policy.draining_slot(0), Some(2));
+        // While draining, the chiplet holds even if the load stays dead.
+        let d = policy.on_epoch(&obs(&packets, &[0.0, 0.02], 1_000));
+        assert!(d.gateway_ops.is_empty());
+        policy.confirm_inactive(0, 2);
+        assert_eq!(policy.draining_slot(0), None);
+        // Next dead epoch the automaton may drain the next slot.
+        let d = policy.on_epoch(&obs(&packets, &[0.0, 0.02], 1_000));
+        assert_eq!(
+            d.gateway_ops,
+            &[GatewayOp::Drain {
+                chiplet: 0,
+                slot: 1
+            }]
+        );
+    }
+
+    #[test]
+    fn decision_labels_are_stable() {
+        assert_eq!(decision_label(0, 0, false), "hold");
+        assert_eq!(decision_label(1, 0, false), "activate");
+        assert_eq!(decision_label(0, 2, false), "drain");
+        assert_eq!(decision_label(0, 0, true), "retune");
+        assert_eq!(decision_label(1, 1, false), "mixed");
+        assert_eq!(decision_label(1, 0, true), "mixed");
+    }
+}

@@ -1,8 +1,9 @@
 //! `resipi campaign` — the declarative scenario campaign engine.
 //!
 //! A [`CampaignSpec`] is a scenario *matrix*: architecture × topology ×
-//! chiplet count × traffic spec × injection rate × epoch length × seed
-//! replica. [`CampaignSpec::expand`] produces the cross product as
+//! chiplet count × traffic spec × reconfiguration policy × injection
+//! rate × epoch length × seed replica.
+//! [`CampaignSpec::expand`] produces the cross product as
 //! [`CampaignScenario`]s; [`run_campaign`] shards them across
 //! [`crate::util::pool`] workers and streams **one JSONL record per
 //! completed scenario** to `campaign.jsonl` in the output directory.
@@ -38,6 +39,7 @@ use std::sync::Mutex;
 
 use crate::config::parser::{ConfigMap, Value};
 use crate::config::{Architecture, Config};
+use crate::coordinator::policy::{PolicyKind, PolicySpec};
 use crate::error::{Error, Result};
 use crate::metrics::combine_checksums;
 use crate::sim::{Geometry, Network};
@@ -48,7 +50,10 @@ use crate::util::pool;
 use crate::util::rng::{fnv1a_bytes, SplitMix64};
 
 /// Results-ledger schema version (`schema_version` in every record).
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2 added the policy axis plus the `policy`, `pcmc_switches` and
+/// `switch_energy_nj` record fields; v1 records are treated as stale
+/// and their scenarios re-run.
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// The scenario matrix.
 #[derive(Debug, Clone)]
@@ -58,6 +63,12 @@ pub struct CampaignSpec {
     pub chiplets: Vec<usize>,
     /// Traffic axis; each entry's `rate` is overridden by the rate axis.
     pub traffics: Vec<TrafficSpec>,
+    /// Reconfiguration-policy axis. `None` means "the architecture's
+    /// native policy" (Resipi → threshold, Prowaves → prowaves, others →
+    /// static) and contributes no component to the scenario name, so
+    /// matrices without an explicit policy axis keep their historical
+    /// names and derived seeds.
+    pub policies: Vec<Option<PolicySpec>>,
     /// Injection-rate axis (packets/cycle/core).
     pub rates: Vec<f64>,
     /// Reconfiguration-interval axis (cycles).
@@ -83,6 +94,7 @@ impl CampaignSpec {
                 TrafficSpec::new(TrafficKind::Uniform, 0.0),
                 TrafficSpec::new(TrafficKind::Tornado, 0.0),
             ],
+            policies: vec![None],
             rates: vec![0.002, 0.01],
             epoch_cycles: vec![2_000],
             seeds: vec![0],
@@ -108,6 +120,7 @@ impl CampaignSpec {
                 .iter()
                 .map(|&k| TrafficSpec::new(k, 0.0))
                 .collect(),
+            policies: vec![None],
             rates: vec![0.002, 0.01],
             epoch_cycles: vec![10_000],
             seeds: vec![0],
@@ -129,12 +142,43 @@ impl CampaignSpec {
             topologies: vec![TopologyKind::Mesh],
             chiplets: vec![64, 128, 256],
             traffics: vec![TrafficSpec::new(TrafficKind::Uniform, 0.0)],
+            policies: vec![None],
             rates: vec![0.002],
             epoch_cycles: vec![10_000],
             seeds: vec![0],
             cycles: 2_000,
             warmup_cycles: 200,
             root_seed: 0xCA4A,
+        }
+    }
+
+    /// The policy-comparison preset (`resipi campaign --policies`): one
+    /// fabric, every reconfiguration policy, against the two traffic
+    /// shapes where control-plane choice matters most — phase changes
+    /// and on/off bursts. Every policy is explicit (`Some`), so every
+    /// scenario name carries a `/p<policy>` component and the report has
+    /// one row per (policy, traffic) cell with per-policy PCM switch
+    /// counts and retune energy side by side.
+    pub fn policies() -> Self {
+        // Phase changes must land inside the 20k-cycle horizon, or the
+        // policies would have nothing to react to.
+        let mut phased = TrafficSpec::new(TrafficKind::Phased, 0.0);
+        phased.phase_cycles = 5_000;
+        Self {
+            archs: vec![Architecture::Resipi],
+            topologies: vec![TopologyKind::Mesh],
+            chiplets: vec![4],
+            traffics: vec![phased, TrafficSpec::new(TrafficKind::Bursty, 0.0)],
+            policies: PolicyKind::ALL
+                .iter()
+                .map(|&k| Some(PolicySpec::new(k)))
+                .collect(),
+            rates: vec![0.01],
+            epoch_cycles: vec![2_000],
+            seeds: vec![0],
+            cycles: 20_000,
+            warmup_cycles: 1_000,
+            root_seed: 0x9011C7,
         }
     }
 
@@ -163,6 +207,12 @@ impl CampaignSpec {
                         .map(|s| TrafficSpec::parse(s))
                         .collect::<Result<_>>()?
                 }
+                "campaign.policy" => {
+                    spec.policies = str_axis(map, key)?
+                        .iter()
+                        .map(|s| PolicySpec::parse(s).map(Some))
+                        .collect::<Result<_>>()?
+                }
                 "campaign.chiplets" => {
                     spec.chiplets = int_axis(map, key)?.iter().map(|&x| x as usize).collect()
                 }
@@ -184,6 +234,7 @@ impl CampaignSpec {
             || spec.topologies.is_empty()
             || spec.chiplets.is_empty()
             || spec.traffics.is_empty()
+            || spec.policies.is_empty()
             || spec.rates.is_empty()
             || spec.epoch_cycles.is_empty()
             || spec.seeds.is_empty()
@@ -194,30 +245,33 @@ impl CampaignSpec {
     }
 
     /// Expand the cross product in canonical order (arch, topology,
-    /// chiplets, traffic, rate, epoch, seed — innermost last). The
-    /// aggregate report lists scenarios in exactly this order.
+    /// chiplets, traffic, policy, rate, epoch, seed — innermost last).
+    /// The aggregate report lists scenarios in exactly this order.
     pub fn expand(&self) -> Vec<CampaignScenario> {
         let mut out = Vec::new();
         for &arch in &self.archs {
             for &topology in &self.topologies {
                 for &chiplets in &self.chiplets {
                     for traffic in &self.traffics {
-                        for &rate in &self.rates {
-                            for &epoch_cycles in &self.epoch_cycles {
-                                for &seed_index in &self.seeds {
-                                    let mut traffic = traffic.clone();
-                                    traffic.rate = rate;
-                                    out.push(CampaignScenario {
-                                        arch,
-                                        topology,
-                                        chiplets,
-                                        traffic,
-                                        epoch_cycles,
-                                        seed_index,
-                                        cycles: self.cycles,
-                                        warmup_cycles: self.warmup_cycles,
-                                        root_seed: self.root_seed,
-                                    });
+                        for policy in &self.policies {
+                            for &rate in &self.rates {
+                                for &epoch_cycles in &self.epoch_cycles {
+                                    for &seed_index in &self.seeds {
+                                        let mut traffic = traffic.clone();
+                                        traffic.rate = rate;
+                                        out.push(CampaignScenario {
+                                            arch,
+                                            topology,
+                                            chiplets,
+                                            traffic,
+                                            policy: policy.clone(),
+                                            epoch_cycles,
+                                            seed_index,
+                                            cycles: self.cycles,
+                                            warmup_cycles: self.warmup_cycles,
+                                            root_seed: self.root_seed,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -236,6 +290,8 @@ pub struct CampaignScenario {
     pub topology: TopologyKind,
     pub chiplets: usize,
     pub traffic: TrafficSpec,
+    /// Explicit policy override; `None` falls through to the arch default.
+    pub policy: Option<PolicySpec>,
     pub epoch_cycles: u64,
     pub seed_index: u64,
     pub cycles: u64,
@@ -245,13 +301,21 @@ pub struct CampaignScenario {
 
 impl CampaignScenario {
     /// Stable identifier encoding every axis value — the JSONL ledger key.
+    /// An explicit policy contributes a `/p<spec>` component; the `None`
+    /// arch-default contributes nothing, so pre-policy-axis names (and
+    /// therefore their derived seeds) are unchanged.
     pub fn name(&self) -> String {
+        let policy = match &self.policy {
+            Some(p) => format!("/p{}", p.spec_string()),
+            None => String::new(),
+        };
         format!(
-            "{}/{}/c{}/{}/e{}/s{}",
+            "{}/{}/c{}/{}{}/e{}/s{}",
             self.arch.name(),
             self.topology.name(),
             self.chiplets,
             self.traffic.spec_string(),
+            policy,
             self.epoch_cycles,
             self.seed_index
         )
@@ -273,6 +337,9 @@ impl CampaignScenario {
         cfg.sim.warmup_cycles = self.warmup_cycles;
         cfg.sim.seed = self.derived_seed();
         cfg.set_traffic(self.traffic.clone());
+        if let Some(policy) = &self.policy {
+            cfg.set_policy(policy.clone());
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -293,6 +360,9 @@ impl CampaignScenario {
         r.set("topology", self.topology.name());
         r.set("chiplets", self.chiplets);
         r.set("traffic", self.traffic.spec_string());
+        // The *effective* policy label: explicit axis value or the arch
+        // default the simulator resolved to.
+        r.set("policy", s.policy.as_str());
         r.set("rate", self.traffic.rate);
         r.set("epoch_cycles", self.epoch_cycles);
         r.set("seed_index", self.seed_index);
@@ -308,6 +378,8 @@ impl CampaignScenario {
         r.set("total_energy_uj", s.total_energy_uj);
         r.set("energy_metric_pj", s.energy_metric_pj);
         r.set("avg_active_gateways", s.avg_active_gateways);
+        r.set("pcmc_switches", s.pcmc_switches);
+        r.set("switch_energy_nj", s.pcmc_switch_energy_nj);
         r.set("checksum", format!("{checksum:#018x}"));
         Ok(r)
     }
@@ -539,6 +611,7 @@ pub fn run_campaign_named(
         "topology",
         "chiplets",
         "traffic",
+        "policy",
         "rate",
         "epoch_cycles",
         "seed",
@@ -551,6 +624,8 @@ pub fn run_campaign_named(
         "avg_power_mw",
         "total_energy_uj",
         "energy_metric_pj",
+        "pcmc_switches",
+        "switch_energy_nj",
         "checksum",
     ]);
     for r in &ordered {
@@ -560,6 +635,7 @@ pub fn run_campaign_named(
             cell_str(r, "topology"),
             cell_num(r, "chiplets"),
             cell_str(r, "traffic"),
+            cell_str(r, "policy"),
             cell_num(r, "rate"),
             cell_num(r, "epoch_cycles"),
             cell_str(r, "seed"),
@@ -572,6 +648,8 @@ pub fn run_campaign_named(
             cell_num(r, "avg_power_mw"),
             cell_num(r, "total_energy_uj"),
             cell_num(r, "energy_metric_pj"),
+            cell_num(r, "pcmc_switches"),
+            cell_num(r, "switch_energy_nj"),
             cell_str(r, "checksum"),
         ]);
     }
@@ -704,6 +782,40 @@ mod tests {
     }
 
     #[test]
+    fn policies_matrix_covers_every_kind_with_stable_names() {
+        let spec = CampaignSpec::policies();
+        let scenarios = spec.expand();
+        // 1 arch × 1 topology × 1 chiplet count × 2 traffics × 4 policies.
+        assert_eq!(scenarios.len(), 8);
+        for kind in PolicyKind::ALL {
+            assert!(
+                scenarios
+                    .iter()
+                    .any(|sc| sc.policy.as_ref().map(|p| p.kind) == Some(kind)),
+                "preset must cover policy kind {}",
+                kind.name()
+            );
+        }
+        for sc in &scenarios {
+            assert!(
+                sc.name().contains("/p"),
+                "explicit policies must appear in the name: {}",
+                sc.name()
+            );
+            sc.config().unwrap_or_else(|e| {
+                panic!("policies scenario {} has invalid config: {e}", sc.name())
+            });
+        }
+        // The arch-default (None) contributes no name component, so legacy
+        // matrices keep their ledger keys and derived seeds.
+        let mut sc = scenarios[0].clone();
+        let with_policy = sc.name();
+        sc.policy = None;
+        assert!(!sc.name().contains("/p"));
+        assert_ne!(with_policy, sc.name());
+    }
+
+    #[test]
     fn full_matrix_configs_validate() {
         // Expansion is cheap; validating every config catches axis values
         // that can't actually simulate (e.g. bitrev on non-pow2 systems).
@@ -748,6 +860,7 @@ mod tests {
              topology = \"mesh\"\n\
              chiplets = [2, 4]\n\
              traffic = [\"uniform\", \"bursty:0.01:100:400\"]\n\
+             policy = [\"static\", \"predictive:0.6\"]\n\
              rate = [0.002]\n\
              epoch_cycles = 3000\n\
              seeds = [0, 1]\n\
@@ -762,13 +875,18 @@ mod tests {
         assert_eq!(spec.chiplets, vec![2, 4]);
         assert_eq!(spec.traffics[1].kind, TrafficKind::Bursty);
         assert_eq!(spec.traffics[1].burst_off, 400.0);
+        assert_eq!(spec.policies.len(), 2);
+        assert_eq!(spec.policies[0].as_ref().unwrap().kind, PolicyKind::Static);
+        let pred = spec.policies[1].as_ref().unwrap();
+        assert_eq!(pred.kind, PolicyKind::Predictive);
+        assert_eq!(pred.ewma_alpha, 0.6);
         assert_eq!(spec.rates, vec![0.002]);
         assert_eq!(spec.epoch_cycles, vec![3000]);
         assert_eq!(spec.seeds, vec![0, 1]);
         assert_eq!((spec.cycles, spec.warmup_cycles, spec.root_seed), (9000, 100, 7));
-        // 2 archs × 1 topology × 2 chiplet counts × 2 traffics × 1 rate
-        // × 1 epoch × 2 seeds.
-        assert_eq!(spec.expand().len(), 16);
+        // 2 archs × 1 topology × 2 chiplet counts × 2 traffics
+        // × 2 policies × 1 rate × 1 epoch × 2 seeds.
+        assert_eq!(spec.expand().len(), 32);
 
         let bad = ConfigMap::parse("[campaign]\narchs = [\"resipi\"]\n").unwrap();
         let err = CampaignSpec::from_config(&bad).unwrap_err();

@@ -50,10 +50,23 @@
 //! ([`traffic::TrafficSpec`], the `traffic.*` config keys, or
 //! `resipi run --traffic`). The [`experiments::campaign`] engine expands
 //! a declarative scenario matrix over architecture × topology × chiplets
-//! × traffic × rate × epoch × seed, shards it across [`util::pool`]
-//! workers with name-derived per-scenario seeds, streams a resumable
-//! JSONL ledger, and emits byte-stable aggregate reports (README
-//! "Campaigns & workloads").
+//! × traffic × policy × rate × epoch × seed, shards it across
+//! [`util::pool`] workers with name-derived per-scenario seeds, streams a
+//! resumable JSONL ledger, and emits byte-stable aggregate reports
+//! (README "Campaigns & workloads").
+//!
+//! ## Reconfiguration policies
+//!
+//! The epoch-boundary control plane is pluggable: the simulator consults
+//! exactly one [`coordinator::ReconfigPolicy`] per boundary, fed an
+//! [`coordinator::EpochObservation`] (per-gateway packet counts,
+//! per-chiplet loads) and returning a
+//! [`coordinator::PolicyDecision`] (gateway activate/drain ops, λ
+//! targets). Four built-ins — `static`, `threshold` (the paper's LGC
+//! hysteresis), `prowaves`, and `predictive` (EWMA/linear-trend
+//! forecasting) — are selectable via [`coordinator::PolicySpec`], the
+//! `policy.*` config keys, `resipi run --policy`, or the campaign
+//! `policy` axis (README "Reconfiguration policies").
 //!
 //! ```no_run
 //! use resipi::prelude::*;
@@ -91,7 +104,10 @@ pub fn version() -> &'static str {
 /// Common imports for examples and downstream users.
 pub mod prelude {
     pub use crate::config::{Architecture, Config};
-    pub use crate::coordinator::{Lgc, LgcAction, ProwavesCtrl, VicinityMap};
+    pub use crate::coordinator::{
+        EpochObservation, GatewayOp, Lgc, LgcAction, PolicyContext, PolicyDecision, PolicyKind,
+        PolicySpec, ProwavesCtrl, ReconfigPolicy, VicinityMap,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::metrics::{EpochRecord, Metrics};
     pub use crate::power::{EpochPowerModel, PowerBreakdown, RustPowerModel};

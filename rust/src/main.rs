@@ -12,7 +12,7 @@
 //! resipi ablate  <thresholds|gwsel|epoch> [--cycles N]
 //! resipi scale   [--chiplets LIST] [--cycles N]   # ledger-backed scaling sweep
 //! resipi sweep                         # batched HLO power-model sweep
-//! resipi campaign [--quick|--full|--scale|--config F] [axis flags]   # scenario matrix
+//! resipi campaign [--quick|--full|--scale|--policies|--config F] [axis flags]   # scenario matrix
 //! resipi trace   convert --in F --out F   # text <-> binary trace conversion
 //! resipi all     [--cycles N]          # every artifact, written to results/
 //! ```
@@ -28,6 +28,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use resipi::config::{Architecture, Config};
+use resipi::coordinator::PolicySpec;
 use resipi::experiments::campaign::{self, CampaignSpec};
 use resipi::experiments::{ablations, fig10, fig11, fig12, fig13, output_dir, perf, scaling, table2};
 use resipi::power::controller_area::ControllerParams;
@@ -87,6 +88,13 @@ const COMMANDS: &[Cmd] = &[
                 value: Some("SPEC"),
                 help: "synthetic pattern spec, e.g. tornado:0.01 or hotspot:0.01:0.3 \
                        (see README catalog; mutually exclusive with --app)",
+            },
+            Flag {
+                name: "policy",
+                value: Some("SPEC"),
+                help: "reconfiguration policy: static | threshold | prowaves | \
+                       predictive[:alpha[:gain]] (default: the arch's native policy; \
+                       supersedes the deprecated mode.dynamic_* config keys)",
             },
             Flag {
                 name: "topology",
@@ -262,6 +270,11 @@ const COMMANDS: &[Cmd] = &[
                 help: "64/128/256-chiplet scaling preset (the CI scale smoke job)",
             },
             Flag {
+                name: "policies",
+                value: None,
+                help: "policy-comparison preset: every policy kind x phased/bursty traffic",
+            },
+            Flag {
                 name: "config",
                 value: Some("FILE"),
                 help: "campaign file (campaign.* keys) overriding the preset axes",
@@ -285,6 +298,11 @@ const COMMANDS: &[Cmd] = &[
                 name: "traffic",
                 value: Some("LIST"),
                 help: "comma-separated traffic specs (uniform,tornado,bursty:0:100:400)",
+            },
+            Flag {
+                name: "policy",
+                value: Some("LIST"),
+                help: "comma-separated policy axis (static,threshold,prowaves,predictive:0.45:1)",
             },
             Flag {
                 name: "rate",
@@ -582,6 +600,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.set_traffic(TrafficSpec::parse(spec)?);
         cfg.validate()?;
     }
+    if let Some(spec) = args.flags.get("policy") {
+        cfg.set_policy(PolicySpec::parse(spec)?);
+        cfg.validate()?;
+    }
 
     let geo = Geometry::from_config(&cfg);
     let topology = geo.topology_kind().name();
@@ -621,6 +643,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         j.set("arch", s.arch.as_str());
         j.set("topology", topology);
         j.set("traffic", s.traffic.as_str());
+        j.set("policy", s.policy.as_str());
+        j.set("pcmc_switches", s.pcmc_switches);
         j.set("cycles", s.cycles);
         j.set("created", s.created);
         j.set("delivered", s.delivered);
@@ -636,6 +660,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("arch:               {}", s.arch);
         println!("topology:           {topology}");
         println!("traffic:            {}", s.traffic);
+        println!("policy:             {}", s.policy);
+        println!("pcmc switches:      {}", s.pcmc_switches);
         println!("cycles:             {}", s.cycles);
         println!("packets:            {} created / {} delivered", s.created, s.delivered);
         println!("avg latency:        {:.2} cycles (p99 {:.1})", s.avg_latency_cycles, s.p99_latency_cycles);
@@ -866,19 +892,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_campaign(args: &Args) -> Result<()> {
-    let presets: Vec<&str> = ["quick", "full", "scale"]
+    let presets: Vec<&str> = ["quick", "full", "scale", "policies"]
         .into_iter()
         .filter(|k| args.flags.contains_key(*k))
         .collect();
     if presets.len() > 1 {
         return Err(resipi::Error::config(
-            "--quick, --full and --scale are mutually exclusive",
+            "--quick, --full, --scale and --policies are mutually exclusive",
         ));
     }
     let mut spec = if let Some(path) = args.flags.get("config") {
         if !presets.is_empty() {
             return Err(resipi::Error::config(
-                "--config replaces the preset matrix; drop --quick/--full/--scale",
+                "--config replaces the preset matrix; drop --quick/--full/--scale/--policies",
             ));
         }
         let text = std::fs::read_to_string(std::path::Path::new(path))?;
@@ -887,6 +913,8 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         CampaignSpec::full()
     } else if args.flags.contains_key("scale") {
         CampaignSpec::scale()
+    } else if args.flags.contains_key("policies") {
+        CampaignSpec::policies()
     } else {
         CampaignSpec::quick()
     };
@@ -920,6 +948,9 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     }
     if let Some(v) = list(args, "traffic", TrafficSpec::parse)? {
         spec.traffics = v;
+    }
+    if let Some(v) = list(args, "policy", |s| PolicySpec::parse(s).map(Some))? {
+        spec.policies = v;
     }
     if let Some(v) = list(args, "rate", |s| {
         s.parse::<f64>()

@@ -38,8 +38,15 @@ pub struct EpochRecord {
     pub total_lambdas: usize,
     /// Power in force after the boundary.
     pub power: PowerBreakdown,
-    /// PCMC switch events at this boundary.
+    /// PCMC switch events charged during the epoch (boundary retunes plus
+    /// drain completions).
     pub pcmc_switches: usize,
+    /// Label of the reconfiguration-policy decision that shaped this epoch
+    /// (made at the boundary opening it): `"hold"`, `"activate"`,
+    /// `"drain"`, `"retune"`, `"mixed"`, or `"init"` for epoch 0.
+    pub policy_decision: &'static str,
+    /// PCMC switch energy charged during the epoch, nJ.
+    pub switch_energy_nj: f64,
 }
 
 /// Cumulative metrics for one simulation run.
@@ -60,6 +67,8 @@ pub struct Metrics {
     pub total_energy_uj: f64,
     /// PCMC switching energy, nJ.
     pub switch_energy_nj: f64,
+    /// Total PCMC directed-coupler switch events.
+    pub pcmc_switches: usize,
     /// Time-weighted average power, mW (valid after finalize).
     pub avg_power_mw: f64,
     /// Time-weighted average power breakdown accumulators (mW·cycles).
@@ -94,6 +103,7 @@ impl Metrics {
             epochs: Vec::new(),
             total_energy_uj: 0.0,
             switch_energy_nj: 0.0,
+            pcmc_switches: 0,
             avg_power_mw: 0.0,
             acc_power: PowerAcc::default(),
             epoch_latency: Running::new(),
@@ -153,7 +163,9 @@ impl Metrics {
         self.measured_cycles += measured;
     }
 
-    pub fn on_pcmc_switches(&mut self, energy_nj: f64) {
+    /// Charge a reconfiguration's PCMC switching events and energy.
+    pub fn on_pcmc_switches(&mut self, switches: usize, energy_nj: f64) {
+        self.pcmc_switches += switches;
         self.switch_energy_nj += energy_nj;
         self.total_energy_uj += energy_nj / 1000.0;
     }
@@ -170,6 +182,8 @@ impl Metrics {
         total_lambdas: usize,
         power: PowerBreakdown,
         pcmc_switches: usize,
+        policy_decision: &'static str,
+        switch_energy_nj: f64,
     ) {
         self.epochs.push(EpochRecord {
             index,
@@ -182,6 +196,8 @@ impl Metrics {
             total_lambdas,
             power,
             pcmc_switches,
+            policy_decision,
+            switch_energy_nj,
         });
         self.epoch_latency = Running::new();
         self.epoch_delivered = 0;
@@ -337,11 +353,14 @@ mod tests {
         let mut m = Metrics::new(0);
         m.on_delivered(0, 10, false);
         m.on_delivered(0, 20, false);
-        m.close_epoch(0, 0, 100, 0.01, 18, 72, bd(10.0), 2);
+        m.close_epoch(0, 0, 100, 0.01, 18, 72, bd(10.0), 2, "init", 3.2);
         m.on_delivered(100, 140, false);
-        m.close_epoch(1, 100, 100, 0.02, 10, 40, bd(5.0), 0);
+        m.close_epoch(1, 100, 100, 0.02, 10, 40, bd(5.0), 0, "drain", 0.0);
         assert_eq!(m.epochs.len(), 2);
         assert_eq!(m.epochs[0].delivered, 2);
+        assert_eq!(m.epochs[0].policy_decision, "init");
+        assert!((m.epochs[0].switch_energy_nj - 3.2).abs() < 1e-12);
+        assert_eq!(m.epochs[1].policy_decision, "drain");
         assert!((m.epochs[0].avg_latency - 15.0).abs() < 1e-9);
         assert_eq!(m.epochs[1].delivered, 1);
         assert!((m.epochs[1].avg_latency - 40.0).abs() < 1e-9);
@@ -352,9 +371,10 @@ mod tests {
     #[test]
     fn switch_energy_counts_toward_total() {
         let mut m = Metrics::new(0);
-        m.on_pcmc_switches(2000.0); // 2000 nJ = 2 µJ
+        m.on_pcmc_switches(4, 2000.0); // 2000 nJ = 2 µJ
         assert!((m.total_energy_uj - 2.0).abs() < 1e-12);
         assert_eq!(m.switch_energy_nj, 2000.0);
+        assert_eq!(m.pcmc_switches, 4);
     }
 
     #[test]

@@ -139,6 +139,79 @@ fn composed_traffic_campaigns_are_pool_invariant_and_resumable() {
 }
 
 #[test]
+fn policy_axis_expands_reports_and_differentiates() {
+    // ISSUE 9 acceptance: an explicit policy axis expands one scenario per
+    // policy, names carry the `/p<spec>` component, reports are
+    // byte-identical across worker counts, carry per-policy switch-count
+    // and retune-energy columns, and the three policies genuinely explore
+    // different trajectories (pairwise-distinct checksums).
+    use resipi::coordinator::PolicySpec;
+
+    let mut spec = quick_spec();
+    spec.archs.truncate(1); // resipi
+    spec.topologies.truncate(1); // mesh
+    spec.chiplets = vec![4];
+    spec.traffics = vec![TrafficSpec::parse("phased:0:uniform+tornado:2500").unwrap()];
+    spec.rates = vec![0.01];
+    spec.policies = vec![
+        Some(PolicySpec::parse("static").unwrap()),
+        Some(PolicySpec::parse("threshold").unwrap()),
+        Some(PolicySpec::parse("predictive:0.45:1").unwrap()),
+    ];
+    // Enough epoch boundaries (and phase changes) for the policies to act.
+    spec.cycles = 20_000;
+    spec.warmup_cycles = 1_000;
+
+    let scenarios = spec.expand();
+    assert_eq!(scenarios.len(), 3);
+    for tag in ["/pstatic/", "/pthreshold/", "/ppredictive:0.45:1/"] {
+        assert!(
+            scenarios.iter().any(|sc| sc.name().contains(tag)),
+            "expansion lost the {tag} policy cell"
+        );
+    }
+
+    let dir1 = TempDir::new("policy-t1");
+    let out1 = run_campaign(&spec, 1, &dir1.0).unwrap();
+    assert_eq!(out1.ran, 3);
+    let report1 = read(&out1.report_path);
+    let csv1 = read(&out1.csv_path);
+    let header = csv1.lines().next().unwrap();
+    for col in ["policy", "pcmc_switches", "switch_energy_nj"] {
+        assert!(header.contains(col), "csv header lost the {col} column");
+    }
+    for label in [
+        "\"policy\": \"static\"",
+        "\"policy\": \"threshold\"",
+        "\"policy\": \"predictive:0.45:1\"",
+    ] {
+        assert!(report1.contains(label), "report lost the {label} row");
+    }
+
+    // Byte-stable across worker counts.
+    let dir4 = TempDir::new("policy-t4");
+    let out4 = run_campaign(&spec, 4, &dir4.0).unwrap();
+    assert_eq!(report1, read(&out4.report_path), "report drifted across worker counts");
+    assert_eq!(csv1, read(&out4.csv_path), "csv drifted across worker counts");
+    assert_eq!(out1.campaign_checksum, out4.campaign_checksum);
+
+    // The policies must not collapse onto one trajectory.
+    let checksums: Vec<String> = scenarios
+        .iter()
+        .map(|sc| {
+            let r = sc.run().unwrap();
+            r.get("checksum")
+                .and_then(resipi::util::io::Json::as_str)
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+    assert_ne!(checksums[0], checksums[1], "static == threshold");
+    assert_ne!(checksums[0], checksums[2], "static == predictive");
+    assert_ne!(checksums[1], checksums[2], "threshold == predictive");
+}
+
+#[test]
 fn stale_records_are_rerun_not_resumed() {
     // A ledger from a different horizon (spec.cycles changed) must not
     // satisfy the resume check: everything re-runs and the stale records

@@ -73,6 +73,43 @@ fn same_seed_identical_metrics_across_runs_and_pool_widths() {
 }
 
 #[test]
+fn every_policy_kind_is_pool_width_invariant() {
+    // Each reconfiguration policy drives a different epoch-boundary code
+    // path (gateway ops, lambda retunes, forecasting state); all of them
+    // must stay bit-identical across pool widths. Scenarios are built
+    // directly (not via perf::Scenario) so the policy axis is explicit.
+    use resipi::config::{Architecture, Config};
+    use resipi::coordinator::PolicySpec;
+    use resipi::sim::{Geometry, Network};
+    use resipi::traffic::UniformTraffic;
+
+    fn run_one(policy: &str) -> (u64, u64, u64) {
+        let mut cfg = Config::table1(Architecture::Resipi);
+        cfg.set_topology(TopologyKind::Mesh);
+        cfg.sim.cycles = 20_000;
+        cfg.sim.warmup_cycles = 1_000;
+        cfg.sim.seed = 0xD011C7;
+        cfg.controller.epoch_cycles = 2_000;
+        cfg.set_policy(PolicySpec::parse(policy).unwrap());
+        cfg.validate().unwrap();
+        let geo = Geometry::from_config(&cfg);
+        let traffic = Box::new(UniformTraffic::new(geo, 0.01, cfg.sim.seed));
+        let mut net = Network::new(cfg, traffic).unwrap();
+        net.run().unwrap();
+        let s = net.summary();
+        (net.metrics().checksum(), s.created, s.delivered)
+    }
+
+    let specs = vec!["static", "threshold", "prowaves", "predictive:0.45:1"];
+    let one = pool::par_map(1, specs.clone(), run_one);
+    let four = pool::par_map(4, specs.clone(), run_one);
+    for ((p, a), b) in specs.iter().zip(&one).zip(&four) {
+        assert!(a.1 > 0, "policy {p} must carry traffic");
+        assert_eq!(a, b, "policy {p}: results drifted across pool widths");
+    }
+}
+
+#[test]
 fn resipi_threads_env_is_honored_and_result_invariant() {
     // `default_threads` is what `resipi bench --threads`/experiment sweeps
     // fall back to. This is the only test in this binary touching the
