@@ -1,45 +1,58 @@
-//! End-to-end regeneration benches: one per paper table/figure
-//! (Table 2, Figs. 10-13, plus the ablation suite). Each bench runs the
-//! corresponding experiment harness at
-//! CI scale, times it, and prints the headline values so a `cargo bench`
-//! log doubles as a regression record of the reproduction itself.
-//!
-//! Scale via `RESIPI_BENCH_CYCLES` (default 150 000 cycles per simulation
-//! point; the paper uses 100 M — pass a larger value for paper-scale runs).
+//! End-to-end regeneration benches: the `resipi figures` suite (Table 2,
+//! Figs. 10-13, plus the ablation matrix), each regenerated from a cold
+//! campaign ledger at its baseline-tier horizon, timed, and reported with
+//! its headline values so a `cargo bench` log doubles as a regression
+//! record of the reproduction itself.
+
+use std::path::PathBuf;
 
 use resipi::experiments::{ablations, fig10, fig11, fig12, fig13, table2};
-use resipi::power::controller_area::ControllerParams;
 use resipi::util::bench::Bench;
 
-fn point_cycles() -> u64 {
-    std::env::var("RESIPI_BENCH_CYCLES")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(150_000)
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let p = std::env::temp_dir().join(format!("resipi-bench-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        Self(p)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
 }
 
 fn main() {
-    let cycles = point_cycles();
-    println!("== paper artifact regeneration (cycles/point = {cycles}) ==");
+    let threads = resipi::util::pool::default_threads();
+    println!(
+        "== paper artifact regeneration (baseline-tier horizons, cold ledgers, {threads} worker(s)) =="
+    );
     let mut b = Bench::new(0, 1);
 
     b.run("table2/controller_overhead", None, || {
-        let t = table2::run(&ControllerParams::default());
-        assert!(t.total.area_um2 / 53.83e6 < 1e-3);
-        t.total.area_um2
+        let t = table2::run(false);
+        let row = &t.rows[0];
+        assert!(row.total.area_um2 / row.params.chiplet_area_um2() < 1e-3);
+        row.total.area_um2
     });
 
     let mut l_m = 0.0;
-    b.run("fig10/design_space_32pts", Some(32.0 * cycles as f64), || {
-        let fig = fig10::run(cycles, 0xF16).unwrap();
+    b.run("fig10/design_space_32pts", Some(32.0 * 120_000.0), || {
+        let dir = TempDir::new("fig10");
+        let (_, fig) = fig10::run(threads, &dir.0, false).unwrap();
         l_m = fig.l_m;
         fig.points.len()
     });
     println!("  fig10 headline: L_m = {l_m:.4} (paper 0.0152)");
 
     let mut headline = (0.0, 0.0, 0.0);
-    b.run("fig11/grid_8apps_x_4archs", Some(32.0 * cycles as f64), || {
-        let fig = fig11::run(cycles, 0xF11).unwrap();
+    b.run("fig11/grid_8apps_x_4archs", Some(32.0 * 150_000.0), || {
+        let dir = TempDir::new("fig11");
+        let (_, fig) = fig11::run(threads, &dir.0, false).unwrap();
         headline = fig.headline;
         fig.cells.len()
     });
@@ -51,10 +64,11 @@ fn main() {
     );
 
     let mut settle = (0, 0);
-    b.run("fig12/adaptivity_3apps", Some(6.0 * 10.0 * (cycles / 6) as f64), || {
-        let fig = fig12::run(10, cycles / 6, 0xF12).unwrap();
+    b.run("fig12/adaptivity_3apps", Some(2.0 * 600_000.0), || {
+        let dir = TempDir::new("fig12");
+        let (_, fig) = fig12::run(threads, &dir.0, false).unwrap();
         settle = fig.settling;
-        fig.resipi.epochs.len()
+        fig.series[0].epochs.len()
     });
     println!(
         "  fig12 headline: settling ReSiPI {} vs PROWAVES {} epochs (paper ~3 vs ~5)",
@@ -62,10 +76,14 @@ fn main() {
     );
 
     let mut peaks = (0.0, 0.0);
-    b.run("fig13/residency_maps", Some(2.0 * cycles as f64), || {
-        let fig = fig13::run(cycles, 0xF13).unwrap();
-        peaks = (fig.prowaves.peak_to_mean(), fig.resipi.peak_to_mean());
-        fig.resipi.residency.len()
+    b.run("fig13/residency_maps", Some(2.0 * 200_000.0), || {
+        let dir = TempDir::new("fig13");
+        let (_, fig) = fig13::run(threads, &dir.0, false).unwrap();
+        peaks = (
+            fig.map("prowaves").map_or(0.0, |m| m.peak_to_mean()),
+            fig.map("resipi").map_or(0.0, |m| m.peak_to_mean()),
+        );
+        fig.maps.len()
     });
     println!(
         "  fig13 headline: peak/mean PROWAVES {:.2} vs ReSiPI {:.2} (paper: concentrated vs spread)",
@@ -84,14 +102,10 @@ fn main() {
     });
     println!("  bench matrix: {matrix_cycles} simulated cycles across the quick scenarios");
 
-    b.run("ablation/thresholds", Some(2.0 * cycles as f64), || {
-        ablations::thresholds(cycles, 0xAB).unwrap().len()
-    });
-    b.run("ablation/gwsel", Some(2.0 * cycles as f64), || {
-        ablations::gateway_selection(cycles, 0xAB2).unwrap().len()
-    });
-    b.run("ablation/epoch_length", Some(4.0 * cycles as f64), || {
-        ablations::epoch_length(cycles, 0xAB3).unwrap().len()
+    b.run("ablations/variant_x_epoch_matrix", Some(9.0 * 200_000.0), || {
+        let dir = TempDir::new("ablations");
+        let (_, abl) = ablations::run(threads, &dir.0, false).unwrap();
+        abl.rows.len()
     });
 
     println!("\nAll paper artifacts regenerated.");

@@ -285,9 +285,9 @@ impl Config {
             controller: ControllerConfig {
                 epoch_cycles: 1_000_000,
                 // Derived from our Fig. 10 sweep with the paper's 10%
-                // latency-overhead band (`resipi fig10`): 0.027
-                // packets/cycle. The paper derived 0.0152 with the same
-                // methodology on its own testbed (EXPERIMENTS.md).
+                // latency-overhead band (`resipi figures --fig 10`):
+                // 0.027 packets/cycle. The paper derived 0.0152 with the
+                // same methodology on its own testbed (EXPERIMENTS.md).
                 l_m: 0.027,
                 pcmc_reconfig_cycles: 100,
                 pcmc_energy_nj: 2.0,

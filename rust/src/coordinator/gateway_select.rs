@@ -130,8 +130,8 @@ impl VicinityMap {
     }
 
     /// Ablation baseline: round-robin assignment ignoring hop distance
-    /// (used by `resipi ablate gwsel` to quantify what the Fig. 8 vicinity
-    /// construction buys).
+    /// (used by the ablation suite, `resipi figures --fig abl`, to
+    /// quantify what the Fig. 8 vicinity construction buys).
     pub fn build_naive(geo: &Geometry, chiplet: ChipletId, active_slots: &[bool]) -> Result<Self> {
         assert_eq!(active_slots.len(), geo.gw_per_chiplet);
         let actives: Vec<usize> = (0..geo.gw_per_chiplet)

@@ -6,117 +6,239 @@
 //!   assignment that ignores hop distance;
 //! * **epoch** — reconfiguration-interval length sweep (§3.3's
 //!   responsiveness-vs-overhead trade-off).
+//!
+//! Rebuilt as a campaign preset: the controller knobs ride the campaign's
+//! variant axis (`nohyst`, `rrgwsel`) crossed with an explicit epoch-length
+//! axis, all streamed into the resumable `ablations.jsonl` ledger
+//! (replacing the seed-era ad-hoc `seed ^ 0xAB1` traffic stream with
+//! name-derived seeds). The extended tier swaps the variant axis for the
+//! reconfiguration-*policy* axis (static/threshold/prowaves/predictive)
+//! across dedup, bursty, and phased workloads.
 
-use crate::config::{Architecture, Config};
-use crate::sim::{Geometry, Network, Summary};
-use crate::traffic::parsec::{app_by_name, ParsecTraffic};
-use crate::util::io::Csv;
-use crate::util::pool::par_map_auto;
+use std::path::Path;
+
+use crate::config::Architecture;
+use crate::coordinator::policy::{PolicyKind, PolicySpec};
+use crate::experiments::campaign::{self, CampaignOutcome, CampaignSpec, CtrlVariant};
+use crate::experiments::figures::{fmt, num, read_scenarios, txt};
+use crate::topology::TopologyKind;
+use crate::traffic::{TrafficKind, TrafficSpec};
+use crate::util::io::{Csv, Json};
 use crate::Result;
 
-/// One ablation row: a labeled summary.
+/// The epoch length shared by the variant comparisons (the paper-tier
+/// middle of the sweep).
+pub const BASE_EPOCH: u64 = 10_000;
+
+/// One ablation row, extracted from the ledger-built report.
 #[derive(Debug, Clone)]
 pub struct AblationRow {
-    pub label: String,
-    pub summary: Summary,
-    /// Total PCMC switch events (churn indicator).
-    pub pcmc_switch_energy_nj: f64,
+    /// Controller variant ("" = the paper's controller).
+    pub variant: String,
+    /// Effective reconfiguration policy.
+    pub policy: String,
+    pub traffic: String,
+    pub epoch_cycles: u64,
+    pub avg_latency_cycles: f64,
+    pub avg_power_mw: f64,
+    pub energy_metric_pj: f64,
+    /// Total PCMC switch events and their energy (churn indicators).
+    pub pcmc_switches: u64,
+    pub switch_energy_nj: f64,
+    pub avg_active_gateways: f64,
+    pub delivery_ratio: f64,
 }
 
-fn run_one(mut cfg: Config, label: &str, seed: u64) -> Result<AblationRow> {
-    cfg.sim.seed = seed;
-    let geo = Geometry::from_config(&cfg);
-    let app = app_by_name("dedup").unwrap();
-    let traffic = Box::new(ParsecTraffic::new(geo, app, seed ^ 0xAB1));
-    let mut net = Network::new(cfg, traffic)?;
-    net.run()?;
-    let summary = net.summary();
-    Ok(AblationRow {
-        label: label.to_string(),
-        pcmc_switch_energy_nj: summary.pcmc_switch_energy_nj,
-        summary,
-    })
+/// Full ablation-suite result.
+#[derive(Debug, Clone)]
+pub struct Ablations {
+    pub rows: Vec<AblationRow>,
 }
 
-/// Eq. 7 hysteresis vs naive thresholds.
-pub fn thresholds(cycles: u64, seed: u64) -> Result<Vec<AblationRow>> {
-    let jobs: Vec<(&str, bool)> = vec![("eq7-hysteresis", false), ("naive-no-hysteresis", true)];
-    par_map_auto(jobs, |&(label, naive)| {
-        let mut cfg = Config::table1(Architecture::Resipi);
-        cfg.sim.cycles = cycles;
-        cfg.controller.epoch_cycles = (cycles / 20).max(10_000);
-        cfg.controller.no_hysteresis = naive;
-        run_one(cfg, label, seed)
-    })
-    .into_iter()
-    .collect()
+impl Ablations {
+    fn at(&self, variant: &str, epoch: u64) -> Option<&AblationRow> {
+        self.rows
+            .iter()
+            .find(|r| r.variant == variant && r.epoch_cycles == epoch)
+    }
+
+    /// (Eq. 7 hysteresis, naive no-hysteresis) at the shared epoch.
+    pub fn threshold_pair(&self) -> Option<(&AblationRow, &AblationRow)> {
+        Some((self.at("", BASE_EPOCH)?, self.at("nohyst", BASE_EPOCH)?))
+    }
+
+    /// (Fig. 8 vicinity, naive round-robin) at the shared epoch.
+    pub fn gwsel_pair(&self) -> Option<(&AblationRow, &AblationRow)> {
+        Some((self.at("", BASE_EPOCH)?, self.at("rrgwsel", BASE_EPOCH)?))
+    }
+
+    /// The paper-controller rows across the epoch-length axis.
+    pub fn epoch_sweep(&self) -> Vec<&AblationRow> {
+        self.rows.iter().filter(|r| r.variant.is_empty()).collect()
+    }
 }
 
-/// Vicinity maps vs naive round-robin gateway selection.
-pub fn gateway_selection(cycles: u64, seed: u64) -> Result<Vec<AblationRow>> {
-    let jobs: Vec<(&str, bool)> = vec![("fig8-vicinity", false), ("naive-round-robin", true)];
-    par_map_auto(jobs, |&(label, naive)| {
-        let mut cfg = Config::table1(Architecture::Resipi);
-        cfg.sim.cycles = cycles;
-        cfg.controller.epoch_cycles = (cycles / 20).max(10_000);
-        cfg.controller.gwsel_naive = naive;
-        run_one(cfg, label, seed)
-    })
-    .into_iter()
-    .collect()
+fn stem(extended: bool) -> &'static str {
+    if extended {
+        "ablations_ext"
+    } else {
+        "ablations"
+    }
 }
 
-/// Epoch-length sweep.
-pub fn epoch_length(cycles: u64, seed: u64) -> Result<Vec<AblationRow>> {
-    let lengths: Vec<u64> = vec![cycles / 100, cycles / 40, cycles / 20, cycles / 8]
-        .into_iter()
-        .map(|e| e.max(5_000))
+/// The ablation matrix as a campaign preset. Baseline: ReSiPI under
+/// Dedup, variant axis (paper controller / no-hysteresis / round-robin
+/// gwsel) × epoch lengths {5k, 10k, 25k} (9 scenarios). Extended: the
+/// explicit policy axis (native + all four kinds) × {dedup, bursty,
+/// phased} workloads (15 scenarios).
+pub fn spec(extended: bool) -> CampaignSpec {
+    let mut dedup = TrafficSpec::new(TrafficKind::Parsec, 0.0052);
+    dedup.app = "dedup".into();
+    let (traffics, policies, variants, epochs) = if extended {
+        let mut bursty = TrafficSpec::new(TrafficKind::Bursty, 0.01);
+        bursty.burst_on = 100.0;
+        bursty.burst_off = 400.0;
+        // Default phases: uniform → tornado → transpose @ 20 k cycles.
+        let phased = TrafficSpec::new(TrafficKind::Phased, 0.01);
+        let mut policies: Vec<Option<PolicySpec>> = vec![None];
+        policies.extend(PolicyKind::ALL.iter().map(|&k| Some(PolicySpec::new(k))));
+        (vec![dedup, bursty, phased], policies, vec![None], vec![BASE_EPOCH])
+    } else {
+        let mut variants: Vec<Option<CtrlVariant>> = vec![None];
+        variants.extend(CtrlVariant::ALL.iter().copied().map(Some));
+        (
+            vec![dedup],
+            vec![None],
+            variants,
+            vec![5_000, BASE_EPOCH, 25_000],
+        )
+    };
+    CampaignSpec {
+        archs: vec![Architecture::Resipi],
+        topologies: vec![TopologyKind::Mesh],
+        chiplets: vec![4],
+        traffics,
+        policies,
+        variants,
+        rates: Vec::new(),
+        epoch_cycles: epochs,
+        seeds: vec![0],
+        cycles: 200_000,
+        warmup_cycles: 10_000,
+        root_seed: 0xAB,
+        record_epochs: false,
+        record_residency: false,
+    }
+}
+
+/// Run (or resume) the ablation matrix through the campaign ledger in
+/// `out_dir`.
+pub fn run(threads: usize, out_dir: &Path, extended: bool) -> Result<(CampaignOutcome, Ablations)> {
+    let spec = spec(extended);
+    let outcome = campaign::run_campaign_named(&spec, threads, out_dir, stem(extended))?;
+    let abl = from_report(&outcome.report_path)?;
+    Ok((outcome, abl))
+}
+
+/// Rebuild the suite from a ledger-built aggregate report.
+pub fn from_report(report_path: &Path) -> Result<Ablations> {
+    let rows = read_scenarios(report_path)?
+        .iter()
+        .map(|r| AblationRow {
+            variant: txt(r, "variant"),
+            policy: txt(r, "policy"),
+            traffic: txt(r, "traffic"),
+            epoch_cycles: num(r, "epoch_cycles") as u64,
+            avg_latency_cycles: num(r, "avg_latency_cycles"),
+            avg_power_mw: num(r, "avg_power_mw"),
+            energy_metric_pj: num(r, "energy_metric_pj"),
+            pcmc_switches: num(r, "pcmc_switches") as u64,
+            switch_energy_nj: num(r, "switch_energy_nj"),
+            avg_active_gateways: num(r, "avg_active_gateways"),
+            delivery_ratio: num(r, "delivery_ratio"),
+        })
         .collect();
-    par_map_auto(lengths, |&epoch| {
-        let mut cfg = Config::table1(Architecture::Resipi);
-        cfg.sim.cycles = cycles;
-        cfg.controller.epoch_cycles = epoch;
-        run_one(cfg, &format!("epoch-{epoch}"), seed)
-    })
-    .into_iter()
-    .collect()
+    Ok(Ablations { rows })
 }
 
-pub fn to_csv(rows: &[AblationRow]) -> Csv {
+/// CSV artifact: one row per scenario, byte-stable cells.
+pub fn to_csv(abl: &Ablations) -> Csv {
     let mut csv = Csv::new(vec![
         "variant",
+        "policy",
+        "traffic",
+        "epoch_cycles",
         "avg_latency_cycles",
         "avg_power_mw",
         "energy_metric_pj",
-        "pcmc_switch_energy_nj",
+        "pcmc_switches",
+        "switch_energy_nj",
         "avg_active_gateways",
         "delivery_ratio",
     ]);
-    for r in rows {
+    for r in &abl.rows {
         csv.row(vec![
-            r.label.clone(),
-            format!("{:.3}", r.summary.avg_latency_cycles),
-            format!("{:.3}", r.summary.avg_power_mw),
-            format!("{:.3}", r.summary.energy_metric_pj),
-            format!("{:.1}", r.pcmc_switch_energy_nj),
-            format!("{:.2}", r.summary.avg_active_gateways),
-            format!("{:.4}", r.summary.delivery_ratio),
+            r.variant.clone(),
+            r.policy.clone(),
+            r.traffic.clone(),
+            r.epoch_cycles.to_string(),
+            fmt(r.avg_latency_cycles),
+            fmt(r.avg_power_mw),
+            fmt(r.energy_metric_pj),
+            r.pcmc_switches.to_string(),
+            fmt(r.switch_energy_nj),
+            fmt(r.avg_active_gateways),
+            fmt(r.delivery_ratio),
         ]);
     }
     csv
 }
 
-pub fn report(title: &str, rows: &[AblationRow]) -> String {
-    let mut out = format!("Ablation: {title}\n\n");
-    out.push_str("variant                 latency    power(mW)  switches(nJ)  gateways\n");
-    for r in rows {
+/// JSON artifact: the headline ablation deltas.
+pub fn to_json(abl: &Ablations) -> Json {
+    let mut j = Json::obj();
+    j.set("figure", "ablations");
+    if let Some((eq7, naive)) = abl.threshold_pair() {
+        j.set("hysteresis_switch_energy_nj", eq7.switch_energy_nj);
+        j.set("no_hysteresis_switch_energy_nj", naive.switch_energy_nj);
+    }
+    if let Some((vic, naive)) = abl.gwsel_pair() {
+        j.set("vicinity_latency_cycles", vic.avg_latency_cycles);
+        j.set("round_robin_latency_cycles", naive.avg_latency_cycles);
+    }
+    j.set("rows", abl.rows.len());
+    j
+}
+
+pub fn report(abl: &Ablations) -> String {
+    let mut out = String::new();
+    out.push_str("Ablations — controller design choices\n\n");
+    out.push_str(
+        "variant   policy      traffic                  epoch   latency    power(mW)  switches(nJ)  gateways\n",
+    );
+    for r in &abl.rows {
         out.push_str(&format!(
-            "{:<23} {:<10.2} {:<10.1} {:<13.1} {:<8.2}\n",
-            r.label,
-            r.summary.avg_latency_cycles,
-            r.summary.avg_power_mw,
-            r.pcmc_switch_energy_nj,
-            r.summary.avg_active_gateways
+            "{:<9} {:<11} {:<24} {:<7} {:<10.2} {:<10.1} {:<13.1} {:<8.2}\n",
+            if r.variant.is_empty() { "paper" } else { &r.variant },
+            r.policy,
+            r.traffic,
+            r.epoch_cycles,
+            r.avg_latency_cycles,
+            r.avg_power_mw,
+            r.switch_energy_nj,
+            r.avg_active_gateways
+        ));
+    }
+    if let Some((eq7, naive)) = abl.threshold_pair() {
+        out.push_str(&format!(
+            "\nEq. 7 hysteresis vs naive: switch energy {:.1} vs {:.1} nJ\n",
+            eq7.switch_energy_nj, naive.switch_energy_nj
+        ));
+    }
+    if let Some((vic, naive)) = abl.gwsel_pair() {
+        out.push_str(&format!(
+            "Fig. 8 vicinity vs round-robin: latency {:.2} vs {:.2} cycles\n",
+            vic.avg_latency_cycles, naive.avg_latency_cycles
         ));
     }
     out
@@ -127,41 +249,51 @@ mod tests {
     use super::*;
 
     #[test]
-    fn hysteresis_reduces_churn() {
-        let rows = thresholds(200_000, 0xAB).unwrap();
-        assert_eq!(rows.len(), 2);
-        let eq7 = &rows[0];
-        let naive = &rows[1];
-        assert!(
-            naive.pcmc_switch_energy_nj >= eq7.pcmc_switch_energy_nj,
-            "no-hysteresis must churn at least as much: {} vs {}",
-            naive.pcmc_switch_energy_nj,
-            eq7.pcmc_switch_energy_nj
-        );
-    }
-
-    #[test]
-    fn vicinity_beats_round_robin_latency() {
-        let rows = gateway_selection(200_000, 0xAB2).unwrap();
-        let vic = &rows[0];
-        let naive = &rows[1];
-        assert!(
-            vic.summary.avg_latency_cycles < naive.summary.avg_latency_cycles,
-            "vicinity {} vs round-robin {}",
-            vic.summary.avg_latency_cycles,
-            naive.summary.avg_latency_cycles
-        );
-    }
-
-    #[test]
-    fn epoch_sweep_runs_all_lengths() {
-        let rows = epoch_length(160_000, 0xAB3).unwrap();
-        assert_eq!(rows.len(), 4);
-        for r in &rows {
-            assert!(r.summary.delivery_ratio > 0.8, "{}", r.label);
+    fn specs_expand_and_validate() {
+        let base = spec(false).expand();
+        // 3 variants × 3 epoch lengths.
+        assert_eq!(base.len(), 9);
+        for sc in &base {
+            sc.config().unwrap();
         }
-        let csv = to_csv(&rows);
-        assert_eq!(csv.len(), 4);
-        assert!(report("epoch", &rows).contains("epoch-"));
+        let ext = spec(true).expand();
+        // 3 traffics × 5 policies.
+        assert_eq!(ext.len(), 15);
+        for sc in &ext {
+            sc.config().unwrap();
+        }
+    }
+
+    #[test]
+    fn view_helpers_find_their_rows() {
+        let row = |variant: &str, epoch: u64| AblationRow {
+            variant: variant.into(),
+            policy: "threshold".into(),
+            traffic: "parsec:0.0052:dedup".into(),
+            epoch_cycles: epoch,
+            avg_latency_cycles: 50.0,
+            avg_power_mw: 400.0,
+            energy_metric_pj: 10.0,
+            pcmc_switches: 8,
+            switch_energy_nj: 12.0,
+            avg_active_gateways: 8.0,
+            delivery_ratio: 0.99,
+        };
+        let abl = Ablations {
+            rows: vec![
+                row("", 5_000),
+                row("", BASE_EPOCH),
+                row("", 25_000),
+                row("nohyst", BASE_EPOCH),
+                row("rrgwsel", BASE_EPOCH),
+            ],
+        };
+        let (a, b) = abl.threshold_pair().unwrap();
+        assert_eq!((a.variant.as_str(), b.variant.as_str()), ("", "nohyst"));
+        let (a, b) = abl.gwsel_pair().unwrap();
+        assert_eq!((a.variant.as_str(), b.variant.as_str()), ("", "rrgwsel"));
+        assert_eq!(abl.epoch_sweep().len(), 3);
+        assert_eq!(to_csv(&abl).len(), 5);
+        assert!(report(&abl).contains("hysteresis"));
     }
 }

@@ -41,7 +41,7 @@ use crate::config::parser::{ConfigMap, Value};
 use crate::config::{Architecture, Config};
 use crate::coordinator::policy::{PolicyKind, PolicySpec};
 use crate::error::{Error, Result};
-use crate::metrics::combine_checksums;
+use crate::metrics::{combine_checksums, EpochRecord};
 use crate::sim::{Geometry, Network};
 use crate::topology::TopologyKind;
 use crate::traffic::{TrafficKind, TrafficSpec};
@@ -51,9 +51,55 @@ use crate::util::rng::{fnv1a_bytes, SplitMix64};
 
 /// Results-ledger schema version (`schema_version` in every record).
 /// v2 added the policy axis plus the `policy`, `pcmc_switches` and
-/// `switch_energy_nj` record fields; v1 records are treated as stale
-/// and their scenarios re-run.
-pub const SCHEMA_VERSION: u64 = 2;
+/// `switch_energy_nj` record fields. v3 (the figure-suite rebuild) added
+/// the controller-variant axis (`variant`), the per-record power
+/// breakdown (`laser_mw`/`tuning_mw`/`tia_mw`/`driver_mw`), the
+/// `avg_gateway_load` and `avg_total_lambdas` columns, and the opt-in
+/// `epochs`/`residency` blocks figs. 12–13 aggregate from. Older records
+/// are treated as stale and their scenarios re-run.
+pub const SCHEMA_VERSION: u64 = 3;
+
+/// Controller-ablation axis value: a named knob that degrades one piece
+/// of the ReSiPI control plane so the ablation figures can quantify its
+/// contribution. `None` on the axis means the paper's controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtrlVariant {
+    /// Disable the Eq. 7 hysteresis band (naive re-thresholding every
+    /// epoch) — the `ablations::thresholds` comparison.
+    NoHysteresis,
+    /// Replace Fig. 8 vicinity-guided gateway selection with naive
+    /// round-robin — the `ablations::gateway_selection` comparison.
+    NaiveGwsel,
+}
+
+impl CtrlVariant {
+    pub const ALL: [CtrlVariant; 2] = [CtrlVariant::NoHysteresis, CtrlVariant::NaiveGwsel];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CtrlVariant::NoHysteresis => "nohyst",
+            CtrlVariant::NaiveGwsel => "rrgwsel",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "nohyst" => Ok(CtrlVariant::NoHysteresis),
+            "rrgwsel" => Ok(CtrlVariant::NaiveGwsel),
+            other => Err(Error::config(format!(
+                "unknown controller variant {other:?} (expected nohyst, rrgwsel, or none)"
+            ))),
+        }
+    }
+
+    /// Degrade `cfg`'s controller accordingly.
+    pub fn apply(self, cfg: &mut Config) {
+        match self {
+            CtrlVariant::NoHysteresis => cfg.controller.no_hysteresis = true,
+            CtrlVariant::NaiveGwsel => cfg.controller.gwsel_naive = true,
+        }
+    }
+}
 
 /// The scenario matrix.
 #[derive(Debug, Clone)]
@@ -69,7 +115,14 @@ pub struct CampaignSpec {
     /// matrices without an explicit policy axis keep their historical
     /// names and derived seeds.
     pub policies: Vec<Option<PolicySpec>>,
-    /// Injection-rate axis (packets/cycle/core).
+    /// Controller-ablation axis. `None` means the paper's controller and
+    /// contributes no component to the scenario name, so matrices without
+    /// an explicit variant axis keep their historical names and seeds.
+    pub variants: Vec<Option<CtrlVariant>>,
+    /// Injection-rate axis (packets/cycle/core). An **empty** axis means
+    /// "each traffic spec keeps its own rate" — the figure presets use
+    /// this to sweep per-app calibrated parsec rates without a cross
+    /// product against a shared rate list.
     pub rates: Vec<f64>,
     /// Reconfiguration-interval axis (cycles).
     pub epoch_cycles: Vec<u64>,
@@ -80,6 +133,13 @@ pub struct CampaignSpec {
     pub warmup_cycles: u64,
     /// Root seed every scenario seed is derived from.
     pub root_seed: u64,
+    /// Embed the per-epoch adaptation series (`epochs` array) in every
+    /// record — the Fig. 12 aggregation hook. Not part of the scenario
+    /// name; `matches_record` refuses to resume from records without it.
+    pub record_epochs: bool,
+    /// Embed chiplet 0's per-router flit residency (`residency` array) in
+    /// every record — the Fig. 13 aggregation hook.
+    pub record_residency: bool,
 }
 
 impl CampaignSpec {
@@ -95,12 +155,15 @@ impl CampaignSpec {
                 TrafficSpec::new(TrafficKind::Tornado, 0.0),
             ],
             policies: vec![None],
+            variants: vec![None],
             rates: vec![0.002, 0.01],
             epoch_cycles: vec![2_000],
             seeds: vec![0],
             cycles: 6_000,
             warmup_cycles: 500,
             root_seed: 0xCA4A,
+            record_epochs: false,
+            record_residency: false,
         }
     }
 
@@ -121,12 +184,15 @@ impl CampaignSpec {
                 .map(|&k| TrafficSpec::new(k, 0.0))
                 .collect(),
             policies: vec![None],
+            variants: vec![None],
             rates: vec![0.002, 0.01],
             epoch_cycles: vec![10_000],
             seeds: vec![0],
             cycles: 100_000,
             warmup_cycles: 5_000,
             root_seed: 0xCA4A,
+            record_epochs: false,
+            record_residency: false,
         }
     }
 
@@ -143,12 +209,15 @@ impl CampaignSpec {
             chiplets: vec![64, 128, 256],
             traffics: vec![TrafficSpec::new(TrafficKind::Uniform, 0.0)],
             policies: vec![None],
+            variants: vec![None],
             rates: vec![0.002],
             epoch_cycles: vec![10_000],
             seeds: vec![0],
             cycles: 2_000,
             warmup_cycles: 200,
             root_seed: 0xCA4A,
+            record_epochs: false,
+            record_residency: false,
         }
     }
 
@@ -173,12 +242,15 @@ impl CampaignSpec {
                 .iter()
                 .map(|&k| Some(PolicySpec::new(k)))
                 .collect(),
+            variants: vec![None],
             rates: vec![0.01],
             epoch_cycles: vec![2_000],
             seeds: vec![0],
             cycles: 20_000,
             warmup_cycles: 1_000,
             root_seed: 0x9011C7,
+            record_epochs: false,
+            record_residency: false,
         }
     }
 
@@ -213,6 +285,18 @@ impl CampaignSpec {
                         .map(|s| PolicySpec::parse(s).map(Some))
                         .collect::<Result<_>>()?
                 }
+                "campaign.variant" => {
+                    spec.variants = str_axis(map, key)?
+                        .iter()
+                        .map(|s| {
+                            if s == "none" {
+                                Ok(None)
+                            } else {
+                                CtrlVariant::from_name(s).map(Some)
+                            }
+                        })
+                        .collect::<Result<_>>()?
+                }
                 "campaign.chiplets" => {
                     spec.chiplets = int_axis(map, key)?.iter().map(|&x| x as usize).collect()
                 }
@@ -230,12 +314,14 @@ impl CampaignSpec {
                 }
             }
         }
+        // `rates` is deliberately exempt: an empty rate axis means "each
+        // traffic spec keeps its own rate" (see the field doc).
         if spec.archs.is_empty()
             || spec.topologies.is_empty()
             || spec.chiplets.is_empty()
             || spec.traffics.is_empty()
             || spec.policies.is_empty()
-            || spec.rates.is_empty()
+            || spec.variants.is_empty()
             || spec.epoch_cycles.is_empty()
             || spec.seeds.is_empty()
         {
@@ -245,32 +331,45 @@ impl CampaignSpec {
     }
 
     /// Expand the cross product in canonical order (arch, topology,
-    /// chiplets, traffic, policy, rate, epoch, seed — innermost last).
-    /// The aggregate report lists scenarios in exactly this order.
+    /// chiplets, traffic, policy, variant, rate, epoch, seed — innermost
+    /// last). The aggregate report lists scenarios in exactly this order.
     pub fn expand(&self) -> Vec<CampaignScenario> {
+        // An empty rate axis keeps each traffic spec's own rate.
+        let rate_axis: Vec<Option<f64>> = if self.rates.is_empty() {
+            vec![None]
+        } else {
+            self.rates.iter().map(|&r| Some(r)).collect()
+        };
         let mut out = Vec::new();
         for &arch in &self.archs {
             for &topology in &self.topologies {
                 for &chiplets in &self.chiplets {
                     for traffic in &self.traffics {
                         for policy in &self.policies {
-                            for &rate in &self.rates {
-                                for &epoch_cycles in &self.epoch_cycles {
-                                    for &seed_index in &self.seeds {
-                                        let mut traffic = traffic.clone();
-                                        traffic.rate = rate;
-                                        out.push(CampaignScenario {
-                                            arch,
-                                            topology,
-                                            chiplets,
-                                            traffic,
-                                            policy: policy.clone(),
-                                            epoch_cycles,
-                                            seed_index,
-                                            cycles: self.cycles,
-                                            warmup_cycles: self.warmup_cycles,
-                                            root_seed: self.root_seed,
-                                        });
+                            for &variant in &self.variants {
+                                for &rate in &rate_axis {
+                                    for &epoch_cycles in &self.epoch_cycles {
+                                        for &seed_index in &self.seeds {
+                                            let mut traffic = traffic.clone();
+                                            if let Some(rate) = rate {
+                                                traffic.rate = rate;
+                                            }
+                                            out.push(CampaignScenario {
+                                                arch,
+                                                topology,
+                                                chiplets,
+                                                traffic,
+                                                policy: policy.clone(),
+                                                variant,
+                                                epoch_cycles,
+                                                seed_index,
+                                                cycles: self.cycles,
+                                                warmup_cycles: self.warmup_cycles,
+                                                root_seed: self.root_seed,
+                                                record_epochs: self.record_epochs,
+                                                record_residency: self.record_residency,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -292,30 +391,42 @@ pub struct CampaignScenario {
     pub traffic: TrafficSpec,
     /// Explicit policy override; `None` falls through to the arch default.
     pub policy: Option<PolicySpec>,
+    /// Controller ablation; `None` is the paper's controller.
+    pub variant: Option<CtrlVariant>,
     pub epoch_cycles: u64,
     pub seed_index: u64,
     pub cycles: u64,
     pub warmup_cycles: u64,
     pub root_seed: u64,
+    /// Embed the per-epoch series in the record (Fig. 12 hook).
+    pub record_epochs: bool,
+    /// Embed chiplet 0's router residency in the record (Fig. 13 hook).
+    pub record_residency: bool,
 }
 
 impl CampaignScenario {
     /// Stable identifier encoding every axis value — the JSONL ledger key.
-    /// An explicit policy contributes a `/p<spec>` component; the `None`
-    /// arch-default contributes nothing, so pre-policy-axis names (and
-    /// therefore their derived seeds) are unchanged.
+    /// An explicit policy contributes a `/p<spec>` component and an
+    /// explicit controller variant a `/v<name>` component; the `None`
+    /// defaults contribute nothing, so pre-existing matrices keep their
+    /// historical names (and therefore their derived seeds).
     pub fn name(&self) -> String {
         let policy = match &self.policy {
             Some(p) => format!("/p{}", p.spec_string()),
             None => String::new(),
         };
+        let variant = match self.variant {
+            Some(v) => format!("/v{}", v.name()),
+            None => String::new(),
+        };
         format!(
-            "{}/{}/c{}/{}{}/e{}/s{}",
+            "{}/{}/c{}/{}{}{}/e{}/s{}",
             self.arch.name(),
             self.topology.name(),
             self.chiplets,
             self.traffic.spec_string(),
             policy,
+            variant,
             self.epoch_cycles,
             self.seed_index
         )
@@ -340,6 +451,9 @@ impl CampaignScenario {
         if let Some(policy) = &self.policy {
             cfg.set_policy(policy.clone());
         }
+        if let Some(variant) = self.variant {
+            variant.apply(&mut cfg);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -352,6 +466,16 @@ impl CampaignScenario {
         let mut net = Network::new(cfg, traffic)?;
         net.run()?;
         let checksum = net.metrics().checksum();
+        let epochs: Vec<Json> = if self.record_epochs {
+            net.metrics().epochs.iter().map(epoch_record_json).collect()
+        } else {
+            Vec::new()
+        };
+        let residency: Vec<f64> = if self.record_residency {
+            net.router_residency()[..geo.routers_per_chiplet()].to_vec()
+        } else {
+            Vec::new()
+        };
         let s = net.summary();
         let mut r = Json::obj();
         r.set("schema_version", SCHEMA_VERSION);
@@ -363,6 +487,7 @@ impl CampaignScenario {
         // The *effective* policy label: explicit axis value or the arch
         // default the simulator resolved to.
         r.set("policy", s.policy.as_str());
+        r.set("variant", self.variant.map(CtrlVariant::name).unwrap_or(""));
         r.set("rate", self.traffic.rate);
         r.set("epoch_cycles", self.epoch_cycles);
         r.set("seed_index", self.seed_index);
@@ -375,18 +500,32 @@ impl CampaignScenario {
         r.set("avg_latency_cycles", s.avg_latency_cycles);
         r.set("p99_latency_cycles", s.p99_latency_cycles);
         r.set("avg_power_mw", s.avg_power_mw);
+        r.set("laser_mw", s.power.laser_mw);
+        r.set("tuning_mw", s.power.tuning_mw);
+        r.set("tia_mw", s.power.tia_mw);
+        r.set("driver_mw", s.power.driver_mw);
         r.set("total_energy_uj", s.total_energy_uj);
         r.set("energy_metric_pj", s.energy_metric_pj);
         r.set("avg_active_gateways", s.avg_active_gateways);
+        r.set("avg_gateway_load", s.avg_gateway_load);
+        r.set("avg_total_lambdas", s.avg_total_lambdas);
         r.set("pcmc_switches", s.pcmc_switches);
         r.set("switch_energy_nj", s.pcmc_switch_energy_nj);
+        if self.record_epochs {
+            r.set("epochs", epochs);
+        }
+        if self.record_residency {
+            r.set("residency", residency);
+        }
         r.set("checksum", format!("{checksum:#018x}"));
         Ok(r)
     }
 
     /// Does a parsed ledger record belong to this scenario (same name,
-    /// same derived seed, same horizon and warm-up, known schema, and a
-    /// parseable checksum)? Anything weaker re-runs rather than resumes.
+    /// same derived seed, same horizon and warm-up, known schema, a
+    /// parseable checksum, and — when the spec asks for them — the
+    /// embedded `epochs`/`residency` blocks)? Anything weaker re-runs
+    /// rather than resumes.
     fn matches_record(&self, record: &Json) -> bool {
         record.get("schema_version").and_then(Json::as_f64) == Some(SCHEMA_VERSION as f64)
             && record.get("name").and_then(Json::as_str) == Some(self.name().as_str())
@@ -395,12 +534,32 @@ impl CampaignScenario {
             && record.get("cycles").and_then(Json::as_f64) == Some(self.cycles as f64)
             && record.get("warmup_cycles").and_then(Json::as_f64)
                 == Some(self.warmup_cycles as f64)
+            && (!self.record_epochs
+                || record.get("epochs").and_then(Json::as_arr).is_some())
+            && (!self.record_residency
+                || record.get("residency").and_then(Json::as_arr).is_some())
             && record
                 .get("checksum")
                 .and_then(Json::as_str)
                 .and_then(parse_hex_u64)
                 .is_some()
     }
+}
+
+/// One epoch of the adaptation series as an embedded record object —
+/// exactly the fields the Fig. 12 settling analysis consumes.
+fn epoch_record_json(e: &EpochRecord) -> Json {
+    let mut o = Json::obj();
+    o.set("index", e.index);
+    o.set("delivered", e.delivered);
+    o.set("avg_latency", e.avg_latency);
+    o.set("power_mw", e.power.total_mw);
+    o.set("active_gateways", e.active_gateways);
+    o.set("total_lambdas", e.total_lambdas);
+    o.set("pcmc_switches", e.pcmc_switches);
+    o.set("switch_energy_nj", e.switch_energy_nj);
+    o.set("decision", e.policy_decision);
+    o
 }
 
 /// Outcome of a [`run_campaign`] invocation.
@@ -612,6 +771,7 @@ pub fn run_campaign_named(
         "chiplets",
         "traffic",
         "policy",
+        "variant",
         "rate",
         "epoch_cycles",
         "seed",
@@ -622,8 +782,15 @@ pub fn run_campaign_named(
         "avg_latency_cycles",
         "p99_latency_cycles",
         "avg_power_mw",
+        "laser_mw",
+        "tuning_mw",
+        "tia_mw",
+        "driver_mw",
         "total_energy_uj",
         "energy_metric_pj",
+        "avg_active_gateways",
+        "avg_gateway_load",
+        "avg_total_lambdas",
         "pcmc_switches",
         "switch_energy_nj",
         "checksum",
@@ -636,6 +803,7 @@ pub fn run_campaign_named(
             cell_num(r, "chiplets"),
             cell_str(r, "traffic"),
             cell_str(r, "policy"),
+            cell_str(r, "variant"),
             cell_num(r, "rate"),
             cell_num(r, "epoch_cycles"),
             cell_str(r, "seed"),
@@ -646,8 +814,15 @@ pub fn run_campaign_named(
             cell_num(r, "avg_latency_cycles"),
             cell_num(r, "p99_latency_cycles"),
             cell_num(r, "avg_power_mw"),
+            cell_num(r, "laser_mw"),
+            cell_num(r, "tuning_mw"),
+            cell_num(r, "tia_mw"),
+            cell_num(r, "driver_mw"),
             cell_num(r, "total_energy_uj"),
             cell_num(r, "energy_metric_pj"),
+            cell_num(r, "avg_active_gateways"),
+            cell_num(r, "avg_gateway_load"),
+            cell_num(r, "avg_total_lambdas"),
             cell_num(r, "pcmc_switches"),
             cell_num(r, "switch_energy_nj"),
             cell_str(r, "checksum"),
@@ -931,5 +1106,73 @@ mod tests {
         let mut wrong = r.clone();
         wrong.set("checksum", "garbage");
         assert!(!sc.matches_record(&wrong));
+        // A spec that wants the embedded epoch/residency blocks must not
+        // resume from a record without them (it couldn't aggregate).
+        let mut wants_epochs = sc.clone();
+        wants_epochs.record_epochs = true;
+        assert!(!wants_epochs.matches_record(&r));
+        let mut with = r.clone();
+        with.set("epochs", Vec::<Json>::new());
+        assert!(wants_epochs.matches_record(&with));
+        let mut wants_residency = sc.clone();
+        wants_residency.record_residency = true;
+        assert!(!wants_residency.matches_record(&r));
+        let mut with = r.clone();
+        with.set("residency", vec![0.0f64]);
+        assert!(wants_residency.matches_record(&with));
+    }
+
+    #[test]
+    fn variant_axis_names_apply_and_preserve_legacy_seeds() {
+        let mut spec = CampaignSpec::quick();
+        spec.archs.truncate(1);
+        spec.topologies.truncate(1);
+        spec.chiplets.truncate(1);
+        spec.traffics.truncate(1);
+        spec.rates.truncate(1);
+        spec.variants = vec![None, Some(CtrlVariant::NoHysteresis), Some(CtrlVariant::NaiveGwsel)];
+        let scenarios = spec.expand();
+        assert_eq!(scenarios.len(), 3);
+        assert!(!scenarios[0].name().contains("/v"), "None adds no component");
+        assert!(scenarios[1].name().contains("/vnohyst/"));
+        assert!(scenarios[2].name().contains("/vrrgwsel/"));
+        // The default-variant scenario keeps the exact pre-axis name (and
+        // therefore seed) of a spec with no variant axis at all.
+        let mut legacy = spec.clone();
+        legacy.variants = vec![None];
+        assert_eq!(scenarios[0].name(), legacy.expand()[0].name());
+        assert_eq!(scenarios[0].derived_seed(), legacy.expand()[0].derived_seed());
+        // The knobs actually reach the controller config.
+        let cfg = scenarios[1].config().unwrap();
+        assert!(cfg.controller.no_hysteresis);
+        let cfg = scenarios[2].config().unwrap();
+        assert!(cfg.controller.gwsel_naive);
+        let cfg = scenarios[0].config().unwrap();
+        assert!(!cfg.controller.no_hysteresis && !cfg.controller.gwsel_naive);
+        // Round-trip the names.
+        for v in CtrlVariant::ALL {
+            assert_eq!(CtrlVariant::from_name(v.name()).unwrap(), v);
+        }
+        assert!(CtrlVariant::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn empty_rate_axis_keeps_per_traffic_rates() {
+        let mut spec = CampaignSpec::quick();
+        spec.archs.truncate(1);
+        spec.topologies.truncate(1);
+        spec.chiplets.truncate(1);
+        spec.traffics = vec![
+            TrafficSpec::new(TrafficKind::Uniform, 0.003),
+            TrafficSpec::new(TrafficKind::Tornado, 0.007),
+        ];
+        spec.rates = Vec::new();
+        let scenarios = spec.expand();
+        assert_eq!(scenarios.len(), 2, "empty rate axis is one implicit cell");
+        assert_eq!(scenarios[0].traffic.rate, 0.003);
+        assert_eq!(scenarios[1].traffic.rate, 0.007);
+        for sc in &scenarios {
+            sc.config().unwrap();
+        }
     }
 }

@@ -1,29 +1,67 @@
-//! Fig. 10 — design-space exploration: average latency vs. measured
-//! gateway load `L_c` across eight PARSEC apps × {1..4} fixed gateways per
-//! chiplet, and the derivation of the optimal `L_m` (§4.2).
+//! Fig. 10 — design-space exploration (§4.2): average latency vs
+//! measured gateway load `L_c` across eight PARSEC apps × 1–4 fixed
+//! gateways per chiplet, and the derivation of the optimal load point
+//! `L_m` from the acceptable region.
 //!
-//! Each simulation point yields `(L_c, avg latency)`. Following the paper:
-//! within each gateway-count group, points whose latency is within 10% of
-//! the group's best are "accepted" (the yellow-shaded region); `L_m` is the
-//! maximum `L_c` among accepted points.
+//! Rebuilt as a campaign preset: the matrix is a [`CampaignSpec`]
+//! (`static-g1..4` architectures × the calibrated PARSEC traffic axis)
+//! streamed into the resumable `fig10.jsonl` ledger, with the exploration
+//! points re-derived from the byte-stable aggregate report. Two seed-era
+//! bugs died in the rebuild:
+//!
+//! * per-point seeds came from an ad-hoc XOR rule
+//!   (`seed ^ (app_index << 8) ^ gateways`) whose outputs differ from the
+//!   root in only a couple of nibbles and collide with other figures'
+//!   roots (`0xF16 ^ 4 == 0xF12`, Fig. 12's root seed). Scenarios now
+//!   use the campaign's collision-resistant name-derived rule
+//!   (`SplitMix64(root ^ fnv1a(name))`); `seed_rule_change_is_pinned`
+//!   documents the old rule's collision and the new rule's distinctness.
+//! * the acceptance fold ran `f64::min` over raw latencies, so one
+//!   degenerate group member (no packets delivered → latency reported as
+//!   a fake 0.0, or a NaN that round-trips through the ledger as JSON
+//!   null) captured — or poisoned — the per-group best and silently
+//!   flipped every point's accepted flag. [`apply_acceptance`] now
+//!   excludes zero-delivery/non-finite points explicitly and leaves an
+//!   all-degenerate group with nothing accepted.
 
-use crate::config::{Architecture, Config};
-use crate::sim::{Geometry, Network};
-use crate::traffic::parsec::{ParsecTraffic, PARSEC_APPS};
-use crate::util::io::Csv;
-use crate::util::pool::par_map_auto;
+use std::path::Path;
+
+use crate::config::Architecture;
+use crate::experiments::campaign::{self, CampaignOutcome, CampaignSpec};
+use crate::experiments::figures::{fmt, num, parsec_traffics, read_scenarios, txt};
+use crate::topology::TopologyKind;
+use crate::util::io::{Csv, Json};
 use crate::Result;
 
-/// One exploration point.
+/// Latency points within `1 + ACCEPT_OVERHEAD` of their group's best are
+/// inside the paper's acceptable (yellow) region.
+pub const ACCEPT_OVERHEAD: f64 = 0.10;
+
+/// One exploration point, extracted from the ledger-built report.
 #[derive(Debug, Clone)]
 pub struct Fig10Point {
-    pub app: &'static str,
+    pub app: String,
+    pub topology: String,
+    /// Fixed gateways per chiplet for this point (1–4).
     pub gateways: usize,
     /// Measured average gateway load (Eq. 5), packets/cycle.
     pub load: f64,
     pub avg_latency: f64,
-    /// Within 10% of its group's best latency (yellow region)?
+    pub delivered: u64,
+    /// Within the overhead band of its (topology, gateway-count) group's
+    /// best latency — the paper's acceptable region?
     pub accepted: bool,
+}
+
+impl Fig10Point {
+    /// May this point participate in the acceptance fold? A scenario
+    /// that delivered nothing has no meaningful latency (the simulator
+    /// reports 0.0 for an empty mean, and a NaN would round-trip through
+    /// the ledger as JSON null), so it must neither win nor poison the
+    /// per-group minimum.
+    pub fn is_measurable(&self) -> bool {
+        self.delivered > 0 && self.avg_latency.is_finite() && self.load.is_finite()
+    }
 }
 
 /// Full Fig. 10 result.
@@ -32,64 +70,62 @@ pub struct Fig10 {
     pub points: Vec<Fig10Point>,
     /// Latency-overhead acceptance threshold used (paper: 0.10).
     pub accept_overhead: f64,
-    /// Derived maximum allowable load (paper: 0.0152).
+    /// Derived maximum allowable load: the highest measured gateway load
+    /// among accepted points (paper: 0.0152 on its steeper curves).
     pub l_m: f64,
 }
 
-/// Run the exploration with the paper's 10% acceptance band.
-pub fn run(cycles: u64, seed: u64) -> Result<Fig10> {
-    run_with_accept(cycles, seed, 0.10)
+fn stem(extended: bool) -> &'static str {
+    if extended {
+        "fig10_ext"
+    } else {
+        "fig10"
+    }
 }
 
-/// Run the exploration. `cycles` is the per-point horizon (paper: 100 M);
-/// `accept_overhead` is the latency-overhead band for the yellow region
-/// (the paper's empirically-chosen 0.10). On this substrate the 10% band
-/// yields L_m ≈ 0.027 — the calibrated `Config` default.
-pub fn run_with_accept(cycles: u64, seed: u64, accept_overhead: f64) -> Result<Fig10> {
-    let jobs: Vec<(usize, usize)> = (0..PARSEC_APPS.len())
-        .flat_map(|a| (1..=4usize).map(move |g| (a, g)))
-        .collect();
-
-    let results = par_map_auto(jobs, |&(a, g)| -> Result<Fig10Point> {
-        let app = PARSEC_APPS[a];
-        let mut cfg = Config::table1(Architecture::StaticGateways(g));
-        cfg.sim.cycles = cycles;
-        cfg.sim.seed = seed ^ ((a as u64) << 8) ^ g as u64;
-        // Epoch granularity only affects measurement cadence here.
-        cfg.controller.epoch_cycles = (cycles / 10).max(10_000);
-        let geo = Geometry::from_config(&cfg);
-        let traffic = Box::new(ParsecTraffic::new(geo, app, cfg.sim.seed));
-        let mut net = Network::new(cfg, traffic)?;
-        net.run()?;
-        let s = net.summary();
-        Ok(Fig10Point {
-            app: app.name,
-            gateways: g,
-            load: s.avg_gateway_load,
-            avg_latency: s.avg_latency_cycles,
-            accepted: false,
-        })
-    });
-    let mut points: Vec<Fig10Point> = results.into_iter().collect::<Result<_>>()?;
-
-    // Acceptance: within each gateway-count group, latency within the
-    // overhead band of the group's best.
-    for g in 1..=4usize {
-        let best = points
-            .iter()
-            .filter(|p| p.gateways == g)
-            .map(|p| p.avg_latency)
-            .fold(f64::INFINITY, f64::min);
-        for p in points.iter_mut().filter(|p| p.gateways == g) {
-            p.accepted = p.avg_latency <= best * (1.0 + accept_overhead);
-        }
+/// The exploration matrix as a campaign preset. Baseline: mesh × 8 apps
+/// × static-g1..4 (32 scenarios, the paper's sweep). Extended: every
+/// topology kind (96 scenarios).
+pub fn spec(extended: bool) -> CampaignSpec {
+    CampaignSpec {
+        archs: (1..=4).map(Architecture::StaticGateways).collect(),
+        topologies: if extended {
+            TopologyKind::ALL.to_vec()
+        } else {
+            vec![TopologyKind::Mesh]
+        },
+        chiplets: vec![4],
+        traffics: parsec_traffics(),
+        policies: vec![None],
+        variants: vec![None],
+        // Empty rate axis: each app keeps its calibrated profile rate.
+        rates: Vec::new(),
+        epoch_cycles: vec![12_000],
+        seeds: vec![0],
+        cycles: 120_000,
+        warmup_cycles: 10_000,
+        root_seed: 0xF16,
+        record_epochs: false,
+        record_residency: false,
     }
-    let l_m = points
-        .iter()
-        .filter(|p| p.accepted)
-        .map(|p| p.load)
-        .fold(0.0f64, f64::max);
+}
 
+/// Run (or resume) the exploration through the campaign ledger in
+/// `out_dir` at the paper's 10% acceptance overhead.
+pub fn run(threads: usize, out_dir: &Path, extended: bool) -> Result<(CampaignOutcome, Fig10)> {
+    let spec = spec(extended);
+    let outcome = campaign::run_campaign_named(&spec, threads, out_dir, stem(extended))?;
+    let fig = from_report(&outcome.report_path, ACCEPT_OVERHEAD)?;
+    Ok((outcome, fig))
+}
+
+/// Rebuild the figure from a ledger-built aggregate report.
+pub fn from_report(report_path: &Path, accept_overhead: f64) -> Result<Fig10> {
+    let mut points: Vec<Fig10Point> = read_scenarios(report_path)?
+        .iter()
+        .map(point_from_record)
+        .collect();
+    let l_m = apply_acceptance(&mut points, accept_overhead);
     Ok(Fig10 {
         points,
         accept_overhead,
@@ -97,30 +133,135 @@ pub fn run_with_accept(cycles: u64, seed: u64, accept_overhead: f64) -> Result<F
     })
 }
 
-/// Render as CSV (one row per point) for plotting.
+/// Extract one exploration point from a ledger record.
+pub fn point_from_record(r: &Json) -> Fig10Point {
+    let arch = txt(r, "arch");
+    let gateways = arch
+        .strip_prefix("static-g")
+        .and_then(|g| g.parse().ok())
+        .unwrap_or(0);
+    let traffic = txt(r, "traffic");
+    // "parsec:<rate>:<app>" → the app name; other kinds keep the spec.
+    let app = match traffic.split(':').nth(2) {
+        Some(app) if traffic.starts_with("parsec:") => app.to_string(),
+        _ => traffic.clone(),
+    };
+    let delivered = num(r, "delivered");
+    Fig10Point {
+        app,
+        topology: txt(r, "topology"),
+        gateways,
+        load: num(r, "avg_gateway_load"),
+        avg_latency: num(r, "avg_latency_cycles"),
+        delivered: if delivered.is_finite() && delivered > 0.0 {
+            delivered as u64
+        } else {
+            0
+        },
+        accepted: false,
+    }
+}
+
+/// Mark each point accepted iff its latency is within
+/// `1 + accept_overhead` of the best **measurable** latency in its
+/// (topology, gateway-count) group, and return `L_m` — the highest
+/// measured load among accepted points (0.0 when nothing is accepted).
+///
+/// Degenerate points (zero delivery, non-finite latency or load) are
+/// excluded from the fold and can never be accepted; a group with no
+/// measurable member accepts nothing. This replaces the seed-era
+/// `f64::min` fold that a single NaN — or a fake 0.0 latency from a
+/// zero-delivery run — silently poisoned.
+pub fn apply_acceptance(points: &mut [Fig10Point], accept_overhead: f64) -> f64 {
+    let mut groups: Vec<(String, usize)> = points
+        .iter()
+        .map(|p| (p.topology.clone(), p.gateways))
+        .collect();
+    groups.sort();
+    groups.dedup();
+    for (topology, gateways) in groups {
+        let best = points
+            .iter()
+            .filter(|p| p.topology == topology && p.gateways == gateways && p.is_measurable())
+            .map(|p| p.avg_latency)
+            .fold(f64::INFINITY, f64::min);
+        for p in points
+            .iter_mut()
+            .filter(|p| p.topology == topology && p.gateways == gateways)
+        {
+            p.accepted = p.is_measurable()
+                && best.is_finite()
+                && p.avg_latency <= best * (1.0 + accept_overhead);
+        }
+    }
+    points
+        .iter()
+        .filter(|p| p.accepted)
+        .map(|p| p.load)
+        .fold(0.0, f64::max)
+}
+
+/// CSV artifact: one row per exploration point, numeric cells formatted
+/// exactly as the campaign report formats them (byte-stable).
 pub fn to_csv(fig: &Fig10) -> Csv {
-    let mut csv = Csv::new(vec!["app", "gateways", "load", "avg_latency", "accepted"]);
+    let mut csv = Csv::new(vec![
+        "app",
+        "topology",
+        "gateways",
+        "avg_gateway_load",
+        "avg_latency_cycles",
+        "delivered",
+        "accepted",
+    ]);
     for p in &fig.points {
         csv.row(vec![
-            p.app.to_string(),
+            p.app.clone(),
+            p.topology.clone(),
             p.gateways.to_string(),
-            format!("{:.6}", p.load),
-            format!("{:.3}", p.avg_latency),
+            fmt(p.load),
+            fmt(p.avg_latency),
+            p.delivered.to_string(),
             p.accepted.to_string(),
         ]);
     }
     csv
 }
 
+/// JSON artifact: the points plus the derived `L_m`.
+pub fn to_json(fig: &Fig10) -> Json {
+    let mut root = Json::obj();
+    root.set("figure", "fig10");
+    root.set("accept_overhead", fig.accept_overhead);
+    root.set("l_m", fig.l_m);
+    let points: Vec<Json> = fig
+        .points
+        .iter()
+        .map(|p| {
+            let mut o = Json::obj();
+            o.set("app", p.app.as_str());
+            o.set("topology", p.topology.as_str());
+            o.set("gateways", p.gateways);
+            o.set("avg_gateway_load", p.load);
+            o.set("avg_latency_cycles", p.avg_latency);
+            o.set("delivered", p.delivered);
+            o.set("accepted", p.accepted);
+            o
+        })
+        .collect();
+    root.set("points", points);
+    root
+}
+
 /// Human-readable report.
 pub fn report(fig: &Fig10) -> String {
     let mut out = String::new();
     out.push_str("Fig. 10 — design-space exploration (latency vs gateway load)\n");
-    out.push_str("app            g  load       latency   accepted\n");
+    out.push_str("app            topology  g  load       latency   accepted\n");
     for p in &fig.points {
         out.push_str(&format!(
-            "{:<14} {}  {:<9.6}  {:<8.2}  {}\n",
+            "{:<14} {:<9} {}  {:<9.6}  {:<8.2}  {}\n",
             p.app,
+            p.topology,
             p.gateways,
             p.load,
             p.avg_latency,
@@ -139,41 +280,147 @@ pub fn report(fig: &Fig10) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::{fnv1a_bytes, SplitMix64};
+
+    fn point(
+        topology: &str,
+        gateways: usize,
+        latency: f64,
+        load: f64,
+        delivered: u64,
+    ) -> Fig10Point {
+        Fig10Point {
+            app: "test".into(),
+            topology: topology.into(),
+            gateways,
+            load,
+            avg_latency: latency,
+            delivered,
+            accepted: false,
+        }
+    }
 
     #[test]
-    fn exploration_produces_32_points_and_plausible_lm() {
-        let fig = run(120_000, 0xF16).unwrap();
-        assert_eq!(fig.points.len(), 32);
-        // Loads decrease with more gateways for the same app.
-        for a in ["blackscholes", "facesim"] {
-            let l1 = fig
-                .points
-                .iter()
-                .find(|p| p.app == a && p.gateways == 1)
-                .unwrap()
-                .load;
-            let l4 = fig
-                .points
-                .iter()
-                .find(|p| p.app == a && p.gateways == 4)
-                .unwrap()
-                .load;
-            assert!(
-                l4 < l1,
-                "{a}: load with 4 gateways ({l4}) must be below 1 gateway ({l1})"
-            );
+    fn spec_expands_to_the_paper_matrix_and_validates() {
+        let scenarios = spec(false).expand();
+        // 4 gateway counts × 8 apps.
+        assert_eq!(scenarios.len(), 32);
+        // Every scenario's config must validate, or the campaign would
+        // fail mid-run; same for the extended tier's 3 topologies.
+        for sc in &scenarios {
+            sc.config().unwrap();
         }
-        // L_m is positive and within an order of magnitude of the paper's.
-        assert!(
-            fig.l_m > 0.002 && fig.l_m < 0.15,
-            "derived L_m = {}",
-            fig.l_m
-        );
-        // Acceptance is non-trivial: some accepted, some not.
-        let acc = fig.points.iter().filter(|p| p.accepted).count();
-        assert!(acc > 0 && acc < 32, "accepted {acc}/32");
-        // CSV renders every point.
-        assert_eq!(to_csv(&fig).len(), 32);
-        assert!(report(&fig).contains("L_m"));
+        let ext = spec(true).expand();
+        assert_eq!(ext.len(), 96);
+        for sc in &ext {
+            sc.config().unwrap();
+        }
+    }
+
+    #[test]
+    fn seed_rule_change_is_pinned() {
+        // Old seed-era rule: root ^ (app_index << 8) ^ gateways. With
+        // root 0xF16, app 0 and 4 gateways that is 0xF12 — exactly
+        // Fig. 12's root seed, so two "independent" figures shared RNG
+        // streams, and nearby points differed in only a couple of bits.
+        let old_rule = |root: u64, app: u64, gateways: u64| root ^ (app << 8) ^ gateways;
+        assert_eq!(old_rule(0xF16, 0, 4), 0xF12);
+
+        // New rule: scenarios derive seeds from their unique names, so
+        // all 32 are pairwise distinct, well-mixed, and none collides
+        // with any of the old rule's outputs.
+        let scenarios = spec(false).expand();
+        for sc in &scenarios {
+            let expected =
+                SplitMix64::new(0xF16 ^ fnv1a_bytes(sc.name().as_bytes())).next_u64();
+            assert_eq!(sc.derived_seed(), expected);
+        }
+        let mut seeds: Vec<u64> = scenarios.iter().map(|s| s.derived_seed()).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 32, "name-derived seeds must be pairwise distinct");
+        for app in 0..8u64 {
+            for g in 1..=4u64 {
+                assert!(
+                    !seeds.contains(&old_rule(0xF16, app, g)),
+                    "new seeds must not reproduce the old XOR outputs"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn acceptance_ignores_degenerate_points() {
+        // A zero-delivery point reports latency 0.0 (empty mean). Under
+        // the old min-fold it became the group's "best" and rejected
+        // every real point; now it is excluded and cannot be accepted.
+        let mut pts = vec![
+            point("mesh", 1, 0.0, 0.0, 0),
+            point("mesh", 1, 100.0, 0.05, 500),
+            point("mesh", 1, 105.0, 0.06, 480),
+            point("mesh", 1, 200.0, 0.07, 300),
+        ];
+        let l_m = apply_acceptance(&mut pts, 0.10);
+        assert!(!pts[0].accepted, "degenerate point must not be accepted");
+        assert!(pts[1].accepted && pts[2].accepted);
+        assert!(!pts[3].accepted, "200 is far outside the 10% band of 100");
+        assert_eq!(l_m, 0.06);
+    }
+
+    #[test]
+    fn acceptance_survives_nan_and_all_degenerate_groups() {
+        // NaN latency (a ledger null) must neither win nor poison the
+        // fold; a group with no measurable member accepts nothing — and
+        // neither case may leak into the healthy neighbour group.
+        let mut pts = vec![
+            point("mesh", 1, f64::NAN, 0.02, 100),
+            point("mesh", 1, f64::INFINITY, 0.03, 100),
+            point("mesh", 1, 0.0, 0.10, 0),
+            point("mesh", 2, 50.0, 0.04, 900),
+        ];
+        let l_m = apply_acceptance(&mut pts, 0.10);
+        assert!(pts.iter().take(3).all(|p| !p.accepted));
+        assert!(pts[3].accepted);
+        assert_eq!(l_m, 0.04);
+    }
+
+    #[test]
+    fn acceptance_groups_are_per_topology() {
+        // The same gateway count under different fabrics folds
+        // separately: a fast torus must not reject every mesh point.
+        let mut pts = vec![
+            point("mesh", 2, 100.0, 0.05, 500),
+            point("torus", 2, 50.0, 0.06, 500),
+        ];
+        apply_acceptance(&mut pts, 0.10);
+        assert!(pts[0].accepted && pts[1].accepted);
+    }
+
+    #[test]
+    fn zero_rate_scenario_extracts_as_unaccepted() {
+        // Regression for the paper-figure poison at injection rate 0:
+        // run a real zero-rate scenario, extract its point, and confirm
+        // it is degenerate (not accepted) without disturbing a healthy
+        // group member folded alongside it.
+        let mut zero = spec(false);
+        zero.traffics = vec![crate::traffic::TrafficSpec::new(
+            crate::traffic::TrafficKind::Uniform,
+            0.0,
+        )];
+        zero.archs = vec![Architecture::StaticGateways(2)];
+        zero.cycles = 5_000;
+        zero.warmup_cycles = 500;
+        zero.epoch_cycles = vec![1_000];
+        let scenarios = zero.expand();
+        assert_eq!(scenarios.len(), 1);
+        let record = scenarios[0].run().unwrap();
+        let p = point_from_record(&record);
+        assert_eq!(p.delivered, 0, "rate 0 must deliver nothing");
+        assert!(!p.is_measurable());
+        let mut pts = vec![p, point("mesh", 2, 80.0, 0.04, 400)];
+        let l_m = apply_acceptance(&mut pts, 0.10);
+        assert!(!pts[0].accepted);
+        assert!(pts[1].accepted, "healthy point survives a degenerate sibling");
+        assert_eq!(l_m, 0.04);
     }
 }

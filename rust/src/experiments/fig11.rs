@@ -6,12 +6,21 @@
 //! ≈37% lower latency, ≈25% lower power, ≈53% lower energy; AWGR has the
 //! worst power; ReSiPI-all-on is slightly faster but markedly more
 //! power-hungry than adaptive ReSiPI.
+//!
+//! Rebuilt as a campaign preset: the app × architecture grid streams
+//! into the resumable `fig11.jsonl` ledger (replacing the seed-era
+//! `seed ^ (app << 16) ^ (arch << 4)` XOR derivation with the campaign's
+//! name-derived seeds), and the grid plus headline are re-derived from
+//! the byte-stable aggregate report. The extended tier re-runs the grid
+//! on every topology kind; the headline always compares the mesh grid.
 
-use crate::config::{Architecture, Config};
-use crate::sim::{Geometry, Network, Summary};
-use crate::traffic::parsec::{ParsecTraffic, PARSEC_APPS};
+use std::path::Path;
+
+use crate::config::Architecture;
+use crate::experiments::campaign::{self, CampaignOutcome, CampaignSpec};
+use crate::experiments::figures::{fmt, num, parsec_traffics, read_scenarios, txt};
+use crate::topology::TopologyKind;
 use crate::util::io::{Csv, Json};
-use crate::util::pool::par_map_auto;
 use crate::Result;
 
 pub const ARCHS: [Architecture; 4] = [
@@ -21,62 +30,160 @@ pub const ARCHS: [Architecture; 4] = [
     Architecture::ResipiAllOn,
 ];
 
+/// One grid cell, extracted from the ledger-built report.
+#[derive(Debug, Clone)]
+pub struct Fig11Cell {
+    pub app: String,
+    pub arch: String,
+    pub topology: String,
+    pub avg_latency_cycles: f64,
+    pub p99_latency_cycles: f64,
+    pub avg_power_mw: f64,
+    pub laser_mw: f64,
+    pub tuning_mw: f64,
+    pub tia_mw: f64,
+    pub driver_mw: f64,
+    pub energy_metric_pj: f64,
+    pub total_energy_uj: f64,
+    pub avg_active_gateways: f64,
+    pub avg_total_lambdas: f64,
+    pub delivery_ratio: f64,
+}
+
 /// Full Fig. 11 result grid.
 #[derive(Debug, Clone)]
 pub struct Fig11 {
-    /// One summary per (app, arch), row-major by app then arch (ARCHS order).
-    pub cells: Vec<Summary>,
-    /// Mean ReSiPI-vs-PROWAVES improvements over apps: (latency, power,
-    /// energy), as fractions (0.37 = 37% lower).
+    /// Cells in ledger (campaign-canonical) order: arch-major, then
+    /// topology, then app.
+    pub cells: Vec<Fig11Cell>,
+    /// Mean ReSiPI-vs-PROWAVES improvements over apps on the mesh grid:
+    /// (latency, power, energy), as fractions (0.37 = 37% lower).
     pub headline: (f64, f64, f64),
 }
 
 impl Fig11 {
-    pub fn cell(&self, app: usize, arch: usize) -> &Summary {
-        &self.cells[app * ARCHS.len() + arch]
+    /// The mesh-grid cell for (app, arch), by name.
+    pub fn cell(&self, app: &str, arch: &str) -> Option<&Fig11Cell> {
+        self.cells
+            .iter()
+            .find(|c| c.app == app && c.arch == arch && c.topology == "mesh")
     }
 }
 
-/// Run the grid. `cycles` per point (paper: 100 M).
-pub fn run(cycles: u64, seed: u64) -> Result<Fig11> {
-    let jobs: Vec<(usize, usize)> = (0..PARSEC_APPS.len())
-        .flat_map(|a| (0..ARCHS.len()).map(move |r| (a, r)))
-        .collect();
-    let results = par_map_auto(jobs, |&(a, r)| -> Result<Summary> {
-        let app = PARSEC_APPS[a];
-        let mut cfg = Config::table1(ARCHS[r]);
-        cfg.sim.cycles = cycles;
-        cfg.sim.seed = seed ^ ((a as u64) << 16) ^ ((r as u64) << 4);
-        cfg.controller.epoch_cycles = (cycles / 20).max(10_000);
-        let geo = Geometry::from_config(&cfg);
-        let traffic = Box::new(ParsecTraffic::new(geo, app, cfg.sim.seed ^ 0xA11));
-        let mut net = Network::new(cfg, traffic)?;
-        net.run()?;
-        Ok(net.summary())
-    });
-    let cells: Vec<Summary> = results.into_iter().collect::<Result<_>>()?;
+fn stem(extended: bool) -> &'static str {
+    if extended {
+        "fig11_ext"
+    } else {
+        "fig11"
+    }
+}
 
-    // Headline improvements: mean over apps of 1 − resipi/prowaves.
-    let idx = |a: usize, r: usize| a * ARCHS.len() + r;
-    let (mut dl, mut dp, mut de) = (0.0, 0.0, 0.0);
-    for a in 0..PARSEC_APPS.len() {
-        let pw = &cells[idx(a, 1)];
-        let rs = &cells[idx(a, 2)];
+/// The comparison grid as a campaign preset. Baseline: 4 architectures ×
+/// 8 apps on the mesh (32 scenarios). Extended: × every topology kind
+/// (96 scenarios).
+pub fn spec(extended: bool) -> CampaignSpec {
+    CampaignSpec {
+        archs: ARCHS.to_vec(),
+        topologies: if extended {
+            TopologyKind::ALL.to_vec()
+        } else {
+            vec![TopologyKind::Mesh]
+        },
+        chiplets: vec![4],
+        traffics: parsec_traffics(),
+        policies: vec![None],
+        variants: vec![None],
+        rates: Vec::new(),
+        epoch_cycles: vec![10_000],
+        seeds: vec![0],
+        cycles: 150_000,
+        warmup_cycles: 10_000,
+        root_seed: 0xF11,
+        record_epochs: false,
+        record_residency: false,
+    }
+}
+
+/// Run (or resume) the grid through the campaign ledger in `out_dir`.
+pub fn run(threads: usize, out_dir: &Path, extended: bool) -> Result<(CampaignOutcome, Fig11)> {
+    let spec = spec(extended);
+    let outcome = campaign::run_campaign_named(&spec, threads, out_dir, stem(extended))?;
+    let fig = from_report(&outcome.report_path)?;
+    Ok((outcome, fig))
+}
+
+/// Rebuild the figure from a ledger-built aggregate report.
+pub fn from_report(report_path: &Path) -> Result<Fig11> {
+    let cells: Vec<Fig11Cell> = read_scenarios(report_path)?
+        .iter()
+        .map(|r| {
+            let traffic = txt(r, "traffic");
+            let app = match traffic.split(':').nth(2) {
+                Some(app) if traffic.starts_with("parsec:") => app.to_string(),
+                _ => traffic.clone(),
+            };
+            Fig11Cell {
+                app,
+                arch: txt(r, "arch"),
+                topology: txt(r, "topology"),
+                avg_latency_cycles: num(r, "avg_latency_cycles"),
+                p99_latency_cycles: num(r, "p99_latency_cycles"),
+                avg_power_mw: num(r, "avg_power_mw"),
+                laser_mw: num(r, "laser_mw"),
+                tuning_mw: num(r, "tuning_mw"),
+                tia_mw: num(r, "tia_mw"),
+                driver_mw: num(r, "driver_mw"),
+                energy_metric_pj: num(r, "energy_metric_pj"),
+                total_energy_uj: num(r, "total_energy_uj"),
+                avg_active_gateways: num(r, "avg_active_gateways"),
+                avg_total_lambdas: num(r, "avg_total_lambdas"),
+                delivery_ratio: num(r, "delivery_ratio"),
+            }
+        })
+        .collect();
+    let headline = headline(&cells);
+    Ok(Fig11 { cells, headline })
+}
+
+/// Mean ReSiPI-vs-PROWAVES improvements over the mesh-grid apps.
+/// App pairs where either side is degenerate (non-finite latency — e.g.
+/// a zero-delivery run whose latency round-tripped as null) are skipped
+/// rather than poisoning the means.
+fn headline(cells: &[Fig11Cell]) -> (f64, f64, f64) {
+    let mesh = |arch: &str, app: &str| {
+        cells
+            .iter()
+            .find(|c| c.arch == arch && c.app == app && c.topology == "mesh")
+    };
+    let mut apps: Vec<&str> = cells.iter().map(|c| c.app.as_str()).collect();
+    apps.sort_unstable();
+    apps.dedup();
+    let (mut dl, mut dp, mut de, mut n) = (0.0, 0.0, 0.0, 0.0);
+    for app in apps {
+        let (Some(pw), Some(rs)) = (mesh("prowaves", app), mesh("resipi", app)) else {
+            continue;
+        };
+        if !pw.avg_latency_cycles.is_finite() || !rs.avg_latency_cycles.is_finite() {
+            continue;
+        }
         dl += 1.0 - rs.avg_latency_cycles / pw.avg_latency_cycles;
         dp += 1.0 - rs.avg_power_mw / pw.avg_power_mw;
         de += 1.0 - rs.energy_metric_pj / pw.energy_metric_pj;
+        n += 1.0;
     }
-    let n = PARSEC_APPS.len() as f64;
-    Ok(Fig11 {
-        cells,
-        headline: (dl / n, dp / n, de / n),
-    })
+    if n == 0.0 {
+        (f64::NAN, f64::NAN, f64::NAN)
+    } else {
+        (dl / n, dp / n, de / n)
+    }
 }
 
+/// CSV artifact: one row per grid cell, byte-stable cells.
 pub fn to_csv(fig: &Fig11) -> Csv {
     let mut csv = Csv::new(vec![
         "app",
         "arch",
+        "topology",
         "avg_latency_cycles",
         "p99_latency_cycles",
         "avg_power_mw",
@@ -90,33 +197,32 @@ pub fn to_csv(fig: &Fig11) -> Csv {
         "avg_total_lambdas",
         "delivery_ratio",
     ]);
-    for (a, app) in PARSEC_APPS.iter().enumerate() {
-        for (r, _) in ARCHS.iter().enumerate() {
-            let s = fig.cell(a, r);
-            csv.row(vec![
-                app.name.to_string(),
-                s.arch.clone(),
-                format!("{:.3}", s.avg_latency_cycles),
-                format!("{:.3}", s.p99_latency_cycles),
-                format!("{:.3}", s.avg_power_mw),
-                format!("{:.3}", s.power.laser_mw),
-                format!("{:.3}", s.power.tuning_mw),
-                format!("{:.3}", s.power.tia_mw),
-                format!("{:.3}", s.power.driver_mw),
-                format!("{:.3}", s.energy_metric_pj),
-                format!("{:.3}", s.total_energy_uj),
-                format!("{:.2}", s.avg_active_gateways),
-                format!("{:.2}", s.avg_total_lambdas),
-                format!("{:.4}", s.delivery_ratio),
-            ]);
-        }
+    for c in &fig.cells {
+        csv.row(vec![
+            c.app.clone(),
+            c.arch.clone(),
+            c.topology.clone(),
+            fmt(c.avg_latency_cycles),
+            fmt(c.p99_latency_cycles),
+            fmt(c.avg_power_mw),
+            fmt(c.laser_mw),
+            fmt(c.tuning_mw),
+            fmt(c.tia_mw),
+            fmt(c.driver_mw),
+            fmt(c.energy_metric_pj),
+            fmt(c.total_energy_uj),
+            fmt(c.avg_active_gateways),
+            fmt(c.avg_total_lambdas),
+            fmt(c.delivery_ratio),
+        ]);
     }
     csv
 }
 
+/// JSON artifact: the headline plus the paper's claimed numbers.
 pub fn to_json(fig: &Fig11) -> Json {
     let mut j = Json::obj();
-    j.set("experiment", "fig11");
+    j.set("figure", "fig11");
     j.set("latency_improvement_vs_prowaves", fig.headline.0);
     j.set("power_improvement_vs_prowaves", fig.headline.1);
     j.set("energy_improvement_vs_prowaves", fig.headline.2);
@@ -128,21 +234,19 @@ pub fn to_json(fig: &Fig11) -> Json {
             Json::Str("energy -53%".into()),
         ]),
     );
+    j.set("cells", fig.cells.len());
     j
 }
 
 pub fn report(fig: &Fig11) -> String {
     let mut out = String::new();
     out.push_str("Fig. 11 — latency / power / energy per app × architecture\n\n");
-    out.push_str("app            arch           latency    power(mW)  energy(pJ)\n");
-    for (a, app) in PARSEC_APPS.iter().enumerate() {
-        for (r, _) in ARCHS.iter().enumerate() {
-            let s = fig.cell(a, r);
-            out.push_str(&format!(
-                "{:<14} {:<14} {:<10.2} {:<10.1} {:<10.1}\n",
-                app.name, s.arch, s.avg_latency_cycles, s.avg_power_mw, s.energy_metric_pj
-            ));
-        }
+    out.push_str("app            arch           topology  latency    power(mW)  energy(pJ)\n");
+    for c in &fig.cells {
+        out.push_str(&format!(
+            "{:<14} {:<14} {:<9} {:<10.2} {:<10.1} {:<10.1}\n",
+            c.app, c.arch, c.topology, c.avg_latency_cycles, c.avg_power_mw, c.energy_metric_pj
+        ));
     }
     out.push_str(&format!(
         "\nReSiPI vs PROWAVES (mean over apps): latency −{:.0}%, power −{:.0}%, energy −{:.0}%\n\
@@ -158,38 +262,54 @@ pub fn report(fig: &Fig11) -> String {
 mod tests {
     use super::*;
 
-    /// A scaled-down Fig. 11 must reproduce the paper's *shape*: ReSiPI
-    /// beats PROWAVES on latency, power, and energy on average; AWGR burns
-    /// the most power; all-on ReSiPI uses more power than adaptive ReSiPI.
     #[test]
-    fn shape_of_fig11_holds_at_small_scale() {
-        let fig = run(150_000, 0xF11).unwrap();
-        assert_eq!(fig.cells.len(), 32);
-        let (dl, dp, de) = fig.headline;
-        assert!(dl > 0.0, "ReSiPI must cut latency vs PROWAVES (got {dl:.2})");
-        assert!(dp > 0.0, "ReSiPI must cut power vs PROWAVES (got {dp:.2})");
-        assert!(de > 0.10, "ReSiPI must cut energy vs PROWAVES (got {de:.2})");
+    fn spec_expands_to_the_grid_and_validates() {
+        let scenarios = spec(false).expand();
+        // 4 architectures × 8 apps.
+        assert_eq!(scenarios.len(), 32);
+        for sc in &scenarios {
+            sc.config().unwrap();
+        }
+        let ext = spec(true).expand();
+        assert_eq!(ext.len(), 96);
+        for sc in &ext {
+            sc.config().unwrap();
+        }
+    }
 
-        // AWGR worst power on average.
-        let mean_power = |arch_idx: usize| -> f64 {
-            (0..PARSEC_APPS.len())
-                .map(|a| fig.cell(a, arch_idx).avg_power_mw)
-                .sum::<f64>()
-                / PARSEC_APPS.len() as f64
+    #[test]
+    fn headline_skips_degenerate_app_pairs() {
+        let cell = |app: &str, arch: &str, lat: f64| Fig11Cell {
+            app: app.into(),
+            arch: arch.into(),
+            topology: "mesh".into(),
+            avg_latency_cycles: lat,
+            p99_latency_cycles: lat,
+            avg_power_mw: 100.0,
+            laser_mw: 0.0,
+            tuning_mw: 0.0,
+            tia_mw: 0.0,
+            driver_mw: 0.0,
+            energy_metric_pj: 10.0,
+            total_energy_uj: 1.0,
+            avg_active_gateways: 2.0,
+            avg_total_lambdas: 8.0,
+            delivery_ratio: 1.0,
         };
-        let awgr = mean_power(0);
-        for r in 1..4 {
-            assert!(
-                awgr > mean_power(r),
-                "AWGR should have the worst power: {awgr} vs {}",
-                mean_power(r)
-            );
-        }
-        // All-on ReSiPI > adaptive ReSiPI power.
-        assert!(mean_power(3) > mean_power(2));
-        // Every cell delivered sensibly.
-        for s in &fig.cells {
-            assert!(s.delivery_ratio > 0.6, "{}: ratio {}", s.arch, s.delivery_ratio);
-        }
+        // One healthy pair (resipi halves latency) and one with a NaN
+        // (null-round-tripped) PROWAVES side that must be skipped.
+        let cells = vec![
+            cell("a", "prowaves", 100.0),
+            cell("a", "resipi", 50.0),
+            cell("b", "prowaves", f64::NAN),
+            cell("b", "resipi", 60.0),
+        ];
+        let (dl, dp, de) = headline(&cells);
+        assert!((dl - 0.5).abs() < 1e-12);
+        assert_eq!(dp, 0.0);
+        assert_eq!(de, 0.0);
+        // All-degenerate grid: headline is NaN, not a fake 0%.
+        let (dl, _, _) = headline(&[cell("a", "prowaves", f64::NAN)]);
+        assert!(dl.is_nan());
     }
 }

@@ -3,18 +3,32 @@
 //! workload. PROWAVES concentrates congestion on the single gateway-hosting
 //! router; ReSiPI spreads the load across its (typically two, for Dedup)
 //! active gateways.
+//!
+//! Rebuilt as a campaign preset: both scenarios stream into the resumable
+//! `fig13.jsonl` ledger with chiplet-0 residency embedded per record
+//! (`record_residency`), replacing the seed-era ad-hoc `seed ^ 0xDE`
+//! traffic stream with the campaign's name-derived seeds. The heat-map
+//! geometry (mesh extent, gateway markers) is re-derived from each
+//! scenario's config at post-processing time. The extended tier adds
+//! bursty and composed multi-tenant workloads to the residency
+//! comparison.
 
-use crate::config::{Architecture, Config};
-use crate::sim::{Coord, Geometry, Network};
-use crate::traffic::parsec::{app_by_name, ParsecTraffic};
-use crate::util::io::Csv;
-use crate::util::pool::par_map_auto;
-use crate::Result;
+use std::path::Path;
 
-/// Residency heat-map for one architecture's chiplet 0.
+use crate::config::Architecture;
+use crate::experiments::campaign::{self, CampaignOutcome, CampaignSpec};
+use crate::experiments::figures::{fmt, read_scenarios, txt};
+use crate::sim::{Coord, Geometry};
+use crate::topology::TopologyKind;
+use crate::traffic::{TrafficKind, TrafficSpec};
+use crate::util::io::{Csv, Json};
+use crate::{Error, Result};
+
+/// Residency heat-map for one scenario's chiplet 0.
 #[derive(Debug, Clone)]
 pub struct ResidencyMap {
     pub arch: String,
+    pub traffic: String,
     pub mesh_x: usize,
     pub mesh_y: usize,
     /// Average flit residency (cycles) per router, index `y * mesh_x + x`.
@@ -30,8 +44,10 @@ impl ResidencyMap {
 
     /// Peak-to-mean ratio: how concentrated the congestion is.
     pub fn peak_to_mean(&self) -> f64 {
-        let mean =
-            self.residency.iter().sum::<f64>() / self.residency.len() as f64;
+        if self.residency.is_empty() {
+            return 0.0;
+        }
+        let mean = self.residency.iter().sum::<f64>() / self.residency.len() as f64;
         let peak = self.residency.iter().cloned().fold(0.0f64, f64::max);
         if mean == 0.0 {
             0.0
@@ -41,54 +57,125 @@ impl ResidencyMap {
     }
 }
 
-/// Fig. 13 result.
+/// Fig. 13 result: one heat-map per (architecture, workload) scenario.
 #[derive(Debug, Clone)]
 pub struct Fig13 {
-    pub prowaves: ResidencyMap,
-    pub resipi: ResidencyMap,
+    pub maps: Vec<ResidencyMap>,
 }
 
-/// Run Dedup on both architectures and extract chiplet-0 residency.
-pub fn run(cycles: u64, seed: u64) -> Result<Fig13> {
-    let jobs = vec![Architecture::Prowaves, Architecture::Resipi];
-    let results = par_map_auto(jobs, |&arch| -> Result<ResidencyMap> {
-        let mut cfg = Config::table1(arch);
-        cfg.sim.cycles = cycles;
-        cfg.sim.seed = seed;
-        cfg.controller.epoch_cycles = (cycles / 10).max(10_000);
+impl Fig13 {
+    /// The first map for the given architecture (the Dedup baseline).
+    pub fn map(&self, arch: &str) -> Option<&ResidencyMap> {
+        self.maps.iter().find(|m| m.arch == arch)
+    }
+}
+
+fn stem(extended: bool) -> &'static str {
+    if extended {
+        "fig13_ext"
+    } else {
+        "fig13"
+    }
+}
+
+/// The residency matrix as a campaign preset. Baseline: PROWAVES and
+/// ReSiPI under Dedup (2 scenarios). Extended: plus bursty and composed
+/// multi-tenant workloads (6 scenarios).
+pub fn spec(extended: bool) -> CampaignSpec {
+    let dedup_rate = 0.0052;
+    let mut dedup = TrafficSpec::new(TrafficKind::Parsec, dedup_rate);
+    dedup.app = "dedup".into();
+    let mut traffics = vec![dedup];
+    if extended {
+        let mut bursty = TrafficSpec::new(TrafficKind::Bursty, 0.01);
+        bursty.burst_on = 100.0;
+        bursty.burst_off = 400.0;
+        traffics.push(bursty);
+        // Default tenants: uniform@0.5@0 + tornado@0.5@2500.
+        traffics.push(TrafficSpec::new(TrafficKind::Composed, 0.01));
+    }
+    CampaignSpec {
+        archs: vec![Architecture::Prowaves, Architecture::Resipi],
+        topologies: vec![TopologyKind::Mesh],
+        chiplets: vec![4],
+        traffics,
+        policies: vec![None],
+        variants: vec![None],
+        rates: Vec::new(),
+        epoch_cycles: vec![20_000],
+        seeds: vec![0],
+        cycles: 200_000,
+        warmup_cycles: 10_000,
+        root_seed: 0xF13,
+        record_epochs: false,
+        record_residency: true,
+    }
+}
+
+/// Run (or resume) the residency matrix through the campaign ledger in
+/// `out_dir`.
+pub fn run(threads: usize, out_dir: &Path, extended: bool) -> Result<(CampaignOutcome, Fig13)> {
+    let spec = spec(extended);
+    let outcome = campaign::run_campaign_named(&spec, threads, out_dir, stem(extended))?;
+    let fig = from_report(&spec, &outcome.report_path)?;
+    Ok((outcome, fig))
+}
+
+/// Rebuild the figure from a ledger-built aggregate report. The spec is
+/// needed to re-derive each scenario's heat-map geometry (mesh extent,
+/// gateway positions), which the ledger does not carry.
+pub fn from_report(spec: &CampaignSpec, report_path: &Path) -> Result<Fig13> {
+    let scenarios = spec.expand();
+    let mut maps = Vec::new();
+    for r in read_scenarios(report_path)? {
+        let name = txt(&r, "name");
+        let sc = scenarios
+            .iter()
+            .find(|sc| sc.name() == name)
+            .ok_or_else(|| {
+                Error::config(format!("report scenario {name:?} not in the fig13 spec"))
+            })?;
+        let cfg = sc.config()?;
         let geo = Geometry::from_config(&cfg);
-        let app = app_by_name("dedup").unwrap();
-        let traffic = Box::new(ParsecTraffic::new(geo.clone(), app, seed ^ 0xDE));
-        let mut net = Network::new(cfg, traffic)?;
-        net.run()?;
-        let all = net.router_residency();
-        let rpc = geo.routers_per_chiplet();
-        Ok(ResidencyMap {
-            arch: arch.name(),
+        let residency: Vec<f64> = r
+            .get("residency")
+            .and_then(Json::as_arr)
+            .unwrap_or_default()
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        maps.push(ResidencyMap {
+            arch: txt(&r, "arch"),
+            traffic: txt(&r, "traffic"),
             mesh_x: geo.mesh_x,
             mesh_y: geo.mesh_y,
-            residency: all[..rpc].to_vec(),
+            residency,
             gateways: geo.gw_positions.clone(),
-        })
-    });
-    let mut it = results.into_iter();
-    Ok(Fig13 {
-        prowaves: it.next().unwrap()?,
-        resipi: it.next().unwrap()?,
-    })
+        });
+    }
+    Ok(Fig13 { maps })
 }
 
+/// CSV artifact: one row per (scenario, router), byte-stable cells.
 pub fn to_csv(fig: &Fig13) -> Csv {
-    let mut csv = Csv::new(vec!["arch", "x", "y", "avg_residency_cycles", "is_gateway"]);
-    for map in [&fig.prowaves, &fig.resipi] {
+    let mut csv = Csv::new(vec![
+        "arch",
+        "traffic",
+        "x",
+        "y",
+        "avg_residency_cycles",
+        "is_gateway",
+    ]);
+    for map in &fig.maps {
         for y in 0..map.mesh_y {
             for x in 0..map.mesh_x {
                 let is_gw = map.gateways.contains(&Coord::new(x, y));
                 csv.row(vec![
                     map.arch.clone(),
+                    map.traffic.clone(),
                     x.to_string(),
                     y.to_string(),
-                    format!("{:.4}", map.at(x, y)),
+                    fmt(map.at(x, y)),
                     is_gw.to_string(),
                 ]);
             }
@@ -97,11 +184,38 @@ pub fn to_csv(fig: &Fig13) -> Csv {
     csv
 }
 
+/// JSON artifact: per-map concentration (peak-to-mean) summaries.
+pub fn to_json(fig: &Fig13) -> Json {
+    let mut j = Json::obj();
+    j.set("figure", "fig13");
+    j.set(
+        "paper_claim",
+        "PROWAVES concentrates residency at its single gateway; ReSiPI spreads it",
+    );
+    let maps: Vec<Json> = fig
+        .maps
+        .iter()
+        .map(|m| {
+            let mut o = Json::obj();
+            o.set("arch", m.arch.as_str());
+            o.set("traffic", m.traffic.as_str());
+            o.set("peak_to_mean", m.peak_to_mean());
+            o.set("routers", m.residency.len());
+            o
+        })
+        .collect();
+    j.set("maps", maps);
+    j
+}
+
 pub fn report(fig: &Fig13) -> String {
     let mut out = String::new();
     out.push_str("Fig. 13 — average flit residency, chiplet 0 (cycles)\n");
-    for map in [&fig.prowaves, &fig.resipi] {
-        out.push_str(&format!("\n[{}] (G = gateway router)\n", map.arch));
+    for map in &fig.maps {
+        out.push_str(&format!(
+            "\n[{} / {}] (G = gateway router)\n",
+            map.arch, map.traffic
+        ));
         for y in 0..map.mesh_y {
             for x in 0..map.mesh_x {
                 let g = if map.gateways.contains(&Coord::new(x, y)) {
@@ -127,27 +241,34 @@ mod tests {
     use super::*;
 
     #[test]
-    fn residency_is_more_concentrated_under_prowaves() {
-        let fig = run(200_000, 0xF13).unwrap();
-        // PROWAVES: the single-gateway router is the hottest spot and the
-        // distribution is more peaked than ReSiPI's.
-        let pw = fig.prowaves.peak_to_mean();
-        let rs = fig.resipi.peak_to_mean();
-        assert!(
-            pw > rs,
-            "PROWAVES peak/mean {pw:.2} should exceed ReSiPI {rs:.2}"
-        );
-        // All values finite and the grids full.
-        assert_eq!(fig.prowaves.residency.len(), 16);
-        assert_eq!(fig.resipi.residency.len(), 16);
-        assert!(fig
-            .prowaves
-            .residency
-            .iter()
-            .chain(&fig.resipi.residency)
-            .all(|r| r.is_finite() && *r >= 0.0));
-        let csv = to_csv(&fig);
-        assert_eq!(csv.len(), 32);
-        assert!(report(&fig).contains("peak/mean"));
+    fn spec_expands_with_residency_and_validates() {
+        let spec = spec(false);
+        assert!(spec.record_residency);
+        let scenarios = spec.expand();
+        assert_eq!(scenarios.len(), 2);
+        for sc in &scenarios {
+            sc.config().unwrap();
+        }
+        let ext = super::spec(true).expand();
+        assert_eq!(ext.len(), 6);
+        for sc in &ext {
+            sc.config().unwrap();
+        }
+    }
+
+    #[test]
+    fn peak_to_mean_handles_degenerate_maps() {
+        let map = |residency: Vec<f64>| ResidencyMap {
+            arch: "resipi".into(),
+            traffic: "parsec:0.0052:dedup".into(),
+            mesh_x: 2,
+            mesh_y: 2,
+            residency,
+            gateways: Vec::new(),
+        };
+        assert_eq!(map(vec![0.0; 4]).peak_to_mean(), 0.0);
+        assert_eq!(map(Vec::new()).peak_to_mean(), 0.0);
+        let m = map(vec![1.0, 1.0, 1.0, 5.0]);
+        assert!((m.peak_to_mean() - 2.5).abs() < 1e-12);
     }
 }

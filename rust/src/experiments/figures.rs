@@ -1,0 +1,274 @@
+//! `resipi figures` — every paper artifact (Figs. 10–13, Table 2, the
+//! ablation suite) rebuilt as campaign presets on the resumable ledger.
+//!
+//! Each figure module contributes a declarative
+//! [`CampaignSpec`](crate::experiments::campaign::CampaignSpec)
+//! (`spec(extended)`), and this orchestrator runs it through
+//! [`campaign::run_campaign_named`](crate::experiments::campaign::run_campaign_named)
+//! under the figure's file stem, then post-processes the ledger-built
+//! aggregate report into `<stem>.csv` / `<stem>.json` artifacts plus a
+//! human-readable report. Because the artifacts are derived strictly from
+//! the byte-stable campaign report, they are identical across worker
+//! counts and kill-then-resume — the property `tests/figures.rs` pins and
+//! CI diffs against the blessed goldens in `tests/golden/figures/`.
+//!
+//! Two tiers per figure: the **baseline** tier reproduces the paper's
+//! matrix (golden-blessed, CI-enforced); the **extended** tier
+//! (`--extended`) sweeps axes the paper never had — torus/cmesh fabrics,
+//! bursty/phased/composed traffic, every explicit reconfiguration policy
+//! — under `<stem>_ext` file stems so the two tiers never collide.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::experiments::campaign::CampaignOutcome;
+use crate::experiments::{ablations, fig10, fig11, fig12, fig13, table2};
+use crate::traffic::parsec::PARSEC_APPS;
+use crate::traffic::{TrafficKind, TrafficSpec};
+use crate::util::io::Json;
+
+/// One paper artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FigureId {
+    Fig10,
+    Fig11,
+    Fig12,
+    Fig13,
+    Table2,
+    Ablations,
+}
+
+impl FigureId {
+    /// Every figure, in publication order (the `--fig` default).
+    pub const ALL: [FigureId; 6] = [
+        FigureId::Fig10,
+        FigureId::Fig11,
+        FigureId::Fig12,
+        FigureId::Fig13,
+        FigureId::Table2,
+        FigureId::Ablations,
+    ];
+
+    /// Canonical name — also the baseline-tier file stem.
+    pub fn name(self) -> &'static str {
+        match self {
+            FigureId::Fig10 => "fig10",
+            FigureId::Fig11 => "fig11",
+            FigureId::Fig12 => "fig12",
+            FigureId::Fig13 => "fig13",
+            FigureId::Table2 => "table2",
+            FigureId::Ablations => "ablations",
+        }
+    }
+
+    /// CLI selector: `--fig 10,11,12,13,t2,abl` plus the long spellings.
+    pub fn parse(text: &str) -> Result<Self> {
+        match text {
+            "10" | "fig10" => Ok(FigureId::Fig10),
+            "11" | "fig11" => Ok(FigureId::Fig11),
+            "12" | "fig12" => Ok(FigureId::Fig12),
+            "13" | "fig13" => Ok(FigureId::Fig13),
+            "t2" | "table2" => Ok(FigureId::Table2),
+            "abl" | "ablations" => Ok(FigureId::Ablations),
+            other => Err(Error::config(format!(
+                "unknown figure {other:?} (expected 10, 11, 12, 13, t2, abl)"
+            ))),
+        }
+    }
+
+    /// File stem for the tier: extended artifacts live under `<name>_ext`
+    /// so they never collide with the golden-blessed baseline files.
+    pub fn stem(self, extended: bool) -> String {
+        if extended {
+            format!("{}_ext", self.name())
+        } else {
+            self.name().to_string()
+        }
+    }
+
+    /// Every file this figure/tier writes under the output directory —
+    /// the `--fresh` deletion list.
+    pub fn artifact_names(self, extended: bool) -> Vec<String> {
+        let stem = self.stem(extended);
+        let mut names = vec![format!("{stem}.csv"), format!("{stem}.json")];
+        if self != FigureId::Table2 {
+            // The campaign ledger + aggregate reports behind the artifact.
+            names.push(format!("{stem}.jsonl"));
+            names.push(format!("{stem}_report.json"));
+            names.push(format!("{stem}_report.csv"));
+        }
+        names
+    }
+}
+
+/// Outcome of regenerating one figure tier.
+pub struct FigureOutcome {
+    pub id: FigureId,
+    /// The underlying campaign run (`None` for the analytical Table 2).
+    pub campaign: Option<CampaignOutcome>,
+    pub csv_path: PathBuf,
+    pub json_path: PathBuf,
+    /// Human-readable report (what the seed-era per-figure commands
+    /// printed to stdout).
+    pub report: String,
+}
+
+/// Regenerate one figure tier into `out_dir`: run (or resume) its
+/// campaign ledger, then rewrite the post-processed artifacts from the
+/// byte-stable aggregate report.
+pub fn run_figure(
+    id: FigureId,
+    extended: bool,
+    threads: usize,
+    out_dir: &Path,
+) -> Result<FigureOutcome> {
+    std::fs::create_dir_all(out_dir)?;
+    let stem = id.stem(extended);
+    let csv_path = out_dir.join(format!("{stem}.csv"));
+    let json_path = out_dir.join(format!("{stem}.json"));
+    let (campaign, csv, json, report) = match id {
+        FigureId::Fig10 => {
+            let (outcome, fig) = fig10::run(threads, out_dir, extended)?;
+            (Some(outcome), fig10::to_csv(&fig), fig10::to_json(&fig), fig10::report(&fig))
+        }
+        FigureId::Fig11 => {
+            let (outcome, fig) = fig11::run(threads, out_dir, extended)?;
+            (Some(outcome), fig11::to_csv(&fig), fig11::to_json(&fig), fig11::report(&fig))
+        }
+        FigureId::Fig12 => {
+            let (outcome, fig) = fig12::run(threads, out_dir, extended)?;
+            (Some(outcome), fig12::to_csv(&fig), fig12::to_json(&fig), fig12::report(&fig))
+        }
+        FigureId::Fig13 => {
+            let (outcome, fig) = fig13::run(threads, out_dir, extended)?;
+            (Some(outcome), fig13::to_csv(&fig), fig13::to_json(&fig), fig13::report(&fig))
+        }
+        FigureId::Table2 => {
+            let t = table2::run(extended);
+            (None, table2::to_csv(&t), table2::to_json(&t), table2::report(&t))
+        }
+        FigureId::Ablations => {
+            let (outcome, abl) = ablations::run(threads, out_dir, extended)?;
+            (
+                Some(outcome),
+                ablations::to_csv(&abl),
+                ablations::to_json(&abl),
+                ablations::report(&abl),
+            )
+        }
+    };
+    csv.write(&csv_path)?;
+    json.write(&json_path)?;
+    Ok(FigureOutcome {
+        id,
+        campaign,
+        csv_path,
+        json_path,
+        report,
+    })
+}
+
+/// The eight PARSEC apps as a campaign traffic axis, each at its
+/// calibrated profile rate. The figure presets pair this with an
+/// **empty** rate axis so the per-app rates survive matrix expansion.
+pub(crate) fn parsec_traffics() -> Vec<TrafficSpec> {
+    PARSEC_APPS
+        .iter()
+        .map(|app| {
+            let mut spec = TrafficSpec::new(TrafficKind::Parsec, app.rate);
+            spec.app = app.name.to_string();
+            spec
+        })
+        .collect()
+}
+
+/// Parse the `scenarios` array back out of a ledger-built report.
+pub(crate) fn read_scenarios(report_path: &Path) -> Result<Vec<Json>> {
+    let text = std::fs::read_to_string(report_path)?;
+    let json = Json::parse(&text)?;
+    Ok(json
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .unwrap_or_default()
+        .to_vec())
+}
+
+/// Numeric record field. NaN — not 0 — when the field is absent or was
+/// serialized as `null` (JSON has no NaN, so a zero-delivery scenario's
+/// undefined latency round-trips as null): a degenerate scenario must
+/// stay visibly degenerate instead of masquerading as a perfect 0.0.
+pub(crate) fn num(r: &Json, key: &str) -> f64 {
+    r.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+/// String record field (empty when absent).
+pub(crate) fn txt(r: &Json, key: &str) -> String {
+    r.get(key).and_then(Json::as_str).unwrap_or("").to_string()
+}
+
+/// Format a float exactly as the JSON writer would (non-finite → `null`),
+/// so the CSV artifacts are as byte-stable as the reports they derive
+/// from.
+pub(crate) fn fmt(x: f64) -> String {
+    let mut out = String::new();
+    Json::format_num(x, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_ids_parse_and_stem() {
+        for (text, id) in [
+            ("10", FigureId::Fig10),
+            ("fig11", FigureId::Fig11),
+            ("12", FigureId::Fig12),
+            ("13", FigureId::Fig13),
+            ("t2", FigureId::Table2),
+            ("abl", FigureId::Ablations),
+            ("ablations", FigureId::Ablations),
+        ] {
+            assert_eq!(FigureId::parse(text).unwrap(), id);
+        }
+        assert!(FigureId::parse("fig9").is_err());
+        assert_eq!(FigureId::Fig10.stem(false), "fig10");
+        assert_eq!(FigureId::Fig10.stem(true), "fig10_ext");
+        assert_eq!(FigureId::ALL.len(), 6);
+    }
+
+    #[test]
+    fn artifact_names_cover_ledger_and_outputs() {
+        let names = FigureId::Fig12.artifact_names(false);
+        assert!(names.contains(&"fig12.csv".to_string()));
+        assert!(names.contains(&"fig12.jsonl".to_string()));
+        assert!(names.contains(&"fig12_report.json".to_string()));
+        // Table 2 is analytical: no ledger behind it.
+        let t2 = FigureId::Table2.artifact_names(true);
+        assert_eq!(t2, vec!["table2_ext.csv".to_string(), "table2_ext.json".to_string()]);
+    }
+
+    #[test]
+    fn parsec_axis_carries_calibrated_rates() {
+        let specs = parsec_traffics();
+        assert_eq!(specs.len(), PARSEC_APPS.len());
+        for (spec, app) in specs.iter().zip(PARSEC_APPS.iter()) {
+            assert_eq!(spec.app, app.name);
+            assert_eq!(spec.rate, app.rate);
+            assert_eq!(spec.spec_string(), format!("parsec:{}:{}", app.rate, app.name));
+        }
+    }
+
+    #[test]
+    fn num_reports_nan_for_missing_or_null() {
+        let mut r = Json::obj();
+        r.set("x", 1.5);
+        r.set("y", Json::Null);
+        assert_eq!(num(&r, "x"), 1.5);
+        assert!(num(&r, "y").is_nan());
+        assert!(num(&r, "absent").is_nan());
+        assert_eq!(fmt(f64::NAN), "null");
+        assert_eq!(fmt(2.0), "2");
+    }
+}

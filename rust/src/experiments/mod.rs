@@ -7,6 +7,7 @@ pub mod fig10;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;
+pub mod figures;
 pub mod perf;
 pub mod scaling;
 pub mod table2;

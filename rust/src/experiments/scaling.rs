@@ -51,12 +51,16 @@ pub fn spec(chiplet_counts: &[usize], cycles: u64, seed: u64) -> CampaignSpec {
         topologies: TopologyKind::ALL.to_vec(),
         chiplets: chiplet_counts.to_vec(),
         traffics: vec![TrafficSpec::new(TrafficKind::Uniform, 0.0)],
+        policies: vec![None],
+        variants: vec![None],
         rates: vec![0.002],
         epoch_cycles: vec![(cycles / 20).max(10_000)],
         seeds: vec![0],
         cycles,
         warmup_cycles: (cycles / 10).min(5_000),
         root_seed: seed,
+        record_epochs: false,
+        record_residency: false,
     }
 }
 

@@ -3,77 +3,166 @@
 //! Reproduced with the transparent gate-inventory model in
 //! `power::controller_area` (the paper used Cadence Genus, which is not
 //! available here; the module docs argue the substitution). The table's
-//! *conclusion* — the
-//! controller is negligible against a 53.83 mm² chiplet — is what the
-//! reproduction checks.
+//! *conclusion* — the controller is negligible against the reference
+//! chiplet die — is what the reproduction checks. The chiplet area comes
+//! from [`ControllerParams::chiplet_area_mm2`], the single source of
+//! truth the CSV, report, and conclusion check all share (the seed-era
+//! report hard-coded 53.83 mm² separately from the test, so the two
+//! could drift apart).
+//!
+//! Table 2 is analytical — no simulation, no campaign ledger behind it.
+//! The baseline tier prices the paper's Table 1 system; the extended
+//! tier re-prices the controller for 8- and 16-chiplet systems to show
+//! the overhead stays negligible at scale.
 
 use crate::power::controller_area::{table2 as estimate, BlockEstimate, ControllerParams};
-use crate::util::io::Csv;
+use crate::util::io::{Csv, Json};
+
+/// One priced system configuration.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    /// Configuration label (`c4` is the paper's Table 1 system).
+    pub config: String,
+    pub params: ControllerParams,
+    pub lgc: BlockEstimate,
+    pub inc: BlockEstimate,
+    pub total: BlockEstimate,
+    /// Paper's synthesized numbers for side-by-side comparison —
+    /// (area µm², power µW) for LGC, InC, total — only for the paper's
+    /// own sizing.
+    pub paper: Option<[(f64, f64); 3]>,
+}
 
 /// Table 2 reproduction result.
 #[derive(Debug, Clone)]
 pub struct Table2 {
-    pub lgc: BlockEstimate,
-    pub inc: BlockEstimate,
-    pub total: BlockEstimate,
-    /// Paper's synthesized numbers for side-by-side comparison:
-    /// (area µm², power µW) for LGC, InC, total.
-    pub paper: [(f64, f64); 3],
+    pub rows: Vec<Table2Row>,
 }
 
-pub fn run(params: &ControllerParams) -> Table2 {
-    let (lgc, inc, total) = estimate(params);
-    Table2 {
+fn price(config: &str, params: ControllerParams, paper: Option<[(f64, f64); 3]>) -> Table2Row {
+    let (lgc, inc, total) = estimate(&params);
+    Table2Row {
+        config: config.to_string(),
+        params,
         lgc,
         inc,
         total,
-        paper: [(314.0, 172.0), (104.0, 787.0), (418.0, 959.0)],
+        paper,
     }
 }
 
+/// The paper's Table 1 sizing, with its synthesized numbers alongside.
+pub fn paper_row() -> Table2Row {
+    price(
+        "c4",
+        ControllerParams::default(),
+        Some([(314.0, 172.0), (104.0, 787.0), (418.0, 959.0)]),
+    )
+}
+
+/// Price the controller. Baseline: the paper's system only. Extended:
+/// plus 8- and 16-chiplet scale-out points (total gateways follow the
+/// interposer plan: 4 per chiplet + 2 spares).
+pub fn run(extended: bool) -> Table2 {
+    let mut rows = vec![paper_row()];
+    if extended {
+        for chiplets in [8usize, 16] {
+            let params = ControllerParams {
+                chiplets,
+                total_gateways: 4 * chiplets + 2,
+                ..ControllerParams::default()
+            };
+            rows.push(price(&format!("c{chiplets}"), params, None));
+        }
+    }
+    Table2 { rows }
+}
+
+/// CSV artifact: one row per (configuration, block); paper columns are
+/// empty for the scale-out rows.
 pub fn to_csv(t: &Table2) -> Csv {
     let mut csv = Csv::new(vec![
+        "config",
         "block",
         "area_um2",
         "power_uw",
         "paper_area_um2",
         "paper_power_uw",
     ]);
-    for (name, est, paper) in [
-        ("LGC", &t.lgc, t.paper[0]),
-        ("InC", &t.inc, t.paper[1]),
-        ("Total", &t.total, t.paper[2]),
-    ] {
-        csv.row(vec![
-            name.to_string(),
-            format!("{:.1}", est.area_um2),
-            format!("{:.1}", est.power_uw),
-            format!("{:.1}", paper.0),
-            format!("{:.1}", paper.1),
-        ]);
+    for row in &t.rows {
+        for (i, (name, est)) in [("LGC", &row.lgc), ("InC", &row.inc), ("Total", &row.total)]
+            .into_iter()
+            .enumerate()
+        {
+            let (pa, pp) = match row.paper {
+                Some(paper) => (format!("{:.1}", paper[i].0), format!("{:.1}", paper[i].1)),
+                None => (String::new(), String::new()),
+            };
+            csv.row(vec![
+                row.config.clone(),
+                name.to_string(),
+                format!("{:.1}", est.area_um2),
+                format!("{:.1}", est.power_uw),
+                pa,
+                pp,
+            ]);
+        }
     }
     csv
 }
 
+/// JSON artifact: per-configuration totals and the chiplet-area fraction.
+pub fn to_json(t: &Table2) -> Json {
+    let mut j = Json::obj();
+    j.set("figure", "table2");
+    j.set("paper_total_area_um2", 418.0);
+    j.set("paper_total_power_uw", 959.0);
+    let rows: Vec<Json> = t
+        .rows
+        .iter()
+        .map(|row| {
+            let mut o = Json::obj();
+            o.set("config", row.config.as_str());
+            o.set("chiplets", row.params.chiplets);
+            o.set("total_area_um2", row.total.area_um2);
+            o.set("total_power_uw", row.total.power_uw);
+            o.set("chiplet_area_mm2", row.params.chiplet_area_mm2);
+            o.set(
+                "area_fraction_of_chiplet",
+                row.total.area_um2 / row.params.chiplet_area_um2(),
+            );
+            o
+        })
+        .collect();
+    j.set("rows", rows);
+    j
+}
+
 pub fn report(t: &Table2) -> String {
     let mut out = String::new();
-    out.push_str("Table 2 — controller overhead (45 nm, 1 GHz)\n\n");
-    out.push_str("block   area(um^2)  power(uW)   [paper: area, power]\n");
-    for (name, est, paper) in [
-        ("LGC", &t.lgc, t.paper[0]),
-        ("InC", &t.inc, t.paper[1]),
-        ("Total", &t.total, t.paper[2]),
-    ] {
+    out.push_str("Table 2 — controller overhead (45 nm, 1 GHz)\n");
+    for row in &t.rows {
+        out.push_str(&format!("\n[{}]\n", row.config));
+        out.push_str("block   area(um^2)  power(uW)   [paper: area, power]\n");
+        for (i, (name, est)) in [("LGC", &row.lgc), ("InC", &row.inc), ("Total", &row.total)]
+            .into_iter()
+            .enumerate()
+        {
+            let paper = match row.paper {
+                Some(paper) => format!("[{:.0}, {:.0}]", paper[i].0, paper[i].1),
+                None => "[-]".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<7} {:<11.1} {:<11.1} {}\n",
+                name, est.area_um2, est.power_uw, paper
+            ));
+        }
         out.push_str(&format!(
-            "{:<7} {:<11.1} {:<11.1} [{:.0}, {:.0}]\n",
-            name, est.area_um2, est.power_uw, paper.0, paper.1
+            "Total area = {:.5}% of a {} mm^2 chiplet — negligible, as the paper concludes.\n",
+            row.total.area_um2 / row.params.chiplet_area_um2() * 100.0,
+            row.params.chiplet_area_mm2
         ));
     }
-    let chiplet_um2 = 53.83e6;
-    out.push_str(&format!(
-        "\nTotal area = {:.5}% of a 53.83 mm^2 chiplet — negligible, as the paper concludes.\n",
-        t.total.area_um2 / chiplet_um2 * 100.0
-    ));
     out
 }
 
@@ -83,14 +172,36 @@ mod tests {
 
     #[test]
     fn table2_report_and_csv() {
-        let t = run(&ControllerParams::default());
+        let t = run(false);
+        assert_eq!(t.rows.len(), 1);
         let csv = to_csv(&t);
         assert_eq!(csv.len(), 3);
         let rep = report(&t);
         assert!(rep.contains("LGC"));
         assert!(rep.contains("negligible"));
-        assert!(t.total.area_um2 > 0.0 && t.total.power_uw > 0.0);
-        // Conclusion check mirrors §4.3.
-        assert!(t.total.area_um2 / 53.83e6 < 1e-3);
+        let row = &t.rows[0];
+        assert!(row.total.area_um2 > 0.0 && row.total.power_uw > 0.0);
+        // Conclusion check mirrors §4.3 — against the *same* area the
+        // report prints (ControllerParams, not a second literal).
+        assert!(row.total.area_um2 / row.params.chiplet_area_um2() < 1e-3);
+        assert!(rep.contains("53.83 mm^2"));
+    }
+
+    #[test]
+    fn extended_tier_stays_negligible_at_scale() {
+        let t = run(true);
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[1].config, "c8");
+        assert_eq!(t.rows[2].config, "c16");
+        for row in &t.rows {
+            assert!(
+                row.total.area_um2 / row.params.chiplet_area_um2() < 1e-3,
+                "{}: controller must stay ≪ chiplet",
+                row.config
+            );
+        }
+        // Bigger systems cost more controller.
+        assert!(t.rows[2].total.area_um2 > t.rows[0].total.area_um2);
+        assert_eq!(to_csv(&t).len(), 9);
     }
 }

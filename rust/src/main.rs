@@ -4,17 +4,11 @@
 //!
 //! ```text
 //! resipi run     --arch resipi --app dedup [--topology torus] [--cycles N]
-//! resipi fig10   [--cycles N]          # design-space exploration → L_m
-//! resipi fig11   [--cycles N]          # latency/power/energy grid
-//! resipi fig12   [--epochs N] [--epoch-cycles N]
-//! resipi fig13   [--cycles N]          # residency heat maps
-//! resipi table2                        # controller overhead
-//! resipi ablate  <thresholds|gwsel|epoch> [--cycles N]
+//! resipi figures [--fig 10,11,12,13,t2,abl] [--extended] [--out DIR] [--fresh]
 //! resipi scale   [--chiplets LIST] [--cycles N]   # ledger-backed scaling sweep
 //! resipi sweep                         # batched HLO power-model sweep
 //! resipi campaign [--quick|--full|--scale|--policies|--config F] [axis flags]   # scenario matrix
 //! resipi trace   convert --in F --out F   # text <-> binary trace conversion
-//! resipi all     [--cycles N]          # every artifact, written to results/
 //! ```
 //!
 //! Outputs land in `results/` (override with `RESIPI_RESULTS`). The
@@ -30,8 +24,8 @@ use std::process::ExitCode;
 use resipi::config::{Architecture, Config};
 use resipi::coordinator::PolicySpec;
 use resipi::experiments::campaign::{self, CampaignSpec};
-use resipi::experiments::{ablations, fig10, fig11, fig12, fig13, output_dir, perf, scaling, table2};
-use resipi::power::controller_area::ControllerParams;
+use resipi::experiments::figures::{self, FigureId};
+use resipi::experiments::{output_dir, perf, scaling};
 use resipi::runtime::{best_power_model, BatchPowerModel, ARTIFACT_GATEWAYS};
 use resipi::sim::{Geometry, Network};
 use resipi::topology::TopologyKind;
@@ -126,60 +120,36 @@ const COMMANDS: &[Cmd] = &[
         ],
     },
     Cmd {
-        name: "fig10",
+        name: "figures",
         args: "",
-        summary: "design-space exploration (latency vs gateway load) → L_m",
-        flags: &[
-            CYCLES,
-            SEED,
-            Flag {
-                name: "accept",
-                value: Some("F"),
-                help: "latency-overhead acceptance band (default 0.10)",
-            },
-        ],
-    },
-    Cmd {
-        name: "fig11",
-        args: "",
-        summary: "latency/power/energy grid: 8 apps x 4 architectures",
-        flags: &[CYCLES, SEED],
-    },
-    Cmd {
-        name: "fig12",
-        args: "",
-        summary: "adaptivity series (blackscholes -> facesim -> dedup)",
+        summary: "regenerate the paper-figure suite (Figs. 10-13, Table 2, ablations) via the campaign ledger",
         flags: &[
             Flag {
-                name: "epochs",
-                value: Some("N"),
-                help: "reconfiguration intervals per application",
+                name: "fig",
+                value: Some("LIST"),
+                help: "comma-separated figure selection: 10,11,12,13,t2,abl (default: all)",
             },
             Flag {
-                name: "epoch-cycles",
-                value: Some("N"),
-                help: "cycles per reconfiguration interval",
+                name: "extended",
+                value: None,
+                help: "sweep the extended tier (extra topologies/traffics/policies) under <fig>_ext stems",
             },
-            SEED,
+            Flag {
+                name: "threads",
+                value: Some("N"),
+                help: "pool workers (default RESIPI_THREADS/auto); artifacts are identical",
+            },
+            Flag {
+                name: "out",
+                value: Some("DIR"),
+                help: "output directory for ledgers + artifacts (default results/figures)",
+            },
+            Flag {
+                name: "fresh",
+                value: None,
+                help: "discard existing ledgers/artifacts for the selected figures instead of resuming",
+            },
         ],
-    },
-    Cmd {
-        name: "fig13",
-        args: "",
-        summary: "per-router flit-residency heat maps",
-        flags: &[CYCLES, SEED],
-    },
-    Cmd {
-        name: "table2",
-        args: "",
-        summary: "controller area/power overhead",
-        flags: &[],
-    },
-    Cmd {
-        name: "ablate",
-        args: "<thresholds|gwsel|epoch>",
-        summary: "ablation studies of the control-plane design choices",
-        flags: &[CYCLES, SEED],
     },
     Cmd {
         name: "scale",
@@ -360,25 +330,6 @@ const COMMANDS: &[Cmd] = &[
             },
         ],
     },
-    Cmd {
-        name: "all",
-        args: "",
-        summary: "regenerate every artifact under results/",
-        flags: &[
-            CYCLES,
-            SEED,
-            Flag {
-                name: "epoch-cycles",
-                value: Some("N"),
-                help: "fig12 interval length",
-            },
-            Flag {
-                name: "accept",
-                value: Some("F"),
-                help: "fig10 acceptance band",
-            },
-        ],
-    },
 ];
 
 fn command(name: &str) -> Option<&'static Cmd> {
@@ -422,13 +373,6 @@ struct Args {
 }
 
 impl Args {
-    fn empty() -> Self {
-        Self {
-            positional: Vec::new(),
-            flags: BTreeMap::new(),
-        }
-    }
-
     fn parse(argv: &[String], cmd: &Cmd) -> std::result::Result<Self, String> {
         let mut positional = Vec::new();
         let mut flags = BTreeMap::new();
@@ -540,18 +484,12 @@ fn main() -> ExitCode {
     }
     let result = match cmd.name {
         "run" => cmd_run(&args),
-        "fig10" => cmd_fig10(&args),
-        "fig11" => cmd_fig11(&args),
-        "fig12" => cmd_fig12(&args),
-        "fig13" => cmd_fig13(&args),
-        "table2" => cmd_table2(),
-        "ablate" => cmd_ablate(&args),
+        "figures" => cmd_figures(&args),
         "scale" => cmd_scale(&args),
         "sweep" => cmd_sweep(),
         "bench" => cmd_bench(&args),
         "campaign" => cmd_campaign(&args),
         "trace" => cmd_trace(&args),
-        "all" => cmd_all(&args),
         _ => unreachable!("command table covers every dispatch arm"),
     };
     match result {
@@ -561,10 +499,6 @@ fn main() -> ExitCode {
             ExitCode::FAILURE
         }
     }
-}
-
-fn out_path(name: &str) -> PathBuf {
-    output_dir().join(name)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -683,82 +617,47 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fig10(args: &Args) -> Result<()> {
-    let cycles = args.get_u64("cycles", 1_000_000).map_err(resipi::Error::config)?;
-    let seed = args.get_u64("seed", 0xF16).map_err(resipi::Error::config)?;
-    let accept: f64 = args
-        .get_str("accept", "0.10")
-        .parse()
-        .map_err(|_| resipi::Error::config("--accept must be a number"))?;
-    let fig = fig10::run_with_accept(cycles, seed, accept)?;
-    fig10::to_csv(&fig).write(&out_path("fig10.csv"))?;
-    print!("{}", fig10::report(&fig));
-    println!("wrote {}", out_path("fig10.csv").display());
-    Ok(())
-}
-
-fn cmd_fig11(args: &Args) -> Result<()> {
-    let cycles = args.get_u64("cycles", 1_000_000).map_err(resipi::Error::config)?;
-    let seed = args.get_u64("seed", 0xF11).map_err(resipi::Error::config)?;
-    let fig = fig11::run(cycles, seed)?;
-    fig11::to_csv(&fig).write(&out_path("fig11.csv"))?;
-    fig11::to_json(&fig).write(&out_path("fig11_headline.json"))?;
-    print!("{}", fig11::report(&fig));
-    println!("wrote {}", out_path("fig11.csv").display());
-    Ok(())
-}
-
-fn cmd_fig12(args: &Args) -> Result<()> {
-    let epochs = args.get_u64("epochs", 100).map_err(resipi::Error::config)?;
-    let epoch_cycles = args
-        .get_u64("epoch-cycles", 100_000)
-        .map_err(resipi::Error::config)?;
-    let seed = args.get_u64("seed", 0xF12).map_err(resipi::Error::config)?;
-    let fig = fig12::run(epochs, epoch_cycles, seed)?;
-    fig12::to_csv(&fig).write(&out_path("fig12.csv"))?;
-    print!("{}", fig12::report(&fig));
-    println!("wrote {}", out_path("fig12.csv").display());
-    Ok(())
-}
-
-fn cmd_fig13(args: &Args) -> Result<()> {
-    let cycles = args.get_u64("cycles", 1_000_000).map_err(resipi::Error::config)?;
-    let seed = args.get_u64("seed", 0xF13).map_err(resipi::Error::config)?;
-    let fig = fig13::run(cycles, seed)?;
-    fig13::to_csv(&fig).write(&out_path("fig13.csv"))?;
-    print!("{}", fig13::report(&fig));
-    println!("wrote {}", out_path("fig13.csv").display());
-    Ok(())
-}
-
-fn cmd_table2() -> Result<()> {
-    let t = table2::run(&ControllerParams::default());
-    table2::to_csv(&t).write(&out_path("table2.csv"))?;
-    print!("{}", table2::report(&t));
-    println!("wrote {}", out_path("table2.csv").display());
-    Ok(())
-}
-
-fn cmd_ablate(args: &Args) -> Result<()> {
-    let which = args
-        .positional
-        .first()
-        .map(String::as_str)
-        .unwrap_or("thresholds");
-    let cycles = args.get_u64("cycles", 600_000).map_err(resipi::Error::config)?;
-    let seed = args.get_u64("seed", 0xAB).map_err(resipi::Error::config)?;
-    let rows = match which {
-        "thresholds" => ablations::thresholds(cycles, seed)?,
-        "gwsel" => ablations::gateway_selection(cycles, seed)?,
-        "epoch" => ablations::epoch_length(cycles, seed)?,
-        other => {
-            return Err(resipi::Error::config(format!(
-                "unknown ablation {other:?} (thresholds|gwsel|epoch)"
-            )))
-        }
+fn cmd_figures(args: &Args) -> Result<()> {
+    let extended = args.flags.contains_key("extended");
+    let ids: Vec<FigureId> = match args.flags.get("fig") {
+        None => FigureId::ALL.to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|part| FigureId::parse(part.trim()))
+            .collect::<Result<Vec<FigureId>>>()?,
     };
-    ablations::to_csv(&rows).write(&out_path(&format!("ablation_{which}.csv")))?;
-    print!("{}", ablations::report(which, &rows));
+    let threads = args
+        .get_u64("threads", resipi::util::pool::default_threads() as u64)
+        .map_err(resipi::Error::config)? as usize;
+    let out_dir = match args.flags.get("out") {
+        Some(dir) => PathBuf::from(dir),
+        None => output_dir().join("figures"),
+    };
+    if args.flags.contains_key("fresh") {
+        for id in &ids {
+            for name in id.artifact_names(extended) {
+                let p = out_dir.join(name);
+                if p.exists() {
+                    std::fs::remove_file(&p)?;
+                }
+            }
+        }
+    }
+    println!(
+        "== resipi figures: {} artifact(s){} across {} worker(s) ==",
+        ids.len(),
+        if extended { " (extended tier)" } else { "" },
+        threads.max(1)
+    );
+    for &id in &ids {
+        let outcome = figures::run_figure(id, extended, threads, &out_dir)?;
+        print!("{}", outcome.report);
+        if let Some(campaign) = &outcome.campaign {
+            print!("{}", campaign.report());
+        }
+        println!("wrote {}", outcome.csv_path.display());
+        println!("wrote {}", outcome.json_path.display());
+    }
     Ok(())
 }
 
@@ -1034,25 +933,3 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_all(args: &Args) -> Result<()> {
-    cmd_table2()?;
-    cmd_fig10(args)?;
-    cmd_fig11(args)?;
-    cmd_fig13(args)?;
-    let mut f12 = Args::empty();
-    f12.flags.insert("epochs".to_string(), "40".to_string());
-    f12.flags.insert(
-        "epoch-cycles".to_string(),
-        args.get_str("epoch-cycles", "50000"),
-    );
-    cmd_fig12(&f12)?;
-    for which in ["thresholds", "gwsel", "epoch"] {
-        let a = Args {
-            positional: vec![which.to_string()],
-            flags: args.flags.clone(),
-        };
-        cmd_ablate(&a)?;
-    }
-    println!("\nAll artifacts regenerated under {}", output_dir().display());
-    Ok(())
-}

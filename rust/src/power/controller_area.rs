@@ -64,6 +64,10 @@ pub struct ControllerParams {
     pub counter_bits: usize,
     /// Routers per chiplet (vicinity-map register file depth).
     pub routers_per_chiplet: usize,
+    /// Reference chiplet die area, mm² (the paper's [16]): the budget the
+    /// "negligible overhead" conclusion is measured against. Lives here so
+    /// the Table 2 CSV, report, and conclusion check share one number.
+    pub chiplet_area_mm2: f64,
 }
 
 impl Default for ControllerParams {
@@ -74,7 +78,15 @@ impl Default for ControllerParams {
             total_gateways: 18,
             counter_bits: 24,
             routers_per_chiplet: 16,
+            chiplet_area_mm2: 53.83,
         }
+    }
+}
+
+impl ControllerParams {
+    /// The reference chiplet area in µm² (the unit [`BlockEstimate`] uses).
+    pub fn chiplet_area_um2(&self) -> f64 {
+        self.chiplet_area_mm2 * 1e6
     }
 }
 
@@ -147,9 +159,16 @@ mod tests {
 
     #[test]
     fn negligible_versus_chiplet_budget() {
-        // [16]: chiplet area 53.83 mm² = 53.83e6 µm².
-        let (_, _, total) = table2(&ControllerParams::default());
-        assert!(total.area_um2 / 53.83e6 < 1e-3, "controller must be ≪ chiplet");
+        // [16]: chiplet area 53.83 mm² — one source of truth in the params
+        // so the CSV, report, and this check cannot drift apart.
+        let p = ControllerParams::default();
+        assert_eq!(p.chiplet_area_mm2, 53.83);
+        assert_eq!(p.chiplet_area_um2(), 53.83e6);
+        let (_, _, total) = table2(&p);
+        assert!(
+            total.area_um2 / p.chiplet_area_um2() < 1e-3,
+            "controller must be ≪ chiplet"
+        );
     }
 
     #[test]

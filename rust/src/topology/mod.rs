@@ -8,7 +8,8 @@
 //! ship:
 //!
 //! * [`Mesh`] — the paper's Table 1 fabric, bit-for-bit identical to the
-//!   seed's XY behavior (`resipi fig10`/`fig11` outputs are unchanged);
+//!   seed's XY behavior (the golden-pinned `resipi figures` artifacts are
+//!   unchanged for the same seeds);
 //! * [`Torus`] — adds wraparound links with a VC-less-safe restriction:
 //!   a wrap link may only be the *first* hop out of its edge router, and
 //!   only when strictly shorter (see `torus.rs` for the deadlock-freedom

@@ -16,7 +16,7 @@ use crate::error::{Error, Result};
 use crate::sim::ids::{Geometry, Node};
 
 use super::compose::{tenant_seeds, ComposedTraffic};
-use super::parsec::{app_by_name, ParsecTraffic};
+use super::parsec::{app_by_name, ParsecTraffic, SequenceTraffic};
 use super::patterns::{
     core_node, phase_seeds, BurstyTraffic, PermKind, PermutationTraffic, PhasedTraffic,
 };
@@ -47,6 +47,11 @@ pub enum TrafficKind {
     Trace,
     /// Calibrated PARSEC-like application model (see [`super::parsec`]).
     Parsec,
+    /// Segmented application sequence: each named PARSEC app runs at its
+    /// calibrated profile for a fixed segment, then hands over to the
+    /// next — the Fig. 12 adaptivity workload (see
+    /// [`super::parsec::SequenceTraffic`]).
+    Sequence,
     /// Multi-tenant overlay of child workloads with per-tenant rate
     /// shares and start offsets (see [`super::compose`]).
     Composed,
@@ -55,7 +60,10 @@ pub enum TrafficKind {
 impl TrafficKind {
     /// Every kind constructible from defaults alone (tests, catalog
     /// tables, campaign axes). [`TrafficKind::Trace`] is registered but
-    /// excluded: it needs a trace file path.
+    /// excluded (it needs a trace file path); [`TrafficKind::Sequence`]
+    /// likewise — its segments follow the apps' calibrated profile rates,
+    /// not the spec's `rate`, so it would break the catalog's
+    /// rate-conservation contract.
     pub const ALL: [TrafficKind; 10] = [
         TrafficKind::Uniform,
         TrafficKind::Transpose,
@@ -81,6 +89,7 @@ impl TrafficKind {
             TrafficKind::Phased => "phased",
             TrafficKind::Trace => "trace",
             TrafficKind::Parsec => "parsec",
+            TrafficKind::Sequence => "sequence",
             TrafficKind::Composed => "composed",
         }
     }
@@ -97,10 +106,11 @@ impl TrafficKind {
             "phased" => Ok(TrafficKind::Phased),
             "trace" => Ok(TrafficKind::Trace),
             "parsec" => Ok(TrafficKind::Parsec),
+            "sequence" => Ok(TrafficKind::Sequence),
             "composed" => Ok(TrafficKind::Composed),
             other => Err(Error::config(format!(
                 "unknown traffic kind {other:?} (expected uniform, transpose, hotspot, \
-                 tornado, bitcomp, bitrev, bursty, phased, trace, parsec, composed)"
+                 tornado, bitcomp, bitrev, bursty, phased, trace, parsec, sequence, composed)"
             ))),
         }
     }
@@ -183,6 +193,11 @@ pub struct TrafficSpec {
     pub trace_path: String,
     /// Parsec: application name (see [`super::parsec::PARSEC_APPS`]).
     pub app: String,
+    /// Sequence: the apps in activation order (each at its calibrated
+    /// profile rate — the spec's `rate` field is carried but unused).
+    pub seq_apps: Vec<String>,
+    /// Sequence: cycles per application segment (≥ 1).
+    pub seg_cycles: u64,
     /// Composed: the tenant overlay (non-empty; `composed` cannot nest).
     pub tenants: Vec<Tenant>,
 }
@@ -204,6 +219,9 @@ impl Default for TrafficSpec {
             phase_cycles: 20_000,
             trace_path: String::new(),
             app: "dedup".into(),
+            // The Fig. 12 low→high→medium demand staircase.
+            seq_apps: vec!["blackscholes".into(), "facesim".into(), "dedup".into()],
+            seg_cycles: 50_000,
             // Two tenants sharing the rate equally, the second arriving
             // 2 500 cycles late — the smallest interesting overlay, and
             // one that conserves the aggregate rate.
@@ -243,9 +261,13 @@ impl TrafficSpec {
     /// bursty   [:rate [:burst_on [:burst_off]]]
     /// phased   [:rate [:kind+kind+... [:phase_cycles]]]
     /// parsec   [:rate [:app]]
+    /// sequence [:rate [:app+app+... [:seg_cycles]]]
     /// composed [:rate [:kind[@scale[@offset]]+...]]
     /// trace    [:path]
     /// ```
+    ///
+    /// `sequence` carries the rate field for grammar uniformity only:
+    /// each segment replays its app's calibrated profile rate.
     pub fn parse(text: &str) -> Result<Self> {
         let mut parts = text.split(':');
         let kind = TrafficKind::from_name(parts.next().unwrap_or_default())?;
@@ -299,6 +321,16 @@ impl TrafficSpec {
                     spec.app = app.to_string();
                 }
             }
+            TrafficKind::Sequence => {
+                if let Some(list) = parts.next() {
+                    spec.seq_apps = list.split('+').map(str::to_string).collect();
+                }
+                if let Some(sc) = parts.next() {
+                    spec.seg_cycles = sc.parse().map_err(|_| {
+                        Error::config(format!("bad seg_cycles {sc:?} in traffic spec {text:?}"))
+                    })?;
+                }
+            }
             TrafficKind::Composed => {
                 if let Some(list) = parts.next() {
                     spec.tenants = list
@@ -333,6 +365,9 @@ impl TrafficSpec {
                 format!("{base}:{}:{}", names.join("+"), self.phase_cycles)
             }
             TrafficKind::Parsec => format!("{base}:{}", self.app),
+            TrafficKind::Sequence => {
+                format!("{base}:{}:{}", self.seq_apps.join("+"), self.seg_cycles)
+            }
             TrafficKind::Composed => {
                 let tenants: Vec<String> = self.tenants.iter().map(|t| t.to_string()).collect();
                 format!("{base}:{}", tenants.join("+"))
@@ -393,6 +428,26 @@ impl TrafficSpec {
                     .get_str(full_key)
                     .ok_or_else(|| Error::config(format!("{full_key} must be a string")))?
                     .to_string();
+            }
+            "apps" => {
+                let Some(Value::Array(items)) = map.get(full_key) else {
+                    return Err(Error::config(format!(
+                        "{full_key} must be an array of PARSEC app names"
+                    )));
+                };
+                self.seq_apps = items
+                    .iter()
+                    .map(|v| {
+                        v.as_str().map(str::to_string).ok_or_else(|| {
+                            Error::config(format!("{full_key} entries must be strings"))
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            "seg_cycles" => {
+                self.seg_cycles = map.get_u64(full_key).ok_or_else(|| {
+                    Error::config(format!("{full_key} must be a non-negative integer"))
+                })?
             }
             "tenants" => {
                 let Some(Value::Array(items)) = map.get(full_key) else {
@@ -514,6 +569,23 @@ impl TrafficSpec {
                     )));
                 }
             }
+            TrafficKind::Sequence => {
+                if self.seq_apps.is_empty() {
+                    return Err(Error::config(
+                        "traffic.apps must name at least one PARSEC app",
+                    ));
+                }
+                if self.seg_cycles == 0 {
+                    return Err(Error::config("traffic.seg_cycles must be nonzero"));
+                }
+                for app in &self.seq_apps {
+                    if app_by_name(app).is_none() {
+                        return Err(Error::config(format!(
+                            "unknown PARSEC app {app:?} in traffic.apps"
+                        )));
+                    }
+                }
+            }
             TrafficKind::Composed => {
                 if self.tenants.is_empty() {
                     return Err(Error::config(
@@ -606,6 +678,16 @@ impl TrafficSpec {
                 profile.rate = self.rate;
                 Box::new(ParsecTraffic::new(geo.clone(), profile, seed))
             }
+            TrafficKind::Sequence => {
+                let mut segments = Vec::with_capacity(self.seq_apps.len());
+                for app in &self.seq_apps {
+                    let profile = app_by_name(app).ok_or_else(|| {
+                        Error::config(format!("unknown PARSEC application {app:?}"))
+                    })?;
+                    segments.push((profile, self.seg_cycles));
+                }
+                Box::new(SequenceTraffic::new(geo.clone(), segments, seed))
+            }
             TrafficKind::Composed => {
                 let seeds = tenant_seeds(seed, self.tenants.len());
                 let mut built: Vec<(Box<dyn Traffic>, u64)> =
@@ -651,10 +733,16 @@ mod tests {
         for kind in TrafficKind::ALL {
             assert_eq!(TrafficKind::from_name(kind.name()).unwrap(), kind);
         }
-        // Trace is registered but excluded from ALL (needs a file path).
+        // Trace and sequence are registered but excluded from ALL (a
+        // trace needs a file path; a sequence follows calibrated app
+        // rates instead of the spec's rate).
         assert_eq!(
             TrafficKind::from_name("trace").unwrap(),
             TrafficKind::Trace
+        );
+        assert_eq!(
+            TrafficKind::from_name("sequence").unwrap(),
+            TrafficKind::Sequence
         );
         assert!(TrafficKind::from_name("carousel").is_err());
     }
@@ -722,6 +810,12 @@ mod tests {
         let s = TrafficSpec::parse("trace:fixtures/a.trace").unwrap();
         assert_eq!(s.kind, TrafficKind::Trace);
         assert_eq!(s.trace_path, "fixtures/a.trace");
+
+        let s = TrafficSpec::parse("sequence:0:blackscholes+facesim:25000").unwrap();
+        assert_eq!(s.kind, TrafficKind::Sequence);
+        assert_eq!(s.seq_apps, vec!["blackscholes", "facesim"]);
+        assert_eq!(s.seg_cycles, 25_000);
+        assert_eq!(TrafficSpec::parse(&s.spec_string()).unwrap(), s);
     }
 
     #[test]
@@ -738,6 +832,8 @@ mod tests {
             "composed:0.01:warp@0.5",
             "composed:0.01:uniform@0.5@0@9",
             "composed:0.01:uniform@wide",
+            "sequence:0:dedup:1000:extra",
+            "sequence:0:dedup:soon",
         ] {
             assert!(TrafficSpec::parse(bad).is_err(), "{bad:?} should fail");
         }
@@ -818,6 +914,16 @@ mod tests {
         assert!(s.build(&g, 1).is_err());
         let s = TrafficSpec::new(TrafficKind::Parsec, 0.5);
         assert!(s.build(&g, 1).is_err());
+        // Sequence: empty app list, zero segment, unknown app.
+        let mut s = TrafficSpec::new(TrafficKind::Sequence, 0.0);
+        s.seq_apps.clear();
+        assert!(s.build(&g, 1).is_err());
+        let mut s = TrafficSpec::new(TrafficKind::Sequence, 0.0);
+        s.seg_cycles = 0;
+        assert!(s.build(&g, 1).is_err());
+        let mut s = TrafficSpec::new(TrafficKind::Sequence, 0.0);
+        s.seq_apps = vec!["quake".into()];
+        assert!(s.build(&g, 1).is_err());
         // Composed: empty tenant list, self-nesting, bad scale.
         let mut s = TrafficSpec::new(TrafficKind::Composed, 0.01);
         s.tenants.clear();
@@ -845,6 +951,32 @@ mod tests {
         assert!(TrafficSpec::new(TrafficKind::BitReversal, 0.01)
             .build(&geo(), 1)
             .is_ok());
+    }
+
+    #[test]
+    fn sequence_builds_and_switches_segments() {
+        let g = geo();
+        let mut s = TrafficSpec::new(TrafficKind::Sequence, 0.0);
+        s.seq_apps = vec!["blackscholes".into(), "facesim".into()];
+        s.seg_cycles = 2_000;
+        let mut t = s.build(&g, 7).unwrap();
+        let mut out = Vec::new();
+        for now in 0..4_000 {
+            t.generate(now, &mut out);
+        }
+        assert!(!out.is_empty(), "sequence emitted nothing");
+        assert!(out.iter().all(|p| p.src != p.dst));
+        // The registry path matches the direct constructor's stream.
+        let profiles: Vec<_> = ["blackscholes", "facesim"]
+            .iter()
+            .map(|a| (app_by_name(a).unwrap(), 2_000u64))
+            .collect();
+        let mut direct = SequenceTraffic::new(g.clone(), profiles, 7);
+        let mut b = Vec::new();
+        for now in 0..4_000 {
+            direct.generate(now, &mut b);
+        }
+        assert_eq!(out, b);
     }
 
     #[test]
